@@ -1,0 +1,101 @@
+"""Paper Fig. 8: end-to-end latency vs occupancy, STADI vs patch parallelism
+vs tensor parallelism, on a 2-device cluster.
+
+Scenario A (total resources decreasing): [0,20], [0,40], [0,60]
+Scenario B (total fixed at 80%):         [35,45], [30,50], [25,55]
+
+Cost model calibrated from real measured single-step DiT latencies on this
+host (common.calibrate_cost_model); heterogeneous wall-clock is simulated
+per DESIGN.md §2/§6. Reported: latency (s) + STADI reduction vs PP —
+paper claims 12-45% (A) and 4-39% (B).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import hetero, simulate as sim
+from repro.core import stadi as stadi_lib
+from repro.core.patch_parallel import uniform_plan
+from repro.core.schedule import spatial_allocation, temporal_allocation
+from repro.core.patch_parallel import ExecutionTrace, IntervalEvent
+
+M_BASE, M_WARMUP = 100, 4
+
+
+def build_trace(plan, patches, cfg, batch=1):
+    """Schedule trace without running numerics (latency-only replay)."""
+    R = plan.lcm
+    F = plan.m_base - plan.m_warmup
+    events = [IntervalEvent(m, [1 if not e else 0 for e in plan.excluded],
+                            list(patches), synchronous=True)
+              for m in range(plan.m_warmup)]
+    for it in range(F // R):
+        events.append(IntervalEvent(plan.m_warmup + it * R,
+                                    [R // r if r else 0 for r in plan.ratios],
+                                    list(patches)))
+    H = cfg.latent_size
+    lat_bytes = int(batch * H * H * cfg.channels * 4)
+    kv_bytes = [int(2 * cfg.n_layers * batch * pr * cfg.tokens_per_side
+                    * cfg.d_model * 2) for pr in patches]
+    return ExecutionTrace(events, plan, list(patches), cfg.n_tokens,
+                          lat_bytes, kv_bytes)
+
+
+def run(cm=None, emit=True):
+    cfg, params, sched = common.load_tiny_dit()
+    if cm is None:
+        cm = common.calibrate_cost_model(cfg, params)
+    if emit:
+        common.emit("latency/calib_t_fixed", cm.t_fixed * 1e6, "per-step fixed s")
+        common.emit("latency/calib_t_row", cm.t_row * 1e6, "per-row s")
+    P_total = cfg.tokens_per_side
+    scenarios = {
+        "A": [[0.0, 0.2], [0.0, 0.4], [0.0, 0.6]],
+        "B": [[0.35, 0.45], [0.3, 0.5], [0.25, 0.55]],
+    }
+    out = {}
+    for sc, grids in scenarios.items():
+        for occ in grids:
+            speeds = hetero.speeds(hetero.make_cluster(occ))
+            # patch parallelism: uniform everything
+            pp_plan = uniform_plan(2, M_BASE, M_WARMUP)
+            pp_patches = [P_total // 2] * 2
+            t_pp = sim.simulate_trace(build_trace(pp_plan, pp_patches, cfg),
+                                      speeds, cm)
+            # STADI
+            plan = temporal_allocation(speeds, M_BASE, M_WARMUP)
+            patches = spatial_allocation(speeds, plan.steps, P_total)
+            t_st = sim.simulate_trace(build_trace(plan, patches, cfg),
+                                      speeds, cm)
+            # tensor parallelism baseline
+            act_bytes = cfg.n_tokens * cfg.d_model * 2
+            t_tp = sim.simulate_tensor_parallel(
+                M_BASE, 2, cfg.n_layers, P_total, speeds, cm, act_bytes)
+            red = (1 - t_st / t_pp) * 100
+            key = f"{sc}[{int(occ[0]*100)},{int(occ[1]*100)}]"
+            out[key] = (t_pp, t_tp, t_st, red)
+            if emit:
+                common.emit(f"latency/{key}/patch_par", t_pp * 1e6, f"{t_pp:.2f}s")
+                common.emit(f"latency/{key}/tensor_par", t_tp * 1e6, f"{t_tp:.2f}s")
+                common.emit(f"latency/{key}/stadi", t_st * 1e6,
+                            f"{t_st:.2f}s reduction={red:.1f}%")
+    return out
+
+
+def main():
+    res = run()
+    reds_a = [v[3] for k, v in res.items() if k.startswith("A")]
+    reds_b = [v[3] for k, v in res.items() if k.startswith("B")]
+    print(f"# scenario A reductions: {[f'{r:.1f}%' for r in reds_a]} "
+          f"(paper: 12-45%)")
+    print(f"# scenario B reductions: {[f'{r:.1f}%' for r in reds_b]} "
+          f"(paper: 4-39%)")
+    # STADI must never lose to PP, and TP must trail both (paper Fig. 8)
+    for k, (t_pp, t_tp, t_st, red) in res.items():
+        assert t_st <= t_pp * 1.001, (k, t_st, t_pp)
+        assert t_tp >= t_pp, (k, t_tp, t_pp)
+
+
+if __name__ == "__main__":
+    main()

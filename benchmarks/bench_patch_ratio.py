@@ -1,0 +1,58 @@
+"""Paper Fig. 9: latency vs patch-size ratio under several occupancy
+settings; dashed line = pure patch parallelism, triangle = the ratio STADI's
+Eq. 5 actually selects. Demonstrates (a) the latency bowl over the ratio and
+(b) that the fixed-overhead term makes extreme ratios suboptimal (the paper's
+observed nonlinearity)."""
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks.bench_latency import M_BASE, M_WARMUP, build_trace
+from repro.core import hetero, simulate as sim
+from repro.core.patch_parallel import uniform_plan
+from repro.core.schedule import spatial_allocation, temporal_allocation
+
+
+def run(emit=True):
+    cfg, params, sched = common.load_tiny_dit()
+    cm = common.calibrate_cost_model(cfg, params)
+    P = cfg.tokens_per_side
+    out = {}
+    for occ in ([0.0, 0.2], [0.0, 0.4], [0.0, 0.6]):
+        speeds = hetero.speeds(hetero.make_cluster(occ))
+        plan = uniform_plan(2, M_BASE, M_WARMUP)       # SA-only sweep
+        curve = {}
+        for p0 in range(1, P):
+            t = sim.simulate_trace(build_trace(plan, [p0, P - p0], cfg),
+                                   speeds, cm)
+            curve[p0] = t
+        best = min(curve, key=curve.get)
+        sel = spatial_allocation(speeds, plan.steps, P)[0]
+        pp = curve[P // 2]
+        key = f"[{int(occ[0]*100)},{int(occ[1]*100)}]"
+        out[key] = (curve, best, sel, pp)
+        if emit:
+            common.emit(f"patch_ratio/{key}/pp_uniform", pp * 1e6, f"{pp:.2f}s")
+            common.emit(f"patch_ratio/{key}/best", curve[best] * 1e6,
+                        f"ratio {best}:{P-best}")
+            common.emit(f"patch_ratio/{key}/stadi_selected", curve[sel] * 1e6,
+                        f"ratio {sel}:{P-sel} (within "
+                        f"{(curve[sel]/curve[best]-1)*100:.1f}% of best)")
+    return out
+
+
+def main():
+    res = run()
+    for key, (curve, best, sel, pp) in res.items():
+        # Eq.5's pick is near-optimal on the simulated bowl. Tolerance 25%:
+        # the paper itself observes (Fig. 9 discussion) that "when the load
+        # gap is too large, patch allocation based on effective speed may not
+        # yield optimal results" because of the fixed per-step overhead — we
+        # reproduce that effect at [0,60].
+        assert curve[sel] <= curve[best] * 1.25, (key, sel, best)
+        # the bowl exists: extreme allocations are worse than the best
+        P = max(curve)
+        assert curve[1] > curve[best] and curve[P] > curve[best]
+
+
+if __name__ == "__main__":
+    main()

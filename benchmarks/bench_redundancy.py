@@ -1,0 +1,65 @@
+"""Paper Theorems 1-2: temporal redundancy on the TRAINED tiny DiT.
+
+Thm 1: max_m |x_{t_m} - x_{t_{m+1}}| = O(1/M)  -> log-log slope ~ -1.
+Thm 2: device j at 2x the steps of device i stays O(1/M)-aligned at shared
+timesteps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import sampler as sl
+from repro.models.diffusion import dit
+
+
+def run(emit=True):
+    cfg, params, sched = common.load_tiny_dit()
+    x_T = jax.random.normal(jax.random.PRNGKey(3),
+                            (2, cfg.latent_size, cfg.latent_size, cfg.channels))
+    cond = jnp.zeros((2,), jnp.int32)
+    eps_fn = lambda x, t: dit.forward(params, cfg, x, t, cond)
+
+    # Theorem 1
+    Ms = [10, 20, 40, 80]
+    diffs = []
+    for M in Ms:
+        _, traj = sl.ddim_sample(eps_fn, sched, x_T, M=M, collect=True)
+        diffs.append(float(jnp.max(jnp.abs(jnp.diff(traj, axis=0)))))
+    slope1 = float(np.polyfit(np.log(Ms), np.log(diffs), 1)[0])
+
+    # Theorem 2: coarse (M/2) vs fine (M) trajectories at shared timesteps
+    gaps = []
+    for M in Ms:
+        ts_f = sl.ddim_timesteps(sched.T, M)
+        xf = xc = x_T
+        worst = 0.0
+        for m in range(M // 2):
+            for s in range(2):
+                tf, tt = ts_f[2 * m + s], ts_f[2 * m + s + 1]
+                xf = sl.ddim_step(sched, xf, eps_fn(xf, tf), tf, tt)
+            tcf, tct = ts_f[2 * m], ts_f[2 * m + 2]
+            xc = sl.ddim_step(sched, xc, eps_fn(xc, tcf), tcf, tct)
+            worst = max(worst, float(jnp.max(jnp.abs(xf - xc))))
+        gaps.append(worst)
+    slope2 = float(np.polyfit(np.log(Ms), np.log(gaps), 1)[0])
+
+    if emit:
+        for M, d, g in zip(Ms, diffs, gaps):
+            common.emit(f"redundancy/M{M}", 0.0,
+                        f"thm1_maxdiff={d:.4f} thm2_gap={g:.4f}")
+        common.emit("redundancy/thm1_slope", 0.0, f"{slope1:.2f} (expect ~-1)")
+        common.emit("redundancy/thm2_slope", 0.0, f"{slope2:.2f} (expect <=-0.5)")
+    return slope1, slope2, diffs, gaps
+
+
+def main():
+    slope1, slope2, diffs, gaps = run()
+    assert -1.6 < slope1 < -0.5, (slope1, diffs)
+    assert slope2 < -0.4, (slope2, gaps)
+    print(f"# Thm1 slope {slope1:.2f} (O(1/M) ok); Thm2 slope {slope2:.2f}")
+
+
+if __name__ == "__main__":
+    main()

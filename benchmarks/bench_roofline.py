@@ -1,0 +1,64 @@
+"""Deliverable (g): per-(arch x shape) roofline table from the dry-run
+artifacts (results/dryrun/*.json, single-pod mesh), with dominant bottleneck
+and MODEL_FLOPS / HLO_FLOPs usefulness ratio. Writes the markdown table
+consumed by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+DRYRUN = os.path.join(common.RESULTS, "dryrun")
+
+
+def load(mesh: str = "pod16x16"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        if d.get("ok") and "roofline" in d:
+            rows.append(d)
+    return rows
+
+
+def table(rows):
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+             "| useful (6ND/HLO) | bytes/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        r = d["roofline"]
+        mem = d["memory_analysis"]
+        per_dev = (mem.get("argument_size_in_bytes", 0) or 0) + \
+                  (mem.get("temp_size_in_bytes", 0) or 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} "
+            f"| {r['memory_s']:.4g} | {r['collective_s']:.4g} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.3f} "
+            f"| {per_dev/1e9:.1f}GB |")
+    return "\n".join(lines)
+
+
+def run(emit=True):
+    rows = load()
+    if emit:
+        for d in rows:
+            r = d["roofline"]
+            tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+            common.emit(f"roofline/{r['arch']}/{r['shape']}", tot * 1e6,
+                        f"dom={r['dominant']} useful={r['useful_ratio']:.3f}")
+    md = table(rows)
+    out = os.path.join(common.RESULTS, "roofline_table.md")
+    with open(out, "w") as f:
+        f.write(md + "\n")
+    return rows, md
+
+
+def main():
+    rows, md = run()
+    assert len(rows) == 40, f"expected 40 single-pod baselines, got {len(rows)}"
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

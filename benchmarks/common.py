@@ -1,0 +1,123 @@
+"""Shared benchmark utilities: calibration, model loading, CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint
+from repro.configs import get_config
+from repro.core import sampler as sampler_lib
+from repro.core.simulate import CostModel, fit_cost_model
+from repro.models.diffusion import dit
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results")
+CKPT = os.path.join(RESULTS, "tiny_dit_ckpt")
+
+_rows: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def flush_csv(path: str = None):
+    path = path or os.path.join(RESULTS, "bench.csv")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(_rows) + "\n")
+
+
+def load_tiny_dit(trained: bool = True):
+    cfg = get_config("tiny-dit")
+    params = dit.init_params(jax.random.PRNGKey(0), cfg)
+    if trained and latest_step(CKPT) is not None:
+        params = restore_checkpoint(CKPT, {"params": params})["params"]
+        params = jax.tree.map(jnp.asarray, params)
+    sched = sampler_lib.linear_schedule(T=1000)
+    return cfg, params, sched
+
+
+def time_fn(fn, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def calibrate_cost_model(cfg, params, rows_list=(4, 8, 16)) -> CostModel:
+    """Measure real single-step denoiser latency at several patch sizes on
+    this host; fit t(P) = t_fixed + t_row * P (DESIGN.md §6)."""
+    wp = cfg.tokens_per_side
+    p = cfg.patch_size
+    B = 1
+    buf_k, buf_v = dit.init_buffers(cfg, B)
+    times, rows_used = [], []
+    for rows in rows_list:
+        if rows > wp:
+            continue
+        x = jnp.zeros((B, rows * p, cfg.latent_size, cfg.channels))
+        cond = jnp.zeros((B,), jnp.int32)
+
+        @jax.jit
+        def step(x, bk, bv):
+            eps, _ = dit.forward_patch(params, cfg, x, 500, cond, 0,
+                                       buffers=(bk, bv))
+            return eps
+
+        t = time_fn(lambda: step(x, buf_k, buf_v))
+        times.append(t)
+        rows_used.append(rows)
+    return fit_cost_model(rows_used, times)
+
+
+def feature_extractor(seed: int = 0):
+    """Fixed random-CNN feature map (LPIPS/FID proxy, DESIGN.md §6)."""
+    from repro.models.diffusion.unet import conv2d
+    rng = jax.random.PRNGKey(seed)
+    ks = jax.random.split(rng, 3)
+    w1 = jax.random.normal(ks[0], (3, 3, 3, 16)) / np.sqrt(27)
+    w2 = jax.random.normal(ks[1], (3, 3, 16, 32)) / np.sqrt(144)
+    w3 = jax.random.normal(ks[2], (3, 3, 32, 64)) / np.sqrt(288)
+
+    @jax.jit
+    def feats(x):
+        h = jax.nn.relu(conv2d(x, w1, stride=2))
+        h = jax.nn.relu(conv2d(h, w2, stride=2))
+        h = jax.nn.relu(conv2d(h, w3, stride=2))
+        return h.reshape(x.shape[0], -1)
+
+    return feats
+
+
+def psnr(a: np.ndarray, b: np.ndarray, data_range: float = 2.0) -> float:
+    mse = float(np.mean((a - b) ** 2))
+    if mse == 0:
+        return 99.0
+    return 10.0 * np.log10(data_range ** 2 / mse)
+
+
+def frechet_proxy(fa: np.ndarray, fb: np.ndarray) -> float:
+    """Frechet distance between Gaussians fit to feature sets (diagonal cov)."""
+    mu_a, mu_b = fa.mean(0), fb.mean(0)
+    va, vb = fa.var(0), fb.var(0)
+    return float(np.sum((mu_a - mu_b) ** 2) +
+                 np.sum(va + vb - 2 * np.sqrt(np.maximum(va * vb, 0))))
+
+
+def lpips_proxy(feats, a: np.ndarray, b: np.ndarray) -> float:
+    fa = np.asarray(feats(jnp.asarray(a)))
+    fb = np.asarray(feats(jnp.asarray(b)))
+    num = np.sum((fa - fb) ** 2, axis=1)
+    den = np.sum(fa ** 2, axis=1) + np.sum(fb ** 2, axis=1) + 1e-9
+    return float(np.mean(num / den))

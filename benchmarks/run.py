@@ -1,0 +1,50 @@
+"""Benchmark registry — one module per paper table/figure (DESIGN.md §8).
+
+  PYTHONPATH=src python -m benchmarks.run [names...]
+
+Prints ``name,us_per_call,derived`` CSV rows (also written to
+results/bench.csv)."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import common
+
+REGISTRY = [
+    ("kernels", "benchmarks.bench_kernels", "kernel micro vs oracles"),
+    ("latency", "benchmarks.bench_latency", "paper Fig. 8"),
+    ("ablation", "benchmarks.bench_ablation", "paper Table III"),
+    ("patch_ratio", "benchmarks.bench_patch_ratio", "paper Fig. 9"),
+    ("quality", "benchmarks.bench_quality", "paper Table II"),
+    ("redundancy", "benchmarks.bench_redundancy", "paper Thm. 1/2"),
+    ("beyond", "benchmarks.bench_beyond", "beyond-paper: tiers + reprofiling"),
+    ("roofline", "benchmarks.bench_roofline", "deliverable g"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    failures = []
+    for name, module, what in REGISTRY:
+        if want and name not in want:
+            continue
+        print(f"## {name}  ({what})", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"## {name} done in {time.time()-t0:.1f}s\n", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    common.flush_csv()
+    if failures:
+        print(f"FAILED benches: {failures}")
+        raise SystemExit(1)
+    print("all benchmarks OK")
+
+
+if __name__ == "__main__":
+    main()

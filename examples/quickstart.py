@@ -1,0 +1,47 @@
+"""Quickstart: STADI in ~40 lines.
+
+Allocates steps (Eq. 4) + patches (Eq. 5) for a heterogeneous 2-"GPU"
+cluster, runs the exact-numerics engine on a tiny DiT, and compares the
+result against non-distributed DDIM.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import hetero, patch_parallel, sampler, stadi
+from repro.models.diffusion import dit
+
+# 1. a heterogeneous cluster: device 1 is 60%-occupied by background work
+cluster = hetero.make_cluster(occupancies=[0.0, 0.6])
+speeds = hetero.speeds(cluster)
+print(f"effective speeds: {speeds}")
+
+# 2. a small denoiser + schedule
+cfg = get_config("tiny-dit").reduced()
+params = dit.init_params(jax.random.PRNGKey(0), cfg)
+sched = sampler.linear_schedule(T=1000)
+x_T = jax.random.normal(jax.random.PRNGKey(1),
+                        (1, cfg.latent_size, cfg.latent_size, cfg.channels))
+cond = jnp.asarray([3])
+
+# 3. STADI: temporal + spatial adaptation (Algorithm 1)
+result = stadi.stadi_infer(params, cfg, sched, x_T, cond, speeds,
+                           m_base=16, m_warmup=4)
+print(f"steps per device:   {result.trace.plan.steps}")
+print(f"patch rows per dev: {result.trace.patches}")
+
+# 4. compare with the non-distributed Origin trajectory
+origin = patch_parallel.run_origin(params, cfg, sched, x_T, cond, m_base=16)
+rel = np.linalg.norm(np.asarray(result.image) - np.asarray(origin)) \
+    / np.linalg.norm(np.asarray(origin))
+print(f"relative deviation from Origin: {rel:.4f} (stale-KV + mixed-rate)")
+assert np.all(np.isfinite(np.asarray(result.image)))
+print("ok")

@@ -1,0 +1,27 @@
+"""Batched LLM serving with the framework's serving engine (any --arch).
+
+  PYTHONPATH=src python examples/serve_llm.py --arch gemma-2b --requests 6
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+    done = serve(args.arch, n_requests=args.requests, slots=3,
+                 prompt_len=12, max_new=8)
+    for r in done[:3]:
+        print(f"req {r.uid}: prompt {r.prompt[:6].tolist()}... -> "
+              f"{r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Pytree checkpointing: npz arrays + json treedef (no external deps).
+
+Layout:  <dir>/step_<N>/arrays.npz + tree.json ; atomic via tmp+rename.
+Handles nested dicts/lists/tuples of jnp/np arrays and scalars.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    leaves, treedef = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {f"a{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "tree.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "n": len(leaves), "step": step}, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``like`` (treedef source of truth)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(like)
+    if len(leaves) != len(data.files):
+        raise ValueError(f"checkpoint has {len(data.files)} leaves, "
+                         f"expected {len(leaves)}")
+    new_leaves = [data[f"a{i}"] for i in range(len(leaves))]
+    for old, new in zip(leaves, new_leaves):
+        if tuple(np.shape(old)) != tuple(new.shape):
+            raise ValueError(f"shape mismatch {np.shape(old)} vs {new.shape}")
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None

@@ -1,0 +1,63 @@
+"""Diffusion-model (denoiser) configs for the STADI wing."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    arch_id: str = "tiny-dit"
+    family: str = "dit"
+    source: str = "arXiv:2212.09748 (DiT)"
+    # latent grid
+    latent_size: int = 32            # H = W (latent resolution)
+    channels: int = 4                # latent channels
+    patch_size: int = 2              # patchify
+    # transformer
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    mlp_ratio: float = 4.0
+    cond_dim: int = 64               # class/prompt conditioning embedding dim
+    n_classes: int = 16              # synthetic conditioning vocabulary
+    # numerics
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+
+    @property
+    def tokens_per_side(self) -> int:
+        return self.latent_size // self.patch_size
+
+    @property
+    def n_tokens(self) -> int:
+        return self.tokens_per_side ** 2
+
+    @property
+    def token_dim(self) -> int:
+        return self.channels * self.patch_size ** 2
+
+    def replace(self, **kw) -> "DiTConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "DiTConfig":
+        return self.replace(n_layers=2, d_model=128, n_heads=4, latent_size=16)
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    arch_id: str = "tiny-unet"
+    family: str = "unet"
+    source: str = "arXiv:2307.01952 (SDXL; scaled-down)"
+    image_size: int = 32
+    channels: int = 3
+    base_width: int = 32
+    channel_mults: tuple = (1, 2, 2)
+    attn_levels: tuple = (2,)        # attention at these downsample levels
+    n_res_blocks: int = 1
+    cond_dim: int = 64
+    n_classes: int = 16
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)

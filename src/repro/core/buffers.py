@@ -1,0 +1,41 @@
+"""DistriFusion-style stale activation buffers.
+
+``Published`` holds the full-image per-layer K/V as of the last completed
+sync interval. Within an interval every worker reads ``published`` for
+remote regions (stale) while its own fresh local K/V is overwritten inside
+``dit.forward_patch``. Workers' newly published local K/V accumulate in
+``pending`` and are merged at the interval boundary — the emulation-exact
+counterpart of NCCL async broadcast landing by the next sync point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Published:
+    k: jnp.ndarray          # [L, B, N_tokens, H, hd]
+    v: jnp.ndarray
+    step: int = 0           # fine-step index of last merge (for staleness asserts)
+
+    def copy(self) -> "Published":
+        return Published(self.k, self.v, self.step)
+
+
+def publish_local(pending: Dict[int, Tuple], worker: int, k_local, v_local,
+                  tok_start: int) -> None:
+    """Queue worker's fresh local K/V ([L,B,Nl,H,hd]) for the next merge."""
+    pending[worker] = (k_local, v_local, tok_start)
+
+
+def merge(published: Published, pending: Dict[int, Tuple], step: int) -> Published:
+    """Apply all queued regional updates; returns new Published."""
+    k, v = published.k, published.v
+    for _, (kl, vl, start) in sorted(pending.items()):
+        k = jax.lax.dynamic_update_slice_in_dim(k, kl.astype(k.dtype), start, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(v, vl.astype(v.dtype), start, axis=2)
+    return Published(k, v, step)

@@ -1,0 +1,80 @@
+"""Heterogeneity modeling: device profiles, effective speeds, occupancy
+simulation (paper §V-A "Occupancy Simulation"), and online re-profiling
+(beyond-paper extension §7.1 in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.schedule import effective_speed
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    """One (possibly virtual) accelerator.
+
+    c: relative capability, fastest == 1.0 (offline benchmark, paper §III-B)
+    rho: background occupancy in [0, 1] (system API / simulated)
+    """
+    name: str
+    c: float = 1.0
+    rho: float = 0.0
+
+    @property
+    def v(self) -> float:
+        return effective_speed(self.c, self.rho)
+
+
+def make_cluster(occupancies: Sequence[float],
+                 capabilities: Optional[Sequence[float]] = None) -> List[DeviceProfile]:
+    """Paper's experimental grid: homogeneous GPUs + per-device occupancy,
+    e.g. [0.0, 0.6]; optionally heterogeneous capabilities too."""
+    caps = capabilities or [1.0] * len(occupancies)
+    return [DeviceProfile(f"dev{i}", c, r)
+            for i, (c, r) in enumerate(zip(caps, occupancies))]
+
+
+def speeds(cluster: Sequence[DeviceProfile]) -> List[float]:
+    return [d.v for d in cluster]
+
+
+# ----------------------------------------------------------------------
+# profiling
+# ----------------------------------------------------------------------
+
+def profile_step_time(step_fn: Callable[[], None], warmup: int = 1,
+                      iters: int = 3) -> float:
+    """Wall-clock a single-step callable (used to calibrate the simulator)."""
+    for _ in range(warmup):
+        step_fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        step_fn()
+    return (time.perf_counter() - t0) / iters
+
+
+class OnlineProfiler:
+    """Beyond-paper: EWMA re-estimation of v_i from measured per-interval
+    latencies during inference; feeds re-allocation when drift > threshold.
+    The paper profiles once, offline ("derived directly from historical
+    inference time profiles") — this adapts to occupancy drift mid-request.
+    """
+
+    def __init__(self, init_speeds: Sequence[float], alpha: float = 0.5):
+        self.speeds = list(init_speeds)
+        self.alpha = alpha
+
+    def update(self, device: int, work: float, measured_time: float) -> float:
+        """work = nominal work units completed (e.g. patch_frac * steps)."""
+        if measured_time <= 0:
+            return self.speeds[device]
+        observed_v = work / measured_time
+        s = self.speeds[device]
+        self.speeds[device] = (1 - self.alpha) * s + self.alpha * observed_v
+        return self.speeds[device]
+
+    def drift(self, init_speeds: Sequence[float]) -> float:
+        return max(abs(s - s0) / max(s0, 1e-9)
+                   for s, s0 in zip(self.speeds, init_speeds))

@@ -1,0 +1,170 @@
+"""Patch-parallel diffusion inference engine (DistriFusion + STADI schedules).
+
+Single-process EMULATION with exact numerics: N logical workers each own a
+row-slab of the latent; stale-KV semantics follow DESIGN.md §2 (buffers are
+carried state; async NCCL broadcast == merge-at-next-sync). The engine also
+produces an :class:`ExecutionTrace` that the latency simulator replays
+against per-device speeds — so quality numerics and latency modeling come
+from the SAME schedule object.
+
+The SPMD shard_map path (real devices) lives in launch/stadi_infer.py and
+reuses this module's schedule logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.diffusion import DiTConfig
+from repro.core import buffers as buf_lib
+from repro.core import sampler as sampler_lib
+from repro.core.sampler import NoiseSchedule
+from repro.core.schedule import TemporalPlan, patch_bounds
+from repro.models.diffusion import dit
+
+
+@dataclasses.dataclass
+class IntervalEvent:
+    """One sync interval: per-worker (sub-steps executed, patch rows)."""
+    fine_step: int                       # first fine step of the interval
+    substeps: List[int]                  # steps executed by each worker
+    patches: List[int]                   # token-rows per worker
+    synchronous: bool = False            # warmup intervals sync every layer
+
+
+@dataclasses.dataclass
+class ExecutionTrace:
+    events: List[IntervalEvent]
+    plan: Optional[TemporalPlan]
+    patches: List[int]
+    n_tokens: int                        # full image tokens (comm sizing)
+    latent_bytes: int
+    kv_bytes_per_worker: List[int]
+
+
+@dataclasses.dataclass
+class RunResult:
+    image: jnp.ndarray                   # [B,H,W,C] final x_0
+    trace: ExecutionTrace
+
+
+def _slab(x, bounds_rows_latent: Tuple[int, int]):
+    return x[:, bounds_rows_latent[0]:bounds_rows_latent[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "row_start"))
+def _jit_patch_step(params, cfg, x_loc, t, cond, row_start, bk, bv):
+    """Jitted hot loop body (one denoiser eval on a patch with stale KV).
+    Keeps the engine's eager dispatch count bounded: thousands of unjitted
+    eager ops exhaust the LLVM JIT's mmap budget on long runs."""
+    return dit.forward_patch(params, cfg, x_loc, t, cond, row_start,
+                             buffers=(bk, bv), return_kv=True)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _jit_full_step(params, cfg, x, t, cond):
+    return dit.forward_patch(params, cfg, x, t, cond, 0, buffers=None,
+                             return_kv=True)
+
+
+def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
+                 plan: TemporalPlan, patches: Sequence[int]) -> RunResult:
+    """Execute Algorithm 1 given a temporal plan + spatial allocation.
+
+    patches: token-rows per worker (sum == cfg.tokens_per_side; 0 = excluded).
+    Uniform plan (all ratios 1, equal patches) == DistriFusion patch
+    parallelism; plan from Eq. 4/5 == STADI.
+    """
+    p = cfg.patch_size
+    M_base, M_w = plan.m_base, plan.m_warmup
+    F = M_base - M_w
+    R = plan.lcm                          # fine steps per interval
+    ts = sampler_lib.ddim_timesteps(sched.T, M_base)   # fine grid, len M_base+1
+    bounds_tok = patch_bounds(patches)
+    bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
+    workers = [i for i in plan.active if patches[i] > 0]
+
+    x = x_T
+    B = x.shape[0]
+    events: List[IntervalEvent] = []
+
+    # ---------------- warmup: synchronous steps (== exact full forward) ----
+    published = None
+    for m in range(M_w):
+        eps, kvs = _jit_full_step(params, cfg, x, ts[m], cond)
+        x = sampler_lib.ddim_step(sched, x, eps, ts[m], ts[m + 1])
+        published = buf_lib.Published(kvs[0], kvs[1], m)
+        events.append(IntervalEvent(m, [1 if i in workers else 0
+                                        for i in range(len(patches))],
+                                    list(patches), synchronous=True))
+    if published is None:                # M_w == 0: bootstrap buffers once
+        _, kvs = _jit_full_step(params, cfg, x, ts[0], cond)
+        published = buf_lib.Published(kvs[0], kvs[1], -1)
+
+    # ---------------- adaptive loop: intervals of R fine steps -------------
+    n_intervals = F // R
+    for it in range(n_intervals):
+        m0 = M_w + it * R
+        pending = {}
+        new_slabs = {}
+        for i in workers:
+            r = plan.ratios[i]
+            sub = R // r                  # sub-steps this worker runs
+            lat = bounds_lat[i]
+            x_loc = _slab(x, lat)
+            for s in range(sub):
+                t_from = ts[m0 + s * r]
+                t_to = ts[m0 + (s + 1) * r]
+                eps, kvs = _jit_patch_step(
+                    params, cfg, x_loc, t_from, cond, bounds_tok[i][0],
+                    published.k, published.v)
+                x_loc = sampler_lib.ddim_step(sched, x_loc, eps, t_from, t_to)
+                if s == 0:   # Alg.1 l.16-17 / l.23: publish at interval start
+                    buf_lib.publish_local(pending, i, kvs[0], kvs[1],
+                                          bounds_tok[i][0] * cfg.tokens_per_side)
+            new_slabs[i] = x_loc
+        # interval boundary: sync all-gather of x + buffer merge
+        for i in workers:
+            lat = bounds_lat[i]
+            x = x.at[:, lat[0]:lat[1]].set(new_slabs[i])
+        published = buf_lib.merge(published, pending, m0 + R)
+        events.append(IntervalEvent(m0, [R // plan.ratios[i] if i in workers else 0
+                                         for i in range(len(patches))],
+                                    list(patches)))
+
+    H = cfg.latent_size
+    n_tokens = cfg.n_tokens
+    lat_bytes = int(B * H * H * cfg.channels * 4)
+    kv_bytes = [int(2 * cfg.n_layers * B * pr * cfg.tokens_per_side
+                    * cfg.d_model * 2) for pr in patches]
+    trace = ExecutionTrace(events, plan, list(patches), n_tokens, lat_bytes, kv_bytes)
+    return RunResult(x, trace)
+
+
+# ----------------------------------------------------------------------
+# convenience wrappers
+# ----------------------------------------------------------------------
+
+def uniform_plan(n_workers: int, m_base: int, m_warmup: int) -> TemporalPlan:
+    return TemporalPlan([m_base] * n_workers, [1] * n_workers,
+                        [False] * n_workers, m_base, m_warmup)
+
+
+def run_distrifusion(params, cfg, sched, x_T, cond, n_workers: int,
+                     m_base: int, m_warmup: int) -> RunResult:
+    """Patch parallelism baseline: uniform patches, uniform steps."""
+    P = cfg.tokens_per_side
+    base, rem = divmod(P, n_workers)
+    patches = [base + (1 if i < rem else 0) for i in range(n_workers)]
+    return run_schedule(params, cfg, sched, x_T, cond,
+                        uniform_plan(n_workers, m_base, m_warmup), patches)
+
+
+def run_origin(params, cfg, sched, x_T, cond, m_base: int) -> jnp.ndarray:
+    """Non-distributed exact DDIM ("Origin" in Table II)."""
+    eps_fn = lambda x, t: dit.forward(params, cfg, x, t, cond)
+    return sampler_lib.ddim_sample(eps_fn, sched, x_T, m_base)

@@ -1,0 +1,103 @@
+"""Heterogeneous-cluster latency simulator.
+
+This container has one CPU core (DESIGN.md §2): STADI's *numerics* run for
+real in the emulation engine, while heterogeneous *wall-clock* is modeled by
+replaying the engine's :class:`ExecutionTrace` against per-device effective
+speeds with a calibrated per-step cost model
+
+    t_i(P) = (t_fixed + t_row * P) / v_i          [seconds]
+
+calibrated from real measured single-step denoiser latencies at several patch
+sizes on this host (benchmarks/bench_latency.py does the calibration). The
+paper's own Fig. 9 observation — "single-step delay no longer maintains a
+linear relationship with the patch size due to some fixed overhead" — is the
+t_fixed term.
+
+Communication: sync all-gather of x at every interval boundary (bytes =
+latent slab sizes) + warmup per-layer activation sync; async KV broadcasts
+are overlapped with compute (DistriFusion masking) and only charged when
+they exceed the interval's compute time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+from repro.core.patch_parallel import ExecutionTrace
+
+
+@dataclasses.dataclass
+class CostModel:
+    t_fixed: float            # per-step fixed overhead (s) at v=1
+    t_row: float              # per token-row marginal cost (s) at v=1
+    link_bw: float = 25e9     # bytes/s (PCIe4 x16 ~ paper's testbed)
+    link_latency: float = 30e-6
+
+    def step_time(self, rows: int, v: float) -> float:
+        return (self.t_fixed + self.t_row * rows) / max(v, 1e-9)
+
+
+def fit_cost_model(rows: Sequence[int], times: Sequence[float], **kw) -> CostModel:
+    """Least-squares fit t = t_fixed + t_row * rows."""
+    n = len(rows)
+    sx = sum(rows); sy = sum(times)
+    sxx = sum(r * r for r in rows); sxy = sum(r * t for r, t in zip(rows, times))
+    denom = n * sxx - sx * sx
+    t_row = (n * sxy - sx * sy) / denom if denom else 0.0
+    t_fixed = max((sy - t_row * sx) / n, 1e-6)
+    return CostModel(t_fixed=t_fixed, t_row=max(t_row, 1e-9), **kw)
+
+
+def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
+                   cm: CostModel) -> float:
+    """End-to-end makespan (s) of a schedule on devices with given speeds."""
+    total = 0.0
+    for ev in trace.events:
+        compute = 0.0
+        for i, (sub, rows) in enumerate(zip(ev.substeps, ev.patches)):
+            if sub == 0 or rows == 0:
+                continue
+            compute = max(compute, sub * cm.step_time(rows, speeds[i]))
+        # interval-boundary sync all-gather of x (+ staged KV for warmup sync)
+        comm_bytes = trace.latent_bytes
+        if ev.synchronous:
+            comm_bytes += sum(trace.kv_bytes_per_worker)   # per-step activation sync
+        comm = comm_bytes / cm.link_bw + cm.link_latency
+        # async KV publication is masked by compute; charge only the excess
+        async_bytes = max((trace.kv_bytes_per_worker[i]
+                           for i, s in enumerate(ev.substeps) if s), default=0)
+        async_t = async_bytes / cm.link_bw
+        total += max(compute, async_t) + comm
+    return total
+
+
+def simulate_tensor_parallel(n_steps: int, n_devices: int, n_layers: int,
+                             full_rows: int, speeds: Sequence[float],
+                             cm: CostModel, act_bytes_per_layer: int) -> float:
+    """Baseline TP: every layer's work split 1/N across devices with a
+    synchronous all-reduce per layer => straggler-bound per layer."""
+    per_layer_compute = max(
+        cm.step_time(full_rows, v) / (n_layers * n_devices) for v in speeds)
+    # ring all-reduce ~ 2*(N-1)/N * bytes / bw
+    ar = 2 * (n_devices - 1) / n_devices * act_bytes_per_layer / cm.link_bw \
+        + cm.link_latency
+    per_step = n_layers * (per_layer_compute + ar) + cm.t_fixed / min(speeds)
+    return n_steps * per_step
+
+
+def uniform_pp_latency(n_steps: int, rows_total: int, speeds: Sequence[float],
+                       cm: CostModel, latent_bytes: int) -> float:
+    """Closed-form patch-parallelism latency (equal patches, equal steps)."""
+    n = len(speeds)
+    rows = rows_total / n
+    per_step = max(cm.step_time(rows, v) for v in speeds)
+    comm = latent_bytes / cm.link_bw + cm.link_latency
+    return n_steps * (per_step + comm)
+
+
+@dataclasses.dataclass
+class LatencyReport:
+    method: str
+    occupancies: List[float]
+    latency_s: float
+    speedup_vs: dict

@@ -1,0 +1,49 @@
+"""STADI: Spatio-Temporal Adaptive Diffusion Inference (Algorithm 1).
+
+    plan    = temporal_allocation(speeds, M_base, M_warmup, a, b)   # Eq. (4)
+    patches = spatial_allocation(speeds, plan.steps, P_total)       # Eq. (5)
+    result  = run_schedule(..., plan, patches)                      # lines 7-25
+
+``stadi_infer`` wires the three together; ``ablation variants`` expose
+None / +SA / +TA / +TA+SA (paper Table III).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.configs.diffusion import DiTConfig
+from repro.core import schedule as sched_lib
+from repro.core.patch_parallel import RunResult, run_schedule, uniform_plan
+from repro.core.sampler import NoiseSchedule
+
+
+def stadi_infer(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
+                speeds: Sequence[float], m_base: int, m_warmup: int,
+                a: float = 0.75, b: float = 0.25,
+                granularity: int = 1,
+                temporal: bool = True, spatial: bool = True,
+                tiers: Sequence[int] = (1, 2)) -> RunResult:
+    """Full STADI (temporal=spatial=True); ablations by flipping the flags:
+       temporal=False, spatial=False  -> patch parallelism ("None")
+       temporal=False, spatial=True   -> +SA
+       temporal=True,  spatial=False  -> +TA
+       temporal=True,  spatial=True   -> +TA+SA (STADI)
+    """
+    N = len(speeds)
+    P_total = cfg.tokens_per_side
+    if temporal:
+        plan = sched_lib.temporal_allocation(speeds, m_base, m_warmup, a, b, tiers)
+    else:
+        plan = uniform_plan(N, m_base, m_warmup)
+    if spatial:
+        patches = sched_lib.spatial_allocation(speeds, plan.steps, P_total, granularity)
+    else:
+        base, rem = divmod(P_total, sum(1 for e in plan.excluded if not e))
+        patches, j = [], 0
+        for i in range(N):
+            if plan.excluded[i]:
+                patches.append(0)
+            else:
+                patches.append(base + (1 if j < rem else 0))
+                j += 1
+    return run_schedule(params, cfg, sched, x_T, cond, plan, patches)

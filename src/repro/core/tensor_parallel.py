@@ -1,0 +1,63 @@
+"""Tensor-parallel DiT baseline (paper §V-A Baselines).
+
+"Tensor parallelism achieves distributed diffusion inference by performing
+synchronous all-reduce at each layer of computation" — Megatron-style: QKV /
+MLP-in column-sharded over heads/hidden, output projections row-sharded, one
+all-reduce (psum) per attention and per MLP. Implemented with
+``with_sharding_constraint`` annotations so GSPMD emits the all-reduces;
+latency on heterogeneous devices comes from ``simulate_tensor_parallel``
+(XLA assumes homogeneous SPMD — the paper's Fig. 2/8 point is precisely that
+TP degrades under heterogeneity, which the simulator models as
+straggler-bound per-layer sync).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.diffusion import DiTConfig
+
+
+def tp_param_specs(cfg: DiTConfig):
+    """PartitionSpecs for dit params under a 1-D ('model',) mesh."""
+    def spec_block(_):
+        return {
+            "qkv": P(None, None, "model"),
+            "wo": P(None, "model", None),
+            "w1": P(None, None, "model"),
+            "w2": P(None, "model", None),
+            "mod_w": P(None, None, None),
+            "mod_b": P(None, None),
+        }
+    return {
+        "patch_embed": P(None, None),
+        "patch_bias": P(None),
+        "t_w1": P(None, None),
+        "t_w2": P(None, None),
+        "cond_embed": P(None, None),
+        "blocks": spec_block(None),
+        "final_mod_w": P(None, None),
+        "final_mod_b": P(None),
+        "final_proj": P(None, None),
+    }
+
+
+def tp_forward(params, cfg: DiTConfig, x, t, cond, mesh):
+    """Full-image TP denoiser step; activations replicated, weights sharded.
+
+    GSPMD inserts the per-layer all-reduces that define this baseline.
+    """
+    from repro.models.diffusion import dit
+
+    def constrained(p):
+        specs = tp_param_specs(cfg)
+        return jax.tree.map(
+            lambda a, s: jax.lax.with_sharding_constraint(
+                a, jax.sharding.NamedSharding(mesh, s)),
+            p, specs, is_leaf=lambda v: isinstance(v, jnp.ndarray))
+
+    params = constrained(params)
+    eps, _ = dit.forward_patch(params, cfg, x, t, cond, 0, buffers=None,
+                               return_kv=False)
+    return eps

@@ -1,0 +1,2 @@
+from repro.data.tokens import TokenStream  # noqa
+from repro.data.images import SyntheticImages  # noqa

@@ -1,0 +1,136 @@
+"""Jit'd public wrappers around the Pallas kernels: layout transforms
+([B,S,H,hd] <-> [B,H,S,hd]), GQA head broadcast, shape padding to tile
+multiples, interpret-mode selection (interpret=True off-TPU per the brief).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ssm_scan as ss
+from repro.kernels import stale_kv_attention as ska
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult: int, axis: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def _tile(n: int, target: int = 128, floor: int = 8) -> int:
+    """Largest hardware-friendly tile <= n (prefers 128-multiples)."""
+    if n >= target:
+        return target
+    t = floor
+    while t * 2 <= n:
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 0, bk: int = 0):
+    """q: [B,S,H,hd]; k,v: [B,T,K,hd] (K | H). Returns [B,S,H,hd].
+
+    Pads S/T to tile multiples; padded key positions are masked out by
+    re-padding K with -inf-free semantics: queries in the pad region produce
+    garbage that is sliced away; padded keys get zero K => their scores join
+    softmax, so we mask them via an additional window/causal trick: we pad T
+    only when causal (pad keys are in the future of every real query) or
+    explicitly mask by appending keys at +inf distance (handled below).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    q = jnp.moveaxis(q, 2, 1)                        # [B,H,S,hd]
+    k = jnp.moveaxis(k, 2, 1)
+    v = jnp.moveaxis(v, 2, 1)
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq = bq or _tile(S)
+    bk = bk or _tile(T)
+    q, pad_s = _pad_to(q, bq, 2)
+    k, pad_t = _pad_to(k, bk, 2)
+    v, _ = _pad_to(v, bk, 2)
+    if pad_t and not causal:
+        # mask padded keys by forcing them outside every window; with no
+        # causal/window mask, fall back to key masking via huge negative K
+        # contribution: simplest robust route = causal=False, window covering
+        # all real keys relative to padded query positions is not expressible,
+        # so use an explicit validity trick: set padded K rows to a value that
+        # yields -inf scores via q@k = 0 and subtract with a bias is not
+        # available; instead shift to ref path for this rare case.
+        out = jnp.moveaxis(
+            _masked_ref(q, k, v, T, causal=causal, window=window), 1, 2)
+        return out[:, :S]
+    out = fa.flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=_interpret())
+    out = jnp.moveaxis(out, 1, 2)                    # [B,S,H,hd]
+    return out[:, :S]
+
+
+def _masked_ref(q, k, v, T_valid, *, causal, window):
+    from repro.kernels.ref import attention_ref
+    T = k.shape[2]
+    if T == T_valid:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    # zero-out padded keys via an explicit mask on scores
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    valid = (jnp.arange(T) < T_valid)[None, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tok_start", "bq", "bk"))
+def stale_kv_attention(q, k_fresh, v_fresh, k_stale, v_stale, *,
+                       tok_start: int, bq: int = 0, bk: int = 0):
+    """DistriFusion hot op. q/k_fresh/v_fresh: [B,Nl,H,hd] local fresh;
+    k_stale/v_stale: [B,N,H,hd] full-image stale. Returns [B,Nl,H,hd].
+    tok_start/Nl/N must share a common tile divisor (token rows are
+    128-token multiples for sdxl-dit; ops picks bk = gcd-friendly tile)."""
+    B, Nl, H, hd = q.shape
+    N = k_stale.shape[1]
+    q = jnp.moveaxis(q, 2, 1)
+    kf = jnp.moveaxis(k_fresh, 2, 1)
+    vf = jnp.moveaxis(v_fresh, 2, 1)
+    ks = jnp.moveaxis(k_stale, 2, 1)
+    vs = jnp.moveaxis(v_stale, 2, 1)
+    import math
+    g = math.gcd(math.gcd(Nl, N), tok_start) if tok_start else math.gcd(Nl, N)
+    bk = bk or _tile(g, 128, 8)
+    bq = bq or _tile(Nl, 128, 8)
+    out = ska.stale_kv_attention_bhsd(q, kf, vf, ks, vs, tok_start,
+                                      bq=bq, bk=bk, interpret=_interpret())
+    return jnp.moveaxis(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "dblk"))
+def ssm_scan(x, dt, b_t, c_t, a, d_skip, *, chunk: int = 0, dblk: int = 0):
+    """Chunked SSM scan; pads S to chunk and Di to dblk multiples."""
+    B, S, Di = x.shape
+    chunk = chunk or _tile(S, 64, 4)
+    dblk = dblk or _tile(Di, 128, 8)
+    x, pad_s = _pad_to(x, chunk, 1)
+    dt, _ = _pad_to(dt, chunk, 1)
+    b_t, _ = _pad_to(b_t, chunk, 1)
+    c_t, _ = _pad_to(c_t, chunk, 1)
+    x, pad_d = _pad_to(x, dblk, 2)
+    dt, _ = _pad_to(dt, dblk, 2)
+    a2, _ = _pad_to(a, dblk, 0)
+    dsk, _ = _pad_to(d_skip, dblk, 0)
+    y = ss.ssm_scan_chunked(x, dt, b_t, c_t, a2, dsk, chunk=chunk, dblk=dblk,
+                            interpret=_interpret())
+    return y[:, :S, :Di]

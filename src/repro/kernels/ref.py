@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = False, window: int = 0,
+                  scale=None):
+    """q: [B,H,S,hd]; k,v: [B,H,T,hd] -> [B,H,S,hd]; fp32 softmax."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal or window:
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(T)[None, :]
+        mask = jnp.ones((S, T), bool)
+        if causal:
+            mask &= kj <= qi
+        if window:
+            mask &= kj > qi - window
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def stale_kv_attention_ref(q_fresh, k_fresh, v_fresh, k_stale, v_stale,
+                           tok_start: int, scale=None):
+    """Materialize full_kv = update_slice(stale, fresh) then attend."""
+    full_k = jax.lax.dynamic_update_slice_in_dim(
+        k_stale, k_fresh.astype(k_stale.dtype), tok_start, axis=2)
+    full_v = jax.lax.dynamic_update_slice_in_dim(
+        v_stale, v_fresh.astype(v_stale.dtype), tok_start, axis=2)
+    return attention_ref(q_fresh, full_k, full_v, scale=scale)
+
+
+def ssm_scan_ref(x, dt, b_t, c_t, a, d_skip):
+    """x, dt: [B,S,Di]; b_t/c_t: [B,S,N]; a: [Di,N]; d_skip: [Di] -> y."""
+    def step(h, inp):
+        x_t, d_t, bt, ct = inp
+        da = jnp.exp(d_t[..., None] * a[None])
+        h = da * h + (d_t * x_t)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct) + d_skip * x_t
+        return h, y
+
+    B, S, Di = x.shape
+    N = b_t.shape[-1]
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 0, 1),
+          jnp.moveaxis(dt.astype(jnp.float32), 0, 1),
+          jnp.moveaxis(b_t.astype(jnp.float32), 0, 1),
+          jnp.moveaxis(c_t.astype(jnp.float32), 0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,107 @@
+"""Stale-KV patch attention — the DistriFusion/STADI hot loop as a TPU kernel.
+
+Q comes from the LOCAL fresh patch (Nl tokens); keys/values for the whole
+image come from the stale buffer EXCEPT the local region, which must use the
+fresh K/V computed this step. The naive formulation first materializes
+  full_kv = dynamic_update_slice(stale, fresh)        (2x KV HBM traffic)
+then runs attention. This kernel fuses the region-select into the flash
+loop: for kv-block j it loads BOTH the stale block and the (clamped) fresh
+block and selects per-block — tok_start and Nl are multiples of the block
+size, so every block is purely fresh or purely stale and the select is a
+no-op branch on the MXU path. Bidirectional (diffusion attention: no mask).
+
+TPU adaptation note (DESIGN.md §2): DistriFusion implements this as a CUDA
+attention call over a buffer patched by an async NCCL broadcast; on TPU the
+freshness-select moves INTO the kernel so the buffer is never rewritten in
+HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _stale_kernel(qf_ref, kf_ref, vf_ref, ks_ref, vs_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, bq, bk, nk,
+                  start_block, n_local_blocks):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = qf_ref[0, 0].astype(jnp.float32)
+    is_local = (ik >= start_block) & (ik < start_block + n_local_blocks)
+    k = jnp.where(is_local, kf_ref[0, 0], ks_ref[0, 0]).astype(jnp.float32)
+    v = jnp.where(is_local, vf_ref[0, 0], vs_ref[0, 0]).astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def stale_kv_attention_bhsd(q_fresh, k_fresh, v_fresh, k_stale, v_stale,
+                            tok_start: int, *, scale=None,
+                            bq: int = 128, bk: int = 128,
+                            interpret: bool = True):
+    """q_fresh/k_fresh/v_fresh: [B,H,Nl,hd] (local patch);
+    k_stale/v_stale: [B,H,N,hd] (full-image stale buffer);
+    tok_start: local patch offset in the token stream (multiple of bk; Nl too).
+    Returns [B,H,Nl,hd].
+    """
+    B, H, Nl, hd = q_fresh.shape
+    N = k_stale.shape[2]
+    assert tok_start % bk == 0 and Nl % bk == 0 and N % bk == 0, \
+        (tok_start, Nl, N, bk)
+    nq, nk = Nl // bq, N // bk
+    start_block = tok_start // bk
+    n_local = Nl // bk
+    scale = scale if scale is not None else hd ** -0.5
+
+    def fresh_kv_index(b, h, i, j):
+        # clamp j into the local block range so OOB loads read a valid block
+        jj = jnp.clip(j - start_block, 0, n_local - 1)
+        return (b, h, jj, 0)
+
+    kernel = functools.partial(_stale_kernel, scale=scale, bq=bq, bk=bk,
+                               nk=nk, start_block=start_block,
+                               n_local_blocks=n_local)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), fresh_kv_index),
+            pl.BlockSpec((1, 1, bk, hd), fresh_kv_index),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Nl, hd), q_fresh.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q_fresh, k_fresh, v_fresh, k_stale, v_stale)

@@ -1,0 +1,37 @@
+"""Production mesh builders (TPU v5e pods; CPU placeholder devices in the
+dry-run). Functions, not module-level constants — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips/pod; multi-pod adds a leading pod=2 axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)}; the "
+            "dry-run entrypoint must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(axes=("data", "model")) -> Mesh:
+    """Whatever devices exist, as a 1xN or NxM mesh (tests / examples)."""
+    devices = np.asarray(jax.devices())
+    if len(axes) == 1:
+        return Mesh(devices, axes)
+    return Mesh(devices.reshape(1, -1), axes)
+
+
+# TPU v5e per-chip constants for the roofline model (see brief).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link

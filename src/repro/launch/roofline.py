@@ -1,0 +1,220 @@
+"""Three-term roofline from compiled dry-run artifacts (deliverable g).
+
+  compute term    = HLO_FLOPs / (chips * 197e12)
+  memory term     = HLO_bytes / (chips * 819e9)
+  collective term = collective_bytes / (chips * 50e9)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from the post-partitioning HLO text (``compiled.as_text()``)
+by summing operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+
+NOTE on per-device accounting: with GSPMD the compiled module IS the
+per-device program, so cost_analysis flops/bytes are per-device already;
+we therefore divide by 1 chip (not by `chips`) for the time terms and
+multiply MODEL_FLOPS by 1/chips for the usefulness ratio. Both raw and
+derived values are recorded so the convention is auditable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shapes like bf16[8,128]{1,0} or (bf16[2], f32[4]) tuples
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*(?:e\d+m\d+(?:fn)?)?)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _instr_bytes(rhs: str, op_start: int, op_end: int) -> int:
+    call = rhs[op_end:]
+    shapes = _SHAPE_RE.findall(call)
+    if shapes:
+        return sum(_shape_bytes(d, s) for d, s in shapes)
+    res = _SHAPE_RE.findall(rhs[:op_start])      # result-shape fallback
+    return sum(_shape_bytes(d, s) for d, s in res)
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines (post-optimization HLO)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\(.*\)\s*->.*\{", s)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None and s:
+            comps[cur].append(s)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the while condition ~ trip count."""
+    best = 1
+    for l in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", l):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _comp_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """Execution-count multiplier per computation: while bodies inherit the
+    loop trip count (nested loops multiply); calls/fusions inherit x1."""
+    refs: Dict[str, List] = {name: [] for name in comps}
+    referenced = set()
+    for name, lines in comps.items():
+        for l in lines:
+            wm = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", l)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = _trip_count(comps.get(cond, []))
+                refs[name] += [(body, trip), (cond, trip)]
+                referenced.update((cond, body))
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", l):
+                refs[name].append((cm.group(1), 1))
+                referenced.add(cm.group(1))
+    roots = [n for n in comps if n not in referenced] or \
+        [n for n in comps if "main" in n]
+    mult: Dict[str, float] = {}
+    stack = [(r, 1.0) for r in roots]
+    while stack:
+        name, m = stack.pop()
+        if mult.get(name, 0.0) >= m:
+            continue
+        mult[name] = m
+        for child, trip in refs.get(name, []):
+            stack.append((child, m * trip))
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from (post-SPMD) HLO text.
+
+    Loop-aware: a collective inside a while (lax.scan) body is scaled by the
+    loop's trip count (parsed from the condition's comparison constant), so
+    per-layer collectives count once per layer, not once per program."""
+    comps = _split_computations(hlo_text)
+    mult = _comp_multipliers(comps)
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        m_comp = mult.get(name, 1.0)
+        for line in lines:
+            m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", line)
+            if not m:
+                continue
+            rhs = m.group(1)
+            opm = re.search(r"\b(" + "|".join(_COLLECTIVES) +
+                            r")(?:-start|-done)?\(", rhs)
+            if not opm:
+                continue
+            kind = opm.group(1)
+            if "-done(" in rhs:
+                continue                  # counted at -start
+            out[kind] += int(_instr_bytes(rhs, opm.start(), opm.end()) * m_comp)
+            counts[kind] += 1
+    out["_counts"] = counts
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float               # analytic (matmul-exact) / chips
+    bytes_per_device: float               # analytic one-pass HBM model / chips
+    collective_bytes_per_device: float    # loop-aware HLO parse (per device)
+    model_flops: float                    # 6*N(active)*D tokens-based, global
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    raw_hlo_flops: float = 0.0            # compiled cost_analysis (body-once)
+    raw_hlo_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        tot = self.flops_per_device * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self),
+                "dominant": self.dominant, "useful_ratio": self.useful_ratio}
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed."""
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES
+    from repro.models import encdec as encdec_lib
+
+    cfg = get_config(arch)
+    s = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if s.kind == "train":
+        tokens = s.batch * s.seq
+        if cfg.family == "encdec":
+            tokens = s.batch * (s.seq + encdec_lib.tgt_len_for(s.seq))
+        return 6.0 * n_active * tokens
+    if s.kind == "prefill":
+        tokens = s.batch * s.seq
+        if cfg.family == "encdec":
+            tokens = s.batch * (s.seq + encdec_lib.tgt_len_for(s.seq))
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * s.batch          # decode: one token per request
+
+
+def build(arch: str, shape: str, mesh_name: str, chips: int,
+          cost: Dict, coll: Dict, flash: bool = False) -> Roofline:
+    """Roofline terms: compute/memory from the analytic matmul-exact model
+    divided by chips (idealized perfectly-sharded bound — XLA's
+    cost_analysis counts scan bodies once, see launch/analytic.py);
+    collective from the loop-aware per-device HLO parse. Raw compiled
+    numbers are retained alongside."""
+    from repro.launch import analytic
+
+    per_dev = analytic.per_device(arch, shape, chips, flash=flash)
+    cb = float(coll.get("total", 0))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=per_dev.flops, bytes_per_device=per_dev.bytes,
+        collective_bytes_per_device=cb,
+        model_flops=model_flops_for(arch, shape),
+        compute_s=per_dev.flops / PEAK_FLOPS_BF16,
+        memory_s=per_dev.bytes / HBM_BW,
+        collective_s=cb / ICI_BW,
+        raw_hlo_flops=float(cost.get("flops", 0.0) or 0.0),
+        raw_hlo_bytes=float(cost.get("bytes accessed", 0.0) or 0.0),
+    )

@@ -1,0 +1,55 @@
+"""Serving driver: batched requests through the ServingEngine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
+          prompt_len: int = 16, max_new: int = 12, reduced: bool = True,
+          window: int = 0, seed: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    engine = ServingEngine(model, params, slots=slots,
+                           max_len=prompt_len + max_new + 8,
+                           window=window or cfg.sliding_window)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for uid in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
+        engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=max_new))
+    done = engine.run_to_completion()
+    dt = time.time() - t0
+    tok = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)}/{n_requests} requests, {tok} tokens in "
+          f"{dt:.2f}s ({tok/dt:.1f} tok/s)")
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+    serve(args.arch, n_requests=args.requests, slots=args.slots,
+          prompt_len=args.prompt_len, max_new=args.max_new)
+
+
+if __name__ == "__main__":
+    main()

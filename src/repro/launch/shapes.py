@@ -1,0 +1,164 @@
+"""Assigned input shapes + ``input_specs``: ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, no device allocation), and
+the step functions the dry-run lowers for each shape kind.
+
+  train_4k     seq=  4,096 batch=256  -> train_step (loss+grads+AdamW)
+  prefill_32k  seq= 32,768 batch= 32  -> prefill (full forward + cache build)
+  decode_32k   seq= 32,768 batch=128  -> serve_step: ONE token, KV len 32,768
+  long_500k    seq=524,288 batch=  1  -> serve_step with sub-quadratic attn
+                                         (SSM state / sliding window 4,096)
+
+Shape-applicability carve-outs are in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import encdec
+from repro.models.api import Model, build_model
+from repro.optim import adamw
+from repro.sharding import specs as sh
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+_I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dryrun_cfg(arch: str):
+    """bf16 everywhere for roofline consistency with the 197 TF bf16 peak."""
+    return get_config(arch).replace(param_dtype="bfloat16", dtype="bfloat16")
+
+
+def batch_structs(cfg, model: Model, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.batch, shape.seq
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        St = encdec.tgt_len_for(S)
+        return {"src_embeds": _sds((B, S, cfg.d_model), dt),
+                "tgt_tokens": _sds((B, St), _I32),
+                "labels": _sds((B, St), _I32)}
+    if cfg.family == "vlm":
+        text = S - cfg.n_vision_tokens
+        return {"tokens": _sds((B, text), _I32),
+                "labels": _sds((B, text), _I32),
+                "vision_embeds": _sds((B, cfg.n_vision_tokens, cfg.d_model), dt)}
+    return {"tokens": _sds((B, S), _I32), "labels": _sds((B, S), _I32)}
+
+
+def decode_window(cfg, shape: ShapeSpec) -> int:
+    """Sub-quadratic carve-out: long_500k uses a sliding window on attention
+    archs (cfg.long_context_window); natively-windowed archs keep their own."""
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    if shape.name == "long_500k":
+        return cfg.long_context_window
+    return 0
+
+
+def build_lowerable(arch: str, shape_name: str, cfg=None, shape=None
+                    ) -> Tuple[Callable, Tuple[Any, ...], Callable]:
+    """Returns (fn, args_structs, shardings_builder(mesh) -> in_shardings).
+
+    cfg/shape overrides support launch/perf.py variant runs (e.g.
+    attn_impl/act_shard overrides) and ad-hoc reduced-size probes."""
+    cfg = cfg or _dryrun_cfg(arch)
+    model = build_model(cfg)
+    shape = shape or SHAPES[shape_name]
+    opt_cfg = adamw.AdamWConfig()
+
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    if shape.kind == "train":
+        batch_s = batch_structs(cfg, model, shape)
+        opt_s = jax.eval_shape(adamw.adamw_init, params_s)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, opt_state = adamw.adamw_update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        def shardings(mesh):
+            ps = sh.param_specs(params_s, mesh, cfg)
+            os_ = {"mu": ps, "nu": ps, "count": jax.sharding.PartitionSpec()}
+            bs = sh.batch_specs(batch_s, mesh)
+            return jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                                (ps, os_, bs),
+                                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+        return train_step, (params_s, opt_s, batch_s), shardings
+
+    if shape.kind == "prefill":
+        batch_s = batch_structs(cfg, model, shape)
+        window = cfg.sliding_window
+        kw = dict(window=window)
+        if cfg.family == "encdec":
+            cache_s = jax.eval_shape(
+                lambda: model.init_cache(shape.batch, encdec.tgt_len_for(shape.seq),
+                                         src_len=shape.seq))
+        else:
+            prefill_len = shape.seq + (cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+            cache_s = jax.eval_shape(
+                lambda: model.init_cache(shape.batch, prefill_len, window=window))
+
+        def prefill_fn(params, batch, cache):
+            return model.prefill(params, batch, cache, **kw)
+
+        def shardings(mesh):
+            ps = sh.param_specs(params_s, mesh, cfg)
+            bs = sh.batch_specs(batch_s, mesh)
+            cs = sh.cache_specs(cache_s, mesh)
+            return jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                                (ps, bs, cs),
+                                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+        return prefill_fn, (params_s, batch_s, cache_s), shardings
+
+    # decode kinds
+    window = decode_window(cfg, shape)
+    if cfg.family == "encdec":
+        # cached encoder memory over the full source + windowed self-attn
+        cache_s = jax.eval_shape(
+            lambda: model.init_cache(shape.batch, shape.seq, window=window,
+                                     src_len=shape.seq))
+    else:
+        cache_s = jax.eval_shape(
+            lambda: model.init_cache(shape.batch, shape.seq, window=window))
+    # caches start mid-stream: pos = seq - 1 (cache holds seq_len context)
+    token_s = _sds((shape.batch,), _I32)
+
+    def decode_fn(params, cache, token):
+        return model.decode_step(params, cache, token, window=window)
+
+    def shardings(mesh):
+        ps = sh.param_specs(params_s, mesh, cfg)
+        cs = sh.cache_specs(cache_s, mesh)
+        ba = sh.batch_axes(mesh)
+        tok_spec = sh.batch_specs(token_s, mesh)
+        return jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                            (ps, cs, tok_spec),
+                            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    return decode_fn, (params_s, cache_s, token_s), shardings

@@ -1,0 +1,136 @@
+"""Uniform model API across families.
+
+``build_model(cfg)`` returns a :class:`Model` exposing:
+  init(rng) -> params
+  loss(params, batch) -> scalar            (training objective)
+  init_cache(batch, max_len, window=0, src_len=0) -> decode cache
+  prefill(params, batch, cache, window=0) -> (last_logits, cache)
+  decode_step(params, cache, token, window=0) -> (logits, cache)
+  make_batch(rng, batch, seq) -> concrete batch  (smoke tests)
+
+batch dict keys by family:
+  dense/moe : tokens, labels
+  vlm       : + vision_embeds [B, n_vision_tokens, D]  (stub ViT frontend)
+  encdec    : src_embeds [B,Ss,D] (stub audio frontend), tgt_tokens, labels
+  ssm/hybrid: tokens, labels
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hymba, lm, xlstm
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.family = cfg.family
+
+    # -- params ---------------------------------------------------------
+    def init(self, rng):
+        f = {"ssm": xlstm.init_params, "hybrid": hymba.init_params,
+             "encdec": encdec.init_params}.get(self.family, lm.init_params)
+        return f(rng, self.cfg)
+
+    # -- training -------------------------------------------------------
+    def loss(self, params, batch: Dict[str, Any]):
+        f = {"ssm": xlstm.loss_fn, "hybrid": hymba.loss_fn,
+             "encdec": encdec.loss_fn}.get(self.family, lm.loss_fn)
+        return f(params, self.cfg, batch)
+
+    def forward_logits(self, params, batch):
+        cfg = self.cfg
+        if self.family == "ssm":
+            return xlstm.forward(params, cfg, batch["tokens"])[0]
+        if self.family == "hybrid":
+            return hymba.forward(params, cfg, batch["tokens"])[0]
+        if self.family == "encdec":
+            memory = encdec.encode(params, cfg, batch["src_embeds"])
+            return encdec.decode_forward(params, cfg, batch["tgt_tokens"], memory)[0]
+        return lm.forward(params, cfg, batch["tokens"],
+                          vision_embeds=batch.get("vision_embeds"))[0]
+
+    # -- serving --------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, *, window: int = 0, src_len: int = 0):
+        cfg = self.cfg
+        if self.family == "ssm":
+            return xlstm.init_state(cfg, batch)
+        if self.family == "hybrid":
+            return hymba.init_cache(cfg, batch, max_len, window=window)
+        if self.family == "encdec":
+            return encdec.init_cache(cfg, batch, max_len, src_len or max_len, window=window)
+        return lm.init_cache(cfg, batch, max_len, window=window)
+
+    def prefill(self, params, batch, cache, *, window: int = 0):
+        cfg = self.cfg
+        if self.family == "ssm":
+            return xlstm.prefill(params, cfg, batch["tokens"], cache)
+        if self.family == "hybrid":
+            return hymba.prefill(params, cfg, batch["tokens"], cache, window=window)
+        if self.family == "encdec":
+            return encdec.prefill(params, cfg, batch["src_embeds"], batch["tgt_tokens"],
+                                  cache, window=window)
+        if self.family == "vlm":
+            # vision embeddings consumed during prefill; cache covers meta+text
+            logits, _, kvs = lm.forward(params, cfg, batch["tokens"],
+                                        vision_embeds=batch["vision_embeds"],
+                                        window=window, return_kv=True,
+                                        logits_last_only=True)
+            k, v = kvs
+            S = k.shape[2]
+            T = cache["k"].shape[2]
+            if S >= T:
+                k, v = k[:, :, S - T:], v[:, :, S - T:]
+                cache = {**cache, "k": k.astype(cache["k"].dtype),
+                         "v": v.astype(cache["v"].dtype)}
+            else:
+                cache = {**cache,
+                         "k": jax.lax.dynamic_update_slice_in_dim(
+                             cache["k"], k.astype(cache["k"].dtype), 0, axis=2),
+                         "v": jax.lax.dynamic_update_slice_in_dim(
+                             cache["v"], v.astype(cache["v"].dtype), 0, axis=2)}
+            return logits[:, -1], {**cache, "pos": jnp.asarray(S, jnp.int32)}
+        return lm.prefill(params, cfg, batch["tokens"], cache, window=window)
+
+    def decode_step(self, params, cache, token, *, window: int = 0):
+        cfg = self.cfg
+        if self.family == "ssm":
+            return xlstm.decode_step(params, cfg, cache, token)
+        if self.family == "hybrid":
+            return hymba.decode_step(params, cfg, cache, token, window=window)
+        if self.family == "encdec":
+            return encdec.decode_step(params, cfg, cache, token, window=window)
+        return lm.decode_step(params, cfg, cache, token, window=window)
+
+    # -- synthetic batches ----------------------------------------------
+    def make_batch(self, rng, batch: int, seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        kt, ke = jax.random.split(rng)
+        tokens = jax.random.randint(kt, (batch, seq), 0, cfg.vocab, jnp.int32)
+        out: Dict[str, Any] = {"tokens": tokens, "labels": tokens}
+        if self.family == "vlm":
+            out["vision_embeds"] = jax.random.normal(
+                ke, (batch, cfg.n_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype)) * 0.02
+        if self.family == "encdec":
+            st = encdec.tgt_len_for(seq)
+            out = {"src_embeds": jax.random.normal(ke, (batch, seq, cfg.d_model),
+                                                   jnp.dtype(cfg.dtype)) * 0.02,
+                   "tgt_tokens": tokens[:, :st], "labels": tokens[:, :st]}
+        return out
+
+
+@functools.lru_cache(maxsize=None)
+def _build_cached(arch_id: str) -> Model:
+    from repro.configs import get_config
+    return Model(get_config(arch_id))
+
+
+def build_model(cfg_or_id) -> Model:
+    if isinstance(cfg_or_id, str):
+        return _build_cached(cfg_or_id)
+    return Model(cfg_or_id)

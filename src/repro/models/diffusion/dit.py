@@ -1,0 +1,215 @@
+"""DiT denoiser (arXiv:2212.09748) with first-class patch-parallel support.
+
+Tokens are row-major over the latent grid; a *patch* is a contiguous range of
+token ROWS (STADI's allocatable unit, P_total = tokens_per_side rows).
+
+``forward_patch`` computes eps for a local row range while attending over
+full-image K/V assembled from (fresh local) ⊕ (stale remote) buffers — the
+DistriFusion mechanism that STADI schedules. With ``buffers=None`` and the
+full row range it degenerates to exact single-device inference ("Origin").
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.diffusion import DiTConfig
+from repro.models import layers
+
+
+# ----------------------------------------------------------------------
+# patchify helpers
+# ----------------------------------------------------------------------
+
+def patchify(x, patch: int):
+    """[B,H,W,C] -> [B, (H/p)*(W/p), p*p*C], row-major token grid."""
+    B, H, W, C = x.shape
+    hp, wp = H // patch, W // patch
+    x = x.reshape(B, hp, patch, wp, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, hp * wp, patch * patch * C)
+
+
+def unpatchify(tok, patch: int, hp: int, wp: int, channels: int):
+    B = tok.shape[0]
+    x = tok.reshape(B, hp, wp, patch, patch, channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, hp * patch, wp * patch, channels)
+
+
+def pos_embed_2d(hp: int, wp: int, dim: int):
+    """Fixed 2D sin-cos positional embedding [hp*wp, dim]."""
+    def _1d(n, d):
+        pos = jnp.arange(n, dtype=jnp.float32)
+        omega = jnp.exp(-math.log(10_000.0) * jnp.arange(d // 2, dtype=jnp.float32) / (d // 2))
+        out = pos[:, None] * omega[None]
+        return jnp.concatenate([jnp.sin(out), jnp.cos(out)], axis=-1)   # [n, d]
+
+    eh = _1d(hp, dim // 2)                     # [hp, dim/2]
+    ew = _1d(wp, dim // 2)                     # [wp, dim/2]
+    grid = jnp.concatenate([
+        jnp.broadcast_to(eh[:, None], (hp, wp, dim // 2)),
+        jnp.broadcast_to(ew[None, :], (hp, wp, dim // 2)),
+    ], axis=-1)
+    return grid.reshape(hp * wp, dim)
+
+
+# ----------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------
+
+def init_params(key, cfg: DiTConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    D, L = cfg.d_model, cfg.n_layers
+    F = int(cfg.mlp_ratio * D)
+    ks = jax.random.split(key, 8)
+
+    def init_block(k):
+        kq, ko, k1, k2, km = jax.random.split(k, 5)
+        return {
+            "qkv": layers.dense_init(kq, (D, 3 * D), dt),
+            "wo": layers.dense_init(ko, (D, D), dt, scale=1.0 / math.sqrt(2 * L * D)),
+            "w1": layers.dense_init(k1, (D, F), dt),
+            "w2": layers.dense_init(k2, (F, D), dt, scale=1.0 / math.sqrt(2 * L * F)),
+            "mod_w": jnp.zeros((D, 6 * D), dt),          # adaLN-zero init
+            "mod_b": jnp.zeros((6 * D,), dt),
+        }
+
+    blocks = jax.vmap(init_block)(jax.random.split(ks[0], L))
+    return {
+        "patch_embed": layers.dense_init(ks[1], (cfg.token_dim, D), dt),
+        "patch_bias": jnp.zeros((D,), dt),
+        "t_w1": layers.dense_init(ks[2], (256, D), dt),
+        "t_w2": layers.dense_init(ks[3], (D, D), dt),
+        "cond_embed": layers.embed_init(ks[4], (cfg.n_classes, D), dt),
+        "blocks": blocks,
+        "final_mod_w": jnp.zeros((D, 2 * D), dt),
+        "final_mod_b": jnp.zeros((2 * D,), dt),
+        "final_proj": jnp.zeros((D, cfg.token_dim), dt),  # zero-init output
+    }
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None]) + shift[:, None]
+
+
+def _ln(x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def _cond_vector(params, cfg, t, cond, B):
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (B,))
+    temb = layers.sinusoidal_embedding(t, 256)
+    temb = jax.nn.silu(temb.astype(params["t_w1"].dtype) @ params["t_w1"]) @ params["t_w2"]
+    if cond is None:
+        cemb = 0.0
+    else:
+        cemb = params["cond_embed"][jnp.broadcast_to(jnp.asarray(cond, jnp.int32), (B,))]
+    return jax.nn.silu(temb + cemb)                      # [B, D]
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+def forward_patch(params, cfg: DiTConfig, x_rows, t, cond,
+                  row_start: int, buffers: Optional[Tuple] = None,
+                  return_kv: bool = True, valid_tokens: Optional[jnp.ndarray] = None):
+    """Denoise a row-patch with stale remote K/V.
+
+    x_rows: [B, rows_local, W, C] latent slab (full width).
+    buffers: None (local-only attention: exact when patch == full image)
+             or (buf_k, buf_v) each [L, B, N_total, H, hd] — stale K/V for the
+             WHOLE image; the local region is overwritten with fresh values
+             before attending (DistriFusion semantics).
+    row_start: first token-row of this patch (for positional embeddings);
+               may be a traced int (SPMD path with per-device offsets).
+    valid_tokens: SPMD path — number of REAL local tokens (rest is padding to
+               the max patch size); padded tokens never pollute the buffer.
+
+    Returns (eps_rows [B, rows_local, W, C], (fresh_k, fresh_v) [L,B,Nl,H,hd]).
+    """
+    B = x_rows.shape[0]
+    p = cfg.patch_size
+    wp = cfg.tokens_per_side
+    rows_tok = x_rows.shape[1] // p                      # token rows in patch
+    tok = patchify(x_rows, p)                            # [B, Nl, token_dim]
+    Nl = tok.shape[1]
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+
+    # pad the pos-embed table so padded tail tokens can't shift a clamped
+    # dynamic_slice back over the valid region
+    pe_full = jnp.concatenate([pos_embed_2d(wp, wp, D),
+                               jnp.zeros((Nl, D))], axis=0)
+    pe = jax.lax.dynamic_slice_in_dim(pe_full, row_start * wp, Nl, axis=0)
+    x = tok @ params["patch_embed"] + params["patch_bias"] + pe.astype(tok.dtype)
+    c = _cond_vector(params, cfg, t, cond, B)            # [B, D]
+    tok_start = row_start * wp
+
+    def block(x, scanned):
+        if buffers is None:
+            bp = scanned
+        else:
+            bp, bk, bv = scanned
+        mod = c.astype(x.dtype) @ bp["mod_w"] + bp["mod_b"]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        xn = _modulate(_ln(x), sh1, sc1)
+        qkv = (xn @ bp["qkv"]).reshape(B, Nl, 3, H, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        if buffers is None:
+            att = layers.attend(q, k, v)                 # local-only (exact if full)
+        else:
+            # SPMD path: buffers are scratch-padded to N + Nl tokens so the
+            # read-modify-write below never clamps; the padded tail of the
+            # local slab is blended back to the buffer's current values so it
+            # cannot overwrite a neighbour's stale region, and scratch keys
+            # are masked out of the softmax.
+            ku, vu, key_mask = k, v, None
+            if valid_tokens is not None:
+                mask = (jnp.arange(Nl) < valid_tokens)[None, :, None, None]
+                cur_k = jax.lax.dynamic_slice_in_dim(bk, tok_start, Nl, axis=1)
+                cur_v = jax.lax.dynamic_slice_in_dim(bv, tok_start, Nl, axis=1)
+                ku = jnp.where(mask, k.astype(bk.dtype), cur_k)
+                vu = jnp.where(mask, v.astype(bv.dtype), cur_v)
+                key_mask = (jnp.arange(bk.shape[1]) < cfg.n_tokens)[None, None, None, :]
+            full_k = jax.lax.dynamic_update_slice_in_dim(bk, ku.astype(bk.dtype), tok_start, axis=1)
+            full_v = jax.lax.dynamic_update_slice_in_dim(bv, vu.astype(bv.dtype), tok_start, axis=1)
+            att = layers.attend(q, full_k, full_v, mask=key_mask)
+        x = x + g1[:, None] * (att.reshape(B, Nl, D) @ bp["wo"])
+        xn = _modulate(_ln(x), sh2, sc2)
+        h = jax.nn.gelu(xn @ bp["w1"]) @ bp["w2"]
+        x = x + g2[:, None] * h
+        return x, ((k, v) if return_kv else None)
+
+    scanned = params["blocks"] if buffers is None else (params["blocks"],) + tuple(buffers)
+    x, kvs = jax.lax.scan(block, x, scanned)
+
+    mod = c.astype(x.dtype) @ params["final_mod_w"] + params["final_mod_b"]
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    out = _modulate(_ln(x), sh, sc) @ params["final_proj"]
+    eps = unpatchify(out, p, rows_tok, wp, cfg.channels)
+    return eps, kvs
+
+
+def forward(params, cfg: DiTConfig, x, t, cond=None):
+    """Full-image denoiser: [B,H,W,C] -> eps [B,H,W,C] (the Origin path)."""
+    eps, _ = forward_patch(params, cfg, x, t, cond, 0, buffers=None, return_kv=False)
+    return eps
+
+
+def buffer_shape(cfg: DiTConfig, batch: int):
+    D, H = cfg.d_model, cfg.n_heads
+    return (cfg.n_layers, batch, cfg.n_tokens, H, D // H)
+
+
+def init_buffers(cfg: DiTConfig, batch: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = buffer_shape(cfg, batch)
+    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)

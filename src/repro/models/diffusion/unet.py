@@ -1,0 +1,152 @@
+"""Small conv UNet denoiser (SDXL's architecture class, scaled down).
+
+Single-device quality wing only: STADI's distributed path targets the DiT
+(DESIGN.md §2 hardware-adaptation table). Pure JAX (lax.conv), functional.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.diffusion import UNetConfig
+from repro.models import layers
+
+
+def _conv_init(key, shape, dtype):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            / math.sqrt(fan_in)).astype(dtype)
+
+
+def conv2d(x, w, stride: int = 1):
+    """x: [B,H,W,C]; w: [kh,kw,Cin,Cout]; SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(x, gamma, beta, groups: int = 8, eps: float = 1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    x32 = x.astype(jnp.float32).reshape(B, H, W, g, C // g)
+    mu = jnp.mean(x32, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(x32, axis=(1, 2, 4), keepdims=True)
+    x32 = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (x32.reshape(B, H, W, C) * gamma + beta).astype(x.dtype)
+
+
+def _res_block_init(key, cin, cout, temb_dim, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "gn1_g": jnp.ones((cin,), dtype), "gn1_b": jnp.zeros((cin,), dtype),
+        "conv1": _conv_init(ks[0], (3, 3, cin, cout), dtype),
+        "temb_w": layers.dense_init(ks[1], (temb_dim, cout), dtype),
+        "gn2_g": jnp.ones((cout,), dtype), "gn2_b": jnp.zeros((cout,), dtype),
+        "conv2": jnp.zeros((3, 3, cout, cout), dtype),        # zero-init last conv
+    }
+    if cin != cout:
+        p["skip"] = _conv_init(ks[2], (1, 1, cin, cout), dtype)
+    return p
+
+
+def _res_block(p, x, temb):
+    h = jax.nn.silu(group_norm(x, p["gn1_g"], p["gn1_b"]))
+    h = conv2d(h, p["conv1"])
+    h = h + (jax.nn.silu(temb) @ p["temb_w"])[:, None, None, :]
+    h = jax.nn.silu(group_norm(h, p["gn2_g"], p["gn2_b"]))
+    h = conv2d(h, p["conv2"])
+    skip = conv2d(x, p["skip"]) if "skip" in p else x
+    return skip + h
+
+
+def _attn_init(key, c, dtype):
+    ks = jax.random.split(key, 2)
+    return {"gn_g": jnp.ones((c,), dtype), "gn_b": jnp.zeros((c,), dtype),
+            "qkv": layers.dense_init(ks[0], (c, 3 * c), dtype),
+            "out": jnp.zeros((c, c), dtype)}
+
+
+def _attn_block(p, x):
+    B, H, W, C = x.shape
+    h = group_norm(x, p["gn_g"], p["gn_b"]).reshape(B, H * W, C)
+    qkv = (h @ p["qkv"]).reshape(B, H * W, 3, 1, C)
+    att = layers.attend(qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2])
+    return x + (att.reshape(B, H * W, C) @ p["out"]).reshape(B, H, W, C)
+
+
+def init_params(key, cfg: UNetConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    temb_dim = cfg.base_width * 4
+    ks = iter(jax.random.split(key, 256))
+    p = {
+        "t_w1": layers.dense_init(next(ks), (256, temb_dim), dt),
+        "t_w2": layers.dense_init(next(ks), (temb_dim, temb_dim), dt),
+        "cond": layers.embed_init(next(ks), (cfg.n_classes, temb_dim), dt),
+        "conv_in": _conv_init(next(ks), (3, 3, cfg.channels, cfg.base_width), dt),
+        "down": [], "up": [],
+    }
+    widths = [cfg.base_width * m for m in cfg.channel_mults]
+    cin = cfg.base_width
+    for lvl, w in enumerate(widths):
+        blocks = []
+        for _ in range(cfg.n_res_blocks):
+            blk = {"res": _res_block_init(next(ks), cin, w, temb_dim, dt)}
+            if lvl in cfg.attn_levels:
+                blk["attn"] = _attn_init(next(ks), w, dt)
+            blocks.append(blk)
+            cin = w
+        p["down"].append({"blocks": blocks,
+                          "downsample": _conv_init(next(ks), (3, 3, w, w), dt)
+                          if lvl < len(widths) - 1 else None})
+    p["mid1"] = _res_block_init(next(ks), cin, cin, temb_dim, dt)
+    p["mid_attn"] = _attn_init(next(ks), cin, dt)
+    p["mid2"] = _res_block_init(next(ks), cin, cin, temb_dim, dt)
+    for lvl, w in reversed(list(enumerate(widths))):
+        blocks = []
+        for _ in range(cfg.n_res_blocks):
+            blk = {"res": _res_block_init(next(ks), cin + w, w, temb_dim, dt)}
+            if lvl in cfg.attn_levels:
+                blk["attn"] = _attn_init(next(ks), w, dt)
+            blocks.append(blk)
+            cin = w
+        p["up"].append({"blocks": blocks})
+    p["gn_out_g"] = jnp.ones((cin,), dt)
+    p["gn_out_b"] = jnp.zeros((cin,), dt)
+    p["conv_out"] = jnp.zeros((3, 3, cin, cfg.channels), dt)
+    return p
+
+
+def forward(params, cfg: UNetConfig, x, t, cond=None):
+    B = x.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (B,))
+    temb = layers.sinusoidal_embedding(t, 256).astype(x.dtype)
+    temb = jax.nn.silu(temb @ params["t_w1"]) @ params["t_w2"]
+    if cond is not None:
+        temb = temb + params["cond"][jnp.broadcast_to(jnp.asarray(cond, jnp.int32), (B,))]
+
+    h = conv2d(x, params["conv_in"])
+    skips = []
+    for level in params["down"]:
+        for blk in level["blocks"]:
+            h = _res_block(blk["res"], h, temb)
+            if "attn" in blk:
+                h = _attn_block(blk["attn"], h)
+        skips.append(h)
+        if level["downsample"] is not None:
+            h = conv2d(h, level["downsample"], stride=2)
+    h = _res_block(params["mid1"], h, temb)
+    h = _attn_block(params["mid_attn"], h)
+    h = _res_block(params["mid2"], h, temb)
+    for level in params["up"]:
+        skip = skips.pop()
+        if h.shape[1] != skip.shape[1]:
+            B_, H_, W_, C_ = h.shape
+            h = jax.image.resize(h, (B_, skip.shape[1], skip.shape[2], C_), "nearest")
+        h = jnp.concatenate([h, skip], axis=-1)
+        for blk in level["blocks"]:
+            h = _res_block(blk["res"], h, temb)
+            if "attn" in blk:
+                h = _attn_block(blk["attn"], h)
+    h = jax.nn.silu(group_norm(h, params["gn_out_g"], params["gn_out_b"]))
+    return conv2d(h, params["conv_out"])

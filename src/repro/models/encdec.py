@@ -1,0 +1,170 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium text/speech-to-text).
+
+The speech frontend is a STUB per the brief: the encoder consumes
+precomputed frame embeddings [B, S_src, D] delivered by ``input_specs``.
+Decoder = causal self-attn + cross-attn + FFN. Scan-over-layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.lm import _constrain
+
+
+def tgt_len_for(src_len: int) -> int:
+    """Convention: training/prefill target length = src_len // 4 (speech:text)."""
+    return max(16, src_len // 4)
+
+
+def init_params(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    k_enc, k_dec, k_embed, k_head = jax.random.split(key, 4)
+
+    def init_enc_block(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": layers.init_attention(ka, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": layers.init_mlp(km, cfg),
+        }
+
+    def init_dec_block(k):
+        ka, kx, km = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": layers.init_attention(ka, cfg),
+            "lnx": jnp.zeros((cfg.d_model,), dt),
+            "xattn": layers.init_attention(kx, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": layers.init_mlp(km, cfg),
+        }
+
+    return {
+        "enc_blocks": jax.vmap(init_enc_block)(jax.random.split(k_enc, cfg.n_enc_layers)),
+        "dec_blocks": jax.vmap(init_dec_block)(jax.random.split(k_dec, cfg.n_layers)),
+        "embed": layers.embed_init(k_embed, (cfg.vocab, cfg.d_model), dt),
+        "enc_ln_f": jnp.zeros((cfg.d_model,), dt),
+        "dec_ln_f": jnp.zeros((cfg.d_model,), dt),
+        "head": layers.dense_init(k_head, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def encode(params, cfg, src_embeds):
+    """src_embeds [B,Ss,D] (stub frontend output) -> memory [B,Ss,D]."""
+    x = src_embeds.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p):
+        x = _constrain(x, cfg)
+        h = layers.bidirectional_attention(p["attn"], layers.rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        x = x + h
+        x = x + layers.mlp(p["mlp"], layers.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def cross_kv(params, cfg, memory):
+    """Precompute per-decoder-layer cross-attention K/V: [L,B,Ss,K,hd]."""
+    B, Ss, _ = memory.shape
+
+    def body(_, p):
+        k = (memory @ p["xattn"]["wk"]).reshape(B, Ss, cfg.n_kv_heads, cfg.hd)
+        v = (memory @ p["xattn"]["wv"]).reshape(B, Ss, cfg.n_kv_heads, cfg.hd)
+        return None, (k, v)
+
+    _, (mk, mv) = jax.lax.scan(body, None, params["dec_blocks"])
+    return mk, mv
+
+
+def _dec_block(p, x, cfg, mem_kv, *, window: int = 0):
+    x = _constrain(x, cfg)
+    h, kv = layers.self_attention(p["attn"], layers.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                  cfg, window=window)
+    x = x + h
+    x = x + layers.cross_attention(p["xattn"], layers.rms_norm(x, p["lnx"], cfg.norm_eps),
+                                   mem_kv, cfg)
+    x = x + layers.mlp(p["mlp"], layers.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+    return x, kv
+
+
+def decode_forward(params, cfg, tgt_tokens, memory, *, window: int = 0,
+                   return_kv: bool = False, logits_last_only: bool = False):
+    mk, mv = cross_kv(params, cfg, memory)
+    x = params["embed"][tgt_tokens].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, scanned):
+        p, k, v = scanned
+        x, kv = _dec_block(p, x, cfg, (k, v), window=window)
+        return x, (kv if return_kv else None)
+
+    x, kvs = jax.lax.scan(body, x, (params["dec_blocks"], mk, mv))
+    if logits_last_only:
+        x = x[:, -1:]
+    x = layers.rms_norm(x, params["dec_ln_f"], cfg.norm_eps)
+    return x @ params["head"].astype(x.dtype), kvs, (mk, mv)
+
+
+def loss_fn(params, cfg, batch):
+    """batch: src_embeds [B,Ss,D], tgt_tokens [B,St], labels [B,St]."""
+    memory = encode(params, cfg, batch["src_embeds"])
+    logits, _, _ = decode_forward(params, cfg, batch["tgt_tokens"], memory)
+    return layers.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ----------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, src_len: int, *, window: int = 0):
+    T = window if window else max_len
+    dt = jnp.dtype(cfg.dtype)
+    kv = (cfg.n_layers, batch, T, cfg.n_kv_heads, cfg.hd)
+    mem = (cfg.n_layers, batch, src_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+            "mem_k": jnp.zeros(mem, dt), "mem_v": jnp.zeros(mem, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg, src_embeds, tgt_tokens, cache, *, window: int = 0):
+    memory = encode(params, cfg, src_embeds)
+    logits, kvs, (mk, mv) = decode_forward(params, cfg, tgt_tokens, memory,
+                                           window=window, return_kv=True,
+                                           logits_last_only=True)
+    k, v = kvs
+    S = k.shape[2]
+    T = cache["k"].shape[2]
+    if S >= T:
+        k, v = k[:, :, S - T:], v[:, :, S - T:]
+        cache = {**cache, "k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+    else:
+        cache = {**cache,
+                 "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=2),
+                 "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=2)}
+    return logits[:, -1], {**cache, "mem_k": mk.astype(cache["mem_k"].dtype),
+                           "mem_v": mv.astype(cache["mem_v"].dtype),
+                           "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, cfg, cache, token, *, window: int = 0):
+    x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype))
+    pos = cache["pos"]
+
+    def body(x, scanned):
+        p, ck, cv, mk, mv = scanned
+        h, nk, nv = layers.decode_attention(p["attn"], layers.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                            cfg, ck, cv, pos, window=window)
+        x = x + h
+        x = x + layers.cross_attention(p["xattn"], layers.rms_norm(x, p["lnx"], cfg.norm_eps),
+                                       (mk, mv), cfg)
+        x = x + layers.mlp(p["mlp"], layers.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                                         cache["mem_k"], cache["mem_v"]))
+    x = layers.rms_norm(x, params["dec_ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"].astype(x.dtype))[:, 0]
+    return logits, {**cache, "k": nk, "v": nv, "pos": pos + 1}

@@ -1,0 +1,161 @@
+"""Hymba (arXiv:2411.13676): each block runs attention heads and SSM (mamba)
+heads IN PARALLEL on the same input and fuses the branch outputs (mean of
+per-branch RMS-normed outputs, learned scales). 128 learnable meta tokens are
+prepended to every sequence and stay attendable outside the sliding window.
+
+Homogeneous blocks => scan-over-layers with stacked params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mamba as mamba_lib
+from repro.models.lm import _constrain
+
+
+def init_params(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_meta, k_blocks, k_head = jax.random.split(key, 4)
+
+    def init_block(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": layers.init_attention(ka, cfg),
+            "mamba": mamba_lib.init_mamba(km, cfg),
+            "fuse_a": jnp.zeros((cfg.d_model,), dt),
+            "fuse_m": jnp.zeros((cfg.d_model,), dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": layers.init_mlp(jax.random.fold_in(k, 7), cfg),
+        }
+
+    blocks = jax.vmap(init_block)(jax.random.split(k_blocks, cfg.n_layers))
+    return {
+        "embed": layers.embed_init(k_embed, (cfg.vocab, cfg.d_model), dt),
+        "meta": layers.embed_init(k_meta, (cfg.n_meta_tokens, cfg.d_model), dt),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((cfg.d_model,), dt),
+        "head": layers.dense_init(k_head, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def _block(p, x, cfg, ssm_state, *, window: int):
+    x = _constrain(x, cfg)
+    xn = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, kv = layers.self_attention(p["attn"], xn, cfg, window=window,
+                                         prefix_len=cfg.n_meta_tokens)
+    ssm_out, new_state = mamba_lib.mamba_forward(p["mamba"], xn, cfg, ssm_state)
+    fused = 0.5 * (layers.rms_norm(attn_out, p["fuse_a"], cfg.norm_eps) +
+                   layers.rms_norm(ssm_out, p["fuse_m"], cfg.norm_eps))
+    x = x + fused
+    x = x + layers.mlp(p["mlp"], layers.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+    return x, kv, new_state
+
+
+def forward(params, cfg, tokens, ssm_states=None, *, window: int = None,
+            return_kv: bool = False, logits_last_only: bool = False):
+    """tokens [B,S] -> logits over [meta+S] positions (meta stripped)."""
+    B, S = tokens.shape
+    window = cfg.sliding_window if window is None else window
+    if ssm_states is None:
+        ssm_states = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+            mamba_lib.init_state(cfg, B))
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    meta = jnp.broadcast_to(params["meta"][None], (B,) + params["meta"].shape).astype(x.dtype)
+    x = jnp.concatenate([meta, x], axis=1)
+
+    def body(x, scanned):
+        p, st = scanned
+        x, kv, nst = _block(p, x, cfg, st, window=window)
+        return x, (kv if return_kv else None, nst)
+
+    x, (kvs, new_states) = jax.lax.scan(body, x, (params["blocks"], ssm_states))
+    x = x[:, -1:] if logits_last_only else x[:, cfg.n_meta_tokens:]
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["head"].astype(x.dtype), kvs, new_states
+
+
+def loss_fn(params, cfg, batch):
+    logits, _, _ = forward(params, cfg, batch["tokens"])
+    return layers.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ----------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, *, window: int = 0):
+    """window=0 => full cache of max_len+meta; else meta-pinned ring cache."""
+    M = cfg.n_meta_tokens
+    T = (M + window) if window else (M + max_len)
+    kv_shape = (cfg.n_layers, batch, T, cfg.n_kv_heads, cfg.hd)
+    dt = jnp.dtype(cfg.dtype)
+    ssm = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+                       mamba_lib.init_state(cfg, batch))
+    return {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt),
+            "ssm": ssm, "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg, tokens, cache, *, window: int = 0):
+    logits, kvs, ssm = forward(params, cfg, tokens, return_kv=True,
+                               window=window or cfg.sliding_window,
+                               logits_last_only=True)
+    k, v = kvs                                        # [L,B,M+S,K,hd]
+    M = cfg.n_meta_tokens
+    T = cache["k"].shape[2]
+    S_tot = k.shape[2]
+    if S_tot > T:                                     # ring: meta + last (T-M)
+        k = jnp.concatenate([k[:, :, :M], k[:, :, -(T - M):]], axis=2)
+        v = jnp.concatenate([v[:, :, :M], v[:, :, -(T - M):]], axis=2)
+        cache = {**cache, "k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+    else:
+        cache = {**cache,
+                 "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=2),
+                 "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=2)}
+    return logits[:, -1], {**cache, "ssm": ssm, "pos": jnp.asarray(S_tot, jnp.int32)}
+
+
+def _decode_attn(p, x, cfg, ck, cv, pos, window: int):
+    """Meta-pinned ring decode attention. pos counts meta+generated tokens."""
+    B = x.shape[0]
+    M = cfg.n_meta_tokens
+    T = ck.shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = layers.apply_rope(q, posv, cfg.rope_theta)
+    k = layers.apply_rope(k, posv, cfg.rope_theta)
+    slot = (M + (pos - M) % window) if window else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    kj = jnp.arange(T)[None, None, None, :]
+    n_written = jnp.minimum(pos - M + 1, (window if window else T) - (0 if window else M))
+    valid = (kj < M) | ((kj - M) < n_written)
+    out = layers.attend(q, ck, cv, mask=valid)
+    return out.reshape(B, 1, -1) @ p["wo"], ck, cv
+
+
+def decode_step(params, cfg, cache, token, *, window: int = 0):
+    B = token.shape[0]
+    x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype))
+    pos = cache["pos"]
+
+    def body(x, scanned):
+        p, ck, cv, st = scanned
+        xn = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, nk, nv = _decode_attn(p["attn"], xn, cfg, ck, cv, pos, window)
+        m, nst = mamba_lib.mamba_forward(p["mamba"], xn, cfg, st)
+        fused = 0.5 * (layers.rms_norm(a, p["fuse_a"], cfg.norm_eps) +
+                       layers.rms_norm(m, p["fuse_m"], cfg.norm_eps))
+        x = x + fused
+        x = x + layers.mlp(p["mlp"], layers.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+        return x, (nk, nv, nst)
+
+    x, (nk, nv, nssm) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["ssm"]))
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"].astype(x.dtype))[:, 0]
+    return logits, {"k": nk, "v": nv, "ssm": nssm, "pos": pos + 1}

@@ -1,0 +1,276 @@
+"""Shared neural building blocks (pure-functional JAX, pytree params).
+
+Naming conventions matter: ``sharding/specs.py`` assigns PartitionSpecs from
+parameter *path names* (wq/wk/wv/wo/w_gate/w_up/w_down/embed/head/...).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (LeCun-style)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * weight + bias
+    return out.astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# attention core (reference path; Pallas kernels live in repro.kernels)
+# ----------------------------------------------------------------------
+
+def repeat_kv(kv, n_rep: int):
+    """[B, T, K, hd] -> [B, T, K*n_rep, hd] (GQA broadcast)."""
+    if n_rep == 1:
+        return kv
+    b, t, k, hd = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :], (b, t, k, n_rep, hd)).reshape(b, t, k * n_rep, hd)
+
+
+def attend(q, k, v, *, mask=None, scale: Optional[float] = None, softcap: float = 0.0):
+    """q: [B,S,H,hd]; k,v: [B,T,K,hd] with K | H. mask: broadcastable [B,1,S,T] bool.
+
+    Returns [B,S,H,hd]. fp32 softmax.
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    k = repeat_kv(k, H // K)
+    v = repeat_kv(v, H // K)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def causal_mask(S: int, T: int, q_offset):
+    """[1,1,S,T] bool: query i (global pos q_offset+i) sees keys <= its pos."""
+    qi = jnp.arange(S)[:, None] + q_offset
+    kj = jnp.arange(T)[None, :]
+    return (kj <= qi)[None, None]
+
+
+def window_mask(S: int, T: int, q_offset, window: int):
+    qi = jnp.arange(S)[:, None] + q_offset
+    kj = jnp.arange(T)[None, :]
+    return ((kj <= qi) & (kj > qi - window))[None, None]
+
+
+# ----------------------------------------------------------------------
+# attention block (projection + rope + attend)
+# ----------------------------------------------------------------------
+
+def init_attention(key, cfg, d_model: Optional[int] = None, dtype=None):
+    D = d_model or cfg.d_model
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (D, cfg.n_heads * cfg.hd), dtype),
+        "wk": dense_init(ks[1], (D, cfg.n_kv_heads * cfg.hd), dtype),
+        "wv": dense_init(ks[2], (D, cfg.n_kv_heads * cfg.hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * cfg.hd, D), dtype,
+                         scale=1.0 / math.sqrt(2 * max(1, cfg.n_layers) * cfg.n_heads * cfg.hd)),
+    }
+
+
+def attention_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def self_attention(p, x, cfg, *, positions=None, window: int = 0, prefix_len: int = 0):
+    """Full-sequence self attention (training/prefill). causal unless enc.
+
+    prefix_len: leading positions (vision/meta tokens) every query may attend to
+    even outside the window.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    if getattr(cfg, "attn_impl", "naive") == "chunked":
+        from repro.models.attention import chunked_attend
+        out = chunked_attend(q, k, v, causal=True, window=window,
+                             prefix_len=prefix_len, chunk=cfg.attn_chunk)
+    else:
+        if window:
+            mask = window_mask(S, S, 0, window)
+            if prefix_len:
+                kj = jnp.arange(S)[None, :]
+                qi = jnp.arange(S)[:, None]
+                mask = mask | ((kj < prefix_len) & (kj <= qi))[None, None]
+        else:
+            mask = causal_mask(S, S, 0)
+        out = attend(q, k, v, mask=mask)
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def bidirectional_attention(p, x, cfg, positions=None):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    if getattr(cfg, "attn_impl", "naive") == "chunked":
+        from repro.models.attention import chunked_attend
+        out = chunked_attend(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    else:
+        out = attend(q, k, v, mask=None)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_attention(p, x, memory_kv, cfg):
+    """x: [B,S,D] queries; memory_kv: (k,v) [B,T,K,hd] precomputed from encoder."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k, v = memory_kv
+    if getattr(cfg, "attn_impl", "naive") == "chunked":
+        from repro.models.attention import chunked_attend
+        out = chunked_attend(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    else:
+        out = attend(q, k, v, mask=None)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def decode_attention(p, x, cfg, cache_k, cache_v, pos, *, window: int = 0):
+    """Single-token decode. x: [B,1,D]; cache_[kv]: [B,T,K,hd]; pos: [] int32.
+
+    Full cache: write at index ``pos``; mask keys > pos.
+    Window cache (window>0): cache length == window ring buffer; write at
+    ``pos % window``; mask unwritten slots.
+    Returns (out [B,1,D], new_k, new_v).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    slot = (pos % window) if window else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    kj = jnp.arange(T)[None, None, None, :]
+    if window:
+        # slots hold global positions in (pos-window, pos]; all valid once warm
+        valid = kj <= jnp.minimum(pos, T - 1)
+    else:
+        valid = kj <= pos
+    out = attend(q, cache_k, cache_v, mask=valid)
+    return out.reshape(B, 1, -1) @ p["wo"], cache_k, cache_v
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_model: Optional[int] = None, d_ff: Optional[int] = None, dtype=None):
+    D = d_model or cfg.d_model
+    F = d_ff or cfg.d_ff
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (D, F), dtype),
+        "w_up": dense_init(ks[1], (D, F), dtype),
+        "w_down": dense_init(ks[2], (F, D), dtype, scale=1.0 / math.sqrt(2 * max(1, cfg.n_layers) * F)),
+    }
+
+
+def mlp(p, x, activation: str = "swiglu"):
+    gate = x @ p["w_gate"]
+    up = x @ p["w_up"]
+    if activation == "geglu":
+        h = jax.nn.gelu(gate) * up
+    else:
+        h = jax.nn.silu(gate) * up
+    return h @ p["w_down"]
+
+
+# ----------------------------------------------------------------------
+# misc
+# ----------------------------------------------------------------------
+
+def sinusoidal_embedding(t, dim: int, max_period: float = 10_000.0):
+    """t: [B] float timesteps -> [B, dim]."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[:, None].astype(jnp.float32) * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """logits [B,S,V] fp any; labels [B,S] int32. Mean over non-ignored.
+
+    Shard-friendly formulation: the gold-logit term is a one-hot contraction
+    (reduces over the vocab dim wherever it lives) rather than
+    take_along_axis, which under GSPMD forces an all-gather of the
+    vocab-sharded logits. logsumexp also reduces in-place. Verified
+    numerically identical to the gather formulation in tests.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels.clip(0), logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,183 @@
+"""Decoder-only LM skeleton: dense (llama3/yi/minitron/gemma), MoE
+(olmoe/deepseek-moe), VLM (internvl2 = dense decoder consuming stub ViT
+patch embeddings).
+
+Scan-over-layers with stacked params keeps HLO size O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_lib
+
+
+# ----------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    def init_block(k):
+        ka, km = jax.random.split(k)
+        block = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": layers.init_attention(ka, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if cfg.n_experts:
+            block["moe"] = moe_lib.init_moe(km, cfg)
+        else:
+            block["mlp"] = layers.init_mlp(km, cfg)
+        return block
+
+    blocks = jax.vmap(init_block)(jax.random.split(k_blocks, cfg.n_layers))
+    params = {
+        "embed": layers.embed_init(k_embed, (cfg.vocab, cfg.d_model), dtype),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.dense_init(k_head, (cfg.d_model, cfg.vocab), dtype)
+    return params
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+def _embed(params, cfg, tokens, vision_embeds=None):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.arch_id.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(params, cfg, x):
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def _constrain(x, cfg):
+    """Residual-stream sharding constraint (cfg.act_shard, §Perf):
+    batch  -> P(('data',), None, None)          (plain DP activations)
+    seqpar -> P(('data',), 'model', None)       (sequence-parallel residual:
+              GSPMD turns the per-layer megatron all-reduces into
+              reduce-scatter + all-gather pairs, halving collective bytes)
+    Requires an ambient mesh (the dry-run/perf lower inside ``with mesh:``).
+    """
+    if not cfg.act_shard:
+        return x
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    spec = P(("data",), "model" if cfg.act_shard == "seqpar" else None, None)
+    try:
+        return _jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def _block(p, x, cfg, *, window: int, prefix_len: int):
+    x = _constrain(x, cfg)
+    h, kv = layers.self_attention(
+        p["attn"], layers.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+        window=window, prefix_len=prefix_len)
+    x = x + h
+    xn = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        h, aux = moe_lib.moe_ffn(p["moe"], xn, cfg)
+    else:
+        h, aux = layers.mlp(p["mlp"], xn, cfg.activation), jnp.float32(0.0)
+    return x + h, kv, aux
+
+
+def forward(params, cfg, tokens, *, vision_embeds=None, window: int = 0,
+            return_kv: bool = False, logits_last_only: bool = False):
+    """tokens [B,S] -> logits [B, S(+Nv), V]. window=0 => full causal attn.
+
+    logits_last_only: serving prefill only needs the final position — skips
+    the [B,S,V] unembed (and its partial-sum all-reduce under sharding)."""
+    prefix_len = vision_embeds.shape[1] if vision_embeds is not None else 0
+    x = _embed(params, cfg, tokens, vision_embeds)
+
+    def body(carry, p):
+        x, aux = carry
+        x, kv, a = _block(p, x, cfg, window=window, prefix_len=prefix_len)
+        return (x, aux + a), (kv if return_kv else None)
+
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    if logits_last_only:
+        x = x[:, -1:]
+    return _logits(params, cfg, x), aux, kvs
+
+
+def loss_fn(params, cfg, batch):
+    """batch: tokens [B,S], labels [B,S] (+ vision_embeds for vlm)."""
+    ve = batch.get("vision_embeds")
+    logits, aux, _ = forward(params, cfg, batch["tokens"], vision_embeds=ve)
+    if ve is not None:
+        logits = logits[:, ve.shape[1]:]   # loss on text positions only
+    ce = layers.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+    return ce + cfg.router_aux_coef * aux if cfg.n_experts else ce
+
+
+# ----------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ----------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, *, window: int = 0):
+    T = window if window else max_len
+    shape = (cfg.n_layers, batch, T, cfg.n_kv_heads, cfg.hd)
+    dtype = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg, tokens, cache, *, vision_embeds=None, window: int = 0):
+    logits, _, kvs = forward(params, cfg, tokens, vision_embeds=vision_embeds,
+                             window=window, return_kv=True,
+                             logits_last_only=True)
+    k, v = kvs                                   # [L,B,S,K,hd]
+    S = k.shape[2]
+    T = cache["k"].shape[2]
+    if S >= T:                                   # keep last T (windowed)
+        k, v = k[:, :, S - T:], v[:, :, S - T:]
+        cache = {**cache, "k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+    else:
+        cache = {**cache,
+                 "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=2),
+                 "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=2)}
+    return logits[:, -1], {**cache, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, cfg, cache, token, *, window: int = 0):
+    """token [B] int32 -> (logits [B,V], new cache). One new token."""
+    x = _embed(params, cfg, token[:, None])
+    pos = cache["pos"]
+
+    def body(x, scanned):
+        p, ck, cv = scanned
+        h, nk, nv = layers.decode_attention(
+            p["attn"], layers.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+            ck, cv, pos, window=window)
+        x = x + h
+        xn = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            h, _ = moe_lib.moe_ffn(p["moe"], xn, cfg)
+        else:
+            h = layers.mlp(p["mlp"], xn, cfg.activation)
+        return x + h, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"k": nk, "v": nv, "pos": pos + 1}

@@ -1,0 +1,91 @@
+"""Selective SSM (Mamba-style) branch used by Hymba's parallel heads.
+
+Reference = exact recurrent ``lax.scan``; the chunked TPU kernel lives in
+``repro.kernels.ssm_scan``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def d_inner(cfg) -> int:
+    return cfg.d_model
+
+
+def dt_rank(cfg) -> int:
+    return max(8, cfg.d_model // 32)
+
+
+def init_mamba(key, cfg, n_layers_scale: int = None):
+    D = cfg.d_model
+    Di, N, R = d_inner(cfg), cfg.ssm_state, dt_rank(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": layers.dense_init(ks[0], (D, 2 * Di), dt),           # x, z
+        "conv": layers.dense_init(ks[1], (cfg.ssm_conv, Di), dt, scale=0.3),
+        "w_bc": layers.dense_init(ks[2], (Di, 2 * N), dt),           # B_t, C_t
+        "w_dt1": layers.dense_init(ks[3], (Di, R), dt),
+        "w_dt2": layers.dense_init(ks[4], (R, Di), dt),
+        "b_dt": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[5], (Di,), minval=math.log(1e-3), maxval=math.log(1e-1))))),
+        "A_log": jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :].repeat(Di, 0),
+        "D_skip": jnp.ones((Di,), jnp.float32),
+        "w_out": layers.dense_init(ks[6], (Di, D), dt,
+                                   scale=1.0 / math.sqrt(2 * cfg.n_layers * Di)),
+    }
+
+
+def init_state(cfg, batch: int):
+    Di, N = d_inner(cfg), cfg.ssm_state
+    return {"h": jnp.zeros((batch, Di, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, Di), jnp.dtype(cfg.dtype))}
+
+
+def _proj(p, xb, cfg, conv_state):
+    """xb: [B,S,D] pre-normed -> per-step SSM inputs (all fp32)."""
+    B, S, _ = xb.shape
+    N = cfg.ssm_state
+    x_br, z = jnp.split(xb @ p["w_in"], 2, axis=-1)
+    pad = jnp.concatenate([conv_state.astype(x_br.dtype), x_br], axis=1)
+    w = p["conv"]
+    W = w.shape[0]
+    xc = jax.nn.silu(sum(pad[:, i:i + S] * w[i] for i in range(W)))
+    new_conv = pad[:, -(W - 1):] if W > 1 else conv_state
+    bc = (xc @ p["w_bc"]).astype(jnp.float32)
+    B_t, C_t = bc[..., :N], bc[..., N:]                               # [B,S,N]
+    delta = jax.nn.softplus(((xc @ p["w_dt1"]) @ p["w_dt2"]).astype(jnp.float32) + p["b_dt"])
+    A = -jnp.exp(p["A_log"])                                          # [Di,N]
+    return xc.astype(jnp.float32), z, B_t, C_t, delta, A, new_conv
+
+
+def ssm_scan_ref(xc, B_t, C_t, delta, A, D_skip, h0):
+    """Exact recurrence. xc: [B,S,Di]; B_t/C_t: [B,S,N]; delta: [B,S,Di].
+
+    h_t = exp(delta_t A) h_{t-1} + delta_t B_t x_t ;  y_t = <h_t, C_t> + D x_t
+    Returns (y [B,S,Di], h_final [B,Di,N]).
+    """
+    def step(h, inp):
+        x_t, b_t, c_t, d_t = inp                                      # [B,Di],[B,N],[B,N],[B,Di]
+        da = jnp.exp(d_t[..., None] * A[None])                        # [B,Di,N]
+        h = da * h + (d_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + D_skip * x_t
+        return h, y
+
+    inputs = (jnp.moveaxis(xc, 0, 1), jnp.moveaxis(B_t, 0, 1),
+              jnp.moveaxis(C_t, 0, 1), jnp.moveaxis(delta, 0, 1))
+    h, ys = jax.lax.scan(step, h0, inputs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba_forward(p, xb, cfg, state):
+    """xb: [B,S,D] (pre-normed) -> (y [B,S,D], new state)."""
+    xc, z, B_t, C_t, delta, A, new_conv = _proj(p, xb, cfg, state["conv"])
+    y, h = ssm_scan_ref(xc, B_t, C_t, delta, A, p["D_skip"], state["h"])
+    y = (y.astype(xb.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return y, {"h": h, "conv": new_conv}

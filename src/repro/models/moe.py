@@ -1,0 +1,75 @@
+"""Mixture-of-Experts FFN (OLMoE / DeepSeekMoE style).
+
+Capacity-based einsum dispatch: experts live on the ``model`` mesh axis
+(expert parallelism); the dispatch/combine einsums lower to all-to-all-like
+collectives under GSPMD. FLOPs scale with top_k (+ shared), not n_experts —
+matching 6*N_active*D roofline accounting.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_moe(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], (D, E), jnp.float32),  # router stays fp32
+        "experts": {
+            "w_gate": layers.dense_init(ks[1], (E, D, F), dtype),
+            "w_up": layers.dense_init(ks[2], (E, D, F), dtype),
+            "w_down": layers.dense_init(ks[3], (E, F, D), dtype,
+                                        scale=1.0 / math.sqrt(2 * cfg.n_layers * F)),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_mlp(ks[4], cfg, d_ff=cfg.n_shared_experts * F)
+    return p
+
+
+def _capacity(S: int, cfg) -> int:
+    return max(1, int(math.ceil(S * cfg.top_k / cfg.n_experts * cfg.capacity_factor)))
+
+
+def moe_ffn(p, x, cfg):
+    """x: [B,S,D] -> (y [B,S,D], aux_loss scalar fp32)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(S, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"])          # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                     # [B,S,K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k-slot) within its expert's queue
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.float32)         # [B,S,K,E]
+    flat = sel.reshape(B, S * K, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(B, S, K, E)  # rank in queue
+    keep = pos_in_e < C
+    sel = sel * keep
+    pos_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C, dtype=jnp.float32)  # [B,S,K,E,C]
+    dispatch = jnp.einsum("bske,bskec->bsec", sel, pos_oh)  # [B,S,E,C] 0/1
+    combine = jnp.einsum("bsk,bske,bskec->bsec", gate, sel, pos_oh)
+
+    xe = jnp.einsum("bsd,bsec->becd", x, dispatch.astype(x.dtype))      # [B,E,C,D]
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, w["w_gate"])) * \
+        jnp.einsum("becd,edf->becf", xe, w["w_up"])
+    ye = jnp.einsum("becf,efd->becd", h, w["w_down"])                   # [B,E,C,D]
+    y = jnp.einsum("becd,bsec->bsd", ye, combine.astype(ye.dtype))
+
+    if cfg.n_shared_experts:
+        y = y + layers.mlp(p["shared"], x, cfg.activation)
+
+    # load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(sel.sum(2).reshape(B * S, E), axis=0)        # fraction routed
+    frac_probs = jnp.mean(probs.reshape(B * S, E), axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) / K
+    return y, aux

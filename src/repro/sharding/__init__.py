@@ -1,0 +1,3 @@
+from repro.sharding.specs import (  # noqa
+    param_specs, batch_specs, cache_specs, named, tree_named,
+)

@@ -1,0 +1,70 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each assigned architecture: instantiate the REDUCED variant of the same
+family (2 layers, d_model<=256, <=4 experts) and run one forward + one train
+step on CPU, asserting output shapes and no NaNs; plus a prefill+decode step.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import build_model
+
+SEQ = 32
+BATCH = 2
+
+
+@pytest.fixture(scope="module", params=ASSIGNED)
+def arch(request):
+    return request.param
+
+
+def _setup(arch_id):
+    cfg = get_config(arch_id).reduced()
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    batch = model.make_batch(jax.random.PRNGKey(1), BATCH, SEQ)
+    return cfg, model, params, batch
+
+
+def test_forward_shapes_no_nans(arch):
+    cfg, model, params, batch = _setup(arch)
+    logits = model.forward_logits(params, batch)
+    n_tok = batch.get("tgt_tokens", batch.get("tokens")).shape[1]
+    expect_seq = n_tok + (cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (BATCH, expect_seq, cfg.vocab), logits.shape
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32))), "NaN/inf in logits"
+
+
+def test_one_train_step(arch):
+    cfg, model, params, batch = _setup(arch)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert jnp.isfinite(loss), loss
+    gnorm = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0)
+    assert jnp.isfinite(gnorm) and gnorm > 0.0
+    # actually apply an SGD step and confirm loss is still finite
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    assert jnp.isfinite(model.loss(new_params, batch))
+
+
+def test_prefill_then_decode(arch):
+    cfg, model, params, batch = _setup(arch)
+    window = cfg.sliding_window
+    if cfg.family == "encdec":
+        cache = model.init_cache(BATCH, SEQ, src_len=SEQ)
+    elif cfg.family == "vlm":
+        cache = model.init_cache(BATCH, cfg.n_vision_tokens + SEQ + 8)
+    else:
+        cache = model.init_cache(BATCH, SEQ + 8, window=window)
+    logits, cache = model.prefill(params, batch, cache, window=window)
+    assert logits.shape == (BATCH, cfg.vocab)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+    token = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(2):
+        logits, cache = model.decode_step(params, cache, token, window=window)
+        assert logits.shape == (BATCH, cfg.vocab)
+        assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+        token = jnp.argmax(logits, -1).astype(jnp.int32)

@@ -1,0 +1,104 @@
+"""Multi-device distributed tests, each in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count so the main pytest process
+keeps seeing exactly 1 device (per the brief)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n_devices: int = 8, timeout: int = 520):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    if n_devices > 1:
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                            + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_uneven_all_gather_equivalence():
+    """Paper §V-A: padded all_gather == broadcast emulation == oracle."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core import comm
+        devs = jax.devices(); N = len(devs)
+        mesh = Mesh(np.asarray(devs), ('dev',))
+        sizes = [3, 1, 4, 2, 5, 1, 2, 6][:N]
+        mx = max(sizes)
+        rng = np.random.default_rng(0)
+        slabs = [rng.normal(size=(s, 7)).astype(np.float32) for s in sizes]
+        oracle = np.concatenate(slabs, 0)
+        padded = np.stack([np.pad(s, ((0, mx - s.shape[0]), (0, 0))) for s in slabs])
+        x = jnp.asarray(padded)    # [N, mx, 7]
+
+        def f_pad(xl):
+            return comm.uneven_all_gather_padded(xl[0], sizes, 'dev')
+        def f_bc(xl):
+            return comm.uneven_all_gather_broadcast(xl[0], sizes, 'dev')
+        for f in (f_pad, f_bc):
+            got = np.asarray(jax.jit(jax.shard_map(
+                f, mesh=mesh, in_specs=P('dev'), out_specs=P(None),
+                check_vma=False))(x))
+            np.testing.assert_allclose(got, oracle, rtol=1e-6)
+        print('COMM_OK')
+    """)
+    assert "COMM_OK" in out
+
+
+def test_spmd_stadi_matches_emulation():
+    """Real shard_map STADI on 4 devices == logical-worker emulation."""
+    out = _run("""
+        import sys
+        sys.argv = ['x', '--spmd', '--occupancies', '0.0,0.2,0.4,0.6',
+                    '--m-base', '12', '--m-warmup', '4', '--arch', 'tiny-dit',
+                    '--reduced', '--check-vs-emulation']
+        from repro.launch.stadi_infer import main
+        main()
+        print('SPMD_OK')
+    """, n_devices=4)
+    assert "SPMD_OK" in out
+    assert "rel_err_vs_emulation" in out
+
+
+def test_tensor_parallel_baseline_lowers_and_runs():
+    """TP DiT forward executes on 4 devices and matches single-device."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.core.tensor_parallel import tp_forward
+        from repro.models.diffusion import dit
+        cfg = get_config('tiny-dit').reduced()
+        params = dit.init_params(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, cfg.latent_size, cfg.latent_size, cfg.channels))
+        mesh = Mesh(np.asarray(jax.devices()), ('model',))
+        with mesh:
+            out = jax.jit(lambda p, x: tp_forward(p, cfg, x, 50, None, mesh))(params, x)
+        ref = dit.forward(params, cfg, x, 50, None)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        print('TP_OK')
+    """, n_devices=4)
+    assert "TP_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_one_config_512_devices():
+    """launch/dryrun compiles a real (arch x shape) on the 16x16 mesh."""
+    out = _run("""
+        import sys
+        sys.argv = ['x', '--arch', 'xlstm-125m', '--shape', 'decode_32k']
+        from repro.launch.dryrun import main
+        main()
+    """, n_devices=1, timeout=560)   # dryrun sets its own XLA_FLAGS
+    assert "all dry-runs OK" in out

@@ -1,0 +1,72 @@
+"""Roofline toolchain unit tests: HLO collective parser (loop-aware) and
+analytic cost model sanity."""
+import numpy as np
+
+from repro.launch import analytic, roofline as rl
+
+HLO = """
+HloModule jit_step
+
+%wide.body.1 (arg.1: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %x), replica_groups={}
+  %ag.1 = f32[256]{0} all-gather(f32[128]{0} %y), dimensions={0}
+}
+
+%wide.cond.1 (arg.2: (s32[], f32[128])) -> pred[] {
+  %iv = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(12)
+  %cmp = pred[] compare(s32[] %iv, s32[] %c), direction=LT
+}
+
+ENTRY %main.42 (a: f32[128]) -> f32[128] {
+  %w = (s32[], f32[128]) while(%init), condition=%wide.cond.1, body=%wide.body.1
+  %ag2 = f32[512]{0} all-gather(f32[128]{0} %z), dimensions={0}
+}
+"""
+
+
+def test_collective_parser_loop_aware():
+    out = rl.collective_bytes(HLO)
+    # body: all-reduce 128 f32 = 512B, all-gather operand 128 f32 = 512B,
+    # each scaled by trip count 12; entry all-gather operand 512B once
+    assert out["all-reduce"] == 512 * 12
+    assert out["all-gather"] == 512 * 12 + 512
+    assert out["total"] == 512 * 12 * 2 + 512
+    assert out["_counts"]["all-gather"] == 2
+
+
+def test_shape_bytes():
+    assert rl._shape_bytes("bf16", "8,128") == 8 * 128 * 2
+    assert rl._shape_bytes("f32", "") == 4
+    assert rl._shape_bytes("s8", "10") == 10
+
+
+def test_analytic_ratios_sane():
+    """Analytic flops within ~2x of the 6ND rule for standard dense shapes
+    (6ND ignores attention quadratic + head, so analytic >= ~0.8 * 6ND)."""
+    for arch in ("gemma-2b", "yi-9b", "minitron-8b", "llama3-405b"):
+        c = analytic.step_cost(arch, "train_4k")
+        nd = rl.model_flops_for(arch, "train_4k")
+        assert 0.7 < nd / c.flops < 1.3, (arch, nd / c.flops)
+
+
+def test_analytic_flash_reduces_bytes():
+    naive = analytic.step_cost("yi-9b", "prefill_32k", flash=False)
+    flash = analytic.step_cost("yi-9b", "prefill_32k", flash=True)
+    assert flash.bytes < 0.5 * naive.bytes        # S^2 scores dominate at 32k
+    assert flash.flops == naive.flops
+
+
+def test_analytic_decode_memory_bound():
+    """Decode must be memory-bound: bytes/819GB/s >> flops/197TF."""
+    c = analytic.per_device("llama3-405b", "decode_32k", 256)
+    assert c.bytes / 819e9 > c.flops / 197e12
+
+
+def test_model_flops_moe_uses_active():
+    dense_like = rl.model_flops_for("olmoe-1b-7b", "train_4k")
+    from repro.configs import get_config
+    cfg = get_config("olmoe-1b-7b")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()
+    assert dense_like == 6.0 * cfg.active_param_count() * 256 * 4096

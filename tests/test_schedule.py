@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) for STADI's allocators (Eq. 4 / Eq. 5)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule as sl
+
+speeds_st = st.lists(st.floats(0.05, 1.0), min_size=1, max_size=8)
+
+
+@settings(max_examples=200, deadline=None)
+@given(speeds=speeds_st)
+def test_temporal_allocation_properties(speeds):
+    plan = sl.temporal_allocation(speeds, m_base=100, m_warmup=4)
+    vmax = max(speeds)
+    for v, M, r, ex in zip(speeds, plan.steps, plan.ratios, plan.excluded):
+        if v <= 0.25 * vmax and not all(plan.excluded):
+            if ex:
+                assert M == 0 and r == 0
+                continue
+        if not ex:
+            # Eq. 4: two tiers only
+            assert M in (100, 52), (v, M)         # (100+4)/2 = 52
+            assert r in (1, 2)
+            # faster tier never gets fewer steps
+    # monotonicity: sort by speed => steps non-decreasing
+    act = [(v, M) for v, M, e in zip(speeds, plan.steps, plan.excluded) if not e]
+    act.sort()
+    for (v1, m1), (v2, m2) in zip(act, act[1:]):
+        assert m1 <= m2
+    # fastest device always gets M_base
+    assert plan.steps[speeds.index(vmax)] == 100
+    # LCM of ratios stays minimal (paper's quantization goal)
+    assert plan.lcm in (1, 2)
+
+
+@settings(max_examples=200, deadline=None)
+@given(speeds=speeds_st, p_total=st.sampled_from([16, 32, 64]),
+       gran=st.sampled_from([1, 2, 4]))
+def test_spatial_allocation_properties(speeds, p_total, gran):
+    plan = sl.temporal_allocation(speeds, 100, 4)
+    patches = sl.spatial_allocation(speeds, plan.steps, p_total, gran)
+    # exact coverage
+    assert sum(patches) == p_total
+    # granularity respected
+    assert all(p % gran == 0 for p in patches)
+    # excluded devices get nothing
+    for p, ex in zip(patches, plan.excluded):
+        if ex:
+            assert p == 0
+    # rounding error bounded by one granule vs the ideal Eq.5 allocation
+    rate = [v / m if m else 0.0 for v, m in zip(speeds, plan.steps)]
+    tot = sum(rate)
+    for p, r in zip(patches, rate):
+        ideal = r / tot * p_total
+        assert abs(p - ideal) <= 2 * gran + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(speeds=st.lists(st.floats(0.3, 1.0), min_size=2, max_size=6))
+def test_makespan_optimal_not_worse_than_paper(speeds):
+    """Beyond-paper DP allocator: modeled interval cost <= paper Eq.4+Eq.5."""
+    m_base, m_w, p_total = 100, 4, 32
+    plan = sl.temporal_allocation(speeds, m_base, m_w)
+    patches = sl.spatial_allocation(speeds, plan.steps, p_total)
+    fixed = 0.05
+
+    def interval_cost(pl, pt):
+        c = 0.0
+        for v, r, p in zip(speeds, pl.ratios, pt):
+            if r:
+                c = max(c, (fixed + p / p_total) / v / r)
+        return c
+
+    paper_cost = interval_cost(plan, patches)
+    opt_plan, opt_patches, opt_cost = sl.makespan_optimal_allocation(
+        speeds, m_base, m_w, p_total, fixed_overhead=fixed)
+    assert opt_cost <= paper_cost + 1e-9
+
+
+def test_eq4_exact_paper_values():
+    """Paper §V: a=0.75, b=0.25, M_base=100, M_warmup=4."""
+    plan = sl.temporal_allocation([1.0, 0.5], 100, 4, a=0.75, b=0.25)
+    assert plan.steps == [100, 52]                # ½·100 + ½·4 = 52
+    assert plan.ratios == [1, 2]
+    plan = sl.temporal_allocation([1.0, 0.8], 100, 4)
+    assert plan.steps == [100, 100]               # both in top tier: no TA
+    plan = sl.temporal_allocation([1.0, 0.2], 100, 4)
+    assert plan.excluded == [False, True]
+
+
+def test_eq5_exact():
+    # v = [1, .5], M = [100, 52]: rates .01/.009615 -> ideal 16.31:15.69;
+    # largest-remainder gives the extra granule to the .69 remainder
+    patches = sl.spatial_allocation([1.0, 0.5], [100, 52], 32)
+    assert patches == [16, 16]
+    # clearer split: v=[1, .3] -> rates .01/.00577 -> ideal 20.3:11.7 -> 20:12
+    patches = sl.spatial_allocation([1.0, 0.3], [100, 52], 32)
+    assert patches == [20, 12]
+
+
+def test_temporal_validation_errors():
+    with pytest.raises(ValueError):
+        sl.temporal_allocation([1.0], 100, 4, a=0.2, b=0.5)
+    with pytest.raises(ValueError):
+        sl.temporal_allocation([1.0], 4, 4)
+    with pytest.raises(ValueError):
+        sl.temporal_allocation([1.0], 101, 4)     # 97 not divisible by 2
+    with pytest.raises(ValueError):
+        sl.spatial_allocation([1.0], [100], 33, granularity=2)
+
+
+def test_patch_bounds():
+    assert sl.patch_bounds([3, 0, 5]) == [(0, 3), (3, 3), (3, 8)]
