@@ -1,23 +1,20 @@
 """Paper Table III: ablation None / +SA / +TA / +TA+SA on occupancies
 [0,20], [0,40], [0,60]; speedups vs None. Paper: SA alone 1.12-1.34x,
-TA alone up to 1.82x, TA+SA lowest latency everywhere."""
+TA alone up to 1.82x, TA+SA lowest latency everywhere.
+
+Every variant is one planner name on the same ``StadiPipeline``:
+none -> "uniform", +SA -> "spatial", +TA -> "temporal", +TA+SA -> "stadi".
+"""
 from __future__ import annotations
 
+import dataclasses
+
 from benchmarks import common
-from benchmarks.bench_latency import M_BASE, M_WARMUP, build_trace
-from repro.core import hetero, simulate as sim
-from repro.core.patch_parallel import uniform_plan
-from repro.core.schedule import spatial_allocation, temporal_allocation
+from benchmarks.bench_latency import M_BASE, M_WARMUP
+from repro.core.pipeline import StadiConfig, StadiPipeline
 
-
-def variant_trace(cfg, speeds, temporal: bool, spatial: bool):
-    P_total = cfg.tokens_per_side
-    n = len(speeds)
-    plan = (temporal_allocation(speeds, M_BASE, M_WARMUP) if temporal
-            else uniform_plan(n, M_BASE, M_WARMUP))
-    patches = (spatial_allocation(speeds, plan.steps, P_total) if spatial
-               else [P_total // n] * n)
-    return build_trace(plan, patches, cfg)
+VARIANTS = {"none": "uniform", "+SA": "spatial",
+            "+TA": "temporal", "+TA+SA": "stadi"}
 
 
 def run(emit=True):
@@ -25,12 +22,14 @@ def run(emit=True):
     cm = common.calibrate_cost_model(cfg, params)
     out = {}
     for occ in ([0.0, 0.2], [0.0, 0.4], [0.0, 0.6]):
-        speeds = hetero.speeds(hetero.make_cluster(occ))
+        config = StadiConfig.from_occupancies(
+            occ, m_base=M_BASE, m_warmup=M_WARMUP, backend="simulate",
+            cost_model=cm)
         lat = {}
-        for name, (ta, sa) in {"none": (False, False), "+SA": (False, True),
-                               "+TA": (True, False), "+TA+SA": (True, True)}.items():
-            t = sim.simulate_trace(variant_trace(cfg, speeds, ta, sa), speeds, cm)
-            lat[name] = t
+        for name, planner in VARIANTS.items():
+            pipe = StadiPipeline(cfg, params, sched,
+                                 dataclasses.replace(config, planner=planner))
+            lat[name] = pipe.generate().latency_s
         key = f"[{int(occ[0]*100)},{int(occ[1]*100)}]"
         out[key] = lat
         if emit:

@@ -5,41 +5,20 @@ Scenario A (total resources decreasing): [0,20], [0,40], [0,60]
 Scenario B (total fixed at 80%):         [35,45], [30,50], [25,55]
 
 Cost model calibrated from real measured single-step DiT latencies on this
-host (common.calibrate_cost_model); heterogeneous wall-clock is simulated
-per DESIGN.md §2/§6. Reported: latency (s) + STADI reduction vs PP —
-paper claims 12-45% (A) and 4-39% (B).
+host (common.calibrate_cost_model); heterogeneous wall-clock is replayed by
+the pipeline's ``"simulate"`` backend per DESIGN.md §2/§6. Reported: latency
+(s) + STADI reduction vs PP — paper claims 12-45% (A) and 4-39% (B).
 """
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
 
 from benchmarks import common
-from repro.core import hetero, simulate as sim
-from repro.core import stadi as stadi_lib
-from repro.core.patch_parallel import uniform_plan
-from repro.core.schedule import spatial_allocation, temporal_allocation
-from repro.core.patch_parallel import ExecutionTrace, IntervalEvent
+from repro.core import simulate as sim
+from repro.core.pipeline import StadiConfig, StadiPipeline
+from repro.core.simulate import build_trace  # noqa: F401  (bench_beyond et al.)
 
 M_BASE, M_WARMUP = 100, 4
-
-
-def build_trace(plan, patches, cfg, batch=1):
-    """Schedule trace without running numerics (latency-only replay)."""
-    R = plan.lcm
-    F = plan.m_base - plan.m_warmup
-    events = [IntervalEvent(m, [1 if not e else 0 for e in plan.excluded],
-                            list(patches), synchronous=True)
-              for m in range(plan.m_warmup)]
-    for it in range(F // R):
-        events.append(IntervalEvent(plan.m_warmup + it * R,
-                                    [R // r if r else 0 for r in plan.ratios],
-                                    list(patches)))
-    H = cfg.latent_size
-    lat_bytes = int(batch * H * H * cfg.channels * 4)
-    kv_bytes = [int(2 * cfg.n_layers * batch * pr * cfg.tokens_per_side
-                    * cfg.d_model * 2) for pr in patches]
-    return ExecutionTrace(events, plan, list(patches), cfg.n_tokens,
-                          lat_bytes, kv_bytes)
 
 
 def run(cm=None, emit=True):
@@ -57,21 +36,19 @@ def run(cm=None, emit=True):
     out = {}
     for sc, grids in scenarios.items():
         for occ in grids:
-            speeds = hetero.speeds(hetero.make_cluster(occ))
+            config = StadiConfig.from_occupancies(
+                occ, m_base=M_BASE, m_warmup=M_WARMUP, backend="simulate",
+                cost_model=cm)
             # patch parallelism: uniform everything
-            pp_plan = uniform_plan(2, M_BASE, M_WARMUP)
-            pp_patches = [P_total // 2] * 2
-            t_pp = sim.simulate_trace(build_trace(pp_plan, pp_patches, cfg),
-                                      speeds, cm)
+            t_pp = StadiPipeline(cfg, params, sched, dataclasses.replace(
+                config, planner="uniform")).generate().latency_s
             # STADI
-            plan = temporal_allocation(speeds, M_BASE, M_WARMUP)
-            patches = spatial_allocation(speeds, plan.steps, P_total)
-            t_st = sim.simulate_trace(build_trace(plan, patches, cfg),
-                                      speeds, cm)
+            t_st = StadiPipeline(cfg, params, sched,
+                                 config).generate().latency_s
             # tensor parallelism baseline
             act_bytes = cfg.n_tokens * cfg.d_model * 2
             t_tp = sim.simulate_tensor_parallel(
-                M_BASE, 2, cfg.n_layers, P_total, speeds, cm, act_bytes)
+                M_BASE, 2, cfg.n_layers, P_total, config.speeds, cm, act_bytes)
             red = (1 - t_st / t_pp) * 100
             key = f"{sc}[{int(occ[0]*100)},{int(occ[1]*100)}]"
             out[key] = (t_pp, t_tp, t_st, red)

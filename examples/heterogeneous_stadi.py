@@ -3,11 +3,13 @@
 Serves a batch of class-conditional generation requests on an emulated
 2-device cluster under increasing occupancy skew, comparing Patch
 Parallelism (DistriFusion), Tensor Parallelism and STADI on latency
-(calibrated simulator) and quality (vs the Origin output). Uses the trained
-tiny-DiT checkpoint when available (examples/train_tiny_diffusion.py).
+(calibrated simulator) and quality (vs the Origin output) — all through
+``StadiPipeline`` by swapping the planner name. Uses the trained tiny-DiT
+checkpoint when available (examples/train_tiny_diffusion.py).
 
   PYTHONPATH=src python examples/heterogeneous_stadi.py
 """
+import dataclasses
 import os
 import sys
 
@@ -19,8 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import hetero, patch_parallel as pp, simulate as sim, stadi
-from benchmarks.bench_latency import M_WARMUP as _MW, build_trace
+from repro.core import patch_parallel as pp
+from repro.core import simulate as sim
+from repro.core.pipeline import StadiConfig, StadiPipeline
 
 M_BASE, M_WARMUP = 48, 4
 
@@ -37,15 +40,17 @@ def main():
     print(f"{'occupancy':>12} {'PP (s)':>8} {'TP (s)':>8} {'STADI (s)':>9} "
           f"{'reduction':>9} {'qual dev':>9}")
     for occ in ([0.0, 0.2], [0.0, 0.4], [0.0, 0.6]):
-        speeds = hetero.speeds(hetero.make_cluster(occ))
-        res = stadi.stadi_infer(params, cfg, sched, x_T, cond, speeds,
-                                M_BASE, M_WARMUP)
-        t_st = sim.simulate_trace(res.trace, speeds, cm)
-        res_pp = pp.run_distrifusion(params, cfg, sched, x_T, cond, 2,
-                                     M_BASE, M_WARMUP)
-        t_pp = sim.simulate_trace(res_pp.trace, speeds, cm)
+        config = StadiConfig.from_occupancies(occ, m_base=M_BASE,
+                                              m_warmup=M_WARMUP,
+                                              cost_model=cm)
+        stadi_pipe = StadiPipeline(cfg, params, sched, config)
+        res = stadi_pipe.generate(x_T, cond)
+        t_st = res.latency_s
+        pp_pipe = StadiPipeline(cfg, params, sched,
+                                dataclasses.replace(config, planner="uniform"))
+        t_pp = pp_pipe.generate(x_T, cond).latency_s
         t_tp = sim.simulate_tensor_parallel(
-            M_BASE, 2, cfg.n_layers, cfg.tokens_per_side, speeds, cm,
+            M_BASE, 2, cfg.n_layers, cfg.tokens_per_side, config.speeds, cm,
             cfg.n_tokens * cfg.d_model * 2)
         origin = np.asarray(pp.run_origin(params, cfg, sched, x_T, cond, M_BASE))
         dev = np.linalg.norm(np.asarray(res.image) - origin) / np.linalg.norm(origin)

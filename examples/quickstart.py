@@ -1,8 +1,8 @@
 """Quickstart: STADI in ~40 lines.
 
-Allocates steps (Eq. 4) + patches (Eq. 5) for a heterogeneous 2-"GPU"
-cluster, runs the exact-numerics engine on a tiny DiT, and compares the
-result against non-distributed DDIM.
+One config object, one pipeline, one call: plans steps (Eq. 4) + patches
+(Eq. 5) for a heterogeneous 2-"GPU" cluster, runs the exact-numerics engine
+on a tiny DiT, and compares the result against non-distributed DDIM.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,13 +16,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import hetero, patch_parallel, sampler, stadi
+from repro.core import patch_parallel, sampler
+from repro.core.pipeline import StadiConfig, StadiPipeline
 from repro.models.diffusion import dit
 
 # 1. a heterogeneous cluster: device 1 is 60%-occupied by background work
-cluster = hetero.make_cluster(occupancies=[0.0, 0.6])
-speeds = hetero.speeds(cluster)
-print(f"effective speeds: {speeds}")
+config = StadiConfig.from_occupancies([0.0, 0.6], m_base=16, m_warmup=4,
+                                      planner="stadi", backend="emulated")
+print(f"effective speeds: {config.speeds}")
 
 # 2. a small denoiser + schedule
 cfg = get_config("tiny-dit").reduced()
@@ -32,11 +33,11 @@ x_T = jax.random.normal(jax.random.PRNGKey(1),
                         (1, cfg.latent_size, cfg.latent_size, cfg.channels))
 cond = jnp.asarray([3])
 
-# 3. STADI: temporal + spatial adaptation (Algorithm 1)
-result = stadi.stadi_infer(params, cfg, sched, x_T, cond, speeds,
-                           m_base=16, m_warmup=4)
-print(f"steps per device:   {result.trace.plan.steps}")
-print(f"patch rows per dev: {result.trace.patches}")
+# 3. STADI: temporal + spatial adaptation (Algorithm 1) in one call
+pipe = StadiPipeline(cfg, params, sched, config)
+result = pipe.generate(x_T, cond)
+print(f"steps per device:   {result.plan.temporal.steps}")
+print(f"patch rows per dev: {result.plan.patches}")
 
 # 4. compare with the non-distributed Origin trajectory
 origin = patch_parallel.run_origin(params, cfg, sched, x_T, cond, m_base=16)

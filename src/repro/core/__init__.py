@@ -1,3 +1,25 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# Stable public surface (DESIGN.md §8): one config object, pluggable
+# planners and execution backends. Re-exported lazily so that importing
+# repro.core stays jax-free (spmd users must be able to set
+# STADI_HOST_DEVICES / XLA_FLAGS before jax initializes).
+_EXPORTS = {
+    "PipelineResult": "repro.core.pipeline",
+    "StadiConfig": "repro.core.pipeline",
+    "StadiPipeline": "repro.core.pipeline",
+    "register_executor": "repro.core.pipeline",
+    "get_executor": "repro.core.pipeline",
+    "ExecutionPlan": "repro.core.planners",
+    "get_planner": "repro.core.planners",
+    "register_planner": "repro.core.planners",
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -72,20 +72,26 @@ def _jit_full_step(params, cfg, x, t, cond):
 
 
 def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
-                 plan: TemporalPlan, patches: Sequence[int]) -> RunResult:
+                 plan: TemporalPlan, patches: Sequence[int],
+                 interval_hook=None) -> RunResult:
     """Execute Algorithm 1 given a temporal plan + spatial allocation.
 
     patches: token-rows per worker (sum == cfg.tokens_per_side; 0 = excluded).
     Uniform plan (all ratios 1, equal patches) == DistriFusion patch
     parallelism; plan from Eq. 4/5 == STADI.
+
+    interval_hook: optional ``hook(next_fine_step, event) -> None | (plan,
+    patches)`` called after every adaptive interval boundary. Returning a new
+    (TemporalPlan, patches) re-allocates the remaining fine steps — the
+    online-rebalancing hot path used by :class:`repro.core.pipeline.
+    StadiPipeline`. The remaining fine steps must be divisible by the new
+    plan's interval LCM.
     """
     p = cfg.patch_size
     M_base, M_w = plan.m_base, plan.m_warmup
-    F = M_base - M_w
-    R = plan.lcm                          # fine steps per interval
+    plan0, patches0 = plan, list(patches)  # trace provenance: the initial
+    # allocation; per-interval events record what actually executed
     ts = sampler_lib.ddim_timesteps(sched.T, M_base)   # fine grid, len M_base+1
-    bounds_tok = patch_bounds(patches)
-    bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
     workers = [i for i in plan.active if patches[i] > 0]
 
     x = x_T
@@ -106,9 +112,12 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
         published = buf_lib.Published(kvs[0], kvs[1], -1)
 
     # ---------------- adaptive loop: intervals of R fine steps -------------
-    n_intervals = F // R
-    for it in range(n_intervals):
-        m0 = M_w + it * R
+    m0 = M_w
+    while m0 + plan.lcm <= M_base:
+        R = plan.lcm                      # fine steps per interval
+        bounds_tok = patch_bounds(patches)
+        bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
+        workers = [i for i in plan.active if patches[i] > 0]
         pending = {}
         new_slabs = {}
         for i in workers:
@@ -132,16 +141,25 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
             lat = bounds_lat[i]
             x = x.at[:, lat[0]:lat[1]].set(new_slabs[i])
         published = buf_lib.merge(published, pending, m0 + R)
-        events.append(IntervalEvent(m0, [R // plan.ratios[i] if i in workers else 0
-                                         for i in range(len(patches))],
-                                    list(patches)))
+        ev = IntervalEvent(m0, [R // plan.ratios[i] if i in workers else 0
+                                for i in range(len(patches))],
+                           list(patches))
+        events.append(ev)
+        m0 += R
+        if interval_hook is not None and m0 < M_base:
+            upd = interval_hook(m0, ev)
+            if upd is not None:
+                plan, patches = upd
+                assert (M_base - m0) % plan.lcm == 0, (
+                    "replanned LCM must divide the remaining fine steps",
+                    M_base - m0, plan.lcm)
 
     H = cfg.latent_size
     n_tokens = cfg.n_tokens
     lat_bytes = int(B * H * H * cfg.channels * 4)
     kv_bytes = [int(2 * cfg.n_layers * B * pr * cfg.tokens_per_side
-                    * cfg.d_model * 2) for pr in patches]
-    trace = ExecutionTrace(events, plan, list(patches), n_tokens, lat_bytes, kv_bytes)
+                    * cfg.d_model * 2) for pr in patches0]
+    trace = ExecutionTrace(events, plan0, patches0, n_tokens, lat_bytes, kv_bytes)
     return RunResult(x, trace)
 
 

@@ -1,0 +1,264 @@
+"""Unified STADI pipeline: one config object, pluggable planners and
+execution backends (DESIGN.md §8).
+
+    cfg    = get_config("tiny-dit").reduced()
+    params = dit.init_params(jax.random.PRNGKey(0), cfg)
+    sched  = sampler.linear_schedule(T=1000)
+    config = StadiConfig.from_occupancies([0.0, 0.6], m_base=16, m_warmup=4)
+    pipe   = StadiPipeline(cfg, params, sched, config)
+    result = pipe.generate(x_T, cond)          # result.image, result.trace
+
+``StadiConfig`` captures the cluster (``DeviceProfile``s), the schedule knobs
+(Eq. 4 / Eq. 5 parameters), the planner name and the backend name.
+Planners live in :mod:`repro.core.planners`; backends are registered here:
+
+    "emulated"  exact-numerics logical-worker engine (patch_parallel)
+    "spmd"      real shard_map execution over jax.devices() (core/spmd)
+    "simulate"  trace-only latency modeling (no numerics; needs a CostModel)
+
+``rebalance_every=k`` turns on online rebalancing (emulated backend): every k
+adaptive intervals the measured per-device interval latencies are fed through
+:class:`repro.core.hetero.OnlineProfiler`, and when the EWMA speed estimate
+drifts past ``rebalance_threshold`` the remaining fine steps are re-planned
+with the configured planner. In this single-host emulation "measured" latency
+is synthesized from the cost model at ``measured_speeds`` (the ground-truth
+speeds the run actually experiences, e.g. after an occupancy change).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.configs.diffusion import DiTConfig
+from repro.core import hetero
+from repro.core import patch_parallel as pp
+from repro.core import simulate as sim
+from repro.core.hetero import DeviceProfile
+from repro.core.patch_parallel import ExecutionTrace
+from repro.core.planners import ExecutionPlan, get_planner
+from repro.core.sampler import NoiseSchedule
+from repro.core.simulate import CostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class StadiConfig:
+    """Everything STADI needs to know that is not the model or the input."""
+    cluster: Tuple[DeviceProfile, ...]
+    # schedule knobs (paper §IV, Eq. 4 / Eq. 5)
+    m_base: int = 16
+    m_warmup: int = 4
+    a: float = 0.75
+    b: float = 0.25
+    tiers: Tuple[int, ...] = (1, 2)
+    granularity: int = 1
+    min_patch: Optional[int] = None
+    # strategy selection
+    planner: str = "stadi"
+    backend: str = "emulated"
+    # latency modeling ("simulate" backend; also latency reporting elsewhere)
+    cost_model: Optional[CostModel] = None
+    # online rebalancing (beyond-paper, DESIGN.md §7.1)
+    rebalance_every: int = 0             # adaptive intervals between checks; 0 = off
+    rebalance_threshold: float = 0.2     # max relative speed drift tolerated
+    profiler_alpha: float = 0.5          # EWMA weight for OnlineProfiler
+
+    @classmethod
+    def from_occupancies(cls, occupancies: Sequence[float],
+                         capabilities: Optional[Sequence[float]] = None,
+                         **knobs) -> "StadiConfig":
+        """Paper's experimental grid: homogeneous GPUs + per-device occupancy."""
+        cluster = tuple(hetero.make_cluster(occupancies, capabilities))
+        return cls(cluster=cluster, **knobs)
+
+    @property
+    def speeds(self) -> List[float]:
+        return [d.v for d in self.cluster]
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.cluster)
+
+
+@dataclasses.dataclass
+class ReplanEvent:
+    """One online re-allocation (fine-step granularity provenance)."""
+    fine_step: int
+    drift: float
+    speeds_before: List[float]
+    speeds_after: List[float]
+    plan: ExecutionPlan
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    """What ``StadiPipeline.generate`` returns, for every backend.
+
+    image is None for the trace-only "simulate" backend; latency_s is None
+    unless a cost model was configured.
+    """
+    image: Optional[object]
+    trace: ExecutionTrace
+    plan: ExecutionPlan
+    latency_s: Optional[float] = None
+    replans: List[ReplanEvent] = dataclasses.field(default_factory=list)
+
+
+class Executor(Protocol):
+    """A backend: executes an ExecutionPlan, returns (image | None, trace)."""
+
+    def __call__(self, params, model_cfg: DiTConfig, sched: NoiseSchedule,
+                 x_T, cond, plan: ExecutionPlan, config: StadiConfig,
+                 interval_hook=None) -> Tuple[Optional[object], ExecutionTrace]:
+        ...
+
+
+EXECUTORS: Dict[str, Executor] = {}
+
+
+def register_executor(name: str) -> Callable[[Executor], Executor]:
+    def deco(fn: Executor) -> Executor:
+        EXECUTORS[name] = fn
+        return fn
+    return deco
+
+
+def get_executor(name: str) -> Executor:
+    try:
+        return EXECUTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{sorted(EXECUTORS)}") from None
+
+
+@register_executor("emulated")
+def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                      interval_hook=None):
+    res = pp.run_schedule(params, model_cfg, sched, x_T, cond,
+                          plan.temporal, plan.patches,
+                          interval_hook=interval_hook)
+    return res.image, res.trace
+
+
+@register_executor("spmd")
+def spmd_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                  interval_hook=None):
+    # interval_hook is never passed here: generate() rejects rebalancing on
+    # non-emulated backends (the shard_map program is static)
+    from repro.core import spmd
+    img = spmd.run_spmd(params, model_cfg, sched, x_T, cond,
+                        plan.temporal, plan.patches)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=int(x_T.shape[0]))
+    return img, trace
+
+
+@register_executor("simulate")
+def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                      interval_hook=None):
+    batch = int(x_T.shape[0]) if x_T is not None else 1
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg, batch=batch)
+    return None, trace
+
+
+class StadiPipeline:
+    """One-call STADI inference: plan -> execute -> (optionally) rebalance.
+
+    model_cfg/params/sched describe the denoiser; config describes the
+    cluster and strategy. ``generate`` is the only entry point callers need.
+    """
+
+    def __init__(self, model_cfg: DiTConfig, params, sched: NoiseSchedule,
+                 config: StadiConfig):
+        self.model_cfg = model_cfg
+        self.params = params
+        self.sched = sched
+        self.config = config
+        get_planner(config.planner)      # fail fast on typos
+        get_executor(config.backend)
+
+    @property
+    def p_total(self) -> int:
+        return self.model_cfg.tokens_per_side
+
+    def plan(self, speeds: Optional[Sequence[float]] = None) -> ExecutionPlan:
+        """Run the configured planner (no execution)."""
+        speeds = list(speeds) if speeds is not None else self.config.speeds
+        return get_planner(self.config.planner)(speeds, self.config, self.p_total)
+
+    def generate(self, x_T=None, cond=None, *,
+                 measured_speeds: Optional[Sequence[float]] = None
+                 ) -> PipelineResult:
+        """Plan and execute one generation.
+
+        measured_speeds: ground-truth effective speeds the run experiences
+        (defaults to the configured cluster's). When they drift from the
+        planned speeds and ``rebalance_every`` is on, the profiler detects it
+        and the remaining steps are re-planned mid-run.
+        """
+        config = self.config
+        plan = self.plan()
+        replans: List[ReplanEvent] = []
+        hook = None
+        if config.rebalance_every > 0:
+            if config.backend != "emulated":
+                raise ValueError("rebalance_every requires the 'emulated' "
+                                 f"backend, not {config.backend!r}")
+            hook = self._make_rebalance_hook(plan, measured_speeds, replans)
+        image, trace = get_executor(config.backend)(
+            self.params, self.model_cfg, self.sched, x_T, cond, plan, config,
+            interval_hook=hook)
+        latency = None
+        if config.cost_model is not None:
+            lat_speeds = (list(measured_speeds) if measured_speeds is not None
+                          else config.speeds)
+            latency = sim.simulate_trace(trace, lat_speeds, config.cost_model)
+        elif config.backend == "simulate":
+            raise ValueError("the 'simulate' backend needs config.cost_model")
+        return PipelineResult(image, trace, plan, latency, replans)
+
+    # ------------------------------------------------------------------
+    # online rebalancing (beyond-paper §7.1): OnlineProfiler in the hot path
+    # ------------------------------------------------------------------
+
+    def _make_rebalance_hook(self, plan: ExecutionPlan,
+                             measured_speeds: Optional[Sequence[float]],
+                             replans: List[ReplanEvent]):
+        config = self.config
+        cm = config.cost_model or CostModel(t_fixed=1e-3, t_row=1e-3)
+        true_speeds = (list(measured_speeds) if measured_speeds is not None
+                       else config.speeds)
+        profiler = hetero.OnlineProfiler(plan.speeds, alpha=config.profiler_alpha)
+        state = {"baseline": list(plan.speeds), "since": 0}
+
+        def hook(next_fine_step: int, ev):
+            # feed measured per-device interval latencies into the profiler;
+            # work is nominal seconds at v=1 so observed_v converges on the
+            # device's true effective speed
+            for i, (sub, rows) in enumerate(zip(ev.substeps, ev.patches)):
+                if sub == 0 or rows == 0:
+                    continue
+                work = sub * (cm.t_fixed + cm.t_row * rows)
+                measured = work / max(true_speeds[i], 1e-9)
+                profiler.update(i, work, measured)
+            state["since"] += 1
+            if state["since"] < config.rebalance_every:
+                return None
+            state["since"] = 0
+            drift = profiler.drift(state["baseline"])
+            if drift <= config.rebalance_threshold:
+                return None
+            f_rem = plan.temporal.m_base - next_fine_step
+            tiers = tuple(t for t in config.tiers if f_rem % t == 0) or (1,)
+            knobs = dataclasses.replace(config, m_base=f_rem, m_warmup=0,
+                                        tiers=tiers)
+            new = get_planner(config.planner)(profiler.speeds, knobs,
+                                              self.p_total)
+            if f_rem % new.temporal.lcm:
+                return None              # cannot fit an interval; keep going
+            replans.append(ReplanEvent(next_fine_step, drift,
+                                       list(state["baseline"]),
+                                       list(profiler.speeds), new))
+            state["baseline"] = list(profiler.speeds)
+            return new.temporal, new.patches
+
+        return hook

@@ -64,7 +64,9 @@ def temporal_allocation(speeds: Sequence[float], m_base: int, m_warmup: int,
     # with thresholds (a*vmax, vmax], (b*vmax, a*vmax]. Generalized tiers
     # interpolate geometrically between a and b.
     n_t = len(tiers)
-    if n_t == 2:
+    if n_t == 1:
+        thr = [b]                 # single tier: every non-excluded device
+    elif n_t == 2:
         thr = [a, b]
     else:
         thr = [a * (b / a) ** (k / (n_t - 1)) for k in range(n_t)]
@@ -109,9 +111,14 @@ def spatial_allocation(speeds: Sequence[float], steps: Sequence[int],
     base = [int(math.floor(x)) for x in ideal]
     # every active device gets at least min_patch worth of slots
     min_slots = max(1, min_patch // granularity)
+    n_active = sum(1 for r in rate if r > 0)
+    if slots < n_active * min_slots:
+        raise ValueError(
+            f"p_total={p_total} cannot give {n_active} active devices "
+            f"min_patch={min_patch} at granularity={granularity}")
     for i, r in enumerate(rate):
         if r > 0:
-            base[i] = max(base[i], 0)
+            base[i] = max(base[i], min_slots)
     rem = slots - sum(base)
     order = sorted(range(len(ideal)), key=lambda i: ideal[i] - base[i], reverse=True)
     for i in order:
@@ -120,18 +127,13 @@ def spatial_allocation(speeds: Sequence[float], steps: Sequence[int],
         if rate[i] > 0:
             base[i] += 1
             rem -= 1
-    # enforce minimum on active devices by stealing from the largest
-    for i, r in enumerate(rate):
-        if r > 0 and base[i] < min_slots:
-            need = min_slots - base[i]
-            donors = sorted((j for j in range(len(base)) if rate[j] > 0 and j != i),
-                            key=lambda j: base[j], reverse=True)
-            for j in donors:
-                give = min(need, base[j] - min_slots)
-                if give > 0:
-                    base[j] -= give; base[i] += give; need -= give
-                if need == 0:
-                    break
+    # lifting to min_slots may have overshot: take granules back from the
+    # devices furthest above their ideal share, never dropping below min_slots
+    while rem < 0:
+        j = max((j for j in range(len(base)) if rate[j] > 0 and base[j] > min_slots),
+                key=lambda j: base[j] - ideal[j])
+        base[j] -= 1
+        rem += 1
     assert sum(base) == slots, (base, slots)
     return [b * granularity for b in base]
 

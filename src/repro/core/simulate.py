@@ -23,7 +23,31 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence
 
-from repro.core.patch_parallel import ExecutionTrace
+from repro.core.patch_parallel import ExecutionTrace, IntervalEvent
+
+
+def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1) -> ExecutionTrace:
+    """Schedule trace without running numerics (latency-only replay).
+
+    Mirrors the events :func:`repro.core.patch_parallel.run_schedule` would
+    emit for (plan, patches); the ``"simulate"`` pipeline backend replays it
+    against a :class:`CostModel` instead of executing the denoiser.
+    """
+    R = plan.lcm
+    F = plan.m_base - plan.m_warmup
+    events = [IntervalEvent(m, [1 if not e else 0 for e in plan.excluded],
+                            list(patches), synchronous=True)
+              for m in range(plan.m_warmup)]
+    for it in range(F // R):
+        events.append(IntervalEvent(plan.m_warmup + it * R,
+                                    [R // r if r else 0 for r in plan.ratios],
+                                    list(patches)))
+    H = cfg.latent_size
+    lat_bytes = int(batch * H * H * cfg.channels * 4)
+    kv_bytes = [int(2 * cfg.n_layers * batch * pr * cfg.tokens_per_side
+                    * cfg.d_model * 2) for pr in patches]
+    return ExecutionTrace(events, plan, list(patches), cfg.n_tokens,
+                          lat_bytes, kv_bytes)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,109 @@
+"""Real SPMD execution of a STADI schedule via ``jax.shard_map``.
+
+Moved out of ``launch/stadi_infer.py`` so it is an execution *backend*
+(registered as ``"spmd"`` in :mod:`repro.core.pipeline`) rather than a launch
+script. Every device owns one (padded) row-slab; uneven all-gathers use the
+padded strategy of :mod:`repro.core.comm`; the mixed-rate schedule runs in
+SPMD lockstep with per-device activity masks — a no-op substep costs what it
+costs on the slow device, the TPU analogue of the paper's per-GPU step
+skipping. Set ``STADI_HOST_DEVICES=N`` (before importing jax) for N CPU host
+devices.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.configs.diffusion import DiTConfig
+from repro.core.sampler import NoiseSchedule
+from repro.core.schedule import TemporalPlan
+
+
+def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
+             plan: TemporalPlan, patches: Sequence[int]):
+    """shard_map STADI across jax.devices(). Returns final image [B,H,W,C]."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import sampler as sampler_lib
+    from repro.models.diffusion import dit
+
+    devices = jax.devices()
+    N = len(patches)
+    assert N <= len(devices), (N, len(devices))
+    mesh = Mesh(np.asarray(devices[:N]), ("dev",))
+
+    p = cfg.patch_size
+    wp = cfg.tokens_per_side
+    Pmax = max(patches)
+    Nl_max = Pmax * wp
+    row_starts = np.concatenate([[0], np.cumsum(patches)[:-1]]).astype(np.int32)
+    rows_arr = jnp.asarray(patches, jnp.int32)
+    starts_arr = jnp.asarray(row_starts, jnp.int32)
+    ratios = [r if r else 1 for r in plan.ratios]
+    ratios_arr = jnp.asarray(ratios, jnp.int32)
+    ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
+    M_w, R = plan.m_warmup, plan.lcm
+    F = plan.m_base - M_w
+
+    def body(params, x_full, cond):
+        idx = jax.lax.axis_index("dev")
+        my_rows = rows_arr[idx]
+        my_start = starts_arr[idx]
+        my_ratio = ratios_arr[idx]
+        my_tok = my_rows * wp
+
+        # ---- warmup: synchronous == full-image forward on every device ----
+        pub_k = pub_v = None
+        for m in range(M_w):
+            eps, kvs = dit.forward_patch(params, cfg, x_full, ts[m], cond, 0,
+                                         buffers=None, return_kv=True)
+            x_full = sampler_lib.ddim_step(sched, x_full, eps, ts[m], ts[m + 1])
+            pub_k, pub_v = kvs
+        pad = [(0, 0), (0, 0), (0, Nl_max), (0, 0), (0, 0)]
+        pub_k = jnp.pad(pub_k, pad)               # scratch-padded buffers
+        pub_v = jnp.pad(pub_v, pad)
+
+        # pad x so every device can slice a Pmax slab
+        x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
+        my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p, Pmax * p, axis=1)
+
+        for it in range(F // R):
+            m0 = M_w + it * R
+            fresh_k = fresh_v = None
+            for s in range(R):
+                active = (s % my_ratio) == 0
+                t_from = ts[m0 + s]
+                t_to = ts[jnp.minimum(m0 + s + my_ratio, plan.m_base)]
+                eps, kvs = dit.forward_patch(
+                    params, cfg, my_slab, t_from, cond, my_start,
+                    buffers=(pub_k, pub_v), return_kv=True,
+                    valid_tokens=my_tok)
+                stepped = sampler_lib.ddim_step(sched, my_slab, eps, t_from, t_to)
+                my_slab = jnp.where(active, stepped, my_slab)
+                if s == 0:                        # Alg.1: publish first substep
+                    fresh_k, fresh_v = kvs
+            # ---- interval boundary: uneven all-gathers (padded strategy) ----
+            slabs = jax.lax.all_gather(my_slab, "dev")        # [N,B,Pmax*p,W,C]
+            gk = jax.lax.all_gather(fresh_k, "dev")           # [N,L,B,Nl_max,H,hd]
+            gv = jax.lax.all_gather(fresh_v, "dev")
+            parts = [slabs[i, :, :patches[i] * p] for i in range(N) if patches[i]]
+            x_full = jnp.concatenate(parts, axis=1)
+            x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
+            my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p, Pmax * p, axis=1)
+            for i in range(N):                     # static merge, valid prefixes
+                sz = patches[i] * wp
+                if sz == 0:
+                    continue
+                st = int(row_starts[i]) * wp
+                pub_k = jax.lax.dynamic_update_slice_in_dim(
+                    pub_k, gk[i, :, :, :sz], st, axis=2)
+                pub_v = jax.lax.dynamic_update_slice_in_dim(
+                    pub_v, gv[i, :, :, :sz], st, axis=2)
+        return x_full
+
+    from repro.core.comm import shard_map_compat
+    fn = shard_map_compat(body, mesh, (P(), P(), P()), P())
+    return jax.jit(fn)(params, x_T, cond)

@@ -1,20 +1,27 @@
 """STADI: Spatio-Temporal Adaptive Diffusion Inference (Algorithm 1).
 
-    plan    = temporal_allocation(speeds, M_base, M_warmup, a, b)   # Eq. (4)
-    patches = spatial_allocation(speeds, plan.steps, P_total)       # Eq. (5)
-    result  = run_schedule(..., plan, patches)                      # lines 7-25
+DEPRECATED module-level entry point. The supported API is now
 
-``stadi_infer`` wires the three together; ``ablation variants`` expose
-None / +SA / +TA / +TA+SA (paper Table III).
+    from repro.core.pipeline import StadiConfig, StadiPipeline
+    pipe = StadiPipeline(cfg, params, sched, StadiConfig(cluster, ...))
+    result = pipe.generate(x_T, cond)
+
+``stadi_infer`` remains as a thin shim mapping the old (temporal, spatial)
+ablation flags onto the planner registry (see DESIGN.md §8 migration table):
+(False, False) -> "uniform", (False, True) -> "spatial",
+(True, False) -> "temporal", (True, True) -> "stadi".
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+import warnings
+from typing import Sequence
 
 from repro.configs.diffusion import DiTConfig
-from repro.core import schedule as sched_lib
-from repro.core.patch_parallel import RunResult, run_schedule, uniform_plan
+from repro.core.patch_parallel import RunResult
 from repro.core.sampler import NoiseSchedule
+
+_PLANNER_BY_FLAGS = {(False, False): "uniform", (False, True): "spatial",
+                     (True, False): "temporal", (True, True): "stadi"}
 
 
 def stadi_infer(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
@@ -23,27 +30,20 @@ def stadi_infer(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                 granularity: int = 1,
                 temporal: bool = True, spatial: bool = True,
                 tiers: Sequence[int] = (1, 2)) -> RunResult:
-    """Full STADI (temporal=spatial=True); ablations by flipping the flags:
-       temporal=False, spatial=False  -> patch parallelism ("None")
-       temporal=False, spatial=True   -> +SA
-       temporal=True,  spatial=False  -> +TA
-       temporal=True,  spatial=True   -> +TA+SA (STADI)
-    """
-    N = len(speeds)
-    P_total = cfg.tokens_per_side
-    if temporal:
-        plan = sched_lib.temporal_allocation(speeds, m_base, m_warmup, a, b, tiers)
-    else:
-        plan = uniform_plan(N, m_base, m_warmup)
-    if spatial:
-        patches = sched_lib.spatial_allocation(speeds, plan.steps, P_total, granularity)
-    else:
-        base, rem = divmod(P_total, sum(1 for e in plan.excluded if not e))
-        patches, j = [], 0
-        for i in range(N):
-            if plan.excluded[i]:
-                patches.append(0)
-            else:
-                patches.append(base + (1 if j < rem else 0))
-                j += 1
-    return run_schedule(params, cfg, sched, x_T, cond, plan, patches)
+    """Deprecated: use StadiPipeline. Full STADI (temporal=spatial=True);
+    ablations by flipping the flags (paper Table III)."""
+    warnings.warn("stadi_infer() is deprecated; use "
+                  "repro.core.pipeline.StadiPipeline.generate()",
+                  DeprecationWarning, stacklevel=2)
+    from repro.core import hetero
+    from repro.core.pipeline import StadiConfig, StadiPipeline
+
+    cluster = tuple(hetero.DeviceProfile(f"dev{i}", c=v)
+                    for i, v in enumerate(speeds))
+    config = StadiConfig(cluster=cluster, m_base=m_base, m_warmup=m_warmup,
+                         a=a, b=b, tiers=tuple(tiers),
+                         granularity=granularity,
+                         planner=_PLANNER_BY_FLAGS[(temporal, spatial)],
+                         backend="emulated")
+    res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+    return RunResult(res.image, res.trace)

@@ -6,15 +6,15 @@ if os.environ.get("STADI_HOST_DEVICES"):
 
 """STADI inference driver — the paper's system (launchable).
 
-Two execution modes:
+Thin CLI over :class:`repro.core.pipeline.StadiPipeline`; strategy selection
+is ``--planner`` (uniform / spatial / temporal / stadi / makespan) and
+``--backend`` (emulated / spmd / simulate). ``--spmd`` is kept as an alias
+for ``--backend spmd``:
+
   emulated (default): exact-numerics logical-worker engine + calibrated
       latency simulator (core/patch_parallel.py + core/simulate.py).
-  --spmd: REAL distributed execution via shard_map over the available
-      devices (set STADI_HOST_DEVICES=8 for CPU host devices). Every device
-      owns one (padded) row-slab; uneven all-gathers use core/comm.py; the
-      mixed-rate schedule runs in SPMD lockstep with per-device activity
-      masks (a no-op substep costs what it costs on the slow device — the
-      TPU analogue of the paper's per-GPU step skipping).
+  spmd: REAL distributed execution via shard_map over the available devices
+      (set STADI_HOST_DEVICES=8 for CPU host devices); see core/spmd.py.
 
 Usage:
   STADI_HOST_DEVICES=4 PYTHONPATH=src python -m repro.launch.stadi_infer \
@@ -22,100 +22,15 @@ Usage:
 """
 
 import argparse
+import dataclasses
 import json
 import time
 
-import numpy as np
-
 
 def run_spmd(params, cfg, sched, x_T, cond, plan, patches):
-    """shard_map STADI across jax.devices(). Returns final image [B,H,W,C]."""
-    import jax
-    import jax.numpy as jnp
-    from jax.sharding import Mesh, PartitionSpec as P
-
-    from repro.core import sampler as sampler_lib
-    from repro.models.diffusion import dit
-
-    devices = jax.devices()
-    N = len(patches)
-    assert N <= len(devices), (N, len(devices))
-    mesh = Mesh(np.asarray(devices[:N]), ("dev",))
-
-    p = cfg.patch_size
-    wp = cfg.tokens_per_side
-    Pmax = max(patches)
-    Nl_max = Pmax * wp
-    n_tok = cfg.n_tokens
-    row_starts = np.concatenate([[0], np.cumsum(patches)[:-1]]).astype(np.int32)
-    rows_arr = jnp.asarray(patches, jnp.int32)
-    starts_arr = jnp.asarray(row_starts, jnp.int32)
-    ratios = [r if r else 1 for r in plan.ratios]
-    ratios_arr = jnp.asarray(ratios, jnp.int32)
-    ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
-    M_w, R = plan.m_warmup, plan.lcm
-    F = plan.m_base - M_w
-
-    def body(params, x_full, cond):
-        idx = jax.lax.axis_index("dev")
-        my_rows = rows_arr[idx]
-        my_start = starts_arr[idx]
-        my_ratio = ratios_arr[idx]
-        my_tok = my_rows * wp
-
-        # ---- warmup: synchronous == full-image forward on every device ----
-        pub_k = pub_v = None
-        for m in range(M_w):
-            eps, kvs = dit.forward_patch(params, cfg, x_full, ts[m], cond, 0,
-                                         buffers=None, return_kv=True)
-            x_full = sampler_lib.ddim_step(sched, x_full, eps, ts[m], ts[m + 1])
-            pub_k, pub_v = kvs
-        pad = [(0, 0), (0, 0), (0, Nl_max), (0, 0), (0, 0)]
-        pub_k = jnp.pad(pub_k, pad)               # scratch-padded buffers
-        pub_v = jnp.pad(pub_v, pad)
-
-        # pad x so every device can slice a Pmax slab
-        x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
-        my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p, Pmax * p, axis=1)
-
-        for it in range(F // R):
-            m0 = M_w + it * R
-            fresh_k = fresh_v = None
-            for s in range(R):
-                active = (s % my_ratio) == 0
-                t_from = ts[m0 + s]
-                t_to = ts[jnp.minimum(m0 + s + my_ratio, plan.m_base)]
-                eps, kvs = dit.forward_patch(
-                    params, cfg, my_slab, t_from, cond, my_start,
-                    buffers=(pub_k, pub_v), return_kv=True,
-                    valid_tokens=my_tok)
-                stepped = sampler_lib.ddim_step(sched, my_slab, eps, t_from, t_to)
-                my_slab = jnp.where(active, stepped, my_slab)
-                if s == 0:                        # Alg.1: publish first substep
-                    fresh_k, fresh_v = kvs
-            # ---- interval boundary: uneven all-gathers (padded strategy) ----
-            slabs = jax.lax.all_gather(my_slab, "dev")        # [N,B,Pmax*p,W,C]
-            gk = jax.lax.all_gather(fresh_k, "dev")           # [N,L,B,Nl_max,H,hd]
-            gv = jax.lax.all_gather(fresh_v, "dev")
-            parts = [slabs[i, :, :patches[i] * p] for i in range(N) if patches[i]]
-            x_full = jnp.concatenate(parts, axis=1)
-            x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
-            my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p, Pmax * p, axis=1)
-            for i in range(N):                     # static merge, valid prefixes
-                sz = patches[i] * wp
-                if sz == 0:
-                    continue
-                st = int(row_starts[i]) * wp
-                pub_k = jax.lax.dynamic_update_slice_in_dim(
-                    pub_k, gk[i, :, :, :sz], st, axis=2)
-                pub_v = jax.lax.dynamic_update_slice_in_dim(
-                    pub_v, gv[i, :, :, :sz], st, axis=2)
-        return x_full
-
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(), P(), P()), out_specs=P(),
-                       check_vma=False)
-    return jax.jit(fn)(params, x_T, cond)
+    """Deprecated location — moved to repro.core.spmd.run_spmd."""
+    from repro.core.spmd import run_spmd as _run_spmd
+    return _run_spmd(params, cfg, sched, x_T, cond, plan, patches)
 
 
 def main():
@@ -129,25 +44,31 @@ def main():
     ap.add_argument("--arch", default="tiny-dit")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=1)
-    ap.add_argument("--spmd", action="store_true")
+    ap.add_argument("--planner", default="stadi",
+                    choices=["uniform", "spatial", "temporal", "stadi",
+                             "makespan"])
+    ap.add_argument("--backend", default="emulated",
+                    choices=["emulated", "spmd", "simulate"])
+    ap.add_argument("--spmd", action="store_true",
+                    help="alias for --backend spmd")
+    ap.add_argument("--rebalance-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check-vs-emulation", action="store_true")
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.configs import get_config
-    from repro.core import hetero, sampler as sampler_lib, schedule as sched_lib
-    from repro.core import patch_parallel as pp
-    from repro.core import stadi as stadi_lib
+    from repro.core import sampler as sampler_lib
+    from repro.core.pipeline import StadiConfig, StadiPipeline
     from repro.models.diffusion import dit
 
     occ = [float(x) for x in args.occupancies.split(",")]
     caps = ([float(x) for x in args.capabilities.split(",")]
             if args.capabilities else None)
-    cluster = hetero.make_cluster(occ, caps)
-    speeds = hetero.speeds(cluster)
+    backend = "spmd" if args.spmd else args.backend
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -159,31 +80,44 @@ def main():
                              cfg.channels))
     cond = jnp.zeros((args.batch,), jnp.int32)
 
-    plan = sched_lib.temporal_allocation(speeds, args.m_base, args.m_warmup,
-                                         args.a, args.b)
-    patches = sched_lib.spatial_allocation(speeds, plan.steps,
-                                           cfg.tokens_per_side)
-    print(f"speeds={speeds} steps={plan.steps} ratios={plan.ratios} "
-          f"patches={patches}")
+    knobs = {}
+    if backend == "simulate":
+        # nominal per-step cost model; calibrate for real numbers with
+        # benchmarks/common.calibrate_cost_model
+        from repro.core.simulate import CostModel
+        knobs["cost_model"] = CostModel(t_fixed=1e-3, t_row=5e-4)
+    if args.planner == "makespan":
+        knobs["tiers"] = (1, 2, 4)        # generalized ratios (DESIGN.md §7)
+    config = StadiConfig.from_occupancies(
+        occ, caps, m_base=args.m_base, m_warmup=args.m_warmup,
+        a=args.a, b=args.b, planner=args.planner, backend=backend,
+        rebalance_every=args.rebalance_every, **knobs)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    plan = pipe.plan()
+    print(f"speeds={config.speeds} steps={plan.temporal.steps} "
+          f"ratios={plan.temporal.ratios} patches={plan.patches}")
 
-    if args.spmd:
-        t0 = time.time()
-        img = run_spmd(params, cfg, sched, x_T, cond, plan, patches)
-        img = np.asarray(img)
-        print(f"spmd run ({len(jax.devices())} devices): {time.time()-t0:.2f}s "
-              f"image {img.shape} finite={np.all(np.isfinite(img))}")
-        if args.check_vs_emulation:
-            res = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches)
-            ref = np.asarray(res.image)
-            err = float(np.linalg.norm(img - ref) / np.linalg.norm(ref))
-            print(f"rel_err_vs_emulation={err:.3e}")
-            assert err < 1e-3, err
-    else:
-        res = stadi_lib.stadi_infer(params, cfg, sched, x_T, cond, speeds,
-                                    args.m_base, args.m_warmup, args.a, args.b)
-        img = np.asarray(res.image)
-        print(f"emulated run: image {img.shape} finite={np.all(np.isfinite(img))}")
-    print(json.dumps({"patches": patches, "steps": plan.steps,
+    t0 = time.time()
+    res = pipe.generate(x_T, cond)
+    if res.image is None:                  # trace-only backend
+        print(f"{backend} run: modeled latency {res.latency_s:.3f}s")
+        print(json.dumps({"patches": plan.patches, "steps": plan.temporal.steps,
+                          "planner": args.planner, "backend": backend,
+                          "latency_s": res.latency_s}))
+        return
+    img = np.asarray(res.image)
+    print(f"{backend} run ({len(jax.devices())} devices): "
+          f"{time.time()-t0:.2f}s image {img.shape} "
+          f"finite={np.all(np.isfinite(img))}")
+    if backend == "spmd" and args.check_vs_emulation:
+        emu = StadiPipeline(cfg, params, sched,
+                            dataclasses.replace(config, backend="emulated"))
+        ref = np.asarray(emu.generate(x_T, cond).image)
+        err = float(np.linalg.norm(img - ref) / np.linalg.norm(ref))
+        print(f"rel_err_vs_emulation={err:.3e}")
+        assert err < 1e-3, err
+    print(json.dumps({"patches": plan.patches, "steps": plan.temporal.steps,
+                      "planner": args.planner, "backend": backend,
                       "finite": bool(np.all(np.isfinite(img)))}))
 
 

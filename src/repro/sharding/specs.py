@@ -133,7 +133,9 @@ def param_specs(params: Any, mesh: Mesh, cfg=None):
 # ----------------------------------------------------------------------
 
 def batch_axes(mesh: Mesh):
-    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+    # bare string (not a 1-tuple) so PartitionSpec equality is stable across
+    # jax versions: 0.4.x does not normalize P(("data",)) to P("data")
+    return ("pod", "data") if "pod" in mesh.shape else "data"
 
 
 def batch_specs(batch: Any, mesh: Mesh, *, seq_axis: Optional[str] = None):

@@ -1,0 +1,248 @@
+"""Unified StadiPipeline API: planner/executor registries, bitwise parity
+with the legacy entry points, online rebalancing, and emulated-vs-SPMD
+parity (subprocess). Also deterministic allocator tests (no hypothesis)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core import schedule as sl
+from repro.core import stadi as stadi_lib
+from repro.core.pipeline import (EXECUTORS, StadiConfig, StadiPipeline,
+                                 get_executor)
+from repro.core.planners import PLANNERS, get_planner
+from repro.models.diffusion import dit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-dit").reduced()      # 16x16 latent, 8 token rows
+    params = dit.init_params(jax.random.PRNGKey(0), cfg)
+    sched = sampler_lib.linear_schedule(T=100)
+    x_T = jax.random.normal(jax.random.PRNGKey(1),
+                            (2, cfg.latent_size, cfg.latent_size, cfg.channels))
+    cond = jnp.array([1, 2])
+    return cfg, params, sched, x_T, cond
+
+
+def _config(speeds, **kw):
+    from repro.core.hetero import DeviceProfile
+    cluster = tuple(DeviceProfile(f"dev{i}", c=v) for i, v in enumerate(speeds))
+    return StadiConfig(cluster=cluster, **kw)
+
+
+# ----------------------------------------------------------------------
+# registries
+# ----------------------------------------------------------------------
+
+def test_registries_complete():
+    assert {"uniform", "spatial", "temporal", "stadi", "makespan"} <= set(PLANNERS)
+    assert {"emulated", "spmd", "simulate"} <= set(EXECUTORS)
+    with pytest.raises(KeyError):
+        get_planner("nope")
+    with pytest.raises(KeyError):
+        get_executor("nope")
+
+
+def test_config_from_occupancies():
+    config = StadiConfig.from_occupancies([0.0, 0.6], m_base=16, m_warmup=4)
+    assert config.speeds == [1.0, pytest.approx(0.4)]
+    assert config.n_devices == 2
+
+
+def test_all_planners_produce_valid_plans(setup):
+    cfg, params, sched, *_ = setup
+    speeds = [1.0, 0.5, 0.3]
+    for name in ("uniform", "spatial", "temporal", "stadi", "makespan"):
+        config = _config(speeds, m_base=16, m_warmup=4, planner=name)
+        plan = StadiPipeline(cfg, params, sched, config).plan()
+        assert plan.planner == name
+        assert sum(plan.patches) == cfg.tokens_per_side
+        assert len(plan.patches) == len(speeds)
+        if name == "makespan":
+            assert plan.modeled_interval_cost is not None
+
+
+# ----------------------------------------------------------------------
+# ablation matrix: bitwise parity with the legacy entry points
+# ----------------------------------------------------------------------
+
+def test_uniform_planner_bitwise_matches_run_distrifusion(setup):
+    cfg, params, sched, x_T, cond = setup
+    ref = pp.run_distrifusion(params, cfg, sched, x_T, cond, n_workers=2,
+                              m_base=8, m_warmup=2)
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, planner="uniform")
+    res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+    np.testing.assert_array_equal(np.asarray(res.image), np.asarray(ref.image))
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+@pytest.mark.parametrize("flags,planner", [
+    ((False, False), "uniform"), ((False, True), "spatial"),
+    ((True, False), "temporal"), ((True, True), "stadi")])
+def test_ablation_matrix_bitwise_matches_stadi_infer(setup, flags, planner):
+    cfg, params, sched, x_T, cond = setup
+    speeds = [1.0, 0.4]
+    ta, sa = flags
+    ref = stadi_lib.stadi_infer(params, cfg, sched, x_T, cond, speeds,
+                                m_base=8, m_warmup=2, temporal=ta, spatial=sa)
+    config = _config(speeds, m_base=8, m_warmup=2, planner=planner)
+    res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+    np.testing.assert_array_equal(np.asarray(res.image), np.asarray(ref.image))
+    assert res.plan.planner == planner
+    assert res.plan.patches == ref.trace.patches
+
+
+def test_makespan_backend_reachable_and_finite(setup):
+    cfg, params, sched, x_T, cond = setup
+    config = _config([1.0, 0.5], m_base=8, m_warmup=4, planner="makespan")
+    res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+    assert np.all(np.isfinite(np.asarray(res.image)))
+    assert res.plan.modeled_interval_cost is not None
+
+
+# ----------------------------------------------------------------------
+# simulate backend
+# ----------------------------------------------------------------------
+
+def test_simulate_backend_needs_cost_model(setup):
+    cfg, params, sched, *_ = setup
+    config = _config([1.0, 0.5], m_base=16, m_warmup=4, backend="simulate")
+    with pytest.raises(ValueError):
+        StadiPipeline(cfg, params, sched, config).generate()
+
+
+def test_simulate_backend_matches_direct_trace_replay(setup):
+    from repro.core import simulate as sim
+    cfg, params, sched, *_ = setup
+    cm = sim.CostModel(t_fixed=1e-3, t_row=5e-4)
+    speeds = [1.0, 0.5]
+    config = _config(speeds, m_base=16, m_warmup=4, backend="simulate",
+                     cost_model=cm)
+    res = StadiPipeline(cfg, params, sched, config).generate()
+    assert res.image is None
+    plan = sl.temporal_allocation(speeds, 16, 4)
+    patches = sl.spatial_allocation(speeds, plan.steps, cfg.tokens_per_side)
+    ref = sim.simulate_trace(sim.build_trace(plan, patches, cfg), speeds, cm)
+    assert res.latency_s == pytest.approx(ref)
+
+
+# ----------------------------------------------------------------------
+# online rebalancing (OnlineProfiler in the hot path)
+# ----------------------------------------------------------------------
+
+def test_rebalance_replans_on_drift(setup):
+    cfg, params, sched, x_T, cond = setup
+    config = _config([1.0, 1.0], m_base=16, m_warmup=4, planner="stadi",
+                     rebalance_every=1, rebalance_threshold=0.2)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    # ground truth drifted: device 1 is really only half as fast as planned
+    res = pipe.generate(x_T, cond, measured_speeds=[1.0, 0.5])
+    assert len(res.replans) >= 1
+    ev = res.replans[0]
+    assert ev.drift > config.rebalance_threshold
+    assert ev.speeds_after[1] < ev.speeds_before[1]
+    # the new allocation shifts rows toward the genuinely faster device
+    assert ev.plan.patches[0] > ev.plan.patches[1]
+    assert np.all(np.isfinite(np.asarray(res.image)))
+    # post-replan intervals in the trace carry the new patch split, while
+    # trace-level provenance stays the initial plan/allocation
+    assert res.trace.events[-1].patches == res.replans[-1].plan.patches
+    assert res.trace.plan.m_base == 16 and res.trace.plan.m_warmup == 4
+    assert res.trace.patches == res.plan.patches
+
+
+def test_rebalance_noop_without_drift(setup):
+    cfg, params, sched, x_T, cond = setup
+    config = _config([1.0, 0.5], m_base=16, m_warmup=4,
+                     rebalance_every=1, rebalance_threshold=0.2)
+    res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+    assert res.replans == []
+
+
+def test_rebalance_requires_emulated_backend(setup):
+    cfg, params, sched, x_T, cond = setup
+    config = _config([1.0, 0.5], m_base=16, m_warmup=4, backend="simulate",
+                     rebalance_every=1)
+    with pytest.raises(ValueError):
+        StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+
+
+# ----------------------------------------------------------------------
+# deterministic allocator properties (run even without hypothesis)
+# ----------------------------------------------------------------------
+
+def test_spatial_allocation_min_patch_deterministic():
+    # adversarial: near-zero-rate active device must still get min_patch
+    patches = sl.spatial_allocation([1.0, 0.01], [100, 100], 32)
+    assert patches == [31, 1]
+    patches = sl.spatial_allocation([1.0, 0.01], [100, 100], 32, min_patch=4)
+    assert patches == [28, 4]
+    # granularity interacts with min_patch
+    patches = sl.spatial_allocation([1.0, 0.01], [100, 100], 32,
+                                    granularity=2, min_patch=4)
+    assert patches[1] >= 4 and patches[0] + patches[1] == 32
+    assert all(p % 2 == 0 for p in patches)
+
+
+def test_spatial_allocation_min_patch_infeasible_raises():
+    with pytest.raises(ValueError):
+        sl.spatial_allocation([1.0, 0.9, 0.8], [10, 10, 10], 8, min_patch=4)
+
+
+def test_single_tier_temporal_allocation():
+    plan = sl.temporal_allocation([1.0, 0.5], 16, 4, tiers=(1,))
+    assert plan.ratios == [1, 1]
+    assert plan.steps == [16, 16]
+
+
+# ----------------------------------------------------------------------
+# emulated vs SPMD parity through the pipeline (subprocess, real devices)
+# ----------------------------------------------------------------------
+
+def test_spmd_backend_matches_emulated():
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core import sampler as sampler_lib
+        from repro.core.pipeline import StadiConfig, StadiPipeline
+        from repro.models.diffusion import dit
+
+        cfg = get_config('tiny-dit').reduced()
+        params = dit.init_params(jax.random.PRNGKey(0), cfg)
+        sched = sampler_lib.linear_schedule(T=1000)
+        x_T = jax.random.normal(jax.random.PRNGKey(1),
+                                (1, cfg.latent_size, cfg.latent_size,
+                                 cfg.channels))
+        cond = jnp.zeros((1,), jnp.int32)
+        config = StadiConfig.from_occupancies([0.0, 0.5], m_base=8,
+                                              m_warmup=2, backend='spmd')
+        spmd = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+        emu = StadiPipeline(cfg, params, sched, dataclasses.replace(
+            config, backend='emulated')).generate(x_T, cond)
+        a, b = np.asarray(spmd.image), np.asarray(emu.image)
+        err = float(np.linalg.norm(a - b) / np.linalg.norm(b))
+        assert err < 1e-3, err
+        print('PIPE_SPMD_OK', err)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=520, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "PIPE_SPMD_OK" in r.stdout

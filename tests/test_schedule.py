@@ -1,10 +1,14 @@
-"""Property-based tests (hypothesis) for STADI's allocators (Eq. 4 / Eq. 5)."""
-import math
+"""Property-based tests (hypothesis) for STADI's allocators (Eq. 4 / Eq. 5).
 
+Deterministic allocator tests that need no hypothesis live in
+tests/test_pipeline.py, so this module may be skipped wholesale when the
+``test`` extra is not installed."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import schedule as sl
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import schedule as sl  # noqa: E402
 
 speeds_st = st.lists(st.floats(0.05, 1.0), min_size=1, max_size=8)
 
@@ -40,6 +44,12 @@ def test_temporal_allocation_properties(speeds):
        gran=st.sampled_from([1, 2, 4]))
 def test_spatial_allocation_properties(speeds, p_total, gran):
     plan = sl.temporal_allocation(speeds, 100, 4)
+    n_active = sum(1 for e in plan.excluded if not e)
+    if p_total // gran < n_active:
+        # not enough granules to give every active device its min_patch
+        with pytest.raises(ValueError):
+            sl.spatial_allocation(speeds, plan.steps, p_total, gran)
+        return
     patches = sl.spatial_allocation(speeds, plan.steps, p_total, gran)
     # exact coverage
     assert sum(patches) == p_total
@@ -55,6 +65,44 @@ def test_spatial_allocation_properties(speeds, p_total, gran):
     for p, r in zip(patches, rate):
         ideal = r / tot * p_total
         assert abs(p - ideal) <= 2 * gran + 1e-6
+
+
+@settings(max_examples=200, deadline=None)
+@given(speeds=st.lists(st.floats(0.05, 1.0), min_size=1, max_size=8),
+       p_total=st.sampled_from([16, 32, 64]),
+       gran=st.sampled_from([1, 2]),
+       min_mult=st.sampled_from([1, 2, 3]))
+def test_spatial_allocation_min_patch_enforced(speeds, p_total, gran, min_mult):
+    """Adversarial speed vectors: every active device gets >= min_patch rows
+    while sum invariance and granularity are preserved."""
+    plan = sl.temporal_allocation(speeds, 100, 4)
+    min_patch = gran * min_mult
+    n_active = sum(1 for e in plan.excluded if not e)
+    slots = p_total // gran
+    if slots < n_active * max(1, min_patch // gran):
+        with pytest.raises(ValueError):
+            sl.spatial_allocation(speeds, plan.steps, p_total, gran, min_patch)
+        return
+    patches = sl.spatial_allocation(speeds, plan.steps, p_total, gran, min_patch)
+    assert sum(patches) == p_total                       # sum invariance
+    for p, ex in zip(patches, plan.excluded):
+        if ex:
+            assert p == 0
+        else:
+            assert p >= min_patch                        # min enforced
+            assert p % gran == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(speeds=st.lists(st.floats(0.3, 1.0), min_size=2, max_size=6),
+       p_total=st.sampled_from([32, 64]))
+def test_spatial_allocation_monotone_in_speed(speeds, p_total):
+    """With equal step counts, a faster device never gets fewer rows."""
+    steps = [100] * len(speeds)
+    patches = sl.spatial_allocation(speeds, steps, p_total)
+    pairs = sorted(zip(speeds, patches))
+    for (v1, p1), (v2, p2) in zip(pairs, pairs[1:]):
+        assert p1 <= p2 + 1, (pairs,)   # one-granule rounding slack
 
 
 @settings(max_examples=100, deadline=None)
