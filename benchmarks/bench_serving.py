@@ -1,0 +1,166 @@
+"""Continuous batching vs sequential diffusion serving (DESIGN.md §9).
+
+Drains N concurrent tiny-dit requests through the
+:class:`~repro.serving.diffusion_engine.DiffusionServingEngine` on an
+emulated 2-tier heterogeneous cluster (occupancies [0, 0.55] -> temporal
+ratios {1, 2}) and compares against the sequential baseline of one
+``StadiPipeline.generate`` call per request:
+
+  * wall-clock throughput (img/s) — continuous batching must win (one
+    vmapped dispatch covers every in-flight request);
+  * per-request results must be **bitwise identical** to the sequential
+    path (asserted, request by request);
+  * modeled cluster latency (calibrated cost model) + an offered-load sweep
+    with per-request latency percentiles and SLO hit-rates.
+
+Structured results go to ``results/serving.json`` (uploaded as a CI
+artifact by the bench-smoke job); summary rows go to the shared CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core import sampler as sampler_lib
+from repro.core.pipeline import StadiConfig, StadiPipeline
+from repro.models.diffusion import dit
+from repro.serving import DiffusionServingEngine
+
+OCC = [0.0, 0.55]        # 2-tier cluster: speeds [1.0, 0.45] -> ratios (1, 2)
+N_REQUESTS = 16
+SLOTS = 8
+
+
+def _requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = [jax.random.normal(jax.random.PRNGKey(seed + 1 + i),
+                            (1, cfg.latent_size, cfg.latent_size,
+                             cfg.channels)) for i in range(n)]
+    conds = [jnp.asarray([int(c)], jnp.int32)
+             for c in rng.integers(0, cfg.n_classes, n)]
+    return xs, conds
+
+
+def _drain(pipe, xs, conds, slo_s=None):
+    engine = DiffusionServingEngine(pipe, slots=SLOTS)
+    t0 = time.perf_counter()
+    reqs = [engine.submit(x, c, slo_s=slo_s) for x, c in zip(xs, conds)]
+    engine.run_to_completion()
+    return engine, reqs, time.perf_counter() - t0
+
+
+def run(emit=True):
+    smoke = common.smoke()
+    m_base, m_warmup = (8, 2) if smoke else (16, 4)
+    cfg = get_config("tiny-dit").reduced()
+    params = dit.init_params(jax.random.PRNGKey(0), cfg)
+    sched = sampler_lib.linear_schedule(T=1000)
+    cm = common.calibrate_cost_model(cfg, params)
+    config = StadiConfig.from_occupancies(OCC, m_base=m_base,
+                                          m_warmup=m_warmup, cost_model=cm)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    plan = pipe.plan()
+    tiers = sorted({r for r in plan.temporal.ratios if r})
+    assert tiers == [1, 2], f"expected a 2-tier cluster, got ratios {tiers}"
+
+    xs, conds = _requests(cfg, N_REQUESTS)
+
+    # warm both jit caches so the timed region measures steady-state serving
+    pipe.generate(xs[0], conds[0])
+    _drain(pipe, xs[:SLOTS], conds[:SLOTS])
+
+    # -- sequential baseline: one generate() per request ------------------
+    t0 = time.perf_counter()
+    seq = [pipe.generate(x, c) for x, c in zip(xs, conds)]
+    jax.block_until_ready(seq[-1].image)
+    wall_seq = time.perf_counter() - t0
+
+    # -- continuous batching ----------------------------------------------
+    engine, reqs, wall_cb = _drain(pipe, xs, conds)
+    for r, s in zip(reqs, seq):
+        assert bool(jnp.all(r.image == s.image)), \
+            f"request {r.uid} diverged from single-request generate()"
+
+    thr_seq, thr_cb = N_REQUESTS / wall_seq, N_REQUESTS / wall_cb
+    modeled_seq_s = sum(s.latency_s for s in seq)
+    stats = engine.stats()
+    comparison = {
+        "n_requests": N_REQUESTS,
+        "slots": SLOTS,
+        "wall_seq_s": wall_seq,
+        "wall_cb_s": wall_cb,
+        "throughput_seq_rps": thr_seq,
+        "throughput_cb_rps": thr_cb,
+        "wall_speedup": thr_cb / thr_seq,
+        "modeled_seq_makespan_s": modeled_seq_s,
+        "modeled_cb_makespan_s": stats["modeled_makespan_s"],
+        "modeled_speedup": modeled_seq_s / stats["modeled_makespan_s"],
+        "bitwise_identical": True,               # asserted above
+    }
+    assert thr_cb > thr_seq, (
+        f"continuous batching ({thr_cb:.2f} img/s) must beat sequential "
+        f"({thr_seq:.2f} img/s)")
+
+    # -- offered-load sweep: latency/SLO vs concurrency -------------------
+    slo_s = 2.0 * modeled_seq_s / N_REQUESTS     # 2x a lone request's latency
+    sweep = []
+    for load in ([4, 16] if smoke else [4, 8, 16]):
+        sxs, sconds = _requests(cfg, load, seed=100 + load)
+        eng, _, wall = _drain(pipe, sxs, sconds, slo_s=slo_s)
+        st = eng.stats()
+        sweep.append({
+            "offered_load": load,
+            "wall_s": wall,
+            "throughput_wall_rps": load / wall,
+            "throughput_modeled_rps": st["throughput_modeled_rps"],
+            "latency_mean_s": st["latency_mean_s"],
+            "latency_p95_s": st["latency_p95_s"],
+            "slo_s": slo_s,
+            "slo_met_frac": st["slo_met_frac"],
+        })
+
+    payload = {
+        "arch": cfg.arch_id,
+        "occupancies": OCC,
+        "m_base": m_base,
+        "m_warmup": m_warmup,
+        "plan_ratios": list(plan.temporal.ratios),
+        "plan_patches": list(plan.patches),
+        "cost_model": {"t_fixed": cm.t_fixed, "t_row": cm.t_row},
+        "smoke": smoke,
+        "comparison": comparison,
+        "offered_load_sweep": sweep,
+    }
+    common.write_json("serving.json", payload)
+    if emit:
+        common.emit("serving/seq_wall", wall_seq / N_REQUESTS * 1e6,
+                    f"{thr_seq:.2f} img/s")
+        common.emit("serving/cb_wall", wall_cb / N_REQUESTS * 1e6,
+                    f"{thr_cb:.2f} img/s speedup={thr_cb/thr_seq:.2f}x")
+        common.emit("serving/cb_modeled",
+                    stats["modeled_makespan_s"] / N_REQUESTS * 1e6,
+                    f"modeled speedup={comparison['modeled_speedup']:.2f}x")
+        for row in sweep:
+            common.emit(f"serving/load{row['offered_load']}",
+                        row["latency_mean_s"] * 1e6,
+                        f"p95={row['latency_p95_s']*1e3:.1f}ms "
+                        f"slo_met={row['slo_met_frac']}")
+    return payload
+
+
+def main():
+    out = run()
+    c = out["comparison"]
+    print(f"# continuous batching: {c['throughput_cb_rps']:.2f} img/s wall "
+          f"vs sequential {c['throughput_seq_rps']:.2f} img/s "
+          f"({c['wall_speedup']:.2f}x), modeled {c['modeled_speedup']:.2f}x, "
+          f"bitwise identical per request")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,24 @@ CKPT = os.path.join(RESULTS, "tiny_dit_ckpt")
 _rows: List[str] = []
 
 
+def smoke() -> bool:
+    """Fast smoke mode (CI bench-smoke job): ``benchmarks.run --smoke`` sets
+    STADI_BENCH_SMOKE=1; benches shrink step counts / request counts."""
+    return os.environ.get("STADI_BENCH_SMOKE", "") not in ("", "0")
+
+
+def write_json(name: str, payload: Dict) -> str:
+    """Write a benchmark's structured results to results/<name> (artifact)."""
+    import json
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+    return path
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     _rows.append(row)

@@ -1,11 +1,13 @@
 """Benchmark registry — one module per paper table/figure (DESIGN.md §8).
 
-  PYTHONPATH=src python -m benchmarks.run [names...]
+  PYTHONPATH=src python -m benchmarks.run [--smoke] [names...]
 
 Prints ``name,us_per_call,derived`` CSV rows (also written to
-results/bench.csv)."""
+results/bench.csv). ``--smoke`` exports STADI_BENCH_SMOKE=1 so benches run
+shrunk workloads (the CI bench-smoke job)."""
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -21,11 +23,16 @@ REGISTRY = [
     ("redundancy", "benchmarks.bench_redundancy", "paper Thm. 1/2"),
     ("beyond", "benchmarks.bench_beyond", "beyond-paper: tiers + reprofiling"),
     ("roofline", "benchmarks.bench_roofline", "deliverable g"),
+    ("serving", "benchmarks.bench_serving", "continuous batching, DESIGN §9"),
 ]
 
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    argv = sys.argv[1:]
+    if "--smoke" in argv:
+        argv = [a for a in argv if a != "--smoke"]
+        os.environ["STADI_BENCH_SMOKE"] = "1"
+    want = set(argv)
     failures = []
     for name, module, what in REGISTRY:
         if want and name not in want:

@@ -1,0 +1,108 @@
+"""Serve a queue of diffusion requests with continuous batching.
+
+Quickstart
+----------
+
+    PYTHONPATH=src python examples/serve_diffusion.py            # ~1 min
+    PYTHONPATH=src python examples/serve_diffusion.py --requests 10 \
+        --slots 4 --occupancies 0.0,0.55 --slo-ms 150
+
+What this shows
+---------------
+
+1.  Build a :class:`StadiPipeline` for a 2-device heterogeneous cluster
+    (occupancy 0 vs 55% -> effective speeds 1.0 vs 0.45, so the STADI
+    planner gives the slow device half the steps and a smaller patch).
+2.  Wrap it in a :class:`DiffusionServingEngine` with a fixed number of
+    request *slots* — the diffusion analogue of continuous batching: a FIFO
+    queue feeds free slots every scheduling round, and all in-flight
+    requests (each at its OWN position on the noise schedule) share one
+    vmapped denoise dispatch per round.
+3.  Submit requests in two waves so admissions interleave with requests
+    already mid-denoise, then drain and print per-request queueing /
+    service rounds, modeled cluster latency, and SLO hits.
+4.  Verify the serving fast path changes nothing: request 0's image is
+    bitwise identical to a lone ``pipe.generate`` call.
+
+Expected output: a table like
+
+    uid  queued  served  modeled-latency  slo
+      0       0       6          43.9ms  met
+    ...
+    throughput: N img/s wall / M img/s modeled; bitwise parity OK
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--occupancies", default="0.0,0.55")
+    ap.add_argument("--m-base", type=int, default=16)
+    ap.add_argument("--m-warmup", type=int, default=4)
+    ap.add_argument("--slo-ms", type=float, default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.core import sampler as sampler_lib
+    from repro.core.pipeline import StadiConfig, StadiPipeline
+    from repro.models.diffusion import dit
+    from repro.serving import DiffusionServingEngine
+
+    cfg = get_config("tiny-dit").reduced()
+    params = dit.init_params(jax.random.PRNGKey(0), cfg)
+    sched = sampler_lib.linear_schedule(T=1000)
+    occ = [float(x) for x in args.occupancies.split(",")]
+    config = StadiConfig.from_occupancies(occ, m_base=args.m_base,
+                                          m_warmup=args.m_warmup)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=args.slots)
+    print(f"cluster speeds {config.speeds} -> steps "
+          f"{engine.plan.temporal.steps}, patches {engine.plan.patches}")
+
+    rng = np.random.default_rng(0)
+    xs = [jax.random.normal(jax.random.PRNGKey(1 + i),
+                            (1, cfg.latent_size, cfg.latent_size,
+                             cfg.channels)) for i in range(args.requests)]
+    conds = [int(c) for c in rng.integers(0, cfg.n_classes, args.requests)]
+    slo_s = args.slo_ms / 1e3 if args.slo_ms is not None else None
+
+    # wave 1 fills the slots; wave 2 queues and is admitted mid-flight,
+    # joining lanes that are already several denoise steps ahead
+    wave1 = args.requests // 2
+    for i in range(wave1):
+        engine.submit(xs[i], conds[i], slo_s=slo_s)
+    engine.step()
+    engine.step()
+    for i in range(wave1, args.requests):
+        engine.submit(xs[i], conds[i], slo_s=slo_s)
+    done = engine.run_to_completion()
+
+    stats = engine.stats()
+    print("\nuid  queued  served  modeled-latency  slo")
+    for r in stats["requests"]:
+        slo = {None: "-", True: "met", False: "MISSED"}[r["slo_met"]]
+        print(f"{r['uid']:3d}  {r['queue_rounds']:6d}  "
+              f"{r['service_rounds']:6d}  {r['modeled_latency_s']*1e3:13.1f}ms"
+              f"  {slo}")
+    print(f"\nthroughput: {stats['throughput_wall_rps']:.2f} img/s wall / "
+          f"{stats['throughput_modeled_rps']:.2f} img/s modeled over "
+          f"{stats['rounds']} rounds")
+
+    ref = pipe.generate(xs[0], jnp.asarray([conds[0]]))
+    req0 = next(r for r in done if r.uid == 0)
+    assert bool(jnp.all(req0.image == ref.image)), "serving changed numerics!"
+    print("bitwise parity with single-request generate: OK")
+
+
+if __name__ == "__main__":
+    main()

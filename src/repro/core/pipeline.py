@@ -130,6 +130,44 @@ def get_executor(name: str) -> Executor:
                        f"{sorted(EXECUTORS)}") from None
 
 
+# ----------------------------------------------------------------------
+# serving hooks: round-granular steppers for continuous batching
+# ----------------------------------------------------------------------
+#
+# An Executor runs one whole generation; the diffusion serving engine
+# (repro.serving.diffusion_engine) instead drives MANY in-flight requests one
+# scheduling round at a time, so each backend that supports serving also
+# registers a *stepper factory*: ``factory(pipeline, plan, slots) -> Stepper``
+# where a Stepper exposes
+#
+#     warmup_step(xs, t_from, t_to, conds) -> (xs', pub_k, pub_v)
+#     interval(xs, fine0, conds, pub_k, pub_v) -> (xs', pub_k', pub_v')
+#     cohort_only: bool    # True => every lane of interval() shares fine0
+#
+# over lane-stacked state (leading axis = slot lane). The "emulated" stepper
+# vmaps the denoiser so lanes at different noise-schedule positions share one
+# dispatch; the "spmd" stepper shard_maps each interval across jax.devices().
+
+STEPPER_FACTORIES: Dict[str, Callable] = {}
+
+
+def register_stepper_factory(name: str) -> Callable:
+    def deco(fn):
+        STEPPER_FACTORIES[name] = fn
+        return fn
+    return deco
+
+
+def get_stepper_factory(name: str):
+    try:
+        return STEPPER_FACTORIES[name]
+    except KeyError:
+        raise KeyError(
+            f"backend {name!r} has no serving stepper; registered: "
+            f"{sorted(STEPPER_FACTORIES)} (the 'simulate' backend has no "
+            "numerics to serve)") from None
+
+
 @register_executor("emulated")
 def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
                       interval_hook=None):
@@ -215,6 +253,33 @@ class StadiPipeline:
         elif config.backend == "simulate":
             raise ValueError("the 'simulate' backend needs config.cost_model")
         return PipelineResult(image, trace, plan, latency, replans)
+
+    def generate_many(self, x_Ts: Sequence, conds: Sequence, *,
+                      slots: int = 4) -> List[PipelineResult]:
+        """Continuous-batched generation of many requests (serving engine).
+
+        Admits all requests into a :class:`repro.serving.diffusion_engine.
+        DiffusionServingEngine` with ``slots`` concurrent lanes and drains
+        them; per-request images are bitwise identical to calling
+        :meth:`generate` once per request on the emulated backend. Each
+        result's ``latency_s`` is the per-request modeled serving latency
+        (queueing + batched service, via the cost model) rather than the
+        single-request makespan — None when no cost model is configured.
+        Results come back in submission order. For SLO verdicts and
+        round-level stats, drive a DiffusionServingEngine directly.
+        """
+        from repro.serving.diffusion_engine import DiffusionServingEngine
+        if len(x_Ts) != len(conds):
+            raise ValueError(f"{len(x_Ts)} inputs vs {len(conds)} conds")
+        engine = DiffusionServingEngine(self, slots=slots)
+        reqs = [engine.submit(x, c) for x, c in zip(x_Ts, conds)]
+        engine.run_to_completion()
+        trace = sim.build_trace(engine.plan.temporal, engine.plan.patches,
+                                self.model_cfg, batch=1)
+        report_latency = self.config.cost_model is not None
+        return [PipelineResult(r.image, trace, engine.plan,
+                               r.modeled_latency_s if report_latency else None)
+                for r in reqs]
 
     # ------------------------------------------------------------------
     # online rebalancing (beyond-paper §7.1): OnlineProfiler in the hot path

@@ -20,6 +20,122 @@ from repro.core.sampler import NoiseSchedule
 from repro.core.schedule import TemporalPlan
 
 
+def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
+                  R, my_slab, cond, pub_k, pub_v, my_start, my_tok,
+                  my_ratio, m0):
+    """R fine steps on this device's padded slab with activity masking: a
+    device with interval ratio r only applies every r-th DDIM update (a
+    no-op substep costs what it costs — the paper's per-GPU step skipping in
+    SPMD lockstep). Publishes the FIRST substep's fresh K/V (Alg. 1).
+    ``m0`` (first fine step) may be a python int (run_spmd's statically
+    unrolled loop) or a traced scalar (round-granular serving)."""
+    import jax.numpy as jnp
+
+    from repro.core import sampler as sampler_lib
+    from repro.models.diffusion import dit
+
+    fresh_k = fresh_v = None
+    for s in range(R):
+        active = (s % my_ratio) == 0
+        t_from = ts[m0 + s]
+        t_to = ts[jnp.minimum(m0 + s + my_ratio, m_base)]
+        eps, kvs = dit.forward_patch(
+            params, cfg, my_slab, t_from, cond, my_start,
+            buffers=(pub_k, pub_v), return_kv=True, valid_tokens=my_tok)
+        stepped = sampler_lib.ddim_step(sched, my_slab, eps, t_from, t_to)
+        my_slab = jnp.where(active, stepped, my_slab)
+        if s == 0:                            # Alg.1: publish first substep
+            fresh_k, fresh_v = kvs
+    return my_slab, fresh_k, fresh_v
+
+
+def _gather_and_merge(cfg: DiTConfig, patches, row_starts, my_slab,
+                      fresh_k, fresh_v, pub_k, pub_v):
+    """Interval boundary: uneven all-gathers (padded strategy) rebuild the
+    full latent, and every device's fresh K/V valid prefix is merged into
+    the (scratch-padded) published buffers."""
+    import jax
+    import jax.numpy as jnp
+
+    p, wp, N = cfg.patch_size, cfg.tokens_per_side, len(patches)
+    slabs = jax.lax.all_gather(my_slab, "dev")        # [N,B,Pmax*p,W,C]
+    gk = jax.lax.all_gather(fresh_k, "dev")           # [N,L,B,Nl_max,H,hd]
+    gv = jax.lax.all_gather(fresh_v, "dev")
+    parts = [slabs[i, :, :patches[i] * p] for i in range(N) if patches[i]]
+    x_full = jnp.concatenate(parts, axis=1)
+    for i in range(N):                         # static merge, valid prefixes
+        sz = patches[i] * wp
+        if sz == 0:
+            continue
+        st = int(row_starts[i]) * wp
+        pub_k = jax.lax.dynamic_update_slice_in_dim(
+            pub_k, gk[i, :, :, :sz], st, axis=2)
+        pub_v = jax.lax.dynamic_update_slice_in_dim(
+            pub_v, gv[i, :, :, :sz], st, axis=2)
+    return x_full, pub_k, pub_v
+
+
+def make_interval_step(cfg: DiTConfig, sched: NoiseSchedule,
+                       plan: TemporalPlan, patches: Sequence[int]):
+    """Round-granular SPMD: one jitted shard_map call per adaptive interval.
+
+    Returns ``fn(params, x_full [B,H,W,C], cond [B], pub_k, pub_v
+    [L,B,N,H,hd], m0) -> (x_full, pub_k, pub_v)`` executing the R = plan.lcm
+    fine steps starting at (traced) fine step ``m0`` with the same per-device
+    activity masks, padded-slab all-gathers, and publish-at-first-substep
+    buffer semantics as :func:`run_spmd`'s inner loop. Carried state lives on
+    the host between calls, so the diffusion serving engine can interleave
+    many request cohorts across rounds (DESIGN.md §9); stale-KV buffers are
+    scratch-padded on entry and sliced back to ``cfg.n_tokens`` on exit.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import sampler as sampler_lib
+    from repro.core.comm import shard_map_compat
+
+    devices = jax.devices()
+    N = len(patches)
+    assert N <= len(devices), (N, len(devices))
+    mesh = Mesh(np.asarray(devices[:N]), ("dev",))
+
+    p = cfg.patch_size
+    wp = cfg.tokens_per_side
+    Pmax = max(patches)
+    Nl_max = Pmax * wp
+    row_starts = np.concatenate([[0], np.cumsum(patches)[:-1]]).astype(np.int32)
+    rows_arr = jnp.asarray(patches, jnp.int32)
+    starts_arr = jnp.asarray(row_starts, jnp.int32)
+    ratios = [r if r else 1 for r in plan.ratios]
+    ratios_arr = jnp.asarray(ratios, jnp.int32)
+    ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
+    R = plan.lcm
+
+    def body(params, x_full, cond, pub_k, pub_v, m0):
+        idx = jax.lax.axis_index("dev")
+        my_rows = rows_arr[idx]
+        my_start = starts_arr[idx]
+        my_ratio = ratios_arr[idx]
+        my_tok = my_rows * wp
+        pad = [(0, 0), (0, 0), (0, Nl_max), (0, 0), (0, 0)]
+        pub_k = jnp.pad(pub_k, pad)               # scratch-padded buffers
+        pub_v = jnp.pad(pub_v, pad)
+        x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
+        my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p, Pmax * p,
+                                               axis=1)
+        my_slab, fresh_k, fresh_v = _run_substeps(
+            params, cfg, sched, ts, plan.m_base, R, my_slab, cond,
+            pub_k, pub_v, my_start, my_tok, my_ratio, m0)
+        x_full, pub_k, pub_v = _gather_and_merge(
+            cfg, patches, row_starts, my_slab, fresh_k, fresh_v,
+            pub_k, pub_v)
+        return x_full, pub_k[:, :, :cfg.n_tokens], pub_v[:, :, :cfg.n_tokens]
+
+    fn = shard_map_compat(body, mesh, (P(),) * 6, (P(), P(), P()))
+    return jax.jit(fn)
+
+
 def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
              plan: TemporalPlan, patches: Sequence[int]):
     """shard_map STADI across jax.devices(). Returns final image [B,H,W,C]."""
@@ -72,36 +188,15 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
 
         for it in range(F // R):
             m0 = M_w + it * R
-            fresh_k = fresh_v = None
-            for s in range(R):
-                active = (s % my_ratio) == 0
-                t_from = ts[m0 + s]
-                t_to = ts[jnp.minimum(m0 + s + my_ratio, plan.m_base)]
-                eps, kvs = dit.forward_patch(
-                    params, cfg, my_slab, t_from, cond, my_start,
-                    buffers=(pub_k, pub_v), return_kv=True,
-                    valid_tokens=my_tok)
-                stepped = sampler_lib.ddim_step(sched, my_slab, eps, t_from, t_to)
-                my_slab = jnp.where(active, stepped, my_slab)
-                if s == 0:                        # Alg.1: publish first substep
-                    fresh_k, fresh_v = kvs
-            # ---- interval boundary: uneven all-gathers (padded strategy) ----
-            slabs = jax.lax.all_gather(my_slab, "dev")        # [N,B,Pmax*p,W,C]
-            gk = jax.lax.all_gather(fresh_k, "dev")           # [N,L,B,Nl_max,H,hd]
-            gv = jax.lax.all_gather(fresh_v, "dev")
-            parts = [slabs[i, :, :patches[i] * p] for i in range(N) if patches[i]]
-            x_full = jnp.concatenate(parts, axis=1)
+            my_slab, fresh_k, fresh_v = _run_substeps(
+                params, cfg, sched, ts, plan.m_base, R, my_slab, cond,
+                pub_k, pub_v, my_start, my_tok, my_ratio, m0)
+            x_full, pub_k, pub_v = _gather_and_merge(
+                cfg, patches, row_starts, my_slab, fresh_k, fresh_v,
+                pub_k, pub_v)
             x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
-            my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p, Pmax * p, axis=1)
-            for i in range(N):                     # static merge, valid prefixes
-                sz = patches[i] * wp
-                if sz == 0:
-                    continue
-                st = int(row_starts[i]) * wp
-                pub_k = jax.lax.dynamic_update_slice_in_dim(
-                    pub_k, gk[i, :, :, :sz], st, axis=2)
-                pub_v = jax.lax.dynamic_update_slice_in_dim(
-                    pub_v, gv[i, :, :, :sz], st, axis=2)
+            my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p,
+                                                   Pmax * p, axis=1)
         return x_full
 
     from repro.core.comm import shard_map_compat

@@ -1,0 +1,14 @@
+"""Pre-jax environment setup. jax-free on purpose: callers (launch scripts,
+tests/conftest.py) must run this BEFORE anything imports jax, because XLA
+reads XLA_FLAGS exactly once at backend initialization."""
+import os
+
+
+def force_host_devices() -> None:
+    """Translate ``STADI_HOST_DEVICES=N`` into N forced XLA host platform
+    devices (CPU SPMD). No-op when unset or 0."""
+    n = os.environ.get("STADI_HOST_DEVICES", "")
+    if n not in ("", "0"):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n} "
+            + os.environ.get("XLA_FLAGS", ""))

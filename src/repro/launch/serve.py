@@ -1,11 +1,17 @@
-"""Serving driver: batched LLM requests through the ServingEngine, or
-batched diffusion generation requests through :class:`StadiPipeline`.
+"""Serving driver: batched LLM requests through the ServingEngine, or a
+diffusion request queue through the continuous-batching
+:class:`~repro.serving.diffusion_engine.DiffusionServingEngine`.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --requests 8
   PYTHONPATH=src python -m repro.launch.serve --diffusion --arch tiny-dit \
-      --occupancies 0.0,0.6 --requests 4
+      --occupancies 0.0,0.6 --requests 8 --slots 4 --slo-ms 200
+  STADI_HOST_DEVICES=2 PYTHONPATH=src python -m repro.launch.serve \
+      --diffusion --backend spmd --requests 4
 """
 from __future__ import annotations
+
+from repro.hostenv import force_host_devices
+force_host_devices()                        # --backend spmd on CPU hosts
 
 import argparse
 import time
@@ -43,17 +49,17 @@ def serve(arch: str, *, n_requests: int = 8, slots: int = 4,
 
 
 def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
-                    n_requests: int = 4, batch: int = 2, m_base: int = 16,
+                    n_requests: int = 4, slots: int = 4, m_base: int = 16,
                     m_warmup: int = 4, planner: str = "stadi",
                     backend: str = "emulated", reduced: bool = True,
-                    seed: int = 0):
-    """Micro-batched class-conditional generation on a heterogeneous cluster:
-    every micro-batch is one ``StadiPipeline.generate`` call."""
-    import jax.numpy as jnp
-
+                    slo_s: float = None, seed: int = 0):
+    """Continuous batching on a heterogeneous cluster: requests enter a FIFO
+    queue, the :class:`DiffusionServingEngine` admits them into ``slots``
+    concurrent lanes and drains the queue with batched denoise rounds."""
     from repro.core import sampler as sampler_lib
     from repro.core.pipeline import StadiConfig, StadiPipeline
     from repro.models.diffusion import dit
+    from repro.serving import DiffusionServingEngine
 
     cfg = get_config(arch)
     if reduced:
@@ -64,21 +70,31 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                                           m_warmup=m_warmup, planner=planner,
                                           backend=backend)
     pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=slots)
     rng = np.random.default_rng(seed)
-    done, t0 = [], time.time()
-    for lo in range(0, n_requests, batch):
-        n = min(batch, n_requests - lo)
-        x_T = jax.random.normal(jax.random.PRNGKey(seed + 1 + lo),
-                                (n, cfg.latent_size, cfg.latent_size,
+    t0 = time.time()
+    for uid in range(n_requests):
+        x_T = jax.random.normal(jax.random.PRNGKey(seed + 1 + uid),
+                                (1, cfg.latent_size, cfg.latent_size,
                                  cfg.channels))
-        cond = jnp.asarray(rng.integers(0, cfg.n_classes, n))
-        res = pipe.generate(x_T, cond)
-        assert np.all(np.isfinite(np.asarray(res.image)))
-        done.append(res)
+        engine.submit(x_T, int(rng.integers(0, cfg.n_classes)), slo_s=slo_s)
+    done = engine.run_to_completion()
     dt = time.time() - t0
-    print(f"served {n_requests} generation requests in {dt:.2f}s "
-          f"({n_requests/dt:.2f} img/s) planner={planner} backend={backend} "
-          f"patches={done[0].plan.patches}")
+    for req in done:
+        assert np.all(np.isfinite(np.asarray(req.image)))
+    stats = engine.stats()
+    note = ("" if stats["cost_model"] == "configured"
+            else " [default-uncalibrated cost model]")
+    print(f"served {stats['n_completed']}/{n_requests} generation requests "
+          f"in {dt:.2f}s ({stats['n_completed']/dt:.2f} img/s wall, "
+          f"{stats['throughput_modeled_rps']:.2f} img/s modeled{note}) "
+          f"planner={planner} backend={backend} slots={slots} "
+          f"rounds={stats['rounds']} patches={engine.plan.patches}")
+    for r in stats["requests"]:
+        slo = "" if r["slo_met"] is None else f" slo_met={r['slo_met']}"
+        print(f"  req {r['uid']}: queued {r['queue_rounds']} rounds, "
+              f"served {r['service_rounds']} rounds, modeled latency "
+              f"{r['modeled_latency_s']*1e3:.1f} ms{slo}")
     return done
 
 
@@ -95,6 +111,10 @@ def main():
     ap.add_argument("--planner", default="stadi")
     ap.add_argument("--backend", default="emulated",
                     choices=["emulated", "spmd"])   # serving needs images
+    ap.add_argument("--m-base", type=int, default=16)
+    ap.add_argument("--m-warmup", type=int, default=4)
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request modeled-latency SLO (diffusion only)")
     args = ap.parse_args()
     if args.diffusion:
         if args.arch == ap.get_default("arch"):
@@ -104,8 +124,11 @@ def main():
         serve_diffusion(args.arch,
                         occupancies=[float(x) for x in
                                      args.occupancies.split(",")],
-                        n_requests=args.requests, planner=args.planner,
-                        backend=args.backend)
+                        n_requests=args.requests, slots=args.slots,
+                        m_base=args.m_base, m_warmup=args.m_warmup,
+                        planner=args.planner, backend=args.backend,
+                        slo_s=(args.slo_ms / 1e3
+                               if args.slo_ms is not None else None))
     else:
         serve(args.arch, n_requests=args.requests, slots=args.slots,
               prompt_len=args.prompt_len, max_new=args.max_new)

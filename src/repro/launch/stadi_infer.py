@@ -1,8 +1,5 @@
-import os
-if os.environ.get("STADI_HOST_DEVICES"):
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={os.environ['STADI_HOST_DEVICES']} "
-        + os.environ.get("XLA_FLAGS", ""))
+from repro.hostenv import force_host_devices
+force_host_devices()
 
 """STADI inference driver — the paper's system (launchable).
 

@@ -1,1 +1,3 @@
 from repro.serving.engine import ServingEngine, Request  # noqa
+from repro.serving.diffusion_engine import (  # noqa
+    DiffusionRequest, DiffusionServingEngine)

@@ -1,0 +1,523 @@
+"""Slot-based continuous batching for diffusion requests over StadiPipeline.
+
+The LLM engine (:mod:`repro.serving.engine`) batches decode steps; this is
+its diffusion counterpart (DESIGN.md §9). Each :class:`DiffusionRequest`
+carries its own position on the fine DDIM grid, so requests admitted at
+different times coexist in one denoise dispatch:
+
+    pipe   = StadiPipeline(cfg, params, sched, config)      # any planner
+    engine = DiffusionServingEngine(pipe, slots=8)
+    reqs   = [engine.submit(x_T, cond) for ...]             # FIFO queue
+    engine.run_to_completion()
+    stats  = engine.stats()          # per-request latency / SLO, throughput
+
+One scheduling **round** = admit (FIFO, lowest free slot) -> one warmup fine
+step for warmup-phase lanes -> one adaptive interval (``plan.lcm`` fine
+steps) for adaptive-phase lanes -> retire finished lanes. All per-lane state
+(latent, stale-KV ``Published`` buffers, class condition) lives in
+slot-major stacked arrays, so a batched step is a gather / one vmapped
+denoiser dispatch / scatter.
+
+Numerics: the "emulated" stepper mirrors ``patch_parallel.run_schedule``
+call-for-call — same jit boundaries, eager DDIM updates, publish-at-first-
+substep and merge-at-interval-boundary buffer semantics — and vmap lanes are
+computed independently, so every request's final image is **bitwise
+identical** to a single-request ``pipe.generate`` (tested). The "spmd"
+stepper instead shard_maps each interval across ``jax.devices()`` for
+cohorts of requests that share a fine-step position.
+
+Latency: every round is costed against ``StadiConfig.cluster`` with the
+``simulate`` cost model — per-round device placement assigns the heaviest
+patch-worker load to the fastest device (deterministic) — and each request
+accrues modeled wall-clock from submission to completion, giving queueing +
+service latency and SLO accounting that tests can assert exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core import simulate as sim
+from repro.core.pipeline import (StadiPipeline, get_stepper_factory,
+                                 register_stepper_factory)
+from repro.core.planners import ExecutionPlan
+from repro.core.schedule import patch_bounds
+from repro.core.simulate import CostModel
+from repro.models.diffusion import dit
+
+
+@dataclasses.dataclass
+class DiffusionRequest:
+    """One queued generation request plus its serving statistics.
+
+    ``fine_step`` is the request's own position on the fine DDIM grid
+    (0..m_base); the engine advances it by 1 per warmup round and by
+    ``plan.lcm`` per adaptive round.
+    """
+    uid: int
+    x_T: jnp.ndarray                     # [1, H, W, C]
+    cond: jnp.ndarray                    # [1] int32
+    slo_s: Optional[float] = None        # modeled-latency SLO target
+    # engine-owned state
+    fine_step: int = 0
+    image: Optional[jnp.ndarray] = None
+    done: bool = False
+    # statistics (rounds are engine scheduling rounds; latency is modeled
+    # wall-clock on the configured cluster, queueing included)
+    submit_round: int = -1
+    admit_round: int = -1
+    finish_round: int = -1
+    submit_clock_s: float = 0.0
+    modeled_latency_s: float = 0.0
+    wall_latency_s: float = 0.0
+    _submit_wall: float = 0.0
+
+    @property
+    def queue_rounds(self) -> int:
+        return self.admit_round - self.submit_round
+
+    @property
+    def slo_met(self) -> Optional[bool]:
+        if self.slo_s is None or not self.done:
+            return None
+        return self.modeled_latency_s <= self.slo_s
+
+
+@dataclasses.dataclass
+class RoundReport:
+    """What one scheduling round did (admissions, groups, placement, cost)."""
+    index: int
+    admitted: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    warmup_lanes: List[int] = dataclasses.field(default_factory=list)
+    adaptive_lanes: List[int] = dataclasses.field(default_factory=list)
+    placement: Optional[Tuple[Tuple[int, int], ...]] = None  # (worker, device)
+    modeled_s: float = 0.0
+    wall_s: float = 0.0
+
+
+# ----------------------------------------------------------------------
+# steppers (registered into repro.core.pipeline.STEPPER_FACTORIES)
+# ----------------------------------------------------------------------
+#
+# The vmapped denoiser steps are MODULE-LEVEL jitted functions (params as an
+# argument, cfg/row_start static) so every engine instance shares one
+# compilation cache — per-instance jax.jit wrappers would recompile the hot
+# loop for each engine and hand the throughput win back to the sequential
+# baseline, whose pp._jit_* functions are likewise cached at module level.
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _vmap_full_step(params, cfg, xs, ts, conds):
+    """Lane-stacked synchronous full-image step: xs [G,1,H,W,C], ts [G]."""
+    def one(x, t, cond):
+        return dit.forward_patch(params, cfg, x, t, cond, 0, buffers=None,
+                                 return_kv=True)
+    return jax.vmap(one)(xs, ts, conds)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "row_start"))
+def _vmap_patch_step(params, cfg, xs_loc, ts, conds, bks, bvs, row_start):
+    """Lane-stacked stale-KV patch step (vmapped ``pp._jit_patch_step``)."""
+    def one(x_loc, t, cond, bk, bv):
+        return dit.forward_patch(params, cfg, x_loc, t, cond, row_start,
+                                 buffers=(bk, bv), return_kv=True)
+    return jax.vmap(one)(xs_loc, ts, conds, bks, bvs)
+
+
+class _VmapWarmupMixin:
+    """Warmup / bootstrap steps shared by both steppers: synchronous
+    full-image forwards, vmapped over lanes (per-lane timestep)."""
+
+    def _init_warmup(self, params, model_cfg, sched):
+        self.params = params
+        self.model_cfg = model_cfg
+        self.sched = sched
+
+    def warmup_step(self, xs, t_from, t_to, conds):
+        """One synchronous fine step per lane: returns (xs', ks, vs)."""
+        G = xs.shape[0]
+        eps, (ks, vs) = _vmap_full_step(self.params, self.model_cfg, xs,
+                                        t_from, conds)
+        shape = (G,) + (1,) * (xs.ndim - 1)
+        xs = sampler_lib.ddim_step(self.sched, xs, eps,
+                                   t_from.reshape(shape), t_to.reshape(shape))
+        return xs, ks, vs
+
+
+
+@register_stepper_factory("emulated")
+class EmulatedStepper(_VmapWarmupMixin):
+    """vmapped mirror of ``run_schedule``'s adaptive loop: per (worker,
+    substep) one jitted denoiser dispatch covers every lane, lanes may sit at
+    different fine steps (timestep is per-lane data). Bitwise identical per
+    lane to the single-request engine."""
+
+    cohort_only = False
+
+    def __init__(self, pipeline: StadiPipeline, plan: ExecutionPlan,
+                 slots: int):
+        self._init_warmup(pipeline.params, pipeline.model_cfg, pipeline.sched)
+        self.plan = plan
+        self._ts = sampler_lib.ddim_timesteps(pipeline.sched.T,
+                                              plan.temporal.m_base)
+
+    def interval(self, xs, fine0, conds, pub_k, pub_v):
+        """One adaptive interval (plan.lcm fine steps) for every lane.
+
+        xs [G,1,H,W,C]; fine0 int per lane; pub_{k,v} [G,L,1,N,H,hd].
+        """
+        plan, cfg = self.plan.temporal, self.model_cfg
+        R, p = plan.lcm, cfg.patch_size
+        G = xs.shape[0]
+        fine0 = np.asarray(fine0)
+        bounds_tok = patch_bounds(self.plan.patches)
+        bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
+        workers = [i for i in plan.active if self.plan.patches[i] > 0]
+        tshape = (G,) + (1,) * (xs.ndim - 1)
+
+        pending, new_slabs = {}, {}
+        for i in workers:
+            r = plan.ratios[i]
+            lo, hi = bounds_lat[i]
+            x_loc = xs[:, :, lo:hi]
+            for s in range(R // r):
+                t_from = self._ts[fine0 + s * r]
+                t_to = self._ts[fine0 + (s + 1) * r]
+                eps, (k, v) = _vmap_patch_step(self.params, cfg, x_loc,
+                                               t_from, conds, pub_k, pub_v,
+                                               bounds_tok[i][0])
+                x_loc = sampler_lib.ddim_step(self.sched, x_loc, eps,
+                                              t_from.reshape(tshape),
+                                              t_to.reshape(tshape))
+                if s == 0:           # Alg.1: publish the first substep's KV
+                    pending[i] = (k, v)
+            new_slabs[i] = x_loc
+        # interval boundary: all-gather of x + buffer merge (same order as
+        # buffers.merge: ascending worker id)
+        for i in workers:
+            lo, hi = bounds_lat[i]
+            xs = xs.at[:, :, lo:hi].set(new_slabs[i])
+        for i in sorted(pending):
+            k, v = pending[i]
+            start = bounds_tok[i][0] * cfg.tokens_per_side
+            pub_k = jax.lax.dynamic_update_slice_in_dim(
+                pub_k, k.astype(pub_k.dtype), start, axis=3)
+            pub_v = jax.lax.dynamic_update_slice_in_dim(
+                pub_v, v.astype(pub_v.dtype), start, axis=3)
+        return xs, pub_k, pub_v
+
+
+@register_stepper_factory("spmd")
+class SpmdStepper(_VmapWarmupMixin):
+    """shard_map adaptive intervals over real ``jax.devices()``: lanes are
+    stacked on the model batch axis, so every lane of one call must share a
+    fine-step position (``cohort_only``) — the engine groups cohorts by
+    ``fine_step``. Warmup stays on the host (synchronous steps are exact
+    full-image forwards, which SPMD executes redundantly anyway)."""
+
+    cohort_only = True
+
+    _cache: Dict[Tuple, object] = {}          # shared across engine instances
+
+    def __init__(self, pipeline: StadiPipeline, plan: ExecutionPlan,
+                 slots: int):
+        from repro.core import spmd
+        self._init_warmup(pipeline.params, pipeline.model_cfg, pipeline.sched)
+        self.plan = plan
+        n_workers = len(plan.patches)
+        if n_workers > len(jax.devices()):
+            raise ValueError(
+                f"spmd serving needs {n_workers} devices, have "
+                f"{len(jax.devices())} (set STADI_HOST_DEVICES)")
+        sched = pipeline.sched            # content-keyed: id() could alias
+        key = (pipeline.model_cfg, tuple(plan.patches),
+               tuple(plan.temporal.ratios), plan.temporal.m_base,
+               plan.temporal.m_warmup, sched.T,
+               np.asarray(sched.alpha_bar).tobytes())
+        if key not in SpmdStepper._cache:
+            SpmdStepper._cache[key] = spmd.make_interval_step(
+                pipeline.model_cfg, pipeline.sched, plan.temporal,
+                plan.patches)
+        self._interval = SpmdStepper._cache[key]
+
+    def interval(self, xs, fine0, conds, pub_k, pub_v):
+        fine0 = np.asarray(fine0)
+        assert (fine0 == fine0[0]).all(), \
+            "spmd stepper is cohort-only: lanes must share fine_step"
+        # lane-major [G,1,...] -> batch-major [G,...] / [L,G,N,H,hd]
+        x = xs[:, 0]
+        bk = jnp.moveaxis(pub_k[:, :, 0], 0, 1)
+        bv = jnp.moveaxis(pub_v[:, :, 0], 0, 1)
+        x, bk, bv = self._interval(self.params, x, conds[:, 0], bk, bv,
+                                   jnp.int32(fine0[0]))
+        return (x[:, None], jnp.moveaxis(bk, 1, 0)[:, :, None],
+                jnp.moveaxis(bv, 1, 0)[:, :, None])
+
+
+# ----------------------------------------------------------------------
+# the engine
+# ----------------------------------------------------------------------
+
+class DiffusionServingEngine:
+    """Continuous batching of diffusion requests over one StadiPipeline.
+
+    Admission: FIFO queue into the lowest free slot at the start of every
+    round; a slot freed this round is refilled next round. Placement: each
+    round the plan's patch-workers are assigned to cluster devices by the
+    cost model (heaviest load -> fastest device, deterministic ties), and the
+    modeled round time — batched compute, boundary all-gather, masked async
+    KV — is accrued to every in-flight request.
+    """
+
+    def __init__(self, pipeline: StadiPipeline, *, slots: int = 4,
+                 cost_model: Optional[CostModel] = None):
+        config = pipeline.config
+        if config.rebalance_every:
+            raise ValueError("serving drives placement per round; disable "
+                             "rebalance_every on the pipeline config")
+        if slots < 1:
+            raise ValueError("need at least one slot")
+        self.pipeline = pipeline
+        self.slots = slots
+        self.plan = pipeline.plan()
+        self.stepper = get_stepper_factory(config.backend)(
+            pipeline, self.plan, slots)
+        self.cm = cost_model or config.cost_model
+        # placement needs SOME cost model; flag the uncalibrated fallback so
+        # modeled latencies / SLO verdicts are never mistaken for calibrated
+        self.cm_calibrated = self.cm is not None
+        if self.cm is None:
+            self.cm = CostModel(t_fixed=1e-3, t_row=1e-3)
+        cfg = pipeline.model_cfg
+        self._ts = sampler_lib.ddim_timesteps(pipeline.sched.T,
+                                              self.plan.temporal.m_base)
+        H, C = cfg.latent_size, cfg.channels
+        self._x = jnp.zeros((slots, 1, H, H, C), jnp.float32)
+        kshape = (slots,) + dit.buffer_shape(cfg, 1)
+        kdt = jnp.dtype(cfg.dtype)
+        self._pub_k = jnp.zeros(kshape, kdt)
+        self._pub_v = jnp.zeros(kshape, kdt)
+        self._cond = jnp.zeros((slots, 1), jnp.int32)
+        self.queue: List[DiffusionRequest] = []
+        self.active: Dict[int, DiffusionRequest] = {}   # slot -> request
+        self.completed: List[DiffusionRequest] = []
+        self.rounds: List[RoundReport] = []
+        self.modeled_clock_s = 0.0
+        self._next_uid = 0
+        # per-lane comm sizing: taken from the same trace builder the
+        # simulate backend replays, so serving cost accounting cannot
+        # diverge from simulate_trace's
+        trace = sim.build_trace(self.plan.temporal, self.plan.patches, cfg,
+                                batch=1)
+        self._latent_bytes = trace.latent_bytes
+        self._kv_bytes = trace.kv_bytes_per_worker
+
+    # ---------------- submission & admission ----------------
+
+    def submit(self, x_T, cond, *, slo_s: Optional[float] = None,
+               uid: Optional[int] = None) -> DiffusionRequest:
+        """Queue one request. x_T: [H,W,C] or [1,H,W,C]; cond: int or [1]."""
+        x_T = jnp.asarray(x_T)
+        if x_T.ndim == 3:
+            x_T = x_T[None]
+        if x_T.shape[0] != 1:
+            raise ValueError("one request = one image; got batch "
+                             f"{x_T.shape[0]} (submit per image)")
+        cond = jnp.asarray(cond, jnp.int32).reshape((1,))
+        if uid is None:
+            uid, self._next_uid = self._next_uid, self._next_uid + 1
+        else:
+            self._next_uid = max(self._next_uid, uid + 1)
+        req = DiffusionRequest(uid=uid, x_T=x_T, cond=cond, slo_s=slo_s)
+        req.submit_round = len(self.rounds)
+        req.submit_clock_s = self.modeled_clock_s
+        req._submit_wall = time.perf_counter()
+        self.queue.append(req)
+        return req
+
+    def _admit(self, report: RoundReport) -> None:
+        M_w = self.plan.temporal.m_warmup
+        while self.queue and len(self.active) < self.slots:
+            req = self.queue.pop(0)
+            slot = next(s for s in range(self.slots) if s not in self.active)
+            self._x = self._x.at[slot].set(req.x_T)
+            self._cond = self._cond.at[slot].set(req.cond)
+            req.fine_step = 0
+            req.admit_round = report.index
+            if M_w == 0:
+                # run_schedule's buffer bootstrap: one full forward at ts[0]
+                # (shares the jit cache with the single-request engine)
+                _, kvs = pp._jit_full_step(self.pipeline.params,
+                                           self.pipeline.model_cfg, req.x_T,
+                                           self._ts[0], req.cond)
+                self._pub_k = self._pub_k.at[slot].set(kvs[0])
+                self._pub_v = self._pub_v.at[slot].set(kvs[1])
+            self.active[slot] = req
+            report.admitted.append((req.uid, slot))
+
+    # ---------------- one scheduling round ----------------
+
+    def step(self) -> List[DiffusionRequest]:
+        """One round: admit -> warmup group -> adaptive group(s) -> retire."""
+        report = RoundReport(index=len(self.rounds))
+        wall0 = time.perf_counter()
+        self._admit(report)
+        temporal = self.plan.temporal
+        M_w, M_base, R = temporal.m_warmup, temporal.m_base, temporal.lcm
+        warm = sorted(s for s, r in self.active.items()
+                      if r.fine_step < M_w)
+        adapt = sorted(s for s, r in self.active.items()
+                       if r.fine_step >= M_w)
+        report.warmup_lanes, report.adaptive_lanes = warm, adapt
+
+        if warm:
+            idx = self._pad(warm)
+            fine = np.asarray([self.active[s].fine_step for s in idx])
+            xs, ks, vs = self.stepper.warmup_step(
+                self._x[idx], self._ts[fine], self._ts[fine + 1],
+                self._cond[idx])
+            self._scatter(idx, xs, ks, vs)
+            for s in warm:
+                self.active[s].fine_step += 1
+            _, report.modeled_s = self._phase_cost(len(warm), warm=True)
+
+        if adapt:
+            placement = None
+            for group in self._groups(adapt):
+                idx = self._pad(group)
+                fine = np.asarray([self.active[s].fine_step for s in idx])
+                xs, ks, vs = self.stepper.interval(
+                    self._x[idx], fine, self._cond[idx],
+                    self._pub_k[idx], self._pub_v[idx])
+                self._scatter(idx, xs, ks, vs)
+                for s in group:
+                    self.active[s].fine_step += R
+                placement, cost = self._phase_cost(len(group), warm=False)
+                report.modeled_s += cost
+            report.placement = placement
+
+        self.modeled_clock_s += report.modeled_s
+        done_slots = [s for s, r in sorted(self.active.items())
+                      if r.fine_step >= M_base]
+        if done_slots:           # flush async dispatch BEFORE stamping wall
+            jax.block_until_ready(self._x)
+        finished = []
+        for slot in done_slots:
+            req = self.active.pop(slot)
+            req.image = self._x[slot]
+            req.done = True
+            req.finish_round = report.index
+            req.modeled_latency_s = self.modeled_clock_s - req.submit_clock_s
+            req.wall_latency_s = time.perf_counter() - req._submit_wall
+            finished.append(req)
+        self.completed.extend(finished)
+        report.wall_s = time.perf_counter() - wall0
+        self.rounds.append(report)
+        return finished
+
+    def run_to_completion(self, max_rounds: int = 100_000
+                          ) -> List[DiffusionRequest]:
+        done: List[DiffusionRequest] = []
+        rounds = 0
+        while (self.queue or self.active) and rounds < max_rounds:
+            done.extend(self.step())
+            rounds += 1
+        if self.queue or self.active:
+            raise RuntimeError(f"undrained after {max_rounds} rounds")
+        return done
+
+    # ---------------- lane plumbing ----------------
+
+    def _pad(self, lanes: Sequence[int]) -> np.ndarray:
+        """Pad a lane group to the full slot count (stable jit shapes) by
+        repeating the first lane; duplicate lanes compute duplicate values,
+        so the scatter-back is value-identical regardless of write order."""
+        return np.asarray(list(lanes)
+                          + [lanes[0]] * (self.slots - len(lanes)))
+
+    def _scatter(self, idx: np.ndarray, xs, ks, vs) -> None:
+        self._x = self._x.at[idx].set(xs)
+        self._pub_k = self._pub_k.at[idx].set(ks)
+        self._pub_v = self._pub_v.at[idx].set(vs)
+
+    def _groups(self, lanes: List[int]) -> List[List[int]]:
+        """Batchable lane groups: one group for the vmapped stepper, cohorts
+        sharing a fine-step position for the cohort-only (spmd) stepper."""
+        if not self.stepper.cohort_only:
+            return [lanes]
+        cohorts: Dict[int, List[int]] = {}
+        for s in lanes:
+            cohorts.setdefault(self.active[s].fine_step, []).append(s)
+        return [cohorts[f] for f in sorted(cohorts)]
+
+    # ---------------- modeled cost & placement ----------------
+
+    def _phase_cost(self, group: int, warm: bool
+                    ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
+        """Placement + modeled seconds for one batched phase of a round.
+
+        Mirrors ``simulate.simulate_trace`` with compute scaled by the lane
+        count: batching multiplies the per-row work but amortizes t_fixed —
+        the modeled reason continuous batching beats sequential serving.
+        """
+        plan, cm = self.plan, self.cm
+        temporal = plan.temporal
+        workers = [i for i in temporal.active if plan.patches[i] > 0]
+        loads = {}
+        for i in workers:
+            sub = 1 if warm else temporal.lcm // temporal.ratios[i]
+            loads[i] = sub * (cm.t_fixed + cm.t_row * plan.patches[i] * group)
+        by_load = sorted(workers, key=lambda i: (-loads[i], i))
+        speeds = self.pipeline.config.speeds
+        by_speed = sorted(range(len(speeds)), key=lambda d: (-speeds[d], d))
+        placement = tuple(sorted((w, d) for w, d in zip(by_load, by_speed)))
+        compute = max(loads[w] / max(speeds[d], 1e-9)
+                      for w, d in placement)
+        comm_bytes = self._latent_bytes * group
+        if warm:
+            comm_bytes += sum(self._kv_bytes) * group
+            async_t = 0.0
+        else:
+            async_t = max(self._kv_bytes[w] for w, _ in placement) \
+                * group / cm.link_bw
+        comm = comm_bytes / cm.link_bw + cm.link_latency
+        return placement, max(compute, async_t) + comm
+
+    # ---------------- reporting ----------------
+
+    def stats(self) -> Dict:
+        """Aggregate + per-request serving statistics (modeled + wall)."""
+        done = sorted(self.completed, key=lambda r: r.uid)
+        lats = [r.modeled_latency_s for r in done]
+        wall = sum(r.wall_s for r in self.rounds)
+        slo = [r.slo_met for r in done if r.slo_met is not None]
+        return {
+            "n_completed": len(done),
+            "cost_model": ("configured" if self.cm_calibrated
+                           else "default-uncalibrated"),
+            "rounds": len(self.rounds),
+            "modeled_makespan_s": self.modeled_clock_s,
+            "wall_s": wall,
+            "throughput_modeled_rps": (len(done) / self.modeled_clock_s
+                                       if self.modeled_clock_s else 0.0),
+            "throughput_wall_rps": len(done) / wall if wall else 0.0,
+            "latency_mean_s": float(np.mean(lats)) if lats else 0.0,
+            "latency_p95_s": float(np.percentile(lats, 95)) if lats else 0.0,
+            "slo_met_frac": (sum(slo) / len(slo)) if slo else None,
+            "requests": [{
+                "uid": r.uid,
+                "queue_rounds": r.queue_rounds,
+                "service_rounds": r.finish_round - r.admit_round + 1,
+                "modeled_latency_s": r.modeled_latency_s,
+                "wall_latency_s": r.wall_latency_s,
+                "slo_s": r.slo_s,
+                "slo_met": r.slo_met,
+            } for r in done],
+        }

@@ -1,6 +1,16 @@
 import os
+import sys
 
-# Tests run on the single real CPU device (the 512-device override is
-# dryrun.py-only, per the brief). Keep XLA quiet and deterministic.
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.hostenv import force_host_devices
+
+# Tests run on the real CPU device(s). The CI matrix exercises
+# STADI_HOST_DEVICES in {1, 4}: translate it into forced host platform
+# devices BEFORE jax initializes (shared helper, also used by the launch
+# scripts). Unset locally -> single device, as before. Keep XLA quiet and
+# deterministic.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+force_host_devices()

@@ -1,0 +1,32 @@
+"""Repo hygiene: no Python bytecode may be tracked by git (the CI
+check-hygiene job runs the same check; this makes tier-1 enforce it too)."""
+import os
+import subprocess
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tracked_files():
+    try:
+        r = subprocess.run(["git", "ls-files"], cwd=REPO, capture_output=True,
+                           text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if r.returncode != 0:
+        pytest.skip("not a git checkout")
+    return r.stdout.splitlines()
+
+
+def test_no_bytecode_tracked():
+    bad = [f for f in _tracked_files()
+           if f.endswith(".pyc") or "__pycache__" in f.split("/")]
+    assert not bad, f"bytecode artifacts tracked by git: {bad[:10]}"
+
+
+def test_gitignore_covers_generated_artifacts():
+    with open(os.path.join(REPO, ".gitignore")) as f:
+        lines = {ln.strip() for ln in f}
+    for pat in ("__pycache__/", "*.pyc", ".pytest_cache/", "results/*.tmp"):
+        assert pat in lines, f".gitignore is missing {pat!r}"

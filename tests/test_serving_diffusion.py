@@ -1,0 +1,274 @@
+"""Continuous-batching diffusion serving engine (DESIGN.md §9): FIFO
+admission/refill order, per-request step isolation (bitwise parity with
+single-request ``generate`` under staggered admissions), deterministic
+heterogeneous placement, SLO accounting, ``generate_many``, an 8-request
+end-to-end drain on tiny-dit, and SPMD cohort-stepper parity (subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import sampler as sampler_lib
+from repro.core.pipeline import (StadiConfig, StadiPipeline,
+                                 get_stepper_factory)
+from repro.models.diffusion import dit
+from repro.serving import DiffusionServingEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-dit").reduced()      # 16x16 latent, 8 token rows
+    params = dit.init_params(jax.random.PRNGKey(0), cfg)
+    sched = sampler_lib.linear_schedule(T=100)
+    return cfg, params, sched
+
+
+def _pipe(setup, occupancies=(0.0, 0.5), **kw):
+    cfg, params, sched = setup
+    kw.setdefault("m_base", 6)
+    kw.setdefault("m_warmup", 2)
+    config = StadiConfig.from_occupancies(list(occupancies), **kw)
+    return StadiPipeline(cfg, params, sched, config)
+
+
+def _requests(cfg, n, seed=0):
+    xs = [jax.random.normal(jax.random.PRNGKey(seed + 1 + i),
+                            (1, cfg.latent_size, cfg.latent_size,
+                             cfg.channels)) for i in range(n)]
+    conds = [jnp.asarray([i % cfg.n_classes], jnp.int32) for i in range(n)]
+    return xs, conds
+
+
+# ----------------------------------------------------------------------
+# registry / validation
+# ----------------------------------------------------------------------
+
+def test_stepper_registry_and_validation(setup):
+    for name in ("emulated", "spmd"):
+        assert get_stepper_factory(name) is not None
+    with pytest.raises(KeyError):
+        get_stepper_factory("simulate")       # no numerics to serve
+    with pytest.raises(ValueError):
+        DiffusionServingEngine(_pipe(setup, rebalance_every=1))
+    with pytest.raises(ValueError):
+        DiffusionServingEngine(_pipe(setup), slots=0)
+    cfg = setup[0]
+    engine = DiffusionServingEngine(_pipe(setup), slots=2)
+    with pytest.raises(ValueError):           # one request = one image
+        engine.submit(jnp.zeros((2, cfg.latent_size, cfg.latent_size,
+                                 cfg.channels)), 0)
+
+
+# ----------------------------------------------------------------------
+# admission & refill order
+# ----------------------------------------------------------------------
+
+def test_admission_fifo_and_refill(setup):
+    cfg = setup[0]
+    engine = DiffusionServingEngine(_pipe(setup), slots=2)
+    xs, conds = _requests(cfg, 5)
+    reqs = [engine.submit(x, c) for x, c in zip(xs, conds)]
+    engine.run_to_completion()
+    assert len(engine.completed) == 5
+    # wave 1: FIFO into the lowest free slots
+    assert engine.rounds[0].admitted == [(0, 0), (1, 1)]
+    # refills: slots freed together are refilled FIFO, lowest slot first
+    waves = [r.admitted for r in engine.rounds if r.admitted]
+    assert waves == [[(0, 0), (1, 1)], [(2, 0), (3, 1)], [(4, 0)]]
+    # queueing is visible in per-request stats, in submission order
+    assert [r.queue_rounds for r in reqs] == pytest.approx(
+        [0, 0, reqs[2].queue_rounds, reqs[2].queue_rounds,
+         reqs[4].queue_rounds])
+    assert 0 < reqs[2].queue_rounds < reqs[4].queue_rounds
+
+
+# ----------------------------------------------------------------------
+# per-request step isolation: staggered admissions, bitwise parity
+# ----------------------------------------------------------------------
+
+def test_staggered_requests_bitwise_match_generate(setup):
+    """Requests admitted mid-flight share vmapped denoise dispatches with
+    requests several noise-schedule steps ahead; nobody's latent may change
+    by a single bit vs a lone generate() call."""
+    cfg = setup[0]
+    pipe = _pipe(setup)
+    engine = DiffusionServingEngine(pipe, slots=3)
+    xs, conds = _requests(cfg, 5)
+    reqs = [engine.submit(xs[i], conds[i]) for i in range(2)]
+    engine.step()
+    engine.step()       # wave 1 is past warmup now
+    reqs += [engine.submit(xs[i], conds[i]) for i in range(2, 5)]
+    engine.run_to_completion()
+    # the schedule genuinely mixed phases in one round (warmup lane admitted
+    # next to adaptive lanes), so isolation was actually exercised
+    assert any(r.warmup_lanes and r.adaptive_lanes for r in engine.rounds)
+    assert all(r.fine_step == 6 for r in engine.completed)
+    for i, req in enumerate(reqs):
+        ref = pipe.generate(xs[i], conds[i])
+        np.testing.assert_array_equal(np.asarray(req.image),
+                                      np.asarray(ref.image))
+
+
+def test_no_warmup_bootstrap_bitwise(setup):
+    """m_warmup == 0: admission bootstraps the stale-KV buffers with one
+    full forward (run_schedule's M_w==0 path) — still bitwise."""
+    cfg = setup[0]
+    pipe = _pipe(setup, m_base=4, m_warmup=0)
+    engine = DiffusionServingEngine(pipe, slots=2)
+    xs, conds = _requests(cfg, 3, seed=30)
+    reqs = [engine.submit(x, c) for x, c in zip(xs, conds)]
+    engine.run_to_completion()
+    for i, req in enumerate(reqs):
+        ref = pipe.generate(xs[i], conds[i])
+        np.testing.assert_array_equal(np.asarray(req.image),
+                                      np.asarray(ref.image))
+
+
+def test_generate_many_matches_generate(setup):
+    from repro.core.simulate import CostModel
+    cfg = setup[0]
+    pipe = _pipe(setup)
+    xs, conds = _requests(cfg, 3, seed=50)
+    results = pipe.generate_many(xs, conds, slots=2)
+    assert len(results) == 3
+    for x, c, res in zip(xs, conds, results):
+        ref = pipe.generate(x, c)
+        np.testing.assert_array_equal(np.asarray(res.image),
+                                      np.asarray(ref.image))
+        assert res.plan.patches == ref.plan.patches
+        assert res.latency_s is None          # no cost model configured
+    pipe_cm = _pipe(setup, cost_model=CostModel(t_fixed=1e-3, t_row=1e-3))
+    results = pipe_cm.generate_many(xs, conds, slots=2)
+    assert all(r.latency_s is not None and r.latency_s > 0 for r in results)
+
+
+# ----------------------------------------------------------------------
+# heterogeneous placement: deterministic, cost-model-driven
+# ----------------------------------------------------------------------
+
+def test_placement_deterministic_and_speed_ordered(setup):
+    cfg = setup[0]
+
+    def drain():
+        engine = DiffusionServingEngine(_pipe(setup), slots=3)
+        xs, conds = _requests(cfg, 4)
+        for x, c in zip(xs, conds):
+            engine.submit(x, c)
+        engine.run_to_completion()
+        return engine
+
+    a, b = drain(), drain()
+    pa = [r.placement for r in a.rounds]
+    pb = [r.placement for r in b.rounds]
+    assert pa == pb and any(p is not None for p in pa)
+    # largest patch -> fastest device (speeds [1.0, 0.5])
+    patches = a.plan.patches
+    placement = next(p for p in pa if p is not None)
+    w_big = max(range(len(patches)), key=lambda i: patches[i])
+    assert dict(placement)[w_big] == 0
+    # modeled accounting identical run-to-run
+    assert a.modeled_clock_s == b.modeled_clock_s
+
+
+# ----------------------------------------------------------------------
+# SLO accounting
+# ----------------------------------------------------------------------
+
+def test_slo_accounting(setup):
+    cfg = setup[0]
+    engine = DiffusionServingEngine(_pipe(setup), slots=2)
+    xs, conds = _requests(cfg, 2)
+    tight = engine.submit(xs[0], conds[0], slo_s=1e-9)
+    loose = engine.submit(xs[1], conds[1], slo_s=1e9)
+    engine.run_to_completion()
+    assert tight.slo_met is False and loose.slo_met is True
+    assert engine.stats()["slo_met_frac"] == 0.5
+    # no SLO -> no verdict
+    engine2 = DiffusionServingEngine(_pipe(setup), slots=2)
+    req = engine2.submit(xs[0], conds[0])
+    engine2.run_to_completion()
+    assert req.slo_met is None
+    assert engine2.stats()["slo_met_frac"] is None
+
+
+# ----------------------------------------------------------------------
+# end-to-end drain on tiny-dit
+# ----------------------------------------------------------------------
+
+def test_e2e_8_request_drain(setup):
+    cfg = setup[0]
+    engine = DiffusionServingEngine(_pipe(setup), slots=3)
+    xs, conds = _requests(cfg, 8, seed=80)
+    reqs = [engine.submit(x, c) for x, c in zip(xs, conds)]
+    done = engine.run_to_completion()
+    assert len(done) == len(engine.completed) == 8
+    assert {r.uid for r in done} == set(range(8))
+    for r in reqs:
+        assert r.done and r.fine_step == 6
+        assert np.isfinite(np.asarray(r.image)).all()
+        assert r.image.shape == (1, cfg.latent_size, cfg.latent_size,
+                                 cfg.channels)
+        assert r.modeled_latency_s > 0 and r.wall_latency_s > 0
+    # queued waves pay queueing latency on top of service latency
+    assert reqs[7].modeled_latency_s > reqs[0].modeled_latency_s
+    stats = engine.stats()
+    assert stats["n_completed"] == 8
+    assert stats["throughput_modeled_rps"] > 0
+    assert stats["throughput_wall_rps"] > 0
+    assert stats["latency_p95_s"] >= stats["latency_mean_s"] > 0
+    assert [r["uid"] for r in stats["requests"]] == list(range(8))
+
+
+# ----------------------------------------------------------------------
+# SPMD cohort stepper (real host devices, subprocess)
+# ----------------------------------------------------------------------
+
+def test_spmd_engine_matches_emulated():
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core import sampler as sampler_lib
+        from repro.core.pipeline import StadiConfig, StadiPipeline
+        from repro.models.diffusion import dit
+        from repro.serving import DiffusionServingEngine
+
+        cfg = get_config('tiny-dit').reduced()
+        params = dit.init_params(jax.random.PRNGKey(0), cfg)
+        sched = sampler_lib.linear_schedule(T=100)
+        config = StadiConfig.from_occupancies([0.0, 0.5], m_base=4,
+                                              m_warmup=2, backend='spmd')
+        pipe = StadiPipeline(cfg, params, sched, config)
+        emu = StadiPipeline(cfg, params, sched, dataclasses.replace(
+            config, backend='emulated'))
+        engine = DiffusionServingEngine(pipe, slots=2)
+        xs = [jax.random.normal(jax.random.PRNGKey(1 + i),
+                                (1, cfg.latent_size, cfg.latent_size,
+                                 cfg.channels)) for i in range(3)]
+        conds = [jnp.asarray([i], jnp.int32) for i in range(3)]
+        reqs = [engine.submit(x, c) for x, c in zip(xs, conds)]
+        engine.run_to_completion()
+        for i, r in enumerate(reqs):
+            ref = emu.generate(xs[i], conds[i])
+            a, b = np.asarray(r.image), np.asarray(ref.image)
+            err = float(np.linalg.norm(a - b) / np.linalg.norm(b))
+            assert err < 1e-3, (i, err)
+        print('SPMD_SERVE_OK')
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=520, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "SPMD_SERVE_OK" in r.stdout
