@@ -1,0 +1,145 @@
+"""Boundary-exchange policy sweep (DESIGN.md §10): modeled latency vs
+measured quality drift per exchange mode (sync / stale_async / predictive).
+
+Latency: the ``"simulate"`` pipeline backend replays the schedule IR for an
+SDXL-scale denoiser (sdxl-dit: DiT-XL/2-class staged K/V, ~8 MB per token
+row per boundary) on a 2-tier heterogeneous cluster — two nodes at
+effective speeds [1.0, 0.5] linked by commodity 10 GbE (1.25 GB/s), the
+cross-node heterogeneous deployment STADI targets. In that regime the
+interval boundary is communication-bound (the staged K/V broadcast exceeds
+the interval's compute), so skipping the exchange on E-1 of every E
+boundaries is a direct makespan win; the acceptance bar is >= 20% modeled
+reduction for stale_async vs sync.
+
+Quality: the emulated engine runs real numerics on tiny-dit (reduced) per
+mode and reports PSNR vs ``run_origin``. Untrained DiT params are
+adaLN-zero (eps would be buffer-independent), so the quality sweep
+de-degenerates them with small deterministic modulation weights — remote
+K/V then genuinely feeds attention and staleness genuinely drifts. The
+contract: every degraded mode stays within 1 dB of sync's PSNR.
+
+Writes results/exchange.json (CI artifact; ``--smoke`` runs 2 modes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core.pipeline import StadiConfig, StadiPipeline
+from repro.core.simulate import CostModel
+from repro.models.diffusion import dit
+
+# 2-tier heterogeneous cluster profile: fast node + half-speed node over
+# commodity 10 GbE; per-step costs in the DiT-XL/2 class (one full-image
+# denoiser eval ~ 40 ms on the fast node)
+OCCUPANCIES = [0.0, 0.5]
+CLUSTER_CM = CostModel(t_fixed=5e-3, t_row=5.5e-4,
+                       link_bw=1.25e9, link_latency=50e-6)
+M_BASE_LAT, M_WARMUP_LAT = 100, 4
+REFRESH = 2                       # one full refresh every 2 boundaries
+
+
+def nondegenerate_params(cfg, seed: int = 7):
+    """Untrained tiny-dit is adaLN-zero (eps ignores attention, so every
+    exchange mode would be trivially bitwise-identical); de-degenerate it
+    so staleness genuinely drifts (`dit.nondegenerate_params`)."""
+    return dit.nondegenerate_params(dit.init_params(jax.random.PRNGKey(0),
+                                                    cfg), seed)
+
+
+def modeled_latency(modes):
+    """Modeled makespan per exchange mode on the 2-tier cluster profile."""
+    cfg = get_config("sdxl-dit")
+    out = {}
+    base = StadiConfig.from_occupancies(
+        OCCUPANCIES, m_base=M_BASE_LAT, m_warmup=M_WARMUP_LAT,
+        backend="simulate", cost_model=CLUSTER_CM,
+        granularity=2)                      # paper's P_total=32 slab constraint
+    for mode in modes:
+        config = dataclasses.replace(base, exchange=mode,
+                                     exchange_refresh=REFRESH)
+        res = StadiPipeline(cfg, None, None, config).generate()
+        kinds = [e.exchange for e in res.trace.events if not e.synchronous]
+        out[mode] = {"latency_s": res.latency_s,
+                     "boundaries_full": kinds.count("full"),
+                     "boundaries_degraded": len(kinds) - kinds.count("full")}
+    for mode in modes:
+        out[mode]["reduction_vs_sync_pct"] = (
+            (1.0 - out[mode]["latency_s"] / out["sync"]["latency_s"]) * 100.0)
+    return out
+
+
+def quality(modes, m_base: int, m_warmup: int):
+    """PSNR vs run_origin per exchange mode, real numerics (emulated)."""
+    cfg = get_config("tiny-dit").reduced()
+    params = nondegenerate_params(cfg)
+    sched = sampler_lib.linear_schedule(T=100)
+    B = 2
+    x_T = jax.random.normal(jax.random.PRNGKey(1),
+                            (B, cfg.latent_size, cfg.latent_size,
+                             cfg.channels))
+    cond = jnp.arange(B, dtype=jnp.int32) % cfg.n_classes
+    origin = np.asarray(pp.run_origin(params, cfg, sched, x_T, cond, m_base))
+    out = {}
+    for mode in modes:
+        config = StadiConfig.from_occupancies(
+            OCCUPANCIES, m_base=m_base, m_warmup=m_warmup,
+            exchange=mode, exchange_refresh=REFRESH)
+        img = np.asarray(StadiPipeline(cfg, params, sched,
+                                       config).generate(x_T, cond).image)
+        out[mode] = {"psnr_vs_origin_db": common.psnr(img, origin)}
+    for mode in modes:
+        out[mode]["psnr_drift_vs_sync_db"] = (
+            out["sync"]["psnr_vs_origin_db"] - out[mode]["psnr_vs_origin_db"])
+    return out
+
+
+def run(emit: bool = True):
+    smoke = common.smoke()
+    modes = ["sync", "stale_async"] if smoke else \
+        ["sync", "stale_async", "predictive"]
+    lat = modeled_latency(modes)
+    qual = quality(modes, m_base=8 if smoke else 16,
+                   m_warmup=2 if smoke else 4)
+    for mode in modes:
+        if emit:
+            common.emit(f"exchange/{mode}/latency",
+                        lat[mode]["latency_s"] * 1e6,
+                        f"reduction={lat[mode]['reduction_vs_sync_pct']:.1f}%")
+            common.emit(f"exchange/{mode}/psnr",
+                        qual[mode]["psnr_vs_origin_db"],
+                        f"drift={qual[mode]['psnr_drift_vs_sync_db']:.2f}dB")
+    payload = {
+        "cluster": {"occupancies": OCCUPANCIES,
+                    "cost_model": dataclasses.asdict(CLUSTER_CM),
+                    "refresh_every": REFRESH},
+        "latency_arch": "sdxl-dit", "quality_arch": "tiny-dit(reduced)",
+        "latency": lat, "quality": qual,
+    }
+    common.write_json("exchange.json", payload)
+    return payload
+
+
+def main():
+    res = run()
+    lat, qual = res["latency"], res["quality"]
+    red = lat["stale_async"]["reduction_vs_sync_pct"]
+    print(f"# stale_async modeled reduction vs sync: {red:.1f}% "
+          f"(acceptance: >= 20%)")
+    for mode, q in qual.items():
+        print(f"# {mode}: PSNR {q['psnr_vs_origin_db']:.2f} dB "
+              f"(drift {q['psnr_drift_vs_sync_db']:+.2f} dB vs sync)")
+    assert red >= 20.0, (red, lat)
+    for mode, q in qual.items():
+        assert q["psnr_drift_vs_sync_db"] <= 1.0, (mode, qual)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ REGISTRY = [
     ("quality", "benchmarks.bench_quality", "paper Table II"),
     ("redundancy", "benchmarks.bench_redundancy", "paper Thm. 1/2"),
     ("beyond", "benchmarks.bench_beyond", "beyond-paper: tiers + reprofiling"),
+    ("exchange", "benchmarks.bench_exchange", "boundary-exchange modes, DESIGN §10"),
     ("roofline", "benchmarks.bench_roofline", "deliverable g"),
     ("serving", "benchmarks.bench_serving", "continuous batching, DESIGN §9"),
 ]

@@ -39,3 +39,39 @@ def merge(published: Published, pending: Dict[int, Tuple], step: int) -> Publish
         k = jax.lax.dynamic_update_slice_in_dim(k, kl.astype(k.dtype), start, axis=2)
         v = jax.lax.dynamic_update_slice_in_dim(v, vl.astype(v.dtype), start, axis=2)
     return Published(k, v, step)
+
+
+def extrapolation_factor(prev_step: int, last_step: int, fine_step: int) -> float:
+    """Linear-extrapolation coefficient for the "predict" exchange kind:
+    how far past the last full refresh the boundary at ``fine_step`` sits,
+    in units of the last refresh gap. Static per boundary (fine steps are
+    schedule structure), so SPMD bodies bake it in as a constant."""
+    gap = last_step - prev_step
+    if gap <= 0:
+        return 0.0
+    return (fine_step - last_step) / gap
+
+
+def extrapolate_arrays(last, prev, f: float):
+    """The Reuse-then-Predict rule on raw arrays: ``last + f*(last - prev)``
+    cast back to ``last``'s dtype. The ONE place the prediction formula
+    lives — the emulated engine, the SPMD body and the serving engine all
+    route through it, so the rule cannot drift between executors."""
+    return (last + f * (last - prev)).astype(last.dtype)
+
+
+def extrapolate(prev: "Published | None", last: Published,
+                fine_step: int) -> Published:
+    """Predict the remote K/V at ``fine_step`` from the last two exchanged
+    versions (Reuse-then-Predict). Until two refreshes have landed there is
+    nothing to difference, so fall back to stale reuse of ``last``. The
+    local region is overwritten with fresh K/V inside ``dit.forward_patch``
+    either way, so prediction only ever feeds the remote attention
+    context."""
+    if prev is None:
+        return last
+    f = extrapolation_factor(prev.step, last.step, fine_step)
+    if f == 0.0:
+        return last
+    return Published(extrapolate_arrays(last.k, prev.k, f),
+                     extrapolate_arrays(last.v, prev.v, f), last.step)

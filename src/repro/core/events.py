@@ -1,0 +1,213 @@
+"""Schedule IR: ONE generator lowers (TemporalPlan, patches, exchange
+policy) into a typed stream of interval events, and every executor is an
+interpreter of that stream (DESIGN.md §10).
+
+Before this module the STADI interval schedule (warmup -> LCM-sized adaptive
+intervals -> publish/merge) was re-implemented three times — the emulated
+engine (`patch_parallel.run_schedule`), the SPMD backend
+(`spmd.run_spmd` / `spmd.make_interval_step`) and the latency simulator
+(`simulate.build_trace`) — and the three copies could (and did) drift.
+Now :func:`lower` is the single source of schedule structure:
+
+    Warmup(m)             one synchronous full-image fine step
+    ComputeInterval(m0,R) R fine steps of stale-KV patch compute
+    Exchange(m, kind)     the interval boundary; ``kind`` comes from the
+                          :class:`repro.core.comm.BoundaryExchange` policy:
+                          "full" (latent all-gather + KV merge), "skip"
+                          (stale-async: no traffic, buffers stay stale) or
+                          "predict" (extrapolate remote K/V from the last
+                          two exchanged versions)
+    Replan(m, plan)       an online re-allocation took effect at boundary m
+
+Consumers either iterate the stream (``for ev in lower(...)``) or drive it
+as a coroutine: replying to an :class:`Exchange` event with a new
+``(TemporalPlan, patches)`` via ``gen.send`` makes the generator emit a
+:class:`Replan` event and continue lowering under the new allocation — this
+is how `run_schedule`'s online-rebalancing hook is expressed on the IR.
+
+The trace record types (:class:`IntervalEvent` / :class:`ExecutionTrace`)
+live here too: :func:`replay` converts any event stream into the records the
+latency simulator consumes, so `simulate.build_trace` and the trace
+`run_schedule` returns are produced by the SAME code path and can never
+disagree about which workers are active (an active-but-zero-patch device
+used to yield divergent traces).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+from repro.core import comm as comm_lib
+from repro.core.schedule import TemporalPlan
+
+
+# ----------------------------------------------------------------------
+# trace records (replayed by the latency simulator)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IntervalEvent:
+    """One executed interval: per-worker (sub-steps, patch rows) plus the
+    boundary-exchange kind that followed it ("full" / "skip" / "predict";
+    warmup steps are synchronous and always exchange in full)."""
+    fine_step: int                       # first fine step of the interval
+    substeps: List[int]                  # steps executed by each worker
+    patches: List[int]                   # token-rows per worker
+    synchronous: bool = False            # warmup intervals sync every layer
+    exchange: str = "full"               # boundary kind after this interval
+
+
+@dataclasses.dataclass
+class ExecutionTrace:
+    events: List[IntervalEvent]
+    plan: Optional[TemporalPlan]
+    patches: List[int]
+    n_tokens: int                        # full image tokens (comm sizing)
+    latent_bytes: int
+    kv_bytes_per_worker: List[int]
+
+
+# ----------------------------------------------------------------------
+# the IR event types
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Warmup:
+    """One synchronous fine step: every worker runs the full-image forward."""
+    fine_step: int
+    substeps: Tuple[int, ...]            # 1 for each active worker, else 0
+    patches: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeInterval:
+    """R = ``length`` fine steps of patch compute against stale buffers."""
+    fine_step: int                       # first fine step of the interval
+    length: int                          # fine steps in the interval (lcm)
+    substeps: Tuple[int, ...]            # length // ratio_i per active worker
+    ratios: Tuple[int, ...]
+    patches: Tuple[int, ...]
+
+    @property
+    def workers(self) -> List[int]:
+        return [i for i, s in enumerate(self.substeps) if s > 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Exchange:
+    """The boundary after a compute interval. ``kind`` is the policy verdict;
+    the final boundary of a run is always "full" (the image must assemble)."""
+    fine_step: int                       # first fine step AFTER the interval
+    kind: str                            # "full" | "skip" | "predict"
+    index: int                           # 0-based boundary counter
+    substeps: Tuple[int, ...]            # of the interval that just ended
+    patches: Tuple[int, ...]
+    last: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Replan:
+    """An online re-allocation (sent into the generator) took effect."""
+    fine_step: int
+    plan: TemporalPlan
+    patches: Tuple[int, ...]
+
+
+Event = object   # Warmup | ComputeInterval | Exchange | Replan
+
+
+def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
+    """The workers that actually execute: planned active AND own >=1 row."""
+    return [i for i in plan.active if patches[i] > 0]
+
+
+# ----------------------------------------------------------------------
+# lowering
+# ----------------------------------------------------------------------
+
+def lower(plan: TemporalPlan, patches: Sequence[int],
+          policy: Optional["comm_lib.BoundaryExchange"] = None
+          ) -> Iterator[Event]:
+    """Lower (plan, patches, exchange policy) into the event stream.
+
+    A coroutine-style generator: iterate it normally, or reply to an
+    :class:`Exchange` event with ``gen.send((new_plan, new_patches))`` to
+    re-allocate the remaining fine steps (the new plan's interval LCM must
+    divide them); the generator then emits a :class:`Replan` and continues.
+    """
+    policy = policy or comm_lib.get_exchange("sync")
+    patches = list(patches)
+    n = len(patches)
+    # fine steps count in ABSOLUTE coordinates of the original plan; a
+    # replanned TemporalPlan covers the remaining steps (its m_base is the
+    # remaining count) and only contributes ratios/activity from then on
+    m_base = plan.m_base
+    workers = active_workers(plan, patches)
+    for m in range(plan.m_warmup):
+        yield Warmup(m, tuple(1 if i in workers else 0 for i in range(n)),
+                     tuple(patches))
+    m0 = plan.m_warmup
+    boundary = 0
+    while m0 + plan.lcm <= m_base:
+        R = plan.lcm
+        workers = active_workers(plan, patches)
+        subs = tuple(R // plan.ratios[i] if i in workers else 0
+                     for i in range(n))
+        yield ComputeInterval(m0, R, subs, tuple(plan.ratios), tuple(patches))
+        m0 += R
+        last = m0 + plan.lcm > m_base
+        kind = "full" if last else policy.kind(boundary)
+        upd = yield Exchange(m0, kind, boundary, subs, tuple(patches), last)
+        boundary += 1
+        if upd is not None:
+            plan, patches = upd
+            patches = list(patches)
+            assert (m_base - m0) % plan.lcm == 0, (
+                "replanned LCM must divide the remaining fine steps",
+                m_base - m0, plan.lcm)
+            yield Replan(m0, plan, tuple(patches))
+
+
+# ----------------------------------------------------------------------
+# replay: event stream -> trace records / full ExecutionTrace
+# ----------------------------------------------------------------------
+
+def record(interval: ComputeInterval, kind: str) -> IntervalEvent:
+    """The trace record for one adaptive interval + its boundary kind."""
+    return IntervalEvent(interval.fine_step, list(interval.substeps),
+                         list(interval.patches), exchange=kind)
+
+
+def warmup_record(ev: Warmup) -> IntervalEvent:
+    return IntervalEvent(ev.fine_step, list(ev.substeps), list(ev.patches),
+                         synchronous=True)
+
+
+def replay(plan: TemporalPlan, patches: Sequence[int],
+           policy: Optional["comm_lib.BoundaryExchange"] = None
+           ) -> List[IntervalEvent]:
+    """Trace records of the whole schedule without executing any numerics —
+    the latency-only path (`simulate.build_trace`) and the numerics path
+    (`patch_parallel.run_schedule`) both derive their records from
+    :func:`lower`, so they are structurally identical by construction."""
+    out: List[IntervalEvent] = []
+    pending: Optional[ComputeInterval] = None
+    for ev in lower(plan, patches, policy):
+        if isinstance(ev, Warmup):
+            out.append(warmup_record(ev))
+        elif isinstance(ev, ComputeInterval):
+            pending = ev
+        elif isinstance(ev, Exchange):
+            out.append(record(pending, ev.kind))
+    return out
+
+
+def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
+               patches: Sequence[int], cfg, batch: int) -> ExecutionTrace:
+    """Byte-size provenance shared by every trace producer."""
+    H = cfg.latent_size
+    lat_bytes = int(batch * H * H * cfg.channels * 4)
+    kv_bytes = [int(2 * cfg.n_layers * batch * pr * cfg.tokens_per_side
+                    * cfg.d_model * 2) for pr in patches]
+    return ExecutionTrace(records, plan, list(patches), cfg.n_tokens,
+                          lat_bytes, kv_bytes)

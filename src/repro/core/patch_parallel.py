@@ -2,13 +2,17 @@
 
 Single-process EMULATION with exact numerics: N logical workers each own a
 row-slab of the latent; stale-KV semantics follow DESIGN.md §2 (buffers are
-carried state; async NCCL broadcast == merge-at-next-sync). The engine also
-produces an :class:`ExecutionTrace` that the latency simulator replays
-against per-device speeds — so quality numerics and latency modeling come
-from the SAME schedule object.
+carried state; async NCCL broadcast == merge-at-next-sync). The engine is an
+*interpreter* of the schedule IR (:mod:`repro.core.events`): one event
+stream drives the numerics here, the SPMD backend (core/spmd.py) and the
+latency simulator (core/simulate.py), so schedule semantics cannot drift
+between them (DESIGN.md §10).
 
-The SPMD shard_map path (real devices) lives in launch/stadi_infer.py and
-reuses this module's schedule logic.
+Boundary exchange is a pluggable policy (:mod:`repro.core.comm`):
+``sync`` merges fresh K/V at every interval boundary (bitwise-identical to
+the pre-policy engine), ``stale_async`` skips the exchange on a cadence and
+denoises against staler neighbor slabs, ``predictive`` extrapolates the
+remote K/V from the last two exchanged versions.
 """
 from __future__ import annotations
 
@@ -21,29 +25,15 @@ import jax.numpy as jnp
 
 from repro.configs.diffusion import DiTConfig
 from repro.core import buffers as buf_lib
+from repro.core import comm as comm_lib
+from repro.core import events as ir
 from repro.core import sampler as sampler_lib
+# re-exported for backward compatibility: these trace types now live in the
+# IR module (events.py) next to the stream that produces them
+from repro.core.events import ExecutionTrace, IntervalEvent  # noqa: F401
 from repro.core.sampler import NoiseSchedule
 from repro.core.schedule import TemporalPlan, patch_bounds
 from repro.models.diffusion import dit
-
-
-@dataclasses.dataclass
-class IntervalEvent:
-    """One sync interval: per-worker (sub-steps executed, patch rows)."""
-    fine_step: int                       # first fine step of the interval
-    substeps: List[int]                  # steps executed by each worker
-    patches: List[int]                   # token-rows per worker
-    synchronous: bool = False            # warmup intervals sync every layer
-
-
-@dataclasses.dataclass
-class ExecutionTrace:
-    events: List[IntervalEvent]
-    plan: Optional[TemporalPlan]
-    patches: List[int]
-    n_tokens: int                        # full image tokens (comm sizing)
-    latent_bytes: int
-    kv_bytes_per_worker: List[int]
 
 
 @dataclasses.dataclass
@@ -73,8 +63,9 @@ def _jit_full_step(params, cfg, x, t, cond):
 
 def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                  plan: TemporalPlan, patches: Sequence[int],
-                 interval_hook=None) -> RunResult:
-    """Execute Algorithm 1 given a temporal plan + spatial allocation.
+                 interval_hook=None, exchange: str = "sync",
+                 exchange_refresh: int = 2) -> RunResult:
+    """Execute Algorithm 1 by interpreting the schedule IR event stream.
 
     patches: token-rows per worker (sum == cfg.tokens_per_side; 0 = excluded).
     Uniform plan (all ratios 1, equal patches) == DistriFusion patch
@@ -86,80 +77,102 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     online-rebalancing hot path used by :class:`repro.core.pipeline.
     StadiPipeline`. The remaining fine steps must be divisible by the new
     plan's interval LCM.
+
+    exchange / exchange_refresh: boundary-exchange policy name + refresh
+    cadence (see :func:`repro.core.comm.get_exchange`). "sync" reproduces
+    the pre-policy engine bitwise.
     """
     p = cfg.patch_size
-    M_base, M_w = plan.m_base, plan.m_warmup
+    M_base = plan.m_base
     plan0, patches0 = plan, list(patches)  # trace provenance: the initial
     # allocation; per-interval events record what actually executed
     ts = sampler_lib.ddim_timesteps(sched.T, M_base)   # fine grid, len M_base+1
-    workers = [i for i in plan.active if patches[i] > 0]
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
 
     x = x_T
     B = x.shape[0]
-    events: List[IntervalEvent] = []
+    records: List[IntervalEvent] = []
 
-    # ---------------- warmup: synchronous steps (== exact full forward) ----
-    published = None
-    for m in range(M_w):
-        eps, kvs = _jit_full_step(params, cfg, x, ts[m], cond)
-        x = sampler_lib.ddim_step(sched, x, eps, ts[m], ts[m + 1])
-        published = buf_lib.Published(kvs[0], kvs[1], m)
-        events.append(IntervalEvent(m, [1 if i in workers else 0
-                                        for i in range(len(patches))],
-                                    list(patches), synchronous=True))
-    if published is None:                # M_w == 0: bootstrap buffers once
-        _, kvs = _jit_full_step(params, cfg, x, ts[0], cond)
-        published = buf_lib.Published(kvs[0], kvs[1], -1)
+    published: Optional[buf_lib.Published] = None   # last fully-exchanged K/V
+    prev_published: Optional[buf_lib.Published] = None
+    read_pub: Optional[buf_lib.Published] = None    # what substeps attend to
+    pending = {}
+    new_slabs = {}
+    interval: Optional[ir.ComputeInterval] = None
 
-    # ---------------- adaptive loop: intervals of R fine steps -------------
-    m0 = M_w
-    while m0 + plan.lcm <= M_base:
-        R = plan.lcm                      # fine steps per interval
-        bounds_tok = patch_bounds(patches)
-        bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
-        workers = [i for i in plan.active if patches[i] > 0]
-        pending = {}
-        new_slabs = {}
-        for i in workers:
-            r = plan.ratios[i]
-            sub = R // r                  # sub-steps this worker runs
-            lat = bounds_lat[i]
-            x_loc = _slab(x, lat)
-            for s in range(sub):
-                t_from = ts[m0 + s * r]
-                t_to = ts[m0 + (s + 1) * r]
-                eps, kvs = _jit_patch_step(
-                    params, cfg, x_loc, t_from, cond, bounds_tok[i][0],
-                    published.k, published.v)
-                x_loc = sampler_lib.ddim_step(sched, x_loc, eps, t_from, t_to)
-                if s == 0:   # Alg.1 l.16-17 / l.23: publish at interval start
-                    buf_lib.publish_local(pending, i, kvs[0], kvs[1],
-                                          bounds_tok[i][0] * cfg.tokens_per_side)
-            new_slabs[i] = x_loc
-        # interval boundary: sync all-gather of x + buffer merge
-        for i in workers:
-            lat = bounds_lat[i]
-            x = x.at[:, lat[0]:lat[1]].set(new_slabs[i])
-        published = buf_lib.merge(published, pending, m0 + R)
-        ev = IntervalEvent(m0, [R // plan.ratios[i] if i in workers else 0
-                                for i in range(len(patches))],
-                           list(patches))
-        events.append(ev)
-        m0 += R
-        if interval_hook is not None and m0 < M_base:
-            upd = interval_hook(m0, ev)
-            if upd is not None:
-                plan, patches = upd
-                assert (M_base - m0) % plan.lcm == 0, (
-                    "replanned LCM must divide the remaining fine steps",
-                    M_base - m0, plan.lcm)
+    gen = ir.lower(plan, patches, policy)
+    send = None
+    while True:
+        try:
+            ev = gen.send(send)
+        except StopIteration:
+            break
+        send = None
 
-    H = cfg.latent_size
-    n_tokens = cfg.n_tokens
-    lat_bytes = int(B * H * H * cfg.channels * 4)
-    kv_bytes = [int(2 * cfg.n_layers * B * pr * cfg.tokens_per_side
-                    * cfg.d_model * 2) for pr in patches0]
-    trace = ExecutionTrace(events, plan0, patches0, n_tokens, lat_bytes, kv_bytes)
+        if isinstance(ev, ir.Warmup):
+            # synchronous step == exact full forward on every worker
+            eps, kvs = _jit_full_step(params, cfg, x, ts[ev.fine_step], cond)
+            x = sampler_lib.ddim_step(sched, x, eps, ts[ev.fine_step],
+                                      ts[ev.fine_step + 1])
+            published = buf_lib.Published(kvs[0], kvs[1], ev.fine_step)
+            read_pub = published
+            records.append(ir.warmup_record(ev))
+
+        elif isinstance(ev, ir.ComputeInterval):
+            if published is None:        # M_w == 0: bootstrap buffers once
+                _, kvs = _jit_full_step(params, cfg, x, ts[0], cond)
+                published = buf_lib.Published(kvs[0], kvs[1], -1)
+                read_pub = published
+            interval = ev
+            bounds_tok = patch_bounds(ev.patches)
+            bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
+            pending = {}
+            new_slabs = {}
+            for i in ev.workers:
+                r = ev.ratios[i]
+                x_loc = _slab(x, bounds_lat[i])
+                for s in range(ev.substeps[i]):
+                    t_from = ts[ev.fine_step + s * r]
+                    t_to = ts[ev.fine_step + (s + 1) * r]
+                    eps, kvs = _jit_patch_step(
+                        params, cfg, x_loc, t_from, cond, bounds_tok[i][0],
+                        read_pub.k, read_pub.v)
+                    x_loc = sampler_lib.ddim_step(sched, x_loc, eps,
+                                                  t_from, t_to)
+                    if s == 0:   # Alg.1 l.16-17 / l.23: publish at interval start
+                        buf_lib.publish_local(pending, i, kvs[0], kvs[1],
+                                              bounds_tok[i][0]
+                                              * cfg.tokens_per_side)
+                new_slabs[i] = x_loc
+
+        elif isinstance(ev, ir.Exchange):
+            # every worker's slab write-back is local memory (disjoint rows);
+            # the policy only gates the REMOTE traffic: K/V merge + gather
+            bounds_lat = [(a * p, b * p) for a, b in
+                          patch_bounds(ev.patches)]
+            for i in interval.workers:
+                lat = bounds_lat[i]
+                x = x.at[:, lat[0]:lat[1]].set(new_slabs[i])
+            if ev.kind == "full":
+                prev_published = published
+                published = buf_lib.merge(published, pending, ev.fine_step)
+                read_pub = published
+            elif ev.kind == "skip":
+                read_pub = published     # stale: pending never broadcast
+            elif ev.kind == "predict":
+                read_pub = buf_lib.extrapolate(prev_published, published,
+                                               ev.fine_step)
+            rec = ir.record(interval, ev.kind)
+            records.append(rec)
+            if interval_hook is not None and ev.fine_step < M_base:
+                upd = interval_hook(ev.fine_step, rec)
+                if upd is not None:
+                    send = upd           # generator emits Replan + re-lowers
+
+        # ir.Replan events need no numerics: the next ComputeInterval
+        # already carries the new patches/ratios
+
+    trace = ir.make_trace(records, plan0, patches0, cfg, int(B))
     return RunResult(x, trace)
 
 

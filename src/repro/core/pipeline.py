@@ -55,6 +55,11 @@ class StadiConfig:
     # strategy selection
     planner: str = "stadi"
     backend: str = "emulated"
+    # boundary-exchange policy (DESIGN.md §10): "sync" | "stale_async" |
+    # "predictive"; exchange_refresh = E => one corrective full refresh
+    # every E interval boundaries (ignored by "sync")
+    exchange: str = "sync"
+    exchange_refresh: int = 2
     # latency modeling ("simulate" backend; also latency reporting elsewhere)
     cost_model: Optional[CostModel] = None
     # online rebalancing (beyond-paper, DESIGN.md §7.1)
@@ -173,7 +178,9 @@ def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
                       interval_hook=None):
     res = pp.run_schedule(params, model_cfg, sched, x_T, cond,
                           plan.temporal, plan.patches,
-                          interval_hook=interval_hook)
+                          interval_hook=interval_hook,
+                          exchange=config.exchange,
+                          exchange_refresh=config.exchange_refresh)
     return res.image, res.trace
 
 
@@ -184,9 +191,13 @@ def spmd_executor(params, model_cfg, sched, x_T, cond, plan, config,
     # non-emulated backends (the shard_map program is static)
     from repro.core import spmd
     img = spmd.run_spmd(params, model_cfg, sched, x_T, cond,
-                        plan.temporal, plan.patches)
+                        plan.temporal, plan.patches,
+                        exchange=config.exchange,
+                        exchange_refresh=config.exchange_refresh)
     trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
-                            batch=int(x_T.shape[0]))
+                            batch=int(x_T.shape[0]),
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh)
     return img, trace
 
 
@@ -194,7 +205,9 @@ def spmd_executor(params, model_cfg, sched, x_T, cond, plan, config,
 def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
                       interval_hook=None):
     batch = int(x_T.shape[0]) if x_T is not None else 1
-    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg, batch=batch)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=batch, exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh)
     return None, trace
 
 
@@ -213,6 +226,8 @@ class StadiPipeline:
         self.config = config
         get_planner(config.planner)      # fail fast on typos
         get_executor(config.backend)
+        from repro.core.comm import get_exchange
+        get_exchange(config.exchange, config.exchange_refresh)
 
     @property
     def p_total(self) -> int:
@@ -275,7 +290,9 @@ class StadiPipeline:
         reqs = [engine.submit(x, c) for x, c in zip(x_Ts, conds)]
         engine.run_to_completion()
         trace = sim.build_trace(engine.plan.temporal, engine.plan.patches,
-                                self.model_cfg, batch=1)
+                                self.model_cfg, batch=1,
+                                exchange=self.config.exchange,
+                                exchange_refresh=self.config.exchange_refresh)
         report_latency = self.config.cost_model is not None
         return [PipelineResult(r.image, trace, engine.plan,
                                r.modeled_latency_s if report_latency else None)

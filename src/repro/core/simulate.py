@@ -13,41 +13,45 @@ paper's own Fig. 9 observation — "single-step delay no longer maintains a
 linear relationship with the patch size due to some fixed overhead" — is the
 t_fixed term.
 
-Communication: sync all-gather of x at every interval boundary (bytes =
-latent slab sizes) + warmup per-layer activation sync; async KV broadcasts
-are overlapped with compute (DistriFusion masking) and only charged when
-they exceed the interval's compute time.
+Communication (DESIGN.md §10): boundary cost depends on each event's
+exchange kind. "full" charges the uneven latent all-gather (per-worker
+padded-slab wire bytes, NOT the full image — each worker only contributes
+its own slab) plus link latency, with async KV publication masked by
+compute (DistriFusion overlap) and only the excess charged. "skip" and
+"predict" boundaries move no bytes at all (prediction is local compute),
+which is exactly the modeled saving of the stale_async / predictive
+policies. Warmup steps add the per-step staged activation sync.
+
+The trace itself is no longer built here by a duplicated schedule loop:
+:func:`build_trace` replays the SAME event stream
+(:func:`repro.core.events.replay`) the execution engines interpret, so
+latency modeling can never disagree with the numerics about schedule
+structure.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Sequence
 
-from repro.core.patch_parallel import ExecutionTrace, IntervalEvent
+from repro.core import comm as comm_lib
+from repro.core import events as ir
+from repro.core.events import ExecutionTrace, IntervalEvent  # noqa: F401
 
 
-def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1) -> ExecutionTrace:
+def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
+                exchange: str = "sync",
+                exchange_refresh: int = 2) -> ExecutionTrace:
     """Schedule trace without running numerics (latency-only replay).
 
-    Mirrors the events :func:`repro.core.patch_parallel.run_schedule` would
-    emit for (plan, patches); the ``"simulate"`` pipeline backend replays it
-    against a :class:`CostModel` instead of executing the denoiser.
+    Replays :func:`repro.core.events.lower` for (plan, patches, policy) —
+    the identical stream :func:`repro.core.patch_parallel.run_schedule`
+    interprets — and converts it to trace records; the ``"simulate"``
+    pipeline backend replays the result against a :class:`CostModel`
+    instead of executing the denoiser.
     """
-    R = plan.lcm
-    F = plan.m_base - plan.m_warmup
-    events = [IntervalEvent(m, [1 if not e else 0 for e in plan.excluded],
-                            list(patches), synchronous=True)
-              for m in range(plan.m_warmup)]
-    for it in range(F // R):
-        events.append(IntervalEvent(plan.m_warmup + it * R,
-                                    [R // r if r else 0 for r in plan.ratios],
-                                    list(patches)))
-    H = cfg.latent_size
-    lat_bytes = int(batch * H * H * cfg.channels * 4)
-    kv_bytes = [int(2 * cfg.n_layers * batch * pr * cfg.tokens_per_side
-                    * cfg.d_model * 2) for pr in patches]
-    return ExecutionTrace(events, plan, list(patches), cfg.n_tokens,
-                          lat_bytes, kv_bytes)
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
+    records = ir.replay(plan, patches, policy)
+    return ir.make_trace(records, plan, list(patches), cfg, batch)
 
 
 @dataclasses.dataclass
@@ -72,24 +76,52 @@ def fit_cost_model(rows: Sequence[int], times: Sequence[float], **kw) -> CostMod
     return CostModel(t_fixed=t_fixed, t_row=max(t_row, 1e-9), **kw)
 
 
+def _kv_bytes_per_row(trace: ExecutionTrace) -> float:
+    """Staged-K/V wire bytes per token row, derived from the trace's initial
+    allocation so post-replan events are charged for their ACTUAL slabs."""
+    for b, p in zip(trace.kv_bytes_per_worker, trace.patches):
+        if p > 0:
+            return b / p
+    return 0.0
+
+
 def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
                    cm: CostModel) -> float:
     """End-to-end makespan (s) of a schedule on devices with given speeds."""
     total = 0.0
+    kv_row = _kv_bytes_per_row(trace)
     for ev in trace.events:
         compute = 0.0
+        parts: List[int] = []            # workers that actually exchanged
         for i, (sub, rows) in enumerate(zip(ev.substeps, ev.patches)):
             if sub == 0 or rows == 0:
                 continue
+            parts.append(i)
             compute = max(compute, sub * cm.step_time(rows, speeds[i]))
-        # interval-boundary sync all-gather of x (+ staged KV for warmup sync)
-        comm_bytes = trace.latent_bytes
+        total_rows = max(sum(ev.patches), 1)
+        row_bytes = trace.latent_bytes / total_rows
+        # uneven all-gather of x: per-worker padded slab wire bytes — a lone
+        # worker (or an all-skip boundary) moves nothing
+        gather_rows = comm_lib.uneven_all_gather_rows(
+            [ev.patches[i] for i in parts])
         if ev.synchronous:
-            comm_bytes += sum(trace.kv_bytes_per_worker)   # per-step activation sync
-        comm = comm_bytes / cm.link_bw + cm.link_latency
+            # warmup: per-step activation sync (staged K/V) + latent slabs
+            comm_bytes = gather_rows * row_bytes
+            if len(parts) > 1:
+                comm_bytes += sum(kv_row * ev.patches[i] for i in parts)
+                total += compute + comm_bytes / cm.link_bw + cm.link_latency
+            else:
+                total += compute
+            continue
+        kind = ev.exchange
+        if kind != "full" or len(parts) <= 1:
+            # stale/predictive boundary (or nothing to exchange): pure
+            # compute — no gather, no KV broadcast, no link latency
+            total += compute
+            continue
+        comm = gather_rows * row_bytes / cm.link_bw + cm.link_latency
         # async KV publication is masked by compute; charge only the excess
-        async_bytes = max((trace.kv_bytes_per_worker[i]
-                           for i, s in enumerate(ev.substeps) if s), default=0)
+        async_bytes = max(kv_row * ev.patches[i] for i in parts)
         async_t = async_bytes / cm.link_bw
         total += max(compute, async_t) + comm
     return total

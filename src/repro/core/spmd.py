@@ -8,6 +8,15 @@ SPMD lockstep with per-device activity masks — a no-op substep costs what it
 costs on the slow device, the TPU analogue of the paper's per-GPU step
 skipping. Set ``STADI_HOST_DEVICES=N`` (before importing jax) for N CPU host
 devices.
+
+The shard_map body is GENERATED from the schedule IR (DESIGN.md §10): the
+event stream of :func:`repro.core.events.lower` — the same one the emulated
+engine interprets — unrolls statically into the traced program, so the
+warmup / interval / merge structure exists in exactly one place. Boundary
+exchange follows the event kinds: "full" gathers the latent and merges
+fresh K/V, "skip" keeps buffers stale (the gather of disjoint slabs is
+numerically transparent and modeled as free), "predict" extrapolates the
+published K/V from the last two full exchanges with a static coefficient.
 """
 from __future__ import annotations
 
@@ -16,6 +25,9 @@ from typing import Sequence
 import numpy as np
 
 from repro.configs.diffusion import DiTConfig
+from repro.core import buffers as buf_lib
+from repro.core import comm as comm_lib
+from repro.core import events as ir
 from repro.core.sampler import NoiseSchedule
 from repro.core.schedule import TemporalPlan
 
@@ -50,19 +62,24 @@ def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
 
 
 def _gather_and_merge(cfg: DiTConfig, patches, row_starts, my_slab,
-                      fresh_k, fresh_v, pub_k, pub_v):
+                      fresh_k, fresh_v, pub_k, pub_v, merge_kv: bool = True):
     """Interval boundary: uneven all-gathers (padded strategy) rebuild the
-    full latent, and every device's fresh K/V valid prefix is merged into
-    the (scratch-padded) published buffers."""
+    full latent; with ``merge_kv`` every device's fresh K/V valid prefix is
+    merged into the (scratch-padded) published buffers. ``merge_kv=False``
+    is the "skip" exchange kind: slabs are disjoint so the latent gather is
+    numerically transparent (and modeled as free), while the K/V buffers
+    deliberately stay stale."""
     import jax
     import jax.numpy as jnp
 
     p, wp, N = cfg.patch_size, cfg.tokens_per_side, len(patches)
     slabs = jax.lax.all_gather(my_slab, "dev")        # [N,B,Pmax*p,W,C]
-    gk = jax.lax.all_gather(fresh_k, "dev")           # [N,L,B,Nl_max,H,hd]
-    gv = jax.lax.all_gather(fresh_v, "dev")
     parts = [slabs[i, :, :patches[i] * p] for i in range(N) if patches[i]]
     x_full = jnp.concatenate(parts, axis=1)
+    if not merge_kv:
+        return x_full, pub_k, pub_v
+    gk = jax.lax.all_gather(fresh_k, "dev")           # [N,L,B,Nl_max,H,hd]
+    gv = jax.lax.all_gather(fresh_v, "dev")
     for i in range(N):                         # static merge, valid prefixes
         sz = patches[i] * wp
         if sz == 0:
@@ -75,8 +92,23 @@ def _gather_and_merge(cfg: DiTConfig, patches, row_starts, my_slab,
     return x_full, pub_k, pub_v
 
 
+def _static_layout(cfg: DiTConfig, patches: Sequence[int]):
+    """Shared static slab layout for the SPMD bodies."""
+    import jax.numpy as jnp
+
+    p = cfg.patch_size
+    wp = cfg.tokens_per_side
+    Pmax = max(patches)
+    row_starts = np.concatenate([[0], np.cumsum(patches)[:-1]]).astype(np.int32)
+    return dict(p=p, wp=wp, Pmax=Pmax, Nl_max=Pmax * wp,
+                row_starts=row_starts,
+                rows_arr=jnp.asarray(patches, jnp.int32),
+                starts_arr=jnp.asarray(row_starts, jnp.int32))
+
+
 def make_interval_step(cfg: DiTConfig, sched: NoiseSchedule,
-                       plan: TemporalPlan, patches: Sequence[int]):
+                       plan: TemporalPlan, patches: Sequence[int],
+                       exchange_kind: str = "full"):
     """Round-granular SPMD: one jitted shard_map call per adaptive interval.
 
     Returns ``fn(params, x_full [B,H,W,C], cond [B], pub_k, pub_v
@@ -87,6 +119,12 @@ def make_interval_step(cfg: DiTConfig, sched: NoiseSchedule,
     the host between calls, so the diffusion serving engine can interleave
     many request cohorts across rounds (DESIGN.md §9); stale-KV buffers are
     scratch-padded on entry and sliced back to ``cfg.n_tokens`` on exit.
+
+    ``exchange_kind`` selects the boundary behavior of this compiled
+    variant: "full" merges fresh K/V at the end of the interval, "skip"
+    leaves the published buffers untouched (stale-async; the caller decides
+    per boundary which variant to invoke — predictive callers extrapolate
+    the buffers host-side and invoke the "skip" variant).
     """
     import jax
     import jax.numpy as jnp
@@ -95,18 +133,15 @@ def make_interval_step(cfg: DiTConfig, sched: NoiseSchedule,
     from repro.core import sampler as sampler_lib
     from repro.core.comm import shard_map_compat
 
+    if exchange_kind not in ("full", "skip"):
+        raise ValueError(f"make_interval_step compiles 'full' or 'skip' "
+                         f"variants, not {exchange_kind!r}")
     devices = jax.devices()
     N = len(patches)
     assert N <= len(devices), (N, len(devices))
     mesh = Mesh(np.asarray(devices[:N]), ("dev",))
 
-    p = cfg.patch_size
-    wp = cfg.tokens_per_side
-    Pmax = max(patches)
-    Nl_max = Pmax * wp
-    row_starts = np.concatenate([[0], np.cumsum(patches)[:-1]]).astype(np.int32)
-    rows_arr = jnp.asarray(patches, jnp.int32)
-    starts_arr = jnp.asarray(row_starts, jnp.int32)
+    lay = _static_layout(cfg, patches)
     ratios = [r if r else 1 for r in plan.ratios]
     ratios_arr = jnp.asarray(ratios, jnp.int32)
     ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
@@ -114,22 +149,23 @@ def make_interval_step(cfg: DiTConfig, sched: NoiseSchedule,
 
     def body(params, x_full, cond, pub_k, pub_v, m0):
         idx = jax.lax.axis_index("dev")
-        my_rows = rows_arr[idx]
-        my_start = starts_arr[idx]
+        my_rows = lay["rows_arr"][idx]
+        my_start = lay["starts_arr"][idx]
         my_ratio = ratios_arr[idx]
-        my_tok = my_rows * wp
-        pad = [(0, 0), (0, 0), (0, Nl_max), (0, 0), (0, 0)]
+        my_tok = my_rows * lay["wp"]
+        pad = [(0, 0), (0, 0), (0, lay["Nl_max"]), (0, 0), (0, 0)]
         pub_k = jnp.pad(pub_k, pad)               # scratch-padded buffers
         pub_v = jnp.pad(pub_v, pad)
-        x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
-        my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p, Pmax * p,
-                                               axis=1)
+        x_pad = jnp.pad(x_full, ((0, 0), (0, lay["Pmax"] * lay["p"]),
+                                 (0, 0), (0, 0)))
+        my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * lay["p"],
+                                               lay["Pmax"] * lay["p"], axis=1)
         my_slab, fresh_k, fresh_v = _run_substeps(
             params, cfg, sched, ts, plan.m_base, R, my_slab, cond,
             pub_k, pub_v, my_start, my_tok, my_ratio, m0)
         x_full, pub_k, pub_v = _gather_and_merge(
-            cfg, patches, row_starts, my_slab, fresh_k, fresh_v,
-            pub_k, pub_v)
+            cfg, patches, lay["row_starts"], my_slab, fresh_k, fresh_v,
+            pub_k, pub_v, merge_kv=(exchange_kind == "full"))
         return x_full, pub_k[:, :, :cfg.n_tokens], pub_v[:, :, :cfg.n_tokens]
 
     fn = shard_map_compat(body, mesh, (P(),) * 6, (P(), P(), P()))
@@ -137,8 +173,16 @@ def make_interval_step(cfg: DiTConfig, sched: NoiseSchedule,
 
 
 def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
-             plan: TemporalPlan, patches: Sequence[int]):
-    """shard_map STADI across jax.devices(). Returns final image [B,H,W,C]."""
+             plan: TemporalPlan, patches: Sequence[int],
+             exchange: str = "sync", exchange_refresh: int = 2):
+    """shard_map STADI across jax.devices(). Returns final image [B,H,W,C].
+
+    The body is generated by statically unrolling the schedule IR event
+    stream — one :class:`~repro.core.events.Warmup` per synchronous step,
+    one ``_run_substeps`` per :class:`~repro.core.events.ComputeInterval`,
+    and per :class:`~repro.core.events.Exchange` a boundary whose collective
+    traffic follows the event's kind.
+    """
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh, PartitionSpec as P
@@ -146,57 +190,88 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     from repro.core import sampler as sampler_lib
     from repro.models.diffusion import dit
 
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
+    evs = list(ir.lower(plan, patches, policy))
+
     devices = jax.devices()
     N = len(patches)
     assert N <= len(devices), (N, len(devices))
     mesh = Mesh(np.asarray(devices[:N]), ("dev",))
 
-    p = cfg.patch_size
-    wp = cfg.tokens_per_side
-    Pmax = max(patches)
-    Nl_max = Pmax * wp
-    row_starts = np.concatenate([[0], np.cumsum(patches)[:-1]]).astype(np.int32)
-    rows_arr = jnp.asarray(patches, jnp.int32)
-    starts_arr = jnp.asarray(row_starts, jnp.int32)
+    lay = _static_layout(cfg, patches)
     ratios = [r if r else 1 for r in plan.ratios]
     ratios_arr = jnp.asarray(ratios, jnp.int32)
     ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
-    M_w, R = plan.m_warmup, plan.lcm
-    F = plan.m_base - M_w
+    buf_pad = [(0, 0), (0, 0), (0, lay["Nl_max"]), (0, 0), (0, 0)]
+
+    def _reslice(x_full, my_start):
+        x_pad = jnp.pad(x_full, ((0, 0), (0, lay["Pmax"] * lay["p"]),
+                                 (0, 0), (0, 0)))
+        return jax.lax.dynamic_slice_in_dim(x_pad, my_start * lay["p"],
+                                            lay["Pmax"] * lay["p"], axis=1)
 
     def body(params, x_full, cond):
         idx = jax.lax.axis_index("dev")
-        my_rows = rows_arr[idx]
-        my_start = starts_arr[idx]
+        my_rows = lay["rows_arr"][idx]
+        my_start = lay["starts_arr"][idx]
         my_ratio = ratios_arr[idx]
-        my_tok = my_rows * wp
+        my_tok = my_rows * lay["wp"]
 
-        # ---- warmup: synchronous == full-image forward on every device ----
-        pub_k = pub_v = None
-        for m in range(M_w):
-            eps, kvs = dit.forward_patch(params, cfg, x_full, ts[m], cond, 0,
-                                         buffers=None, return_kv=True)
-            x_full = sampler_lib.ddim_step(sched, x_full, eps, ts[m], ts[m + 1])
-            pub_k, pub_v = kvs
-        pad = [(0, 0), (0, 0), (0, Nl_max), (0, 0), (0, 0)]
-        pub_k = jnp.pad(pub_k, pad)               # scratch-padded buffers
-        pub_v = jnp.pad(pub_v, pad)
+        pub_k = pub_v = None          # last fully-exchanged K/V (padded)
+        prev_k = prev_v = None        # the exchange before that (predictive)
+        read_k = read_v = None        # what the substeps attend to
+        my_slab = fresh_k = fresh_v = None
+        m_prev, m_last = None, None   # static fine steps of those exchanges
 
-        # pad x so every device can slice a Pmax slab
-        x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
-        my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p, Pmax * p, axis=1)
+        for ev in evs:
+            if isinstance(ev, ir.Warmup):
+                # synchronous == full-image forward on every device
+                eps, kvs = dit.forward_patch(
+                    params, cfg, x_full, ts[ev.fine_step], cond, 0,
+                    buffers=None, return_kv=True)
+                x_full = sampler_lib.ddim_step(sched, x_full, eps,
+                                               ts[ev.fine_step],
+                                               ts[ev.fine_step + 1])
+                pub_k, pub_v = kvs
+                m_last = ev.fine_step
 
-        for it in range(F // R):
-            m0 = M_w + it * R
-            my_slab, fresh_k, fresh_v = _run_substeps(
-                params, cfg, sched, ts, plan.m_base, R, my_slab, cond,
-                pub_k, pub_v, my_start, my_tok, my_ratio, m0)
-            x_full, pub_k, pub_v = _gather_and_merge(
-                cfg, patches, row_starts, my_slab, fresh_k, fresh_v,
-                pub_k, pub_v)
-            x_pad = jnp.pad(x_full, ((0, 0), (0, Pmax * p), (0, 0), (0, 0)))
-            my_slab = jax.lax.dynamic_slice_in_dim(x_pad, my_start * p,
-                                                   Pmax * p, axis=1)
+            elif isinstance(ev, ir.ComputeInterval):
+                if my_slab is None:   # entering the adaptive phase
+                    if pub_k is None:             # M_w == 0: bootstrap once
+                        _, kvs = dit.forward_patch(
+                            params, cfg, x_full, ts[0], cond, 0,
+                            buffers=None, return_kv=True)
+                        pub_k, pub_v = kvs
+                        m_last = -1
+                    pub_k = jnp.pad(pub_k, buf_pad)   # scratch-padded
+                    pub_v = jnp.pad(pub_v, buf_pad)
+                    read_k, read_v = pub_k, pub_v
+                    my_slab = _reslice(x_full, my_start)
+                my_slab, fresh_k, fresh_v = _run_substeps(
+                    params, cfg, sched, ts, plan.m_base, ev.length, my_slab,
+                    cond, read_k, read_v, my_start, my_tok, my_ratio,
+                    ev.fine_step)
+
+            elif isinstance(ev, ir.Exchange):
+                if ev.kind == "full":
+                    prev_k, prev_v = pub_k, pub_v
+                    m_prev, m_last = m_last, ev.fine_step
+                    x_full, pub_k, pub_v = _gather_and_merge(
+                        cfg, patches, lay["row_starts"], my_slab,
+                        fresh_k, fresh_v, pub_k, pub_v)
+                    read_k, read_v = pub_k, pub_v
+                    my_slab = _reslice(x_full, my_start)
+                elif ev.kind == "skip":
+                    read_k, read_v = pub_k, pub_v     # stay stale
+                elif ev.kind == "predict":
+                    f = (buf_lib.extrapolation_factor(m_prev, m_last,
+                                                      ev.fine_step)
+                         if m_prev is not None else 0.0)
+                    if f:
+                        read_k = buf_lib.extrapolate_arrays(pub_k, prev_k, f)
+                        read_v = buf_lib.extrapolate_arrays(pub_v, prev_v, f)
+                    else:             # fewer than two exchanges: stale reuse
+                        read_k, read_v = pub_k, pub_v
         return x_full
 
     from repro.core.comm import shard_map_compat

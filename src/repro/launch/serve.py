@@ -52,7 +52,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                     n_requests: int = 4, slots: int = 4, m_base: int = 16,
                     m_warmup: int = 4, planner: str = "stadi",
                     backend: str = "emulated", reduced: bool = True,
-                    slo_s: float = None, seed: int = 0):
+                    slo_s: float = None, seed: int = 0,
+                    exchange: str = "sync", exchange_refresh: int = 2):
     """Continuous batching on a heterogeneous cluster: requests enter a FIFO
     queue, the :class:`DiffusionServingEngine` admits them into ``slots``
     concurrent lanes and drains the queue with batched denoise rounds."""
@@ -68,7 +69,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
     sched = sampler_lib.linear_schedule(T=1000)
     config = StadiConfig.from_occupancies(list(occupancies), m_base=m_base,
                                           m_warmup=m_warmup, planner=planner,
-                                          backend=backend)
+                                          backend=backend, exchange=exchange,
+                                          exchange_refresh=exchange_refresh)
     pipe = StadiPipeline(cfg, params, sched, config)
     engine = DiffusionServingEngine(pipe, slots=slots)
     rng = np.random.default_rng(seed)
@@ -115,6 +117,12 @@ def main():
     ap.add_argument("--m-warmup", type=int, default=4)
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request modeled-latency SLO (diffusion only)")
+    ap.add_argument("--exchange", default="sync",
+                    choices=["sync", "stale_async", "predictive"],
+                    help="boundary-exchange policy (diffusion only, "
+                         "DESIGN.md §10)")
+    ap.add_argument("--exchange-refresh", type=int, default=2,
+                    help="full refresh every E boundaries (stale/predictive)")
     args = ap.parse_args()
     if args.diffusion:
         if args.arch == ap.get_default("arch"):
@@ -128,7 +136,9 @@ def main():
                         m_base=args.m_base, m_warmup=args.m_warmup,
                         planner=args.planner, backend=args.backend,
                         slo_s=(args.slo_ms / 1e3
-                               if args.slo_ms is not None else None))
+                               if args.slo_ms is not None else None),
+                        exchange=args.exchange,
+                        exchange_refresh=args.exchange_refresh)
     else:
         serve(args.arch, n_requests=args.requests, slots=args.slots,
               prompt_len=args.prompt_len, max_new=args.max_new)

@@ -49,6 +49,11 @@ def main():
     ap.add_argument("--spmd", action="store_true",
                     help="alias for --backend spmd")
     ap.add_argument("--rebalance-every", type=int, default=0)
+    ap.add_argument("--exchange", default="sync",
+                    choices=["sync", "stale_async", "predictive"],
+                    help="boundary-exchange policy (DESIGN.md §10)")
+    ap.add_argument("--exchange-refresh", type=int, default=2,
+                    help="full refresh every E boundaries (stale/predictive)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check-vs-emulation", action="store_true")
     args = ap.parse_args()
@@ -88,7 +93,8 @@ def main():
     config = StadiConfig.from_occupancies(
         occ, caps, m_base=args.m_base, m_warmup=args.m_warmup,
         a=args.a, b=args.b, planner=args.planner, backend=backend,
-        rebalance_every=args.rebalance_every, **knobs)
+        rebalance_every=args.rebalance_every, exchange=args.exchange,
+        exchange_refresh=args.exchange_refresh, **knobs)
     pipe = StadiPipeline(cfg, params, sched, config)
     plan = pipe.plan()
     print(f"speeds={config.speeds} steps={plan.temporal.steps} "

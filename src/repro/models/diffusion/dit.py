@@ -92,6 +92,25 @@ def init_params(key, cfg: DiTConfig):
     }
 
 
+def nondegenerate_params(params, seed: int = 7):
+    """Untrained params are adaLN-zero: modulation gates and the output head
+    are exactly zero, so eps ignores attention (and hence the stale-KV
+    buffers) entirely. Tests and benchmarks that probe staleness replace
+    those zeros with small deterministic values so remote K/V genuinely
+    influences the trajectory. Returns a modified copy."""
+    params = dict(params)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    blk = dict(params["blocks"])
+    blk["mod_w"] = 0.02 * jax.random.normal(ks[0], blk["mod_w"].shape)
+    blk["mod_b"] = 0.02 * jax.random.normal(ks[1], blk["mod_b"].shape)
+    params["blocks"] = blk
+    params["final_mod_w"] = 0.02 * jax.random.normal(
+        ks[2], params["final_mod_w"].shape)
+    params["final_proj"] = 0.05 * jax.random.normal(
+        ks[3], params["final_proj"].shape)
+    return params
+
+
 def _modulate(x, shift, scale):
     return x * (1 + scale[:, None]) + shift[:, None]
 

@@ -43,6 +43,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import buffers as buf_lib
+from repro.core import comm as comm_lib
+from repro.core import events as ir
 from repro.core import patch_parallel as pp
 from repro.core import sampler as sampler_lib
 from repro.core import simulate as sim
@@ -98,6 +101,7 @@ class RoundReport:
     admitted: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     warmup_lanes: List[int] = dataclasses.field(default_factory=list)
     adaptive_lanes: List[int] = dataclasses.field(default_factory=list)
+    exchange_kinds: List[str] = dataclasses.field(default_factory=list)
     placement: Optional[Tuple[Tuple[int, int], ...]] = None  # (worker, device)
     modeled_s: float = 0.0
     wall_s: float = 0.0
@@ -168,10 +172,14 @@ class EmulatedStepper(_VmapWarmupMixin):
         self._ts = sampler_lib.ddim_timesteps(pipeline.sched.T,
                                               plan.temporal.m_base)
 
-    def interval(self, xs, fine0, conds, pub_k, pub_v):
+    def interval(self, xs, fine0, conds, pub_k, pub_v, merge: bool = True):
         """One adaptive interval (plan.lcm fine steps) for every lane.
 
-        xs [G,1,H,W,C]; fine0 int per lane; pub_{k,v} [G,L,1,N,H,hd].
+        xs [G,1,H,W,C]; fine0 int per lane; pub_{k,v} [G,L,1,N,H,hd] — the
+        READ buffers (the engine passes extrapolated copies for predictive
+        boundaries). ``merge=False`` is the "skip"/"predict" trailing
+        boundary: fresh K/V is never broadcast, the buffers come back
+        untouched.
         """
         plan, cfg = self.plan.temporal, self.model_cfg
         R, p = plan.lcm, cfg.patch_size
@@ -204,13 +212,14 @@ class EmulatedStepper(_VmapWarmupMixin):
         for i in workers:
             lo, hi = bounds_lat[i]
             xs = xs.at[:, :, lo:hi].set(new_slabs[i])
-        for i in sorted(pending):
-            k, v = pending[i]
-            start = bounds_tok[i][0] * cfg.tokens_per_side
-            pub_k = jax.lax.dynamic_update_slice_in_dim(
-                pub_k, k.astype(pub_k.dtype), start, axis=3)
-            pub_v = jax.lax.dynamic_update_slice_in_dim(
-                pub_v, v.astype(pub_v.dtype), start, axis=3)
+        if merge:
+            for i in sorted(pending):
+                k, v = pending[i]
+                start = bounds_tok[i][0] * cfg.tokens_per_side
+                pub_k = jax.lax.dynamic_update_slice_in_dim(
+                    pub_k, k.astype(pub_k.dtype), start, axis=3)
+                pub_v = jax.lax.dynamic_update_slice_in_dim(
+                    pub_v, v.astype(pub_v.dtype), start, axis=3)
         return xs, pub_k, pub_v
 
 
@@ -237,17 +246,25 @@ class SpmdStepper(_VmapWarmupMixin):
                 f"spmd serving needs {n_workers} devices, have "
                 f"{len(jax.devices())} (set STADI_HOST_DEVICES)")
         sched = pipeline.sched            # content-keyed: id() could alias
-        key = (pipeline.model_cfg, tuple(plan.patches),
-               tuple(plan.temporal.ratios), plan.temporal.m_base,
-               plan.temporal.m_warmup, sched.T,
-               np.asarray(sched.alpha_bar).tobytes())
-        if key not in SpmdStepper._cache:
-            SpmdStepper._cache[key] = spmd.make_interval_step(
-                pipeline.model_cfg, pipeline.sched, plan.temporal,
-                plan.patches)
-        self._interval = SpmdStepper._cache[key]
+        self._key = (pipeline.model_cfg, tuple(plan.patches),
+                     tuple(plan.temporal.ratios), plan.temporal.m_base,
+                     plan.temporal.m_warmup, sched.T,
+                     np.asarray(sched.alpha_bar).tobytes())
+        self._spmd = spmd
+        self._variant("full")             # compile the common case eagerly
 
-    def interval(self, xs, fine0, conds, pub_k, pub_v):
+    def _variant(self, kind: str):
+        """One compiled interval program per boundary kind ("full" merges
+        fresh K/V, "skip" leaves the buffers stale — predictive callers
+        extrapolate host-side and use the "skip" variant)."""
+        key = self._key + (kind,)
+        if key not in SpmdStepper._cache:
+            SpmdStepper._cache[key] = self._spmd.make_interval_step(
+                self.model_cfg, self.sched, self.plan.temporal,
+                self.plan.patches, exchange_kind=kind)
+        return SpmdStepper._cache[key]
+
+    def interval(self, xs, fine0, conds, pub_k, pub_v, merge: bool = True):
         fine0 = np.asarray(fine0)
         assert (fine0 == fine0[0]).all(), \
             "spmd stepper is cohort-only: lanes must share fine_step"
@@ -255,8 +272,9 @@ class SpmdStepper(_VmapWarmupMixin):
         x = xs[:, 0]
         bk = jnp.moveaxis(pub_k[:, :, 0], 0, 1)
         bv = jnp.moveaxis(pub_v[:, :, 0], 0, 1)
-        x, bk, bv = self._interval(self.params, x, conds[:, 0], bk, bv,
-                                   jnp.int32(fine0[0]))
+        fn = self._variant("full" if merge else "skip")
+        x, bk, bv = fn(self.params, x, conds[:, 0], bk, bv,
+                       jnp.int32(fine0[0]))
         return (x[:, None], jnp.moveaxis(bk, 1, 0)[:, :, None],
                 jnp.moveaxis(bv, 1, 0)[:, :, None])
 
@@ -305,6 +323,41 @@ class DiffusionServingEngine:
         self._pub_k = jnp.zeros(kshape, kdt)
         self._pub_v = jnp.zeros(kshape, kdt)
         self._cond = jnp.zeros((slots, 1), jnp.int32)
+        # boundary-exchange policy (DESIGN.md §10): replay the SAME schedule
+        # IR every lane follows and precompute, per adaptive-interval start
+        # fine step, (read_factor, trail_kind): read_factor is the K/V
+        # extrapolation coefficient applied BEFORE the interval (0.0 =
+        # fresh/stale reuse), trail_kind the exchange at the boundary AFTER
+        # it. Lanes are grouped by this info, so one batched dispatch never
+        # mixes boundary behaviors.
+        self.policy = comm_lib.get_exchange(config.exchange,
+                                            config.exchange_refresh)
+        self._interval_info: Dict[int, Tuple[float, str]] = {}
+        read_factor = 0.0
+        m_prev: Optional[int] = None
+        m_last = self.plan.temporal.m_warmup - 1   # warmup publish (-1 = boot)
+        cur: Optional[int] = None
+        for ev in ir.lower(self.plan.temporal, self.plan.patches, self.policy):
+            if isinstance(ev, ir.ComputeInterval):
+                cur = ev.fine_step
+            elif isinstance(ev, ir.Exchange):
+                self._interval_info[cur] = (read_factor, ev.kind)
+                if ev.kind == "full":
+                    m_prev, m_last = m_last, ev.fine_step
+                    read_factor = 0.0
+                elif ev.kind == "skip":
+                    read_factor = 0.0            # stale reuse
+                elif ev.kind == "predict":
+                    read_factor = (buf_lib.extrapolation_factor(
+                        m_prev, m_last, ev.fine_step)
+                        if m_prev is not None else 0.0)
+        # last-but-one published K/V per lane (predictive extrapolation
+        # base): these double the per-slot staged-KV footprint and cost a
+        # copy per full boundary, so only materialize them when some
+        # boundary actually extrapolates
+        self._track_prev = any(f for f, _ in self._interval_info.values())
+        self._prev_k = jnp.zeros(kshape, kdt) if self._track_prev else None
+        self._prev_v = jnp.zeros(kshape, kdt) if self._track_prev else None
         self.queue: List[DiffusionRequest] = []
         self.active: Dict[int, DiffusionRequest] = {}   # slot -> request
         self.completed: List[DiffusionRequest] = []
@@ -390,17 +443,34 @@ class DiffusionServingEngine:
 
         if adapt:
             placement = None
-            for group in self._groups(adapt):
+            for group, (read_factor, trail_kind) in self._groups(adapt):
                 idx = self._pad(group)
                 fine = np.asarray([self.active[s].fine_step for s in idx])
+                bk, bv = self._pub_k[idx], self._pub_v[idx]
+                if read_factor:      # predictive boundary before this group
+                    bk = buf_lib.extrapolate_arrays(bk, self._prev_k[idx],
+                                                    read_factor)
+                    bv = buf_lib.extrapolate_arrays(bv, self._prev_v[idx],
+                                                    read_factor)
                 xs, ks, vs = self.stepper.interval(
-                    self._x[idx], fine, self._cond[idx],
-                    self._pub_k[idx], self._pub_v[idx])
-                self._scatter(idx, xs, ks, vs)
+                    self._x[idx], fine, self._cond[idx], bk, bv,
+                    merge=(trail_kind == "full"))
+                self._x = self._x.at[idx].set(xs)
+                if trail_kind == "full":
+                    if self._track_prev:
+                        # pre-merge buffers become the extrapolation base
+                        self._prev_k = self._prev_k.at[idx].set(
+                            self._pub_k[idx])
+                        self._prev_v = self._prev_v.at[idx].set(
+                            self._pub_v[idx])
+                    self._pub_k = self._pub_k.at[idx].set(ks)
+                    self._pub_v = self._pub_v.at[idx].set(vs)
                 for s in group:
                     self.active[s].fine_step += R
-                placement, cost = self._phase_cost(len(group), warm=False)
+                placement, cost = self._phase_cost(len(group), warm=False,
+                                                   kind=trail_kind)
                 report.modeled_s += cost
+                report.exchange_kinds.append(trail_kind)
             report.placement = placement
 
         self.modeled_clock_s += report.modeled_s
@@ -447,25 +517,38 @@ class DiffusionServingEngine:
         self._pub_k = self._pub_k.at[idx].set(ks)
         self._pub_v = self._pub_v.at[idx].set(vs)
 
-    def _groups(self, lanes: List[int]) -> List[List[int]]:
-        """Batchable lane groups: one group for the vmapped stepper, cohorts
-        sharing a fine-step position for the cohort-only (spmd) stepper."""
+    def _groups(self, lanes: List[int]
+                ) -> List[Tuple[List[int], Tuple[float, str]]]:
+        """Batchable lane groups + their (read_factor, trail_kind) exchange
+        info. The vmapped stepper batches every lane whose boundary behavior
+        matches (under "sync" that is ONE group, as before); the cohort-only
+        (spmd) stepper groups by fine-step position, which pins the exchange
+        info automatically."""
         if not self.stepper.cohort_only:
-            return [lanes]
+            keyed: Dict[Tuple[float, str], List[int]] = {}
+            for s in lanes:
+                keyed.setdefault(self._lane_info(s), []).append(s)
+            return [(keyed[k], k) for k in sorted(keyed)]
         cohorts: Dict[int, List[int]] = {}
         for s in lanes:
             cohorts.setdefault(self.active[s].fine_step, []).append(s)
-        return [cohorts[f] for f in sorted(cohorts)]
+        return [(cohorts[f], self._lane_info(cohorts[f][0]))
+                for f in sorted(cohorts)]
+
+    def _lane_info(self, slot: int) -> Tuple[float, str]:
+        return self._interval_info[self.active[slot].fine_step]
 
     # ---------------- modeled cost & placement ----------------
 
-    def _phase_cost(self, group: int, warm: bool
+    def _phase_cost(self, group: int, warm: bool, kind: str = "full"
                     ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
         """Placement + modeled seconds for one batched phase of a round.
 
         Mirrors ``simulate.simulate_trace`` with compute scaled by the lane
         count: batching multiplies the per-row work but amortizes t_fixed —
         the modeled reason continuous batching beats sequential serving.
+        Latent traffic is the per-worker uneven all-gather (padded slabs),
+        and "skip"/"predict" boundaries move no bytes at all.
         """
         plan, cm = self.plan, self.cm
         temporal = plan.temporal
@@ -480,9 +563,15 @@ class DiffusionServingEngine:
         placement = tuple(sorted((w, d) for w, d in zip(by_load, by_speed)))
         compute = max(loads[w] / max(speeds[d], 1e-9)
                       for w, d in placement)
-        comm_bytes = self._latent_bytes * group
+        if (not warm and kind != "full") or len(workers) <= 1:
+            return placement, compute        # stale/predict: pure compute
+        rows_total = max(sum(plan.patches), 1)
+        row_bytes = self._latent_bytes / rows_total
+        gather_rows = comm_lib.uneven_all_gather_rows(
+            [plan.patches[i] for i in workers])
+        comm_bytes = gather_rows * row_bytes * group
         if warm:
-            comm_bytes += sum(self._kv_bytes) * group
+            comm_bytes += sum(self._kv_bytes[w] for w in workers) * group
             async_t = 0.0
         else:
             async_t = max(self._kv_bytes[w] for w, _ in placement) \

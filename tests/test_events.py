@@ -1,0 +1,361 @@
+"""Schedule IR (core/events.py) + boundary-exchange policies: the three
+executors interpret ONE event stream, sync mode is bitwise-preserving, and
+the degraded modes (stale_async / predictive) behave per their contract."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import buffers as buf_lib
+from repro.core import comm as comm_lib
+from repro.core import events as ir
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core import simulate as sim
+from repro.core.pipeline import StadiConfig, StadiPipeline
+from repro.core.schedule import TemporalPlan, patch_bounds
+from repro.models.diffusion import dit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-dit").reduced()      # 16x16 latent, 8 token rows
+    # de-degenerate adaLN-zero init so stale remote K/V genuinely matters
+    params = dit.nondegenerate_params(dit.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+    sched = sampler_lib.linear_schedule(T=100)
+    x_T = jax.random.normal(jax.random.PRNGKey(1),
+                            (2, cfg.latent_size, cfg.latent_size,
+                             cfg.channels))
+    cond = jnp.array([1, 2])
+    return cfg, params, sched, x_T, cond
+
+
+def _ev_tuple(e):
+    return (e.fine_step, list(e.substeps), list(e.patches), e.synchronous,
+            e.exchange)
+
+
+# ----------------------------------------------------------------------
+# policy registry
+# ----------------------------------------------------------------------
+
+def test_exchange_registry():
+    assert {"sync", "stale_async", "predictive"} <= set(comm_lib.EXCHANGES)
+    with pytest.raises(KeyError):
+        comm_lib.get_exchange("nope")
+    with pytest.raises(ValueError):
+        comm_lib.get_exchange("stale_async", 0)
+    sync = comm_lib.get_exchange("sync", 5)     # refresh ignored by sync
+    assert all(sync.kind(b) == "full" for b in range(10))
+    stale = comm_lib.get_exchange("stale_async", 3)
+    assert [stale.kind(b) for b in range(6)] == \
+        ["skip", "skip", "full", "skip", "skip", "full"]
+    pred = comm_lib.get_exchange("predictive", 2)
+    assert [pred.kind(b) for b in range(4)] == \
+        ["predict", "full", "predict", "full"]
+
+
+def test_lower_kinds_cadence_and_forced_final_full():
+    plan = TemporalPlan([16, 16], [1, 1], [False, False], 16, 4)
+    policy = comm_lib.get_exchange("stale_async", 3)
+    exchanges = [e for e in ir.lower(plan, [4, 4], policy)
+                 if isinstance(e, ir.Exchange)]
+    assert len(exchanges) == 12
+    # cadence skip,skip,full,... but the LAST boundary is forced full
+    assert [e.kind for e in exchanges] == \
+        ["skip", "skip", "full"] * 3 + ["skip", "skip", "full"]
+    assert exchanges[-1].last and exchanges[-1].kind == "full"
+    policy = comm_lib.get_exchange("stale_async", 5)
+    kinds = [e.kind for e in ir.lower(plan, [4, 4], policy)
+             if isinstance(e, ir.Exchange)]
+    assert kinds[-1] == "full"                  # would be "skip" by cadence
+
+
+def test_lower_replan_via_send():
+    plan = TemporalPlan([8, 8], [1, 1], [False, False], 8, 2)
+    gen = ir.lower(plan, [4, 4])
+    seen, sent = [], False
+    ev = next(gen)
+    while True:
+        seen.append(ev)
+        try:
+            if isinstance(ev, ir.Exchange) and not sent and ev.fine_step >= 4:
+                new = TemporalPlan([4, 4], [1, 1], [False, False], 4, 0)
+                ev = gen.send((new, [6, 2]))
+                sent = True
+            else:
+                ev = next(gen)
+        except StopIteration:
+            break
+    replans = [e for e in seen if isinstance(e, ir.Replan)]
+    assert len(replans) == 1 and replans[0].patches == (6, 2)
+    # every interval after the replan carries the new allocation
+    after = [e for e in seen if isinstance(e, ir.ComputeInterval)
+             and e.fine_step >= replans[0].fine_step]
+    assert after and all(e.patches == (6, 2) for e in after)
+
+
+# ----------------------------------------------------------------------
+# satellite: zero-patch ACTIVE device must not diverge numerics vs trace
+# ----------------------------------------------------------------------
+
+def test_zero_patch_active_device_traces_agree(setup):
+    """Regression: build_trace used to mark a worker active from
+    plan.excluded alone while run_schedule also required patches[i] > 0; a
+    zero-patch active device yielded divergent traces. The shared IR makes
+    the two structurally identical by construction."""
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8, 8], [1, 1], [False, False], 8, 2)
+    patches = [cfg.tokens_per_side, 0]           # active but owns no rows
+    res = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches)
+    ref = sim.build_trace(plan, patches, cfg, batch=int(x_T.shape[0]))
+    assert [_ev_tuple(e) for e in res.trace.events] == \
+        [_ev_tuple(e) for e in ref.events]
+    # the zero-patch worker never executes a substep anywhere
+    assert all(e.substeps[1] == 0 for e in res.trace.events)
+
+
+@pytest.mark.parametrize("exchange,refresh", [
+    ("sync", 2), ("stale_async", 2), ("stale_async", 3), ("predictive", 2)])
+def test_build_trace_matches_run_schedule_events(setup, exchange, refresh):
+    cfg, params, sched, x_T, cond = setup
+    config = StadiConfig.from_occupancies([0.0, 0.5], m_base=16, m_warmup=4,
+                                          exchange=exchange,
+                                          exchange_refresh=refresh)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    res = pipe.generate(x_T, cond)
+    ref = sim.build_trace(pipe.plan().temporal, pipe.plan().patches, cfg,
+                          batch=int(x_T.shape[0]), exchange=exchange,
+                          exchange_refresh=refresh)
+    assert [_ev_tuple(e) for e in res.trace.events] == \
+        [_ev_tuple(e) for e in ref.events]
+
+
+# ----------------------------------------------------------------------
+# satellite: sync mode is bitwise-identical to the pre-refactor loop
+# ----------------------------------------------------------------------
+
+def _reference_run_schedule(params, cfg, sched, x_T, cond, plan, patches):
+    """Verbatim re-implementation of the PRE-refactor run_schedule loop
+    (hard-coded warmup -> interval -> sync merge), kept as the bitwise
+    oracle for exchange="sync"."""
+    p = cfg.patch_size
+    M_base, M_w = plan.m_base, plan.m_warmup
+    ts = sampler_lib.ddim_timesteps(sched.T, M_base)
+    workers = [i for i in plan.active if patches[i] > 0]
+    x = x_T
+    published = None
+    for m in range(M_w):
+        eps, kvs = pp._jit_full_step(params, cfg, x, ts[m], cond)
+        x = sampler_lib.ddim_step(sched, x, eps, ts[m], ts[m + 1])
+        published = buf_lib.Published(kvs[0], kvs[1], m)
+    if published is None:
+        _, kvs = pp._jit_full_step(params, cfg, x, ts[0], cond)
+        published = buf_lib.Published(kvs[0], kvs[1], -1)
+    m0 = M_w
+    while m0 + plan.lcm <= M_base:
+        R = plan.lcm
+        bounds_tok = patch_bounds(patches)
+        bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
+        pending, new_slabs = {}, {}
+        for i in workers:
+            r = plan.ratios[i]
+            x_loc = x[:, bounds_lat[i][0]:bounds_lat[i][1]]
+            for s in range(R // r):
+                t_from, t_to = ts[m0 + s * r], ts[m0 + (s + 1) * r]
+                eps, kvs = pp._jit_patch_step(
+                    params, cfg, x_loc, t_from, cond, bounds_tok[i][0],
+                    published.k, published.v)
+                x_loc = sampler_lib.ddim_step(sched, x_loc, eps, t_from, t_to)
+                if s == 0:
+                    buf_lib.publish_local(pending, i, kvs[0], kvs[1],
+                                          bounds_tok[i][0]
+                                          * cfg.tokens_per_side)
+            new_slabs[i] = x_loc
+        for i in workers:
+            lat = bounds_lat[i]
+            x = x.at[:, lat[0]:lat[1]].set(new_slabs[i])
+        published = buf_lib.merge(published, pending, m0 + R)
+        m0 += R
+    return x
+
+
+@pytest.mark.parametrize("ratios,steps,patches", [
+    ([1, 1], [8, 8], [4, 4]),                 # DistriFusion uniform
+    ([1, 2], [8, 5], [5, 3]),                 # STADI two-tier
+])
+def test_sync_bitwise_identical_to_pre_refactor_loop(setup, ratios, steps,
+                                                     patches):
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan(steps, ratios, [False, False], 8, 2)
+    ref = _reference_run_schedule(params, cfg, sched, x_T, cond, plan,
+                                  patches)
+    res = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                          exchange="sync")
+    np.testing.assert_array_equal(np.asarray(res.image), np.asarray(ref))
+    # and "sync" is the default
+    res2 = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches)
+    np.testing.assert_array_equal(np.asarray(res2.image), np.asarray(ref))
+
+
+# ----------------------------------------------------------------------
+# degraded-mode numerics (emulated backend, de-degenerated denoiser)
+# ----------------------------------------------------------------------
+
+def test_stale_and_predictive_drift_is_real_and_bounded(setup):
+    cfg, params, sched, x_T, cond = setup
+    imgs = {}
+    for ex in ("sync", "stale_async", "predictive"):
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.5], m_base=16, m_warmup=4, exchange=ex,
+            exchange_refresh=2)
+        imgs[ex] = np.asarray(
+            StadiPipeline(cfg, params, sched, config).generate(x_T,
+                                                               cond).image)
+        assert np.all(np.isfinite(imgs[ex]))
+    # the degraded modes genuinely change the trajectory...
+    assert np.abs(imgs["stale_async"] - imgs["sync"]).max() > 0
+    assert np.abs(imgs["predictive"] - imgs["sync"]).max() > 0
+    # ...but stay close to sync (quality contract, DESIGN.md §10)
+    ref = np.linalg.norm(imgs["sync"])
+    for ex in ("stale_async", "predictive"):
+        assert np.linalg.norm(imgs[ex] - imgs["sync"]) / ref < 0.05, ex
+
+
+def test_predictive_falls_back_to_stale_before_two_refreshes(setup):
+    """With refresh_every > n_boundaries no second full exchange ever lands,
+    so predictive has nothing to difference and must equal stale reuse."""
+    cfg, params, sched, x_T, cond = setup
+    out = {}
+    for ex in ("stale_async", "predictive"):
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.5], m_base=16, m_warmup=4, exchange=ex,
+            exchange_refresh=100)
+        out[ex] = np.asarray(StadiPipeline(cfg, params, sched,
+                                           config).generate(x_T, cond).image)
+    np.testing.assert_array_equal(out["predictive"], out["stale_async"])
+
+
+def test_extrapolate_linear_and_fallback():
+    k = jnp.ones((1, 1, 4, 1, 2))
+    prev = buf_lib.Published(k, 2 * k, step=2)
+    last = buf_lib.Published(3 * k, 4 * k, step=4)
+    out = buf_lib.extrapolate(prev, last, fine_step=6)
+    np.testing.assert_allclose(np.asarray(out.k), 5.0)   # 3 + 1*(3-1)
+    np.testing.assert_allclose(np.asarray(out.v), 6.0)
+    assert buf_lib.extrapolate(None, last, 6) is last
+    assert buf_lib.extrapolation_factor(4, 4, 6) == 0.0  # degenerate gap
+
+
+# ----------------------------------------------------------------------
+# simulate: comm accounting + mode-aware boundaries
+# ----------------------------------------------------------------------
+
+def test_simulate_charges_uneven_gather_not_full_image():
+    """Satellite fix: each worker contributes its own slab, so a boundary
+    moves (N-1)*max_slab rows per rank — and N=1 moves nothing."""
+    cm = sim.CostModel(t_fixed=0.0, t_row=0.0, link_bw=1e6, link_latency=0.0)
+    tr = ir.ExecutionTrace(
+        [ir.IntervalEvent(0, [1, 1], [12, 4])], None, [12, 4],
+        n_tokens=256, latent_bytes=16_000, kv_bytes_per_worker=[0, 0])
+    # row_bytes = 1000; gather = (2-1) * 12 rows = 12_000 bytes (< 16_000)
+    assert sim.simulate_trace(tr, [1.0, 1.0], cm) == pytest.approx(0.012)
+    solo = ir.ExecutionTrace(
+        [ir.IntervalEvent(0, [1, 0], [16, 0])], None, [16, 0],
+        n_tokens=256, latent_bytes=16_000, kv_bytes_per_worker=[0, 0])
+    assert sim.simulate_trace(solo, [1.0, 1.0], cm) == 0.0
+
+
+def test_simulate_degraded_boundaries_are_compute_only():
+    cm = sim.CostModel(t_fixed=0.01, t_row=0.0, link_bw=1e3,
+                       link_latency=0.5)
+    full = ir.IntervalEvent(0, [1, 1], [8, 8], exchange="full")
+    skip = ir.IntervalEvent(0, [1, 1], [8, 8], exchange="skip")
+    pred = ir.IntervalEvent(0, [1, 1], [8, 8], exchange="predict")
+    mk = lambda evs: ir.ExecutionTrace(evs, None, [8, 8], 256, 16_000,
+                                       [0, 0])
+    t_full = sim.simulate_trace(mk([full]), [1.0, 1.0], cm)
+    t_skip = sim.simulate_trace(mk([skip]), [1.0, 1.0], cm)
+    t_pred = sim.simulate_trace(mk([pred]), [1.0, 1.0], cm)
+    assert t_skip == t_pred == pytest.approx(0.01)       # pure compute
+    assert t_full > t_skip + 0.5                         # pays the boundary
+
+
+def test_pipeline_simulate_stale_async_is_faster(setup):
+    cfg, *_ = setup
+    cm = sim.CostModel(t_fixed=1e-3, t_row=1e-4, link_bw=1e6,
+                       link_latency=1e-4)
+    base = StadiConfig.from_occupancies([0.0, 0.5], m_base=16, m_warmup=4,
+                                        backend="simulate", cost_model=cm)
+    lat = {}
+    for ex in ("sync", "stale_async", "predictive"):
+        config = dataclasses.replace(base, exchange=ex, exchange_refresh=2)
+        lat[ex] = StadiPipeline(cfg, None, None, config).generate().latency_s
+    assert lat["stale_async"] < lat["sync"]
+    assert lat["predictive"] < lat["sync"]
+
+
+def test_unknown_exchange_fails_fast(setup):
+    cfg, params, sched, *_ = setup
+    config = StadiConfig.from_occupancies([0.0, 0.5], m_base=16, m_warmup=4,
+                                          exchange="nope")
+    with pytest.raises(KeyError):
+        StadiPipeline(cfg, params, sched, config)
+
+
+# ----------------------------------------------------------------------
+# SPMD backend drives the same stream (subprocess, real devices)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("exchange", ["stale_async", "predictive"])
+def test_spmd_degraded_modes_match_emulated(exchange):
+    code = textwrap.dedent(f"""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core import sampler as sampler_lib
+        from repro.core.pipeline import StadiConfig, StadiPipeline
+        from repro.models.diffusion import dit
+
+        cfg = get_config('tiny-dit').reduced()
+        params = dit.nondegenerate_params(
+            dit.init_params(jax.random.PRNGKey(0), cfg))
+        sched = sampler_lib.linear_schedule(T=1000)
+        x_T = jax.random.normal(jax.random.PRNGKey(1),
+                                (1, cfg.latent_size, cfg.latent_size,
+                                 cfg.channels))
+        cond = jnp.zeros((1,), jnp.int32)
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.5], m_base=8, m_warmup=2, backend='spmd',
+            exchange={exchange!r}, exchange_refresh=2)
+        spmd = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+        emu = StadiPipeline(cfg, params, sched, dataclasses.replace(
+            config, backend='emulated')).generate(x_T, cond)
+        a, b = np.asarray(spmd.image), np.asarray(emu.image)
+        err = float(np.linalg.norm(a - b) / np.linalg.norm(b))
+        assert err < 1e-3, err
+        sync = StadiPipeline(cfg, params, sched, dataclasses.replace(
+            config, exchange='sync')).generate(x_T, cond)
+        drift = float(np.abs(np.asarray(sync.image) - a).max())
+        assert drift > 0.0, 'degraded mode should differ from sync'
+        print('SPMD_EXCHANGE_OK', err)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=520, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "SPMD_EXCHANGE_OK" in r.stdout

@@ -272,3 +272,66 @@ def test_spmd_engine_matches_emulated():
                        text=True, timeout=520, env=env)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     assert "SPMD_SERVE_OK" in r.stdout
+
+
+# ----------------------------------------------------------------------
+# boundary-exchange policies in the serving hot path (DESIGN.md §10)
+# ----------------------------------------------------------------------
+
+def _nondegenerate_pipe(setup, **kw):
+    """adaLN-zero untrained params make eps buffer-independent; perturb the
+    modulation/output weights (`dit.nondegenerate_params`) so staleness
+    genuinely matters, then build a pipeline over the perturbed params."""
+    cfg, params, sched = setup
+    params = dit.nondegenerate_params(params)
+    kw.setdefault("m_base", 8)
+    kw.setdefault("m_warmup", 2)
+    config = StadiConfig.from_occupancies([0.0, 0.5], **kw)
+    return StadiPipeline(cfg, params, sched, config)
+
+
+@pytest.mark.parametrize("exchange", ["stale_async", "predictive"])
+def test_serving_degraded_modes_bitwise_vs_generate(setup, exchange):
+    """Staggered lanes sit at different boundary phases, so the engine must
+    group them by exchange info — and every request must still be bitwise
+    identical to a lone ``generate`` under the same policy."""
+    cfg = setup[0]
+    pipe = _nondegenerate_pipe(setup, exchange=exchange, exchange_refresh=2)
+    xs, conds = _requests(cfg, 3)
+    singles = [np.asarray(pipe.generate(x, c).image)
+               for x, c in zip(xs, conds)]
+    engine = DiffusionServingEngine(pipe, slots=2)        # forces stagger
+    reqs = [engine.submit(x, c) for x, c in zip(xs, conds)]
+    engine.run_to_completion()
+    for req, ref in zip(reqs, singles):
+        if len(jax.devices()) == 1:
+            np.testing.assert_array_equal(np.asarray(req.image), ref)
+        else:
+            # forced multi-device CPU hosts reorder XLA reductions between
+            # the vmapped and single-request dispatches at ~1e-6 (true for
+            # "sync" too — hidden elsewhere by adaLN-zero untrained params)
+            np.testing.assert_allclose(np.asarray(req.image), ref,
+                                       rtol=0, atol=1e-5)
+    kinds = [k for r in engine.rounds for k in r.exchange_kinds]
+    assert set(kinds) >= {"full"}
+    assert ("skip" in kinds) if exchange == "stale_async" \
+        else ("predict" in kinds)
+
+
+def test_serving_stale_async_models_cheaper_rounds(setup):
+    """Skipped boundaries move no modeled bytes: with a comm-heavy cost
+    model the stale_async drain must be modeled strictly faster than the
+    sync drain of the same workload."""
+    from repro.core.simulate import CostModel
+    cfg = setup[0]
+    cm = CostModel(t_fixed=1e-3, t_row=1e-4, link_bw=1e6, link_latency=1e-4)
+    makespans = {}
+    for ex in ("sync", "stale_async"):
+        pipe = _pipe(setup, exchange=ex, exchange_refresh=2, cost_model=cm)
+        engine = DiffusionServingEngine(pipe, slots=2)
+        xs, conds = _requests(cfg, 4)
+        for x, c in zip(xs, conds):
+            engine.submit(x, c)
+        engine.run_to_completion()
+        makespans[ex] = engine.modeled_clock_s
+    assert makespans["stale_async"] < makespans["sync"]
