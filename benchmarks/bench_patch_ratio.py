@@ -6,6 +6,13 @@ observed nonlinearity).
 
 The sweep replays hand-forced allocations through the simulator; the
 "selected" point comes from the pipeline's ``"spatial"`` planner (SA-only).
+
+In ``--smoke`` mode (CI bench-smoke) the cost model is a SEEDED
+deterministic profile instead of a live single-step calibration: wall-clock
+calibration noise on shared CI runners occasionally pushed Eq. 5's pick
+past the 25% near-optimality tolerance at [0,60] (the flake CHANGES.md PR 3
+recorded), and a latency-shape assertion needs a reproducible latency
+model, not a reproducible machine.
 """
 from __future__ import annotations
 
@@ -15,10 +22,17 @@ from repro.core import simulate as sim
 from repro.core.pipeline import StadiConfig, StadiPipeline
 from repro.core.simulate import build_trace
 
+# deterministic smoke profile: a plausible CPU-host step-cost shape (fixed
+# overhead ~ 1 ms/step, ~1 ms per token row) with none of the run-to-run
+# noise live calibration has on shared runners (observed t_fixed varying
+# 1e-6..4e-3 across back-to-back calibrations of the same model)
+SMOKE_CM = sim.CostModel(t_fixed=1e-3, t_row=1e-3)
+
 
 def run(emit=True):
     cfg, params, sched = common.load_tiny_dit()
-    cm = common.calibrate_cost_model(cfg, params)
+    cm = SMOKE_CM if common.smoke() else common.calibrate_cost_model(cfg,
+                                                                     params)
     P = cfg.tokens_per_side
     out = {}
     for occ in ([0.0, 0.2], [0.0, 0.4], [0.0, 0.6]):

@@ -23,6 +23,7 @@ REGISTRY = [
     ("redundancy", "benchmarks.bench_redundancy", "paper Thm. 1/2"),
     ("beyond", "benchmarks.bench_beyond", "beyond-paper: tiers + reprofiling"),
     ("exchange", "benchmarks.bench_exchange", "boundary-exchange modes, DESIGN §10"),
+    ("pipefuse", "benchmarks.bench_pipefuse", "displaced patch pipeline, DESIGN §11"),
     ("roofline", "benchmarks.bench_roofline", "deliverable g"),
     ("serving", "benchmarks.bench_serving", "continuous batching, DESIGN §9"),
 ]

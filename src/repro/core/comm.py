@@ -100,6 +100,17 @@ def uneven_all_gather_broadcast(x_local, sizes: Sequence[int], axis_name: str,
     return jnp.concatenate(parts, axis=axis)
 
 
+def stage_handoff(h, axis_name: str, n_stages: int):
+    """Point-to-point pipeline handoff (DESIGN.md §11): stage ``s``'s tensor
+    moves to stage ``s + 1`` via a single ``ppermute`` — the SPMD analogue
+    of a NCCL send/recv pair, NOT a collective: only adjacent stages
+    exchange bytes. Stage 0 receives zeros (it has no upstream; the final
+    stage's output is broadcast back for the replicated DDIM update
+    instead of re-entering here)."""
+    return jax.lax.ppermute(h, axis_name,
+                            [(s, s + 1) for s in range(n_stages - 1)])
+
+
 def ring_all_reduce_bytes(n: int, nbytes: int) -> float:
     """Analytic bytes-on-wire per rank for ring all-reduce (simulator)."""
     return 2.0 * (n - 1) / n * nbytes

@@ -10,6 +10,10 @@ engine (`patch_parallel.run_schedule`), the SPMD backend
 Now :func:`lower` is the single source of schedule structure:
 
     Warmup(m)             one synchronous full-image fine step
+    StageShift(m, stages) the displaced patch pipeline (DESIGN.md §11)
+                          (re)fills: stage contexts reset to the published
+                          buffers; only emitted when lowering with a
+                          ``stages`` partition of depth > 1
     ComputeInterval(m0,R) R fine steps of stale-KV patch compute
     Exchange(m, kind)     the interval boundary; ``kind`` comes from the
                           :class:`repro.core.comm.BoundaryExchange` policy:
@@ -49,12 +53,15 @@ from repro.core.schedule import TemporalPlan
 class IntervalEvent:
     """One executed interval: per-worker (sub-steps, patch rows) plus the
     boundary-exchange kind that followed it ("full" / "skip" / "predict";
-    warmup steps are synchronous and always exchange in full)."""
+    warmup steps are synchronous and always exchange in full). ``fill`` marks
+    intervals that begin with a displaced-pipeline (re)fill (DESIGN.md §11) —
+    the simulator charges the pipeline bubble there."""
     fine_step: int                       # first fine step of the interval
     substeps: List[int]                  # steps executed by each worker
     patches: List[int]                   # token-rows per worker
     synchronous: bool = False            # warmup intervals sync every layer
     exchange: str = "full"               # boundary kind after this interval
+    fill: bool = False                   # first interval after a StageShift
 
 
 @dataclasses.dataclass
@@ -65,6 +72,11 @@ class ExecutionTrace:
     n_tokens: int                        # full image tokens (comm sizing)
     latent_bytes: int
     kv_bytes_per_worker: List[int]
+    # displaced patch-pipeline provenance (DESIGN.md §11): blocks per stage
+    # (None = depth-unpartitioned) and hidden-state bytes per token row for
+    # pricing the point-to-point stage handoffs
+    stages: Optional[List[int]] = None
+    act_row_bytes: int = 0
 
 
 # ----------------------------------------------------------------------
@@ -113,7 +125,19 @@ class Replan:
     patches: Tuple[int, ...]
 
 
-Event = object   # Warmup | ComputeInterval | Exchange | Replan
+@dataclasses.dataclass(frozen=True)
+class StageShift:
+    """The displaced patch pipeline (re)fills (DESIGN.md §11): every stage's
+    in-flight activation context resets to the last published buffers.
+    Emitted once when the adaptive phase begins and again after every
+    draining ("full") exchange; "skip"/"predict" boundaries keep the pipe
+    full, so no StageShift follows them — that is precisely how the
+    stale-async policies compose with depth pipelining (fewer drains)."""
+    fine_step: int                       # first fine step of the refilled pipe
+    stages: Tuple[int, ...]              # DiT blocks per stage (chain order)
+
+
+Event = object   # Warmup | StageShift | ComputeInterval | Exchange | Replan
 
 
 def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
@@ -126,18 +150,26 @@ def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
 # ----------------------------------------------------------------------
 
 def lower(plan: TemporalPlan, patches: Sequence[int],
-          policy: Optional["comm_lib.BoundaryExchange"] = None
-          ) -> Iterator[Event]:
-    """Lower (plan, patches, exchange policy) into the event stream.
+          policy: Optional["comm_lib.BoundaryExchange"] = None,
+          stages: Optional[Sequence[int]] = None) -> Iterator[Event]:
+    """Lower (plan, patches, exchange policy[, stage split]) into events.
 
     A coroutine-style generator: iterate it normally, or reply to an
     :class:`Exchange` event with ``gen.send((new_plan, new_patches))`` to
     re-allocate the remaining fine steps (the new plan's interval LCM must
     divide them); the generator then emits a :class:`Replan` and continues.
+
+    ``stages`` (blocks per pipeline stage, DESIGN.md §11) adds the depth
+    dimension: with more than one stage a :class:`StageShift` is emitted
+    before the first adaptive interval and after every draining ("full")
+    boundary, so every executor agrees on exactly when the displaced
+    pipeline refills.
     """
     policy = policy or comm_lib.get_exchange("sync")
     patches = list(patches)
     n = len(patches)
+    stages = tuple(stages) if stages else ()
+    pipelined = len(stages) > 1
     # fine steps count in ABSOLUTE coordinates of the original plan; a
     # replanned TemporalPlan covers the remaining steps (its m_base is the
     # remaining count) and only contributes ratios/activity from then on
@@ -148,7 +180,11 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
                      tuple(patches))
     m0 = plan.m_warmup
     boundary = 0
+    refill = pipelined                   # the pipe fills entering adaptive
     while m0 + plan.lcm <= m_base:
+        if refill:
+            yield StageShift(m0, stages)
+            refill = False
         R = plan.lcm
         workers = active_workers(plan, patches)
         subs = tuple(R // plan.ratios[i] if i in workers else 0
@@ -158,6 +194,8 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
         last = m0 + plan.lcm > m_base
         kind = "full" if last else policy.kind(boundary)
         upd = yield Exchange(m0, kind, boundary, subs, tuple(patches), last)
+        if pipelined and kind == "full" and not last:
+            refill = True                # a sync boundary drains the pipe
         boundary += 1
         if upd is not None:
             plan, patches = upd
@@ -172,10 +210,11 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
 # replay: event stream -> trace records / full ExecutionTrace
 # ----------------------------------------------------------------------
 
-def record(interval: ComputeInterval, kind: str) -> IntervalEvent:
+def record(interval: ComputeInterval, kind: str,
+           fill: bool = False) -> IntervalEvent:
     """The trace record for one adaptive interval + its boundary kind."""
     return IntervalEvent(interval.fine_step, list(interval.substeps),
-                         list(interval.patches), exchange=kind)
+                         list(interval.patches), exchange=kind, fill=fill)
 
 
 def warmup_record(ev: Warmup) -> IntervalEvent:
@@ -184,30 +223,39 @@ def warmup_record(ev: Warmup) -> IntervalEvent:
 
 
 def replay(plan: TemporalPlan, patches: Sequence[int],
-           policy: Optional["comm_lib.BoundaryExchange"] = None
-           ) -> List[IntervalEvent]:
+           policy: Optional["comm_lib.BoundaryExchange"] = None,
+           stages: Optional[Sequence[int]] = None) -> List[IntervalEvent]:
     """Trace records of the whole schedule without executing any numerics —
-    the latency-only path (`simulate.build_trace`) and the numerics path
-    (`patch_parallel.run_schedule`) both derive their records from
-    :func:`lower`, so they are structurally identical by construction."""
+    the latency-only path (`simulate.build_trace`) and the numerics paths
+    (`patch_parallel.run_schedule`, `pipefuse.run_pipefuse`) all derive
+    their records from :func:`lower`, so they are structurally identical by
+    construction."""
     out: List[IntervalEvent] = []
     pending: Optional[ComputeInterval] = None
-    for ev in lower(plan, patches, policy):
+    fill = False
+    for ev in lower(plan, patches, policy, stages):
         if isinstance(ev, Warmup):
             out.append(warmup_record(ev))
+        elif isinstance(ev, StageShift):
+            fill = True
         elif isinstance(ev, ComputeInterval):
             pending = ev
         elif isinstance(ev, Exchange):
-            out.append(record(pending, ev.kind))
+            out.append(record(pending, ev.kind, fill=fill))
+            fill = False
     return out
 
 
 def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
-               patches: Sequence[int], cfg, batch: int) -> ExecutionTrace:
+               patches: Sequence[int], cfg, batch: int,
+               stages: Optional[Sequence[int]] = None) -> ExecutionTrace:
     """Byte-size provenance shared by every trace producer."""
     H = cfg.latent_size
     lat_bytes = int(batch * H * H * cfg.channels * 4)
     kv_bytes = [int(2 * cfg.n_layers * batch * pr * cfg.tokens_per_side
                     * cfg.d_model * 2) for pr in patches]
+    act_row = int(batch * cfg.tokens_per_side * cfg.d_model * 4)
     return ExecutionTrace(records, plan, list(patches), cfg.n_tokens,
-                          lat_bytes, kv_bytes)
+                          lat_bytes, kv_bytes,
+                          stages=list(stages) if stages else None,
+                          act_row_bytes=act_row)

@@ -41,6 +41,49 @@ def speeds(cluster: Sequence[DeviceProfile]) -> List[float]:
 
 
 # ----------------------------------------------------------------------
+# depth partitioning (displaced patch pipeline, DESIGN.md §11)
+# ----------------------------------------------------------------------
+
+def stage_partition(n_blocks: int, speeds: Sequence[float]) -> List[int]:
+    """Blocks per pipeline stage, proportional to each stage device's speed.
+
+    The depth analogue of Eq. 5's patch allocator: stage ``s`` (chain order;
+    callers place the chain on devices in this order) gets
+    ``n_blocks * v_s / sum(v)`` contiguous DiT blocks, integerized by
+    largest-remainder rounding with every stage keeping at least one block.
+    ``len(speeds) == 1`` degenerates to the whole model on one device.
+    """
+    if n_blocks < 1:
+        raise ValueError(f"need at least one block, got {n_blocks}")
+    if not speeds:
+        raise ValueError("need at least one stage device")
+    if any(v <= 0 for v in speeds):
+        raise ValueError(f"stage speeds must be positive, got {list(speeds)}")
+    s = len(speeds)
+    if s > n_blocks:
+        raise ValueError(f"{s} stages cannot split {n_blocks} blocks")
+    total = sum(speeds)
+    ideal = [n_blocks * v / total for v in speeds]
+    base = [max(1, int(x)) for x in ideal]
+    rem = n_blocks - sum(base)
+    order = sorted(range(s), key=lambda i: ideal[i] - base[i], reverse=True)
+    for i in order:
+        if rem <= 0:
+            break
+        base[i] += 1
+        rem -= 1
+    # the >=1 floor may have overshot: shrink the stages furthest above
+    # their ideal share, never dropping below one block
+    while rem < 0:
+        j = max((j for j in range(s) if base[j] > 1),
+                key=lambda j: base[j] - ideal[j])
+        base[j] -= 1
+        rem += 1
+    assert sum(base) == n_blocks, (base, n_blocks)
+    return base
+
+
+# ----------------------------------------------------------------------
 # profiling
 # ----------------------------------------------------------------------
 

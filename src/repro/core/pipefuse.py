@@ -1,0 +1,220 @@
+"""Displaced patch-pipeline parallelism (PipeFusion-style) composed with the
+STADI schedule IR (DESIGN.md §11).
+
+STADI parallelizes across steps and patches, but every device still runs the
+*full* DiT depth. This module adds depth as a third dimension: the block
+stack is partitioned into contiguous *stages* sized to device speed
+(:func:`repro.core.hetero.stage_partition`), and patch micro-batches stream
+through the stage chain with **displaced** (at most one-substep-stale)
+remote activations — PipeFusion's observation that diffusion's step-to-step
+input similarity makes that staleness nearly free.
+
+Single-process EMULATION with exact numerics, like ``patch_parallel``:
+
+* The residual stream of a micro-patch passes through all stages within its
+  substep EXACTLY (stage handoffs are in-order); only the attention context
+  is displaced, mirroring PipeFusion where a patch's own activations are
+  never stale.
+* Each stage holds a persistent K/V *context* for its blocks. Micro-tasks
+  update their own rows as they pass through, so when patch ``i`` reaches a
+  stage, patches ahead of it in the pipe are fresh (this substep) and
+  patches behind are one substep stale — the displaced contract. The
+  context is strictly FRESHER than the interval-start ``Published`` buffers
+  the non-pipelined engine attends to, so drift vs ``emulated`` is real but
+  small (tested/benchmarked < 1 dB PSNR).
+* The pipe (re)fills whenever the IR emits a :class:`~repro.core.events.
+  StageShift` — entering the adaptive phase and after every draining
+  ("full") exchange; "skip"/"predict" boundaries keep it full, which is how
+  the PR-3 exchange policies compose with depth pipelining.
+* ``num_stages == 1`` disables the context machinery and interprets the
+  stream with the exact jitted steps of ``patch_parallel.run_schedule`` —
+  bitwise-identical to the ``emulated`` backend by construction.
+
+Heterogeneous wall-clock (pipeline fill bubbles, per-stage bottleneck,
+point-to-point handoffs) is modeled by the simulator replaying the same
+event stream (:func:`repro.core.simulate.simulate_trace` on a staged
+trace); real multi-device execution lives in
+:func:`repro.core.spmd.run_spmd_pipefuse`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.diffusion import DiTConfig
+from repro.core import buffers as buf_lib
+from repro.core import comm as comm_lib
+from repro.core import events as ir
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core.sampler import NoiseSchedule
+from repro.core.schedule import TemporalPlan, patch_bounds
+from repro.models.diffusion import dit
+
+
+def stage_bounds(stages: Sequence[int]) -> Tuple[Tuple[int, int], ...]:
+    """Cumulative [lo, hi) block ranges of a stage partition."""
+    out, lo = [], 0
+    for n in stages:
+        out.append((lo, lo + n))
+        lo += n
+    return tuple(out)
+
+
+def displaced_step(params, cfg, x_loc, t, cond, row_start, ctx_k, ctx_v,
+                   bounds):
+    """One micro-task: a patch slab traverses every stage of the chain.
+
+    The hidden state hands off stage-to-stage exactly; each stage attends
+    over its slice of the displaced context (own rows overwritten fresh, as
+    in ``forward_patch``) and then commits its fresh rows to the context so
+    later micro-tasks this substep see them. Returns
+    (eps, fresh_k, fresh_v [L,B,Nl,H,hd], ctx_k', ctx_v'). The serving
+    engine vmaps this over request lanes; :data:`_jit_displaced_step` is
+    the single-request jitted form.
+    """
+    rows_tok = x_loc.shape[1] // cfg.patch_size
+    h, c = dit.embed_patch(params, cfg, x_loc, t, cond, row_start)
+    tok_start = row_start * cfg.tokens_per_side
+    Nl = h.shape[1]
+    ks, vs = [], []
+    for lo, hi in bounds:
+        blocks = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+        h, (k, v) = dit.block_stack(blocks, cfg, h, c, tok_start,
+                                    buffers=(ctx_k[lo:hi], ctx_v[lo:hi]))
+        ctx_k = ctx_k.at[lo:hi, :, tok_start:tok_start + Nl].set(
+            k.astype(ctx_k.dtype))
+        ctx_v = ctx_v.at[lo:hi, :, tok_start:tok_start + Nl].set(
+            v.astype(ctx_v.dtype))
+        ks.append(k)
+        vs.append(v)
+    eps = dit.final_head(params, cfg, h, c, rows_tok)
+    return (eps, jnp.concatenate(ks, axis=0), jnp.concatenate(vs, axis=0),
+            ctx_k, ctx_v)
+
+
+_jit_displaced_step = functools.partial(
+    jax.jit, static_argnames=("cfg", "row_start", "bounds"))(displaced_step)
+
+
+def run_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
+                 plan: TemporalPlan, patches: Sequence[int],
+                 stages: Sequence[int], exchange: str = "sync",
+                 exchange_refresh: int = 2,
+                 interval_hook=None) -> "pp.RunResult":
+    """Execute a STADI schedule with the DiT depth pipelined over ``stages``.
+
+    patches: token-rows per micro-batch slab (sum == cfg.tokens_per_side);
+    with ``len(stages) == 1`` this is exactly ``run_schedule`` (bitwise).
+    Micro-tasks are ordered substep-major, ascending slab index — the pipe
+    order the displaced context emulates.
+    """
+    stages = list(stages)
+    if sum(stages) != cfg.n_layers:
+        raise ValueError(f"stages {stages} must cover all {cfg.n_layers} "
+                         "blocks")
+    if interval_hook is not None:
+        raise ValueError("online rebalancing is not supported by the "
+                         "pipefuse backend (stage splits are static)")
+    S = len(stages)
+    bounds = stage_bounds(stages)
+    p = cfg.patch_size
+    plan0, patches0 = plan, list(patches)
+    ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
+
+    x = x_T
+    B = x.shape[0]
+    records: List[ir.IntervalEvent] = []
+
+    published: Optional[buf_lib.Published] = None
+    prev_published: Optional[buf_lib.Published] = None
+    read_pub: Optional[buf_lib.Published] = None   # S == 1 read source
+    ctx_k = ctx_v = None                           # S > 1 displaced context
+    pending = {}
+    slabs = {}
+    interval: Optional[ir.ComputeInterval] = None
+    fill_pending = False
+
+    def _bootstrap():
+        nonlocal published, read_pub
+        if published is None:                      # M_w == 0: one full fwd
+            _, kvs = pp._jit_full_step(params, cfg, x, ts[0], cond)
+            published = buf_lib.Published(kvs[0], kvs[1], -1)
+            read_pub = published
+
+    for ev in ir.lower(plan, patches, policy, stages=stages if S > 1 else None):
+        if isinstance(ev, ir.Warmup):
+            # synchronous step: the chain handoffs are exact, so warmup is
+            # the same full-image forward as the non-pipelined engine
+            eps, kvs = pp._jit_full_step(params, cfg, x, ts[ev.fine_step],
+                                         cond)
+            x = sampler_lib.ddim_step(sched, x, eps, ts[ev.fine_step],
+                                      ts[ev.fine_step + 1])
+            published = buf_lib.Published(kvs[0], kvs[1], ev.fine_step)
+            read_pub = published
+            records.append(ir.warmup_record(ev))
+
+        elif isinstance(ev, ir.StageShift):
+            # pipeline (re)fill: stage contexts reset to the published K/V
+            _bootstrap()
+            ctx_k, ctx_v = published.k, published.v
+            fill_pending = True
+
+        elif isinstance(ev, ir.ComputeInterval):
+            _bootstrap()
+            interval = ev
+            bounds_tok = patch_bounds(ev.patches)
+            bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
+            pending = {}
+            slabs = {i: pp._slab(x, bounds_lat[i]) for i in ev.workers}
+            R = ev.length
+            for f in range(R):                     # substep-major micro order
+                for i in ev.workers:
+                    r = ev.ratios[i]
+                    if f % r:
+                        continue
+                    t_from = ts[ev.fine_step + f]
+                    t_to = ts[ev.fine_step + f + r]
+                    if S == 1:                     # exact emulated path
+                        eps, kvs = pp._jit_patch_step(
+                            params, cfg, slabs[i], t_from, cond,
+                            bounds_tok[i][0], read_pub.k, read_pub.v)
+                        k_loc, v_loc = kvs
+                    else:
+                        eps, k_loc, v_loc, ctx_k, ctx_v = _jit_displaced_step(
+                            params, cfg, slabs[i], t_from, cond,
+                            bounds_tok[i][0], ctx_k, ctx_v, bounds)
+                    slabs[i] = sampler_lib.ddim_step(sched, slabs[i], eps,
+                                                     t_from, t_to)
+                    if f == 0:   # Alg.1: publish the interval-start K/V
+                        buf_lib.publish_local(pending, i, k_loc, v_loc,
+                                              bounds_tok[i][0]
+                                              * cfg.tokens_per_side)
+
+        elif isinstance(ev, ir.Exchange):
+            bounds_lat = [(a * p, b * p) for a, b in
+                          patch_bounds(ev.patches)]
+            for i in interval.workers:
+                lat = bounds_lat[i]
+                x = x.at[:, lat[0]:lat[1]].set(slabs[i])
+            if ev.kind == "full":
+                prev_published = published
+                published = buf_lib.merge(published, pending, ev.fine_step)
+                read_pub = published
+            elif ev.kind == "skip":
+                read_pub = published
+            elif ev.kind == "predict":
+                read_pub = buf_lib.extrapolate(prev_published, published,
+                                               ev.fine_step)
+            # S > 1: the context persists across skip/predict boundaries
+            # (the pipe stays full); the next StageShift resets it
+            records.append(ir.record(interval, ev.kind, fill=fill_pending))
+            fill_pending = False
+
+    trace = ir.make_trace(records, plan0, patches0, cfg, int(B),
+                          stages=stages)
+    return pp.RunResult(x, trace)

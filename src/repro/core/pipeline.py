@@ -60,6 +60,14 @@ class StadiConfig:
     # every E interval boundaries (ignored by "sync")
     exchange: str = "sync"
     exchange_refresh: int = 2
+    # displaced patch pipeline (DESIGN.md §11): number of depth stages the
+    # DiT block stack is split into (1 = no depth parallelism; 0 = let the
+    # stadi_pipefuse planner search). micro_patches pins the micro-batch
+    # count streaming through the stage chain (0 = auto). depth is the DiT
+    # block count — StadiPipeline fills it in from the model config.
+    num_stages: int = 1
+    micro_patches: int = 0
+    depth: Optional[int] = None
     # latency modeling ("simulate" backend; also latency reporting elsewhere)
     cost_model: Optional[CostModel] = None
     # online rebalancing (beyond-paper, DESIGN.md §7.1)
@@ -207,8 +215,76 @@ def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
     batch = int(x_T.shape[0]) if x_T is not None else 1
     trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
                             batch=batch, exchange=config.exchange,
-                            exchange_refresh=config.exchange_refresh)
+                            exchange_refresh=config.exchange_refresh,
+                            stages=plan_stages(plan, model_cfg, config))
     return None, trace
+
+
+#: backends that can execute a depth-partitioned (staged) plan
+STAGED_BACKENDS = ("pipefuse", "spmd_pipefuse", "simulate")
+
+
+def plan_stages(plan, model_cfg, config) -> Optional[List[int]]:
+    """The stage split a staged executor should run: the plan's own (from
+    the stadi_pipefuse planner) or, for plain planners, a speed-
+    proportional split of config.num_stages (the --num-stages wiring)."""
+    if plan.stages is not None:
+        return list(plan.stages)
+    if config.num_stages <= 1:
+        return None
+    if config.num_stages > config.n_devices:
+        raise ValueError(
+            f"num_stages={config.num_stages} is infeasible: the chain needs "
+            f"one device per stage and the cluster has {config.n_devices} "
+            "(the stadi_pipefuse planner rejects this identically)")
+    chain = sim.chain_speeds(config.speeds, config.num_stages)
+    return hetero.stage_partition(model_cfg.n_layers, chain)
+
+
+def check_backend_can_run(plan, config) -> None:
+    """A staged plan silently degrades to whole-model patch parallelism on
+    a non-staged backend (while staged costs/placements get reported), so
+    fail fast — reachable via planner='stadi_pipefuse', num_stages=0
+    (auto) picking a pipeline on backend='emulated'."""
+    if (plan.stages is not None and len(plan.stages) > 1
+            and config.backend not in STAGED_BACKENDS):
+        raise ValueError(
+            f"the planned stage split {plan.stages} needs a staged backend "
+            f"({sorted(STAGED_BACKENDS)}), not {config.backend!r}; pin "
+            "num_stages=1 to force pure patch parallelism")
+
+
+@register_executor("pipefuse")
+def pipefuse_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                      interval_hook=None):
+    """Displaced patch pipeline (DESIGN.md §11): emulated interpreter;
+    bitwise-identical to "emulated" when the stage count is 1."""
+    from repro.core import pipefuse
+    stages = plan_stages(plan, model_cfg, config) or [model_cfg.n_layers]
+    res = pipefuse.run_pipefuse(params, model_cfg, sched, x_T, cond,
+                                plan.temporal, plan.patches, stages,
+                                exchange=config.exchange,
+                                exchange_refresh=config.exchange_refresh,
+                                interval_hook=interval_hook)
+    return res.image, res.trace
+
+
+@register_executor("spmd_pipefuse")
+def spmd_pipefuse_executor(params, model_cfg, sched, x_T, cond, plan,
+                           config, interval_hook=None):
+    """Real shard_map stage chain over jax.devices() (devices = stages)."""
+    from repro.core import spmd
+    stages = plan_stages(plan, model_cfg, config) or [model_cfg.n_layers]
+    img = spmd.run_spmd_pipefuse(params, model_cfg, sched, x_T, cond,
+                                 plan.temporal, plan.patches, stages,
+                                 exchange=config.exchange,
+                                 exchange_refresh=config.exchange_refresh)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=int(x_T.shape[0]),
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh,
+                            stages=stages)
+    return img, trace
 
 
 class StadiPipeline:
@@ -228,6 +304,14 @@ class StadiPipeline:
         get_executor(config.backend)
         from repro.core.comm import get_exchange
         get_exchange(config.exchange, config.exchange_refresh)
+        if config.num_stages < 0:
+            raise ValueError(f"num_stages must be >= 0 (0 = auto), got "
+                             f"{config.num_stages}")
+        if config.num_stages > 1 and config.backend not in STAGED_BACKENDS:
+            raise ValueError(
+                f"num_stages={config.num_stages} needs a staged backend "
+                f"({sorted(STAGED_BACKENDS)}), not {config.backend!r} — "
+                "the displaced patch pipeline (DESIGN.md §11)")
 
     @property
     def p_total(self) -> int:
@@ -236,7 +320,10 @@ class StadiPipeline:
     def plan(self, speeds: Optional[Sequence[float]] = None) -> ExecutionPlan:
         """Run the configured planner (no execution)."""
         speeds = list(speeds) if speeds is not None else self.config.speeds
-        return get_planner(self.config.planner)(speeds, self.config, self.p_total)
+        knobs = self.config
+        if knobs.depth is None:          # stage planning needs the DiT depth
+            knobs = dataclasses.replace(knobs, depth=self.model_cfg.n_layers)
+        return get_planner(self.config.planner)(speeds, knobs, self.p_total)
 
     def generate(self, x_T=None, cond=None, *,
                  measured_speeds: Optional[Sequence[float]] = None
@@ -250,6 +337,7 @@ class StadiPipeline:
         """
         config = self.config
         plan = self.plan()
+        check_backend_can_run(plan, config)
         replans: List[ReplanEvent] = []
         hook = None
         if config.rebalance_every > 0:
@@ -292,7 +380,8 @@ class StadiPipeline:
         trace = sim.build_trace(engine.plan.temporal, engine.plan.patches,
                                 self.model_cfg, batch=1,
                                 exchange=self.config.exchange,
-                                exchange_refresh=self.config.exchange_refresh)
+                                exchange_refresh=self.config.exchange_refresh,
+                                stages=engine.stages)
         report_latency = self.config.cost_model is not None
         return [PipelineResult(r.image, trace, engine.plan,
                                r.modeled_latency_s if report_latency else None)

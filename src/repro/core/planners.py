@@ -31,13 +31,19 @@ class ExecutionPlan:
     planner:  provenance — registry name of the planner that produced it
     speeds:   the effective speeds the plan was computed from
     modeled_interval_cost: planner-modeled cost per fine-step interval
-        (only the makespan planner fills this in; None otherwise)
+        (the makespan and stadi_pipefuse planners fill this in)
+    stages:   displaced patch pipeline (DESIGN.md §11): DiT blocks per
+        pipeline stage, chain placed on the fastest ``len(stages)`` devices
+        in speed order. None = depth-unpartitioned (pure patch mode). When
+        set, ``temporal``/``patches`` describe patch *micro-batches*
+        streaming through the stage chain, not per-device ownership.
     """
     temporal: TemporalPlan
     patches: List[int]
     planner: str
     speeds: List[float]
     modeled_interval_cost: Optional[float] = None
+    stages: Optional[List[int]] = None
 
     @property
     def active(self) -> List[int]:
@@ -135,6 +141,95 @@ def stadi_planner(speeds, knobs, p_total) -> ExecutionPlan:
     patches = sched_lib.spatial_allocation(speeds, plan.steps, p_total,
                                            knobs.granularity, knobs.min_patch)
     return ExecutionPlan(plan, patches, "stadi", list(speeds))
+
+
+def _patch_plan_cost(plan: ExecutionPlan, p_total: int,
+                     fixed: float = 0.05) -> float:
+    """Normalized per-fine-step makespan of a pure patch-parallel plan: a
+    full-depth full-image step at v=1 costs ``fixed + 1`` work units, and a
+    device with interval ratio r amortizes its step over r fine steps (the
+    same model :func:`repro.core.schedule.makespan_optimal_allocation`
+    minimizes)."""
+    cost = 0.0
+    for i in plan.active:
+        v, r = plan.speeds[i], plan.temporal.ratios[i]
+        cost = max(cost, (fixed + plan.patches[i] / p_total) / v / r)
+    return cost
+
+
+def _pipefuse_plan_cost(stages: Sequence[int], chain_speeds: Sequence[float],
+                        n_micro: int, fixed: float = 0.05) -> float:
+    """Normalized per-fine-step steady-state cost of a displaced pipeline:
+    stage d runs its block share of every one of the ``n_micro`` micro-tasks
+    per fine step, so the bottleneck stage sets the rate. The depth-
+    proportional fixed overhead splits with the blocks — the structural
+    advantage over patch parallelism, which pays ``fixed`` whole on every
+    device (DESIGN.md §11)."""
+    L = sum(stages)
+    return max(b / L * (n_micro * fixed + 1.0) / v
+               for b, v in zip(stages, chain_speeds))
+
+
+@register_planner("stadi_pipefuse")
+def stadi_pipefuse_planner(speeds, knobs, p_total) -> ExecutionPlan:
+    """Joint (steps, patches, stage split) search (DESIGN.md §11).
+
+    Candidates: the pure patch-parallel STADI plan (num_stages == 1) and,
+    for each stage count S, a displaced pipeline whose chain runs on the S
+    fastest devices with blocks sized by :func:`repro.core.hetero.
+    stage_partition` and patch micro-batches split uniformly. All candidates
+    are scored with the same normalized interval-makespan model and the
+    cheapest wins. ``knobs.num_stages > 0`` pins S (1 = force pure patch);
+    0 = auto. ``knobs.depth`` (the DiT block count, filled in by
+    StadiPipeline) is required for S > 1. ``knobs.micro_patches > 0`` pins
+    the micro-batch count; 0 = auto (S or 2S, whichever models cheaper).
+    """
+    from repro.core import hetero
+    n = len(speeds)
+    forced_s = getattr(knobs, "num_stages", 0)
+    depth = getattr(knobs, "depth", None)
+    # normalized per-step fixed overhead: derive from the configured cost
+    # model when there is one (t_fixed in units of the full-image row work),
+    # else the makespan planner's default
+    cm = getattr(knobs, "cost_model", None)
+    fixed = (cm.t_fixed / max(cm.t_row * p_total, 1e-12)
+             if cm is not None else 0.05)
+    stadi = stadi_planner(speeds, knobs, p_total)
+    candidates = [dataclasses.replace(
+        stadi, planner="stadi_pipefuse",
+        modeled_interval_cost=_patch_plan_cost(stadi, p_total, fixed))]
+    if depth is None and forced_s > 1:
+        raise ValueError("stadi_pipefuse needs knobs.depth (the DiT block "
+                         "count) to partition stages; StadiPipeline fills "
+                         "it in from the model config")
+    s_options = ([forced_s] if forced_s > 0 else
+                 range(2, min(n, depth or 1) + 1))
+    by_speed = sorted(range(n), key=lambda d: (-speeds[d], d))
+    forced_m = getattr(knobs, "micro_patches", 0)
+    for S in s_options:
+        if S < 2 or S > min(n, depth):
+            continue
+        chain = [speeds[d] for d in by_speed[:S]]
+        stages = hetero.stage_partition(depth, chain)
+        for M in ([forced_m] if forced_m > 0 else
+                  sorted({S, min(2 * S, p_total)})):
+            if M > p_total:
+                continue
+            temporal = _uniform_temporal(M, knobs.m_base, knobs.m_warmup)
+            patches = _equal_patches(temporal, p_total)
+            candidates.append(ExecutionPlan(
+                temporal, patches, "stadi_pipefuse", list(speeds),
+                modeled_interval_cost=_pipefuse_plan_cost(stages, chain, M,
+                                                          fixed),
+                stages=stages))
+    if forced_s > 1 and len(candidates) == 1:
+        raise ValueError(
+            f"num_stages={forced_s} is infeasible: need 2 <= S <= "
+            f"min(n_devices={n}, depth={depth})")
+    best = min(candidates, key=lambda c: c.modeled_interval_cost)
+    if forced_s > 1:                     # pinned: drop the patch fallback
+        best = min(candidates[1:], key=lambda c: c.modeled_interval_cost)
+    return best
 
 
 @register_planner("makespan")

@@ -31,7 +31,7 @@ structure.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core import comm as comm_lib
 from repro.core import events as ir
@@ -39,19 +39,21 @@ from repro.core.events import ExecutionTrace, IntervalEvent  # noqa: F401
 
 
 def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
-                exchange: str = "sync",
-                exchange_refresh: int = 2) -> ExecutionTrace:
+                exchange: str = "sync", exchange_refresh: int = 2,
+                stages: Optional[Sequence[int]] = None) -> ExecutionTrace:
     """Schedule trace without running numerics (latency-only replay).
 
     Replays :func:`repro.core.events.lower` for (plan, patches, policy) —
     the identical stream :func:`repro.core.patch_parallel.run_schedule`
     interprets — and converts it to trace records; the ``"simulate"``
     pipeline backend replays the result against a :class:`CostModel`
-    instead of executing the denoiser.
+    instead of executing the denoiser. ``stages`` produces a displaced
+    patch-pipeline trace (DESIGN.md §11) with pipeline-fill provenance.
     """
     policy = comm_lib.get_exchange(exchange, exchange_refresh)
-    records = ir.replay(plan, patches, policy)
-    return ir.make_trace(records, plan, list(patches), cfg, batch)
+    records = ir.replay(plan, patches, policy, stages=stages)
+    return ir.make_trace(records, plan, list(patches), cfg, batch,
+                         stages=stages)
 
 
 @dataclasses.dataclass
@@ -85,9 +87,116 @@ def _kv_bytes_per_row(trace: ExecutionTrace) -> float:
     return 0.0
 
 
+# ----------------------------------------------------------------------
+# displaced patch-pipeline costing (DESIGN.md §11)
+# ----------------------------------------------------------------------
+#
+# In pipefuse mode trace "workers" are patch micro-batches that ALL stream
+# through every stage device, so the per-worker max-compute model above does
+# not apply. Stage d (chain order, placed on the d-th fastest device) runs
+# its block share of every micro-task; steady state is bottleneck-bound and
+# the pipeline bubble is charged only on fill intervals (after warmup and
+# after every draining "full" boundary — the IR's StageShift). Stage
+# handoffs are point-to-point activation slabs, overlapped with compute in
+# steady state, so they enter as a bandwidth bottleneck term rather than a
+# per-boundary stall; K/V never crosses stages (each stage owns its own
+# blocks' context), which is the structural comm saving over patch
+# parallelism's staged-KV broadcast.
+
+def chain_speeds(speeds: Sequence[float], n_stages: int) -> List[float]:
+    """The stage chain runs on the ``n_stages`` fastest devices, in speed
+    order (stage 0 = fastest) — the placement convention every consumer of
+    a staged plan shares (planner, simulator, serving engine)."""
+    return sorted(speeds, reverse=True)[:n_stages]
+
+
+def pipefuse_stage_seconds(stages: Sequence[int], chain: Sequence[float],
+                           cm: CostModel,
+                           tasks: Sequence[Tuple[int, float]]) -> List[float]:
+    """Per-stage busy seconds for a stream of micro-tasks.
+
+    tasks: (substeps, effective_rows) per micro-batch; both the per-step
+    fixed overhead and the row work are depth-proportional, so stage d pays
+    its block fraction of each.
+    """
+    L = sum(stages)
+    work = sum(s * (cm.t_fixed + cm.t_row * r) for s, r in tasks)
+    return [b / L * work / max(v, 1e-9) for b, v in zip(stages, chain)]
+
+
+def pipefuse_fill_bubble(stages: Sequence[int], chain: Sequence[float],
+                         cm: CostModel, rows: float) -> float:
+    """Pipeline-fill bubble: the first micro-task traverses the whole chain
+    before steady state; everything but its bottleneck-stage share is
+    un-overlapped startup latency (plus one p2p hop per handoff)."""
+    L = sum(stages)
+    per = [b / L * (cm.t_fixed + cm.t_row * rows) / max(v, 1e-9)
+           for b, v in zip(stages, chain)]
+    return sum(per) - max(per) + (len(stages) - 1) * cm.link_latency
+
+
+def pipefuse_warmup_seconds(stages: Sequence[int], chain: Sequence[float],
+                            cm: CostModel, rows: float,
+                            act_row_bytes: float) -> float:
+    """One synchronous full-image task, sequential through the chain (exact
+    handoffs; the fill price of synchronous steps)."""
+    per = pipefuse_stage_seconds(stages, chain, cm, [(1, rows)])
+    hop = act_row_bytes * rows / cm.link_bw + cm.link_latency
+    return sum(per) + (len(stages) - 1) * hop
+
+
+def pipefuse_interval_seconds(stages: Sequence[int], chain: Sequence[float],
+                              cm: CostModel,
+                              tasks: Sequence[Tuple[int, float]],
+                              fill: bool, kind: str, latent_bytes: float,
+                              act_row_bytes: float) -> float:
+    """Modeled seconds of one adaptive interval through the stage chain —
+    the ONE place the staged interval cost lives; the trace replay and the
+    serving engine's round costing both call it, so they cannot diverge.
+
+    Steady state is bottleneck-bound; the p2p activation stream of every
+    non-final stage is async, so it competes with compute as a bandwidth
+    bottleneck (the analogue of the masked async KV). Fill intervals pay
+    the pipeline bubble; "full" boundaries drain and add the latent ring
+    handoff back to stage 0 (K/V stays put).
+    """
+    busy = pipefuse_stage_seconds(stages, chain, cm, tasks)
+    handoff = sum(s * act_row_bytes * r for s, r in tasks) / cm.link_bw \
+        if len(stages) > 1 else 0.0
+    total = max(max(busy), handoff)
+    if fill:
+        total += pipefuse_fill_bubble(stages, chain, cm, tasks[0][1])
+    if kind == "full":
+        total += latent_bytes / cm.link_bw + cm.link_latency
+    return total
+
+
+def _simulate_staged(trace: ExecutionTrace, speeds: Sequence[float],
+                     cm: CostModel) -> float:
+    stages = trace.stages
+    chain = chain_speeds(speeds, len(stages))
+    total = 0.0
+    rows_total = max(sum(trace.patches), 1)
+    for ev in trace.events:
+        tasks = [(sub, rows) for sub, rows in zip(ev.substeps, ev.patches)
+                 if sub > 0 and rows > 0]
+        if not tasks:
+            continue
+        if ev.synchronous:
+            total += pipefuse_warmup_seconds(stages, chain, cm, rows_total,
+                                             trace.act_row_bytes)
+        else:
+            total += pipefuse_interval_seconds(
+                stages, chain, cm, tasks, ev.fill, ev.exchange,
+                trace.latent_bytes, trace.act_row_bytes)
+    return total
+
+
 def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
                    cm: CostModel) -> float:
     """End-to-end makespan (s) of a schedule on devices with given speeds."""
+    if trace.stages and len(trace.stages) > 1:
+        return _simulate_staged(trace, speeds, cm)
     total = 0.0
     kv_row = _kv_bytes_per_row(trace)
     for ev in trace.events:

@@ -172,6 +172,173 @@ def make_interval_step(cfg: DiTConfig, sched: NoiseSchedule,
     return jax.jit(fn)
 
 
+def run_spmd_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T,
+                      cond, plan: TemporalPlan, patches: Sequence[int],
+                      stages: Sequence[int], exchange: str = "sync",
+                      exchange_refresh: int = 2):
+    """shard_map displaced patch pipeline: devices are STAGES (DESIGN.md
+    §11), not patch owners. Returns the final image [B,H,W,C].
+
+    Mesh axis "stage" holds ``len(stages)`` devices; device ``d`` owns the
+    ``stages[d]`` contiguous DiT blocks of its stage (sliced from the
+    replicated parameter stack — the memory saving of real pipelining is
+    not observable in host emulation) plus the displaced K/V context for
+    exactly those blocks, which NEVER crosses devices. Per micro-task the
+    hidden state hands off stage-to-stage through
+    :func:`repro.core.comm.stage_handoff` (a point-to-point ``ppermute``,
+    not a collective) and the final stage's eps is broadcast for the
+    replicated DDIM update. The event stream of :func:`repro.core.events.
+    lower` — including :class:`~repro.core.events.StageShift` fills —
+    unrolls statically into the traced program, exactly as ``run_spmd``
+    does for the patch-parallel schedule; numerics follow the same
+    displaced contract as :func:`repro.core.pipefuse.run_pipefuse`
+    (pipeline overlap is wall-clock, modeled by the simulator)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import sampler as sampler_lib
+    from repro.core.comm import shard_map_compat, stage_handoff
+    from repro.core.schedule import patch_bounds
+    from repro.models.diffusion import dit
+
+    stages = list(stages)
+    S = len(stages)
+    assert sum(stages) == cfg.n_layers, (stages, cfg.n_layers)
+    if S == 1:
+        return run_spmd(params, cfg, sched, x_T, cond, plan, patches,
+                        exchange=exchange, exchange_refresh=exchange_refresh)
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
+    evs = list(ir.lower(plan, patches, policy, stages=stages))
+
+    devices = jax.devices()
+    assert S <= len(devices), (S, len(devices))
+    mesh = Mesh(np.asarray(devices[:S]), ("stage",))
+
+    p = cfg.patch_size
+    wp = cfg.tokens_per_side
+    max_blk = max(stages)
+    lo_list = np.concatenate([[0], np.cumsum(stages)[:-1]]).astype(np.int32)
+    bounds_tok = patch_bounds(patches)
+    ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
+
+    def body(params, x_full, cond):
+        idx = jax.lax.axis_index("stage")
+        lo_arr = jnp.asarray(lo_list)
+        nblk_arr = jnp.asarray(stages, jnp.int32)
+        my_lo = lo_arr[idx]
+        my_nblk = nblk_arr[idx]
+        enable = jnp.arange(max_blk) < my_nblk
+        # my stage's contiguous block slice, padded to the max stage depth
+        # (disabled tail blocks are exact identities in block_stack)
+        my_blocks = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(
+                jnp.pad(a, [(0, max_blk)] + [(0, 0)] * (a.ndim - 1)),
+                my_lo, max_blk, axis=0),
+            params["blocks"])
+
+        my_ctx_k = my_ctx_v = None       # displaced context, my blocks only
+        my_pub_k = my_pub_v = None       # last published K/V, my blocks only
+        pend = {}                        # worker -> (k, v) at substep 0
+
+        def my_layer_slice(kvs_full):
+            return jax.lax.dynamic_slice_in_dim(
+                jnp.pad(kvs_full, [(0, max_blk)] + [(0, 0)] * (kvs_full.ndim - 1)),
+                my_lo, max_blk, axis=0)
+
+        def micro_task(x_loc, t, row_start, ctx_k, ctx_v):
+            """One slab through the whole chain: embed (replicated) ->
+            masked stage compute + p2p handoff -> broadcast eps."""
+            h, c = dit.embed_patch(params, cfg, x_loc, t, cond, row_start)
+            rows_tok = x_loc.shape[1] // p
+            tok_start = row_start * wp
+            k_mine = v_mine = None
+            for s in range(S):
+                h_out, (k, v) = dit.block_stack(
+                    my_blocks, cfg, h, c, tok_start,
+                    buffers=(ctx_k, ctx_v), enable=enable)
+                on = (idx == s)
+                ctx_k = jnp.where(on, ctx_k.at[:, :, tok_start:tok_start
+                                               + rows_tok * wp].set(
+                    k.astype(ctx_k.dtype)), ctx_k)
+                ctx_v = jnp.where(on, ctx_v.at[:, :, tok_start:tok_start
+                                               + rows_tok * wp].set(
+                    v.astype(ctx_v.dtype)), ctx_v)
+                if k_mine is None:
+                    k_mine = jnp.where(on, k, jnp.zeros_like(k))
+                    v_mine = jnp.where(on, v, jnp.zeros_like(v))
+                else:
+                    k_mine = jnp.where(on, k, k_mine)
+                    v_mine = jnp.where(on, v, v_mine)
+                if s < S - 1:            # point-to-point: stage s -> s + 1
+                    h = stage_handoff(h_out, "stage", S)
+                else:
+                    last = (idx == S - 1)
+                    h = jax.lax.psum(jnp.where(last, h_out,
+                                               jnp.zeros_like(h_out)),
+                                     "stage")
+            eps = dit.final_head(params, cfg, h, c, rows_tok)
+            return eps, k_mine, v_mine, ctx_k, ctx_v
+
+        for ev in evs:
+            if isinstance(ev, ir.Warmup):
+                # synchronous: exact full-depth forward (redundant per
+                # device — the chain handoffs of a sync step are exact)
+                eps, kvs = dit.forward_patch(
+                    params, cfg, x_full, ts[ev.fine_step], cond, 0,
+                    buffers=None, return_kv=True)
+                x_full = sampler_lib.ddim_step(sched, x_full, eps,
+                                               ts[ev.fine_step],
+                                               ts[ev.fine_step + 1])
+                my_pub_k = my_layer_slice(kvs[0])
+                my_pub_v = my_layer_slice(kvs[1])
+
+            elif isinstance(ev, ir.StageShift):
+                if my_pub_k is None:      # M_w == 0: bootstrap once
+                    _, kvs = dit.forward_patch(
+                        params, cfg, x_full, ts[0], cond, 0,
+                        buffers=None, return_kv=True)
+                    my_pub_k = my_layer_slice(kvs[0])
+                    my_pub_v = my_layer_slice(kvs[1])
+                my_ctx_k, my_ctx_v = my_pub_k, my_pub_v
+
+            elif isinstance(ev, ir.ComputeInterval):
+                pend = {}
+                for f in range(ev.length):
+                    for i in ev.workers:
+                        r = ev.ratios[i]
+                        if f % r:
+                            continue
+                        a, b = bounds_tok[i]
+                        x_loc = x_full[:, a * p:b * p]
+                        t_from = ts[ev.fine_step + f]
+                        t_to = ts[ev.fine_step + f + r]
+                        eps, k_mine, v_mine, my_ctx_k, my_ctx_v = micro_task(
+                            x_loc, t_from, a, my_ctx_k, my_ctx_v)
+                        x_loc = sampler_lib.ddim_step(sched, x_loc, eps,
+                                                      t_from, t_to)
+                        x_full = jax.lax.dynamic_update_slice_in_dim(
+                            x_full, x_loc, a * p, axis=1)
+                        if f == 0:
+                            pend[i] = (k_mine, v_mine, a * wp)
+
+            elif isinstance(ev, ir.Exchange):
+                if ev.kind == "full":    # merge substep-0 K/V, my blocks
+                    for i in sorted(pend):
+                        kl, vl, start = pend[i]
+                        my_pub_k = jax.lax.dynamic_update_slice_in_dim(
+                            my_pub_k, kl.astype(my_pub_k.dtype), start,
+                            axis=2)
+                        my_pub_v = jax.lax.dynamic_update_slice_in_dim(
+                            my_pub_v, vl.astype(my_pub_v.dtype), start,
+                            axis=2)
+                # skip/predict: the pipe stays full; context persists
+        return x_full
+
+    fn = shard_map_compat(body, mesh, (P(), P(), P()), P())
+    return jax.jit(fn)(params, x_T, cond)
+
+
 def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
              plan: TemporalPlan, patches: Sequence[int],
              exchange: str = "sync", exchange_refresh: int = 2):

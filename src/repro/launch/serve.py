@@ -53,7 +53,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                     m_warmup: int = 4, planner: str = "stadi",
                     backend: str = "emulated", reduced: bool = True,
                     slo_s: float = None, seed: int = 0,
-                    exchange: str = "sync", exchange_refresh: int = 2):
+                    exchange: str = "sync", exchange_refresh: int = 2,
+                    num_stages: int = 1):
     """Continuous batching on a heterogeneous cluster: requests enter a FIFO
     queue, the :class:`DiffusionServingEngine` admits them into ``slots``
     concurrent lanes and drains the queue with batched denoise rounds."""
@@ -70,7 +71,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
     config = StadiConfig.from_occupancies(list(occupancies), m_base=m_base,
                                           m_warmup=m_warmup, planner=planner,
                                           backend=backend, exchange=exchange,
-                                          exchange_refresh=exchange_refresh)
+                                          exchange_refresh=exchange_refresh,
+                                          num_stages=num_stages)
     pipe = StadiPipeline(cfg, params, sched, config)
     engine = DiffusionServingEngine(pipe, slots=slots)
     rng = np.random.default_rng(seed)
@@ -91,7 +93,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
           f"in {dt:.2f}s ({stats['n_completed']/dt:.2f} img/s wall, "
           f"{stats['throughput_modeled_rps']:.2f} img/s modeled{note}) "
           f"planner={planner} backend={backend} slots={slots} "
-          f"rounds={stats['rounds']} patches={engine.plan.patches}")
+          f"rounds={stats['rounds']} patches={engine.plan.patches} "
+          f"stages={engine.stages}")
     for r in stats["requests"]:
         slo = "" if r["slo_met"] is None else f" slo_met={r['slo_met']}"
         print(f"  req {r['uid']}: queued {r['queue_rounds']} rounds, "
@@ -110,9 +113,16 @@ def main():
     ap.add_argument("--diffusion", action="store_true",
                     help="serve diffusion requests via StadiPipeline")
     ap.add_argument("--occupancies", default="0.0,0.6")
-    ap.add_argument("--planner", default="stadi")
+    ap.add_argument("--planner", default="stadi",
+                    help="allocation planner (diffusion only): uniform / "
+                         "spatial / temporal / stadi / makespan / "
+                         "stadi_pipefuse (joint step+patch+stage search)")
     ap.add_argument("--backend", default="emulated",
-                    choices=["emulated", "spmd"])   # serving needs images
+                    choices=["emulated", "spmd", "pipefuse"],
+                    help="serving needs images; 'pipefuse' runs the "
+                         "displaced patch pipeline (DESIGN.md §11) — the "
+                         "engine places stage chains instead of "
+                         "whole-model workers")
     ap.add_argument("--m-base", type=int, default=16)
     ap.add_argument("--m-warmup", type=int, default=4)
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -123,6 +133,11 @@ def main():
                          "DESIGN.md §10)")
     ap.add_argument("--exchange-refresh", type=int, default=2,
                     help="full refresh every E boundaries (stale/predictive)")
+    ap.add_argument("--num-stages", type=int, default=1,
+                    help="depth stages for --backend pipefuse (diffusion "
+                         "only, DESIGN.md §11): DiT blocks are split over a "
+                         "speed-proportional stage chain; 1 = pure patch "
+                         "parallelism, 0 = let stadi_pipefuse search")
     args = ap.parse_args()
     if args.diffusion:
         if args.arch == ap.get_default("arch"):
@@ -138,7 +153,8 @@ def main():
                         slo_s=(args.slo_ms / 1e3
                                if args.slo_ms is not None else None),
                         exchange=args.exchange,
-                        exchange_refresh=args.exchange_refresh)
+                        exchange_refresh=args.exchange_refresh,
+                        num_stages=args.num_stages)
     else:
         serve(args.arch, n_requests=args.requests, slots=args.slots,
               prompt_len=args.prompt_len, max_new=args.max_new)

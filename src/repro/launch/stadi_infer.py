@@ -43,11 +43,19 @@ def main():
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--planner", default="stadi",
                     choices=["uniform", "spatial", "temporal", "stadi",
-                             "makespan"])
+                             "makespan", "stadi_pipefuse"])
     ap.add_argument("--backend", default="emulated",
-                    choices=["emulated", "spmd", "simulate"])
+                    choices=["emulated", "spmd", "simulate", "pipefuse",
+                             "spmd_pipefuse"])
     ap.add_argument("--spmd", action="store_true",
                     help="alias for --backend spmd")
+    ap.add_argument("--num-stages", type=int, default=1,
+                    help="displaced patch pipeline (DESIGN.md §11): depth "
+                         "stages for the pipefuse backends (1 = pure patch "
+                         "parallelism, 0 = let stadi_pipefuse search)")
+    ap.add_argument("--micro-patches", type=int, default=0,
+                    help="micro-batches streaming through the stage chain "
+                         "(0 = auto)")
     ap.add_argument("--rebalance-every", type=int, default=0)
     ap.add_argument("--exchange", default="sync",
                     choices=["sync", "stale_async", "predictive"],
@@ -94,11 +102,15 @@ def main():
         occ, caps, m_base=args.m_base, m_warmup=args.m_warmup,
         a=args.a, b=args.b, planner=args.planner, backend=backend,
         rebalance_every=args.rebalance_every, exchange=args.exchange,
-        exchange_refresh=args.exchange_refresh, **knobs)
+        exchange_refresh=args.exchange_refresh,
+        num_stages=args.num_stages, micro_patches=args.micro_patches,
+        **knobs)
+    from repro.core.pipeline import plan_stages
     pipe = StadiPipeline(cfg, params, sched, config)
     plan = pipe.plan()
     print(f"speeds={config.speeds} steps={plan.temporal.steps} "
-          f"ratios={plan.temporal.ratios} patches={plan.patches}")
+          f"ratios={plan.temporal.ratios} patches={plan.patches} "
+          f"stages={plan_stages(plan, cfg, config)}")
 
     t0 = time.time()
     res = pipe.generate(x_T, cond)

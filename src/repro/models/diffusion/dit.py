@@ -137,42 +137,51 @@ def _cond_vector(params, cfg, t, cond, B):
 # forward
 # ----------------------------------------------------------------------
 
-def forward_patch(params, cfg: DiTConfig, x_rows, t, cond,
-                  row_start: int, buffers: Optional[Tuple] = None,
-                  return_kv: bool = True, valid_tokens: Optional[jnp.ndarray] = None):
-    """Denoise a row-patch with stale remote K/V.
-
-    x_rows: [B, rows_local, W, C] latent slab (full width).
-    buffers: None (local-only attention: exact when patch == full image)
-             or (buf_k, buf_v) each [L, B, N_total, H, hd] — stale K/V for the
-             WHOLE image; the local region is overwritten with fresh values
-             before attending (DistriFusion semantics).
-    row_start: first token-row of this patch (for positional embeddings);
-               may be a traced int (SPMD path with per-device offsets).
-    valid_tokens: SPMD path — number of REAL local tokens (rest is padding to
-               the max patch size); padded tokens never pollute the buffer.
-
-    Returns (eps_rows [B, rows_local, W, C], (fresh_k, fresh_v) [L,B,Nl,H,hd]).
-    """
+def embed_patch(params, cfg: DiTConfig, x_rows, t, cond, row_start):
+    """Pre-block embedding of a row-patch: patchify + patch embed + 2D pos
+    embed + conditioning vector. Returns (h [B,Nl,D], c [B,D])."""
     B = x_rows.shape[0]
     p = cfg.patch_size
     wp = cfg.tokens_per_side
-    rows_tok = x_rows.shape[1] // p                      # token rows in patch
     tok = patchify(x_rows, p)                            # [B, Nl, token_dim]
     Nl = tok.shape[1]
-    D, H = cfg.d_model, cfg.n_heads
-    hd = D // H
-
+    D = cfg.d_model
     # pad the pos-embed table so padded tail tokens can't shift a clamped
     # dynamic_slice back over the valid region
     pe_full = jnp.concatenate([pos_embed_2d(wp, wp, D),
                                jnp.zeros((Nl, D))], axis=0)
     pe = jax.lax.dynamic_slice_in_dim(pe_full, row_start * wp, Nl, axis=0)
-    x = tok @ params["patch_embed"] + params["patch_bias"] + pe.astype(tok.dtype)
+    h = tok @ params["patch_embed"] + params["patch_bias"] + pe.astype(tok.dtype)
     c = _cond_vector(params, cfg, t, cond, B)            # [B, D]
-    tok_start = row_start * wp
+    return h, c
+
+
+def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
+                buffers: Optional[Tuple] = None, return_kv: bool = True,
+                valid_tokens: Optional[jnp.ndarray] = None, enable=None):
+    """Run a contiguous stack of DiT blocks over hidden states ``h``.
+
+    The ONE place the block math lives: ``forward_patch`` runs the whole
+    depth through it, and the displaced patch pipeline (DESIGN.md §11) runs
+    each stage's slice through it, so stage-segmented numerics can never
+    drift from the monolithic forward.
+
+    blocks:  pytree of per-block params, leading axis = block count
+    buffers: None (local-only attention) or (buf_k, buf_v) each
+             [n_blocks, B, N_total, H, hd] — the stale/displaced K/V context
+             for these blocks; own region overwritten fresh before attending
+    enable:  optional [n_blocks] bool — a disabled block is an exact
+             identity (SPMD stage padding); None compiles with no masking at
+             all, preserving the monolithic forward bitwise
+    Returns (h', kvs) with kvs [n_blocks, B, Nl, H, hd] pairs (or None).
+    """
+    B, Nl, D = h.shape[0], h.shape[1], cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
 
     def block(x, scanned):
+        if enable is not None:
+            scanned, on = scanned
         if buffers is None:
             bp = scanned
         else:
@@ -201,19 +210,53 @@ def forward_patch(params, cfg: DiTConfig, x_rows, t, cond,
             full_k = jax.lax.dynamic_update_slice_in_dim(bk, ku.astype(bk.dtype), tok_start, axis=1)
             full_v = jax.lax.dynamic_update_slice_in_dim(bv, vu.astype(bv.dtype), tok_start, axis=1)
             att = layers.attend(q, full_k, full_v, mask=key_mask)
-        x = x + g1[:, None] * (att.reshape(B, Nl, D) @ bp["wo"])
-        xn = _modulate(_ln(x), sh2, sc2)
-        h = jax.nn.gelu(xn @ bp["w1"]) @ bp["w2"]
-        x = x + g2[:, None] * h
-        return x, ((k, v) if return_kv else None)
+        x2 = x + g1[:, None] * (att.reshape(B, Nl, D) @ bp["wo"])
+        xn = _modulate(_ln(x2), sh2, sc2)
+        hmid = jax.nn.gelu(xn @ bp["w1"]) @ bp["w2"]
+        x2 = x2 + g2[:, None] * hmid
+        if enable is not None:           # padded stage slot: exact identity
+            x2 = jnp.where(on, x2, x)
+        return x2, ((k, v) if return_kv else None)
 
-    scanned = params["blocks"] if buffers is None else (params["blocks"],) + tuple(buffers)
-    x, kvs = jax.lax.scan(block, x, scanned)
+    scanned = blocks if buffers is None else (blocks,) + tuple(buffers)
+    if enable is not None:
+        scanned = (scanned, enable)
+    return jax.lax.scan(block, h, scanned)
 
-    mod = c.astype(x.dtype) @ params["final_mod_w"] + params["final_mod_b"]
+
+def final_head(params, cfg: DiTConfig, h, c, rows_tok: int):
+    """adaLN-zero output head: hidden states -> eps rows."""
+    mod = c.astype(h.dtype) @ params["final_mod_w"] + params["final_mod_b"]
     sh, sc = jnp.split(mod, 2, axis=-1)
-    out = _modulate(_ln(x), sh, sc) @ params["final_proj"]
-    eps = unpatchify(out, p, rows_tok, wp, cfg.channels)
+    out = _modulate(_ln(h), sh, sc) @ params["final_proj"]
+    return unpatchify(out, cfg.patch_size, rows_tok, cfg.tokens_per_side,
+                      cfg.channels)
+
+
+def forward_patch(params, cfg: DiTConfig, x_rows, t, cond,
+                  row_start: int, buffers: Optional[Tuple] = None,
+                  return_kv: bool = True, valid_tokens: Optional[jnp.ndarray] = None):
+    """Denoise a row-patch with stale remote K/V.
+
+    x_rows: [B, rows_local, W, C] latent slab (full width).
+    buffers: None (local-only attention: exact when patch == full image)
+             or (buf_k, buf_v) each [L, B, N_total, H, hd] — stale K/V for the
+             WHOLE image; the local region is overwritten with fresh values
+             before attending (DistriFusion semantics).
+    row_start: first token-row of this patch (for positional embeddings);
+               may be a traced int (SPMD path with per-device offsets).
+    valid_tokens: SPMD path — number of REAL local tokens (rest is padding to
+               the max patch size); padded tokens never pollute the buffer.
+
+    Returns (eps_rows [B, rows_local, W, C], (fresh_k, fresh_v) [L,B,Nl,H,hd]).
+    """
+    rows_tok = x_rows.shape[1] // cfg.patch_size         # token rows in patch
+    h, c = embed_patch(params, cfg, x_rows, t, cond, row_start)
+    tok_start = row_start * cfg.tokens_per_side
+    h, kvs = block_stack(params["blocks"], cfg, h, c, tok_start,
+                         buffers=buffers, return_kv=return_kv,
+                         valid_tokens=valid_tokens)
+    eps = final_head(params, cfg, h, c, rows_tok)
     return eps, kvs
 
 

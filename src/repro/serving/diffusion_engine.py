@@ -47,9 +47,11 @@ from repro.core import buffers as buf_lib
 from repro.core import comm as comm_lib
 from repro.core import events as ir
 from repro.core import patch_parallel as pp
+from repro.core import pipefuse as pipefuse_lib
 from repro.core import sampler as sampler_lib
 from repro.core import simulate as sim
-from repro.core.pipeline import (StadiPipeline, get_stepper_factory,
+from repro.core.pipeline import (StadiPipeline, check_backend_can_run,
+                                 get_stepper_factory, plan_stages,
                                  register_stepper_factory)
 from repro.core.planners import ExecutionPlan
 from repro.core.schedule import patch_bounds
@@ -223,6 +225,86 @@ class EmulatedStepper(_VmapWarmupMixin):
         return xs, pub_k, pub_v
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "row_start", "bounds"))
+def _vmap_displaced_step(params, cfg, xs_loc, ts, conds, ctx_ks, ctx_vs,
+                         row_start, bounds):
+    """Lane-stacked displaced micro-task (vmapped ``pipefuse.
+    displaced_step``): every lane carries its own stage contexts."""
+    def one(x_loc, t, cond, ck, cv):
+        return pipefuse_lib.displaced_step(params, cfg, x_loc, t, cond,
+                                           row_start, ck, cv, bounds)
+    return jax.vmap(one)(xs_loc, ts, conds, ctx_ks, ctx_vs)
+
+
+@register_stepper_factory("pipefuse")
+class PipefuseStepper(EmulatedStepper):
+    """Displaced patch-pipeline serving (DESIGN.md §11): at one stage this
+    IS the EmulatedStepper (bitwise); at S > 1 each interval runs the same
+    substep-major micro order as ``pipefuse.run_pipefuse`` with lane-stacked
+    displaced contexts, so per-request images stay bitwise identical to a
+    single-request ``generate`` on the pipefuse backend."""
+
+    def __init__(self, pipeline: StadiPipeline, plan: ExecutionPlan,
+                 slots: int):
+        super().__init__(pipeline, plan, slots)
+        self.stages = (plan_stages(plan, pipeline.model_cfg, pipeline.config)
+                       or [pipeline.model_cfg.n_layers])
+        self.bounds = pipefuse_lib.stage_bounds(self.stages)
+
+    @property
+    def wants_ctx(self) -> bool:
+        return len(self.stages) > 1
+
+    def interval_ctx(self, xs, fine0, conds, pub_k, pub_v, ctx_k, ctx_v,
+                     merge: bool = True):
+        """One adaptive interval through the stage chain.
+
+        ctx_{k,v} [G,L,1,N,H,hd] are the lanes' displaced contexts (reset to
+        the published buffers by the engine on fill intervals). Returns
+        (xs', pub_k', pub_v', ctx_k', ctx_v').
+        """
+        plan, cfg = self.plan.temporal, self.model_cfg
+        R, p = plan.lcm, cfg.patch_size
+        G = xs.shape[0]
+        fine0 = np.asarray(fine0)
+        bounds_tok = patch_bounds(self.plan.patches)
+        bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
+        workers = [i for i in plan.active if self.plan.patches[i] > 0]
+        tshape = (G,) + (1,) * (xs.ndim - 1)
+
+        pending, slabs = {}, {}
+        for i in workers:
+            lo, hi = bounds_lat[i]
+            slabs[i] = xs[:, :, lo:hi]
+        for f in range(R):                   # substep-major micro order
+            for i in workers:
+                r = plan.ratios[i]
+                if f % r:
+                    continue
+                t_from = self._ts[fine0 + f]
+                t_to = self._ts[fine0 + f + r]
+                eps, k, v, ctx_k, ctx_v = _vmap_displaced_step(
+                    self.params, cfg, slabs[i], t_from, conds, ctx_k, ctx_v,
+                    bounds_tok[i][0], self.bounds)
+                slabs[i] = sampler_lib.ddim_step(self.sched, slabs[i], eps,
+                                                 t_from.reshape(tshape),
+                                                 t_to.reshape(tshape))
+                if f == 0:
+                    pending[i] = (k, v)
+        for i in workers:
+            lo, hi = bounds_lat[i]
+            xs = xs.at[:, :, lo:hi].set(slabs[i])
+        if merge:
+            for i in sorted(pending):
+                k, v = pending[i]
+                start = bounds_tok[i][0] * cfg.tokens_per_side
+                pub_k = jax.lax.dynamic_update_slice_in_dim(
+                    pub_k, k.astype(pub_k.dtype), start, axis=3)
+                pub_v = jax.lax.dynamic_update_slice_in_dim(
+                    pub_v, v.astype(pub_v.dtype), start, axis=3)
+        return xs, pub_k, pub_v, ctx_k, ctx_v
+
+
 @register_stepper_factory("spmd")
 class SpmdStepper(_VmapWarmupMixin):
     """shard_map adaptive intervals over real ``jax.devices()``: lanes are
@@ -305,6 +387,7 @@ class DiffusionServingEngine:
         self.pipeline = pipeline
         self.slots = slots
         self.plan = pipeline.plan()
+        check_backend_can_run(self.plan, config)
         self.stepper = get_stepper_factory(config.backend)(
             pipeline, self.plan, slots)
         self.cm = cost_model or config.cost_model
@@ -323,25 +406,37 @@ class DiffusionServingEngine:
         self._pub_k = jnp.zeros(kshape, kdt)
         self._pub_v = jnp.zeros(kshape, kdt)
         self._cond = jnp.zeros((slots, 1), jnp.int32)
+        # displaced patch pipeline (DESIGN.md §11): stage chain + per-lane
+        # displaced contexts (only materialized when depth is partitioned)
+        self.stages = plan_stages(self.plan, cfg, config)
+        staged = self.stages is not None and len(self.stages) > 1
+        self._ctx_k = jnp.zeros(kshape, kdt) if staged else None
+        self._ctx_v = jnp.zeros(kshape, kdt) if staged else None
         # boundary-exchange policy (DESIGN.md §10): replay the SAME schedule
         # IR every lane follows and precompute, per adaptive-interval start
-        # fine step, (read_factor, trail_kind): read_factor is the K/V
+        # fine step, (read_factor, trail_kind, fill): read_factor is the K/V
         # extrapolation coefficient applied BEFORE the interval (0.0 =
         # fresh/stale reuse), trail_kind the exchange at the boundary AFTER
-        # it. Lanes are grouped by this info, so one batched dispatch never
-        # mixes boundary behaviors.
+        # it, fill whether the displaced pipe refills entering it. Lanes are
+        # grouped by this info, so one batched dispatch never mixes boundary
+        # behaviors.
         self.policy = comm_lib.get_exchange(config.exchange,
                                             config.exchange_refresh)
-        self._interval_info: Dict[int, Tuple[float, str]] = {}
+        self._interval_info: Dict[int, Tuple[float, str, bool]] = {}
         read_factor = 0.0
         m_prev: Optional[int] = None
         m_last = self.plan.temporal.m_warmup - 1   # warmup publish (-1 = boot)
         cur: Optional[int] = None
-        for ev in ir.lower(self.plan.temporal, self.plan.patches, self.policy):
-            if isinstance(ev, ir.ComputeInterval):
+        fill = False
+        for ev in ir.lower(self.plan.temporal, self.plan.patches, self.policy,
+                           stages=self.stages if staged else None):
+            if isinstance(ev, ir.StageShift):
+                fill = True
+            elif isinstance(ev, ir.ComputeInterval):
                 cur = ev.fine_step
             elif isinstance(ev, ir.Exchange):
-                self._interval_info[cur] = (read_factor, ev.kind)
+                self._interval_info[cur] = (read_factor, ev.kind, fill)
+                fill = False
                 if ev.kind == "full":
                     m_prev, m_last = m_last, ev.fine_step
                     read_factor = 0.0
@@ -354,8 +449,12 @@ class DiffusionServingEngine:
         # last-but-one published K/V per lane (predictive extrapolation
         # base): these double the per-slot staged-KV footprint and cost a
         # copy per full boundary, so only materialize them when some
-        # boundary actually extrapolates
-        self._track_prev = any(f for f, _ in self._interval_info.values())
+        # boundary actually extrapolates — never for staged steppers,
+        # whose displaced contexts subsume prediction (predict == skip at
+        # S > 1; extrapolated pub buffers would never be attended)
+        self._track_prev = (not staged
+                            and any(info[0] for info in
+                                    self._interval_info.values()))
         self._prev_k = jnp.zeros(kshape, kdt) if self._track_prev else None
         self._prev_v = jnp.zeros(kshape, kdt) if self._track_prev else None
         self.queue: List[DiffusionRequest] = []
@@ -368,9 +467,10 @@ class DiffusionServingEngine:
         # simulate backend replays, so serving cost accounting cannot
         # diverge from simulate_trace's
         trace = sim.build_trace(self.plan.temporal, self.plan.patches, cfg,
-                                batch=1)
+                                batch=1, stages=self.stages)
         self._latent_bytes = trace.latent_bytes
         self._kv_bytes = trace.kv_bytes_per_worker
+        self._act_row_bytes = trace.act_row_bytes
 
     # ---------------- submission & admission ----------------
 
@@ -443,18 +543,34 @@ class DiffusionServingEngine:
 
         if adapt:
             placement = None
-            for group, (read_factor, trail_kind) in self._groups(adapt):
+            wants_ctx = getattr(self.stepper, "wants_ctx", False)
+            for group, (read_factor, trail_kind, fill) in self._groups(adapt):
                 idx = self._pad(group)
                 fine = np.asarray([self.active[s].fine_step for s in idx])
                 bk, bv = self._pub_k[idx], self._pub_v[idx]
-                if read_factor:      # predictive boundary before this group
+                # predictive boundary before this group — staged steppers
+                # never read the extrapolation (ctx subsumes it), so skip
+                if read_factor and not wants_ctx:
                     bk = buf_lib.extrapolate_arrays(bk, self._prev_k[idx],
                                                     read_factor)
                     bv = buf_lib.extrapolate_arrays(bv, self._prev_v[idx],
                                                     read_factor)
-                xs, ks, vs = self.stepper.interval(
-                    self._x[idx], fine, self._cond[idx], bk, bv,
-                    merge=(trail_kind == "full"))
+                if wants_ctx:
+                    if fill:         # pipe refill: contexts <- published
+                        self._ctx_k = self._ctx_k.at[idx].set(
+                            self._pub_k[idx])
+                        self._ctx_v = self._ctx_v.at[idx].set(
+                            self._pub_v[idx])
+                    xs, ks, vs, ck, cv = self.stepper.interval_ctx(
+                        self._x[idx], fine, self._cond[idx], bk, bv,
+                        self._ctx_k[idx], self._ctx_v[idx],
+                        merge=(trail_kind == "full"))
+                    self._ctx_k = self._ctx_k.at[idx].set(ck)
+                    self._ctx_v = self._ctx_v.at[idx].set(cv)
+                else:
+                    xs, ks, vs = self.stepper.interval(
+                        self._x[idx], fine, self._cond[idx], bk, bv,
+                        merge=(trail_kind == "full"))
                 self._x = self._x.at[idx].set(xs)
                 if trail_kind == "full":
                     if self._track_prev:
@@ -468,7 +584,8 @@ class DiffusionServingEngine:
                 for s in group:
                     self.active[s].fine_step += R
                 placement, cost = self._phase_cost(len(group), warm=False,
-                                                   kind=trail_kind)
+                                                   kind=trail_kind,
+                                                   fill=fill)
                 report.modeled_s += cost
                 report.exchange_kinds.append(trail_kind)
             report.placement = placement
@@ -540,7 +657,8 @@ class DiffusionServingEngine:
 
     # ---------------- modeled cost & placement ----------------
 
-    def _phase_cost(self, group: int, warm: bool, kind: str = "full"
+    def _phase_cost(self, group: int, warm: bool, kind: str = "full",
+                    fill: bool = False
                     ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
         """Placement + modeled seconds for one batched phase of a round.
 
@@ -548,8 +666,12 @@ class DiffusionServingEngine:
         count: batching multiplies the per-row work but amortizes t_fixed —
         the modeled reason continuous batching beats sequential serving.
         Latent traffic is the per-worker uneven all-gather (padded slabs),
-        and "skip"/"predict" boundaries move no bytes at all.
+        and "skip"/"predict" boundaries move no bytes at all. With a stage
+        chain (DESIGN.md §11) the placement maps STAGES to devices instead
+        of whole-model patch workers.
         """
+        if self.stages is not None and len(self.stages) > 1:
+            return self._staged_phase_cost(group, warm, kind, fill)
         plan, cm = self.plan, self.cm
         temporal = plan.temporal
         workers = [i for i in temporal.active if plan.patches[i] > 0]
@@ -578,6 +700,34 @@ class DiffusionServingEngine:
                 * group / cm.link_bw
         comm = comm_bytes / cm.link_bw + cm.link_latency
         return placement, max(compute, async_t) + comm
+
+    def _staged_phase_cost(self, group: int, warm: bool, kind: str,
+                           fill: bool
+                           ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
+        """Stage-chain placement + modeled seconds (DESIGN.md §11): stage d
+        (chain order, heaviest block share first by construction) runs on
+        the d-th fastest device; micro-batches stream through the chain, so
+        steady state is bottleneck-stage-bound with point-to-point
+        activation handoffs, a fill bubble on refill rounds, and a latent
+        ring handoff on draining boundaries. K/V never crosses stages.
+        Placement entries are (stage, device)."""
+        plan, cm = self.plan, self.cm
+        temporal = plan.temporal
+        S = len(self.stages)
+        speeds = self.pipeline.config.speeds
+        by_speed = sorted(range(len(speeds)), key=lambda d: (-speeds[d], d))
+        chain = [speeds[d] for d in by_speed[:S]]
+        placement = tuple((s, by_speed[s]) for s in range(S))
+        if warm:
+            return placement, sim.pipefuse_warmup_seconds(
+                self.stages, chain, cm, sum(plan.patches) * group,
+                self._act_row_bytes)
+        workers = [i for i in temporal.active if plan.patches[i] > 0]
+        tasks = [(temporal.lcm // temporal.ratios[i],
+                  plan.patches[i] * group) for i in workers]
+        return placement, sim.pipefuse_interval_seconds(
+            self.stages, chain, cm, tasks, fill, kind,
+            self._latent_bytes * group, self._act_row_bytes)
 
     # ---------------- reporting ----------------
 
