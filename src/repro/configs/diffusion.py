@@ -23,6 +23,12 @@ class DiTConfig:
     # numerics
     param_dtype: str = "float32"
     dtype: str = "float32"
+    # run the Pallas stale-KV attention kernel (repro.kernels.
+    # stale_kv_attention) for buffered patch attention instead of the
+    # reference rewrite-then-attend path; interpret mode off-TPU. Falls
+    # back to the reference when the patch layout misses the kernel's tile
+    # constraints (traced offsets, SPMD padding, indivisible block sizes).
+    use_pallas_attention: bool = False
 
     @property
     def tokens_per_side(self) -> int:

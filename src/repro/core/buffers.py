@@ -32,12 +32,15 @@ def publish_local(pending: Dict[int, Tuple], worker: int, k_local, v_local,
     pending[worker] = (k_local, v_local, tok_start)
 
 
-def merge(published: Published, pending: Dict[int, Tuple], step: int) -> Published:
-    """Apply all queued regional updates; returns new Published."""
+def merge(published: Published, pending: Dict[int, Tuple], step: int,
+          axis: int = 2) -> Published:
+    """Apply all queued regional updates; returns new Published. ``axis``
+    is the token axis — 2 for plain [L,B,N,H,hd] buffers, 3 for the
+    branch-stacked [2,L,B,N,H,hd] guidance buffers (DESIGN.md §12)."""
     k, v = published.k, published.v
     for _, (kl, vl, start) in sorted(pending.items()):
-        k = jax.lax.dynamic_update_slice_in_dim(k, kl.astype(k.dtype), start, axis=2)
-        v = jax.lax.dynamic_update_slice_in_dim(v, vl.astype(v.dtype), start, axis=2)
+        k = jax.lax.dynamic_update_slice_in_dim(k, kl.astype(k.dtype), start, axis=axis)
+        v = jax.lax.dynamic_update_slice_in_dim(v, vl.astype(v.dtype), start, axis=axis)
     return Published(k, v, step)
 
 

@@ -62,6 +62,11 @@ class IntervalEvent:
     synchronous: bool = False            # warmup intervals sync every layer
     exchange: str = "full"               # boundary kind after this interval
     fill: bool = False                   # first interval after a StageShift
+    # guidance provenance (DESIGN.md §12): did this interval recompute the
+    # unconditional branch? Always True except on interleaved-guidance
+    # intervals that reuse the cached eps_u (the simulator idles the uncond
+    # group there and charges no cross-branch eps traffic)
+    uncond_fresh: bool = True
 
 
 @dataclasses.dataclass
@@ -77,6 +82,11 @@ class ExecutionTrace:
     # pricing the point-to-point stage handoffs
     stages: Optional[List[int]] = None
     act_row_bytes: int = 0
+    # guidance provenance (DESIGN.md §12): the GuidancePlan the schedule
+    # executed under (None = unguided). In split/interleaved mode trace
+    # "workers" are logical device PAIRS, not devices — the guided cost
+    # model maps them back through the plan's pairing.
+    guidance: Optional[object] = None
 
 
 # ----------------------------------------------------------------------
@@ -137,7 +147,25 @@ class StageShift:
     stages: Tuple[int, ...]              # DiT blocks per stage (chain order)
 
 
+@dataclasses.dataclass(frozen=True)
+class GuidanceExchange:
+    """Cross-branch epsilon reconciliation (DESIGN.md §12): emitted before
+    each adaptive interval when lowering a split/interleaved
+    :class:`~repro.core.guidance.GuidancePlan`. Within the coming interval
+    every fine step combines ``eps = eps_u + w*(eps_c - eps_u)`` across the
+    cond/uncond device groups — only the epsilon crosses the group
+    boundary; each branch's staged K/V stays inside its group. ``fresh``
+    is False on interleaved reuse intervals: straggler pairs reuse the
+    eps_u cached at the last refresh interval (their uncond device idles
+    and no eps crosses); non-straggler pairs always compute fresh."""
+    fine_step: int                       # first fine step of the interval
+    mode: str                            # "split" | "interleaved"
+    fresh: bool                          # uncond branch recomputed?
+    index: int                           # 0-based adaptive interval counter
+
+
 Event = object   # Warmup | StageShift | ComputeInterval | Exchange | Replan
+                 # | GuidanceExchange
 
 
 def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
@@ -151,8 +179,10 @@ def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
 
 def lower(plan: TemporalPlan, patches: Sequence[int],
           policy: Optional["comm_lib.BoundaryExchange"] = None,
-          stages: Optional[Sequence[int]] = None) -> Iterator[Event]:
-    """Lower (plan, patches, exchange policy[, stage split]) into events.
+          stages: Optional[Sequence[int]] = None,
+          guidance=None) -> Iterator[Event]:
+    """Lower (plan, patches, exchange policy[, stage split[, guidance]])
+    into events.
 
     A coroutine-style generator: iterate it normally, or reply to an
     :class:`Exchange` event with ``gen.send((new_plan, new_patches))`` to
@@ -164,12 +194,20 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
     before the first adaptive interval and after every draining ("full")
     boundary, so every executor agrees on exactly when the displaced
     pipeline refills.
+
+    ``guidance`` (a :class:`~repro.core.guidance.GuidancePlan`, DESIGN.md
+    §12) adds the CFG dimension: split/interleaved plans emit a
+    :class:`GuidanceExchange` before every adaptive interval carrying the
+    uncond-recompute verdict, so the emulated engine, the SPMD guidance
+    body and the latency simulator agree on the interleaved reuse cadence.
+    Fused guidance emits no extra events (the combine is worker-local).
     """
     policy = policy or comm_lib.get_exchange("sync")
     patches = list(patches)
     n = len(patches)
     stages = tuple(stages) if stages else ()
     pipelined = len(stages) > 1
+    guided_exchange = guidance is not None and guidance.mode != "fused"
     # fine steps count in ABSOLUTE coordinates of the original plan; a
     # replanned TemporalPlan covers the remaining steps (its m_base is the
     # remaining count) and only contributes ratios/activity from then on
@@ -180,11 +218,17 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
                      tuple(patches))
     m0 = plan.m_warmup
     boundary = 0
+    interval_idx = 0
     refill = pipelined                   # the pipe fills entering adaptive
     while m0 + plan.lcm <= m_base:
         if refill:
             yield StageShift(m0, stages)
             refill = False
+        if guided_exchange:
+            yield GuidanceExchange(m0, guidance.mode,
+                                   guidance.uncond_fresh(interval_idx),
+                                   interval_idx)
+        interval_idx += 1
         R = plan.lcm
         workers = active_workers(plan, patches)
         subs = tuple(R // plan.ratios[i] if i in workers else 0
@@ -210,11 +254,12 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
 # replay: event stream -> trace records / full ExecutionTrace
 # ----------------------------------------------------------------------
 
-def record(interval: ComputeInterval, kind: str,
-           fill: bool = False) -> IntervalEvent:
+def record(interval: ComputeInterval, kind: str, fill: bool = False,
+           uncond_fresh: bool = True) -> IntervalEvent:
     """The trace record for one adaptive interval + its boundary kind."""
     return IntervalEvent(interval.fine_step, list(interval.substeps),
-                         list(interval.patches), exchange=kind, fill=fill)
+                         list(interval.patches), exchange=kind, fill=fill,
+                         uncond_fresh=uncond_fresh)
 
 
 def warmup_record(ev: Warmup) -> IntervalEvent:
@@ -224,7 +269,8 @@ def warmup_record(ev: Warmup) -> IntervalEvent:
 
 def replay(plan: TemporalPlan, patches: Sequence[int],
            policy: Optional["comm_lib.BoundaryExchange"] = None,
-           stages: Optional[Sequence[int]] = None) -> List[IntervalEvent]:
+           stages: Optional[Sequence[int]] = None,
+           guidance=None) -> List[IntervalEvent]:
     """Trace records of the whole schedule without executing any numerics —
     the latency-only path (`simulate.build_trace`) and the numerics paths
     (`patch_parallel.run_schedule`, `pipefuse.run_pipefuse`) all derive
@@ -233,22 +279,28 @@ def replay(plan: TemporalPlan, patches: Sequence[int],
     out: List[IntervalEvent] = []
     pending: Optional[ComputeInterval] = None
     fill = False
-    for ev in lower(plan, patches, policy, stages):
+    fresh = True
+    for ev in lower(plan, patches, policy, stages, guidance=guidance):
         if isinstance(ev, Warmup):
             out.append(warmup_record(ev))
         elif isinstance(ev, StageShift):
             fill = True
+        elif isinstance(ev, GuidanceExchange):
+            fresh = ev.fresh
         elif isinstance(ev, ComputeInterval):
             pending = ev
         elif isinstance(ev, Exchange):
-            out.append(record(pending, ev.kind, fill=fill))
+            out.append(record(pending, ev.kind, fill=fill,
+                              uncond_fresh=fresh))
             fill = False
+            fresh = True
     return out
 
 
 def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
                patches: Sequence[int], cfg, batch: int,
-               stages: Optional[Sequence[int]] = None) -> ExecutionTrace:
+               stages: Optional[Sequence[int]] = None,
+               guidance=None) -> ExecutionTrace:
     """Byte-size provenance shared by every trace producer."""
     H = cfg.latent_size
     lat_bytes = int(batch * H * H * cfg.channels * 4)
@@ -258,4 +310,4 @@ def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
     return ExecutionTrace(records, plan, list(patches), cfg.n_tokens,
                           lat_bytes, kv_bytes,
                           stages=list(stages) if stages else None,
-                          act_row_bytes=act_row)
+                          act_row_bytes=act_row, guidance=guidance)

@@ -46,6 +46,18 @@ def _slab(x, bounds_rows_latent: Tuple[int, int]):
     return x[:, bounds_rows_latent[0]:bounds_rows_latent[1]]
 
 
+def _stack_uncond(kv_c: Tuple, published: buf_lib.Published, tok_lo: int,
+                  n_tok: int) -> Tuple:
+    """Branch-stack a cond-only fresh K/V with the CURRENT published uncond
+    rows (a no-op merge for the uncond branch): interleaved reuse intervals
+    never recompute — and therefore never republish — a straggler worker's
+    uncond branch (DESIGN.md §12). Shared by the emulated and pipefuse
+    engines."""
+    ku = jax.lax.dynamic_slice_in_dim(published.k[1], tok_lo, n_tok, axis=2)
+    vu = jax.lax.dynamic_slice_in_dim(published.v[1], tok_lo, n_tok, axis=2)
+    return jnp.stack([kv_c[0], ku]), jnp.stack([kv_c[1], vu])
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "row_start"))
 def _jit_patch_step(params, cfg, x_loc, t, cond, row_start, bk, bv):
     """Jitted hot loop body (one denoiser eval on a patch with stale KV).
@@ -61,10 +73,80 @@ def _jit_full_step(params, cfg, x, t, cond):
                              return_kv=True)
 
 
+# ----------------------------------------------------------------------
+# classifier-free guidance steps (DESIGN.md §12)
+# ----------------------------------------------------------------------
+#
+# One branch-vmapped dispatch evaluates the conditional and unconditional
+# forwards (the fused-batch form); buffers are branch-stacked
+# [2, L, B, N, H, hd]. The split/interleaved guidance modes run the SAME
+# jitted functions — the placement decision moves work between devices in
+# the cost model, never between math — which is why split CFG is bitwise-
+# identical to the fused reference under one schedule (tested).
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _jit_guided_full_step(params, cfg, x, t, cond, scale):
+    """Synchronous CFG step: returns (eps_combined, delta, (k2, v2)) with
+    delta the guidance direction eps_c - eps_u (the interleaved cache)."""
+    def one(c):
+        return dit.forward_patch(params, cfg, x, t, c, 0, buffers=None,
+                                 return_kv=True)
+    eps2, kvs2 = jax.vmap(one)(dit.guidance_conds(cond))
+    return (sampler_lib.cfg_combine(eps2[0], eps2[1], scale),
+            sampler_lib.cfg_delta(eps2[0], eps2[1]), kvs2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "row_start"))
+def _jit_guided_patch_step(params, cfg, x_loc, t, cond, row_start, bk2, bv2,
+                           scale):
+    """Guided stale-KV patch step: bk2/bv2 are branch-stacked published
+    buffers [2, L, B, N, H, hd]. Returns (eps_combined, delta, (k2, v2))
+    with k2/v2 [2, L, B, Nl, H, hd] — delta (= eps_c - eps_u) feeds the
+    interleaved-reuse cache, the fresh K/V the per-branch publish."""
+    def one(c, bk, bv):
+        return dit.forward_patch(params, cfg, x_loc, t, c, row_start,
+                                 buffers=(bk, bv), return_kv=True)
+    eps2, kvs2 = jax.vmap(one)(dit.guidance_conds(cond), bk2, bv2)
+    return (sampler_lib.cfg_combine(eps2[0], eps2[1], scale),
+            sampler_lib.cfg_delta(eps2[0], eps2[1]), kvs2)
+
+
+def guided_substep(params, cfg, x_loc, t_from, cond, row_start, read_pub,
+                   published, guidance, fresh: bool, ucache: dict, i: int,
+                   first: bool):
+    """One guided patch substep for worker ``i`` — the ONE home of the
+    fresh-vs-straggler-reuse dispatch shared by ``run_schedule`` and the
+    single-stage ``pipefuse`` interpreter (their loop orders differ, the
+    per-substep CFG contract must not). Returns (eps, kvs) where kvs is
+    the branch-stacked publish payload on ``first`` substeps (None
+    otherwise for reuse workers); mutates ``ucache`` with the guidance
+    delta on fresh evals."""
+    tok_lo = row_start * cfg.tokens_per_side
+    if fresh or not guidance.worker_reuses(i):
+        # fused/split, interleaved refresh intervals, and non-straggler
+        # workers (always fresh)
+        eps, delta, kvs = _jit_guided_patch_step(
+            params, cfg, x_loc, t_from, cond, row_start,
+            read_pub.k, read_pub.v, guidance.scale)
+        if guidance.mode == "interleaved":   # only reuse ever reads it
+            ucache[i] = delta
+        return eps, kvs
+    # interleaved reuse: the straggler pair's uncond device idles the whole
+    # interval — the guidance delta cached at the last refresh interval
+    # stands in; only the cond branch runs (against its own branch's
+    # buffers), and its first substep publishes with stale uncond rows
+    eps_c, kv_c = _jit_patch_step(params, cfg, x_loc, t_from, cond,
+                                  row_start, read_pub.k[0], read_pub.v[0])
+    eps = sampler_lib.cfg_apply_delta(eps_c, ucache[i], guidance.scale)
+    kvs = (_stack_uncond(kv_c, published, tok_lo, kv_c[0].shape[2])
+           if first else None)
+    return eps, kvs
+
+
 def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                  plan: TemporalPlan, patches: Sequence[int],
                  interval_hook=None, exchange: str = "sync",
-                 exchange_refresh: int = 2) -> RunResult:
+                 exchange_refresh: int = 2, guidance=None) -> RunResult:
     """Execute Algorithm 1 by interpreting the schedule IR event stream.
 
     patches: token-rows per worker (sum == cfg.tokens_per_side; 0 = excluded).
@@ -81,6 +163,13 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     exchange / exchange_refresh: boundary-exchange policy name + refresh
     cadence (see :func:`repro.core.comm.get_exchange`). "sync" reproduces
     the pre-policy engine bitwise.
+
+    guidance: optional :class:`repro.core.guidance.GuidancePlan` (DESIGN.md
+    §12). Every denoiser eval becomes a branch-vmapped CFG eval against
+    branch-stacked published buffers; "fused" and "split" are bitwise-
+    identical (placement only differs in the cost model), "interleaved"
+    reuses the cached eps_u on non-refresh intervals per the IR's
+    :class:`~repro.core.events.GuidanceExchange` verdicts.
     """
     p = cfg.patch_size
     M_base = plan.m_base
@@ -88,6 +177,14 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     # allocation; per-interval events record what actually executed
     ts = sampler_lib.ddim_timesteps(sched.T, M_base)   # fine grid, len M_base+1
     policy = comm_lib.get_exchange(exchange, exchange_refresh)
+    guided = guidance is not None
+    if guided:
+        if cond is None:
+            raise ValueError("guided generation needs a class condition")
+        if interval_hook is not None:
+            raise ValueError("online rebalancing is not supported with "
+                             "guidance (the branch pairing is static)")
+    tok_axis = 3 if guided else 2        # buffers gain a leading branch axis
 
     x = x_T
     B = x.shape[0]
@@ -98,9 +195,18 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     read_pub: Optional[buf_lib.Published] = None    # what substeps attend to
     pending = {}
     new_slabs = {}
+    ucache = {}                          # interleaved: last eps_u per worker
     interval: Optional[ir.ComputeInterval] = None
+    fresh = True                         # uncond recomputed this interval?
 
-    gen = ir.lower(plan, patches, policy)
+    def _full_step(t):
+        if guided:
+            eps, _, kvs2 = _jit_guided_full_step(params, cfg, x, t, cond,
+                                                 guidance.scale)
+            return eps, kvs2
+        return _jit_full_step(params, cfg, x, t, cond)
+
+    gen = ir.lower(plan, patches, policy, guidance=guidance)
     send = None
     while True:
         try:
@@ -111,16 +217,19 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
 
         if isinstance(ev, ir.Warmup):
             # synchronous step == exact full forward on every worker
-            eps, kvs = _jit_full_step(params, cfg, x, ts[ev.fine_step], cond)
+            eps, kvs = _full_step(ts[ev.fine_step])
             x = sampler_lib.ddim_step(sched, x, eps, ts[ev.fine_step],
                                       ts[ev.fine_step + 1])
             published = buf_lib.Published(kvs[0], kvs[1], ev.fine_step)
             read_pub = published
             records.append(ir.warmup_record(ev))
 
+        elif isinstance(ev, ir.GuidanceExchange):
+            fresh = ev.fresh             # verdict for the coming interval
+
         elif isinstance(ev, ir.ComputeInterval):
             if published is None:        # M_w == 0: bootstrap buffers once
-                _, kvs = _jit_full_step(params, cfg, x, ts[0], cond)
+                _, kvs = _full_step(ts[0])
                 published = buf_lib.Published(kvs[0], kvs[1], -1)
                 read_pub = published
             interval = ev
@@ -131,18 +240,24 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
             for i in ev.workers:
                 r = ev.ratios[i]
                 x_loc = _slab(x, bounds_lat[i])
+                tok_lo = bounds_tok[i][0] * cfg.tokens_per_side
                 for s in range(ev.substeps[i]):
                     t_from = ts[ev.fine_step + s * r]
                     t_to = ts[ev.fine_step + (s + 1) * r]
-                    eps, kvs = _jit_patch_step(
-                        params, cfg, x_loc, t_from, cond, bounds_tok[i][0],
-                        read_pub.k, read_pub.v)
+                    if not guided:
+                        eps, kvs = _jit_patch_step(
+                            params, cfg, x_loc, t_from, cond,
+                            bounds_tok[i][0], read_pub.k, read_pub.v)
+                    else:
+                        eps, kvs = guided_substep(
+                            params, cfg, x_loc, t_from, cond,
+                            bounds_tok[i][0], read_pub, published,
+                            guidance, fresh, ucache, i, first=(s == 0))
                     x_loc = sampler_lib.ddim_step(sched, x_loc, eps,
                                                   t_from, t_to)
                     if s == 0:   # Alg.1 l.16-17 / l.23: publish at interval start
                         buf_lib.publish_local(pending, i, kvs[0], kvs[1],
-                                              bounds_tok[i][0]
-                                              * cfg.tokens_per_side)
+                                              tok_lo)
                 new_slabs[i] = x_loc
 
         elif isinstance(ev, ir.Exchange):
@@ -155,14 +270,16 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                 x = x.at[:, lat[0]:lat[1]].set(new_slabs[i])
             if ev.kind == "full":
                 prev_published = published
-                published = buf_lib.merge(published, pending, ev.fine_step)
+                published = buf_lib.merge(published, pending, ev.fine_step,
+                                          axis=tok_axis)
                 read_pub = published
             elif ev.kind == "skip":
                 read_pub = published     # stale: pending never broadcast
             elif ev.kind == "predict":
                 read_pub = buf_lib.extrapolate(prev_published, published,
                                                ev.fine_step)
-            rec = ir.record(interval, ev.kind)
+            rec = ir.record(interval, ev.kind, uncond_fresh=fresh)
+            fresh = True
             records.append(rec)
             if interval_hook is not None and ev.fine_step < M_base:
                 upd = interval_hook(ev.fine_step, rec)
@@ -172,7 +289,8 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
         # ir.Replan events need no numerics: the next ComputeInterval
         # already carries the new patches/ratios
 
-    trace = ir.make_trace(records, plan0, patches0, cfg, int(B))
+    trace = ir.make_trace(records, plan0, patches0, cfg, int(B),
+                          guidance=guidance)
     return RunResult(x, trace)
 
 
@@ -198,4 +316,12 @@ def run_distrifusion(params, cfg, sched, x_T, cond, n_workers: int,
 def run_origin(params, cfg, sched, x_T, cond, m_base: int) -> jnp.ndarray:
     """Non-distributed exact DDIM ("Origin" in Table II)."""
     eps_fn = lambda x, t: dit.forward(params, cfg, x, t, cond)
+    return sampler_lib.ddim_sample(eps_fn, sched, x_T, m_base)
+
+
+def run_origin_cfg(params, cfg, sched, x_T, cond, m_base: int,
+                   scale: float) -> jnp.ndarray:
+    """Non-distributed exact guided DDIM: the CFG "Origin" — fused-batch
+    classifier-free guidance with no patching or staleness (DESIGN.md §12)."""
+    eps_fn = lambda x, t: dit.forward_cfg(params, cfg, x, t, cond, scale)
     return sampler_lib.ddim_sample(eps_fn, sched, x_T, m_base)

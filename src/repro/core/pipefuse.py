@@ -100,17 +100,38 @@ _jit_displaced_step = functools.partial(
     jax.jit, static_argnames=("cfg", "row_start", "bounds"))(displaced_step)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "row_start", "bounds"))
+def _jit_guided_displaced_step(params, cfg, x_loc, t, cond, row_start,
+                               ctx_k2, ctx_v2, bounds, scale):
+    """Guided micro-task (DESIGN.md §12): branch-vmapped
+    :func:`displaced_step` over branch-stacked stage contexts
+    [2, L, B, N, H, hd]. Returns (eps_combined, delta, k2, v2, ctx_k2',
+    ctx_v2') — the CFG analogue of :data:`_jit_displaced_step`."""
+    def one(c, ck, cv):
+        return displaced_step(params, cfg, x_loc, t, c, row_start, ck, cv,
+                              bounds)
+    eps2, k2, v2, ck2, cv2 = jax.vmap(one)(dit.guidance_conds(cond),
+                                           ctx_k2, ctx_v2)
+    return (sampler_lib.cfg_combine(eps2[0], eps2[1], scale),
+            sampler_lib.cfg_delta(eps2[0], eps2[1]), k2, v2, ck2, cv2)
+
+
 def run_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                  plan: TemporalPlan, patches: Sequence[int],
                  stages: Sequence[int], exchange: str = "sync",
                  exchange_refresh: int = 2,
-                 interval_hook=None) -> "pp.RunResult":
+                 interval_hook=None, guidance=None) -> "pp.RunResult":
     """Execute a STADI schedule with the DiT depth pipelined over ``stages``.
 
     patches: token-rows per micro-batch slab (sum == cfg.tokens_per_side);
     with ``len(stages) == 1`` this is exactly ``run_schedule`` (bitwise).
     Micro-tasks are ordered substep-major, ascending slab index — the pipe
     order the displaced context emulates.
+
+    guidance (DESIGN.md §12): micro-tasks become branch-vmapped CFG evals
+    over branch-stacked stage contexts; interleaved intervals reuse the
+    cached eps_u per the IR's GuidanceExchange verdicts, running only the
+    cond branch through the chain.
     """
     stages = list(stages)
     if sum(stages) != cfg.n_layers:
@@ -119,6 +140,10 @@ def run_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     if interval_hook is not None:
         raise ValueError("online rebalancing is not supported by the "
                          "pipefuse backend (stage splits are static)")
+    guided = guidance is not None
+    if guided and cond is None:
+        raise ValueError("guided generation needs a class condition")
+    tok_axis = 3 if guided else 2
     S = len(stages)
     bounds = stage_bounds(stages)
     p = cfg.patch_size
@@ -136,22 +161,31 @@ def run_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     ctx_k = ctx_v = None                           # S > 1 displaced context
     pending = {}
     slabs = {}
+    ucache = {}                          # interleaved: last eps_u per worker
     interval: Optional[ir.ComputeInterval] = None
     fill_pending = False
+    fresh = True
+
+    def _full_step(t):
+        if guided:
+            eps, _, kvs2 = pp._jit_guided_full_step(params, cfg, x, t, cond,
+                                                    guidance.scale)
+            return eps, kvs2
+        return pp._jit_full_step(params, cfg, x, t, cond)
 
     def _bootstrap():
         nonlocal published, read_pub
         if published is None:                      # M_w == 0: one full fwd
-            _, kvs = pp._jit_full_step(params, cfg, x, ts[0], cond)
+            _, kvs = _full_step(ts[0])
             published = buf_lib.Published(kvs[0], kvs[1], -1)
             read_pub = published
 
-    for ev in ir.lower(plan, patches, policy, stages=stages if S > 1 else None):
+    for ev in ir.lower(plan, patches, policy,
+                       stages=stages if S > 1 else None, guidance=guidance):
         if isinstance(ev, ir.Warmup):
             # synchronous step: the chain handoffs are exact, so warmup is
             # the same full-image forward as the non-pipelined engine
-            eps, kvs = pp._jit_full_step(params, cfg, x, ts[ev.fine_step],
-                                         cond)
+            eps, kvs = _full_step(ts[ev.fine_step])
             x = sampler_lib.ddim_step(sched, x, eps, ts[ev.fine_step],
                                       ts[ev.fine_step + 1])
             published = buf_lib.Published(kvs[0], kvs[1], ev.fine_step)
@@ -163,6 +197,9 @@ def run_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
             _bootstrap()
             ctx_k, ctx_v = published.k, published.v
             fill_pending = True
+
+        elif isinstance(ev, ir.GuidanceExchange):
+            fresh = ev.fresh
 
         elif isinstance(ev, ir.ComputeInterval):
             _bootstrap()
@@ -179,21 +216,49 @@ def run_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                         continue
                     t_from = ts[ev.fine_step + f]
                     t_to = ts[ev.fine_step + f + r]
-                    if S == 1:                     # exact emulated path
+                    tok_lo = bounds_tok[i][0] * cfg.tokens_per_side
+                    kvs = None
+                    if S == 1 and not guided:      # exact emulated path
                         eps, kvs = pp._jit_patch_step(
                             params, cfg, slabs[i], t_from, cond,
                             bounds_tok[i][0], read_pub.k, read_pub.v)
-                        k_loc, v_loc = kvs
-                    else:
+                    elif S == 1:         # the shared per-substep CFG
+                        # contract (pp.guided_substep), same as run_schedule
+                        eps, kvs = pp.guided_substep(
+                            params, cfg, slabs[i], t_from, cond,
+                            bounds_tok[i][0], read_pub, published,
+                            guidance, fresh, ucache, i, first=(f == 0))
+                    elif not guided:
                         eps, k_loc, v_loc, ctx_k, ctx_v = _jit_displaced_step(
                             params, cfg, slabs[i], t_from, cond,
                             bounds_tok[i][0], ctx_k, ctx_v, bounds)
+                        kvs = (k_loc, v_loc)
+                    elif fresh or not guidance.worker_reuses(i):
+                        # guided chain micro-task
+                        (eps, delta, k_loc, v_loc, ctx_k,
+                         ctx_v) = _jit_guided_displaced_step(
+                            params, cfg, slabs[i], t_from, cond,
+                            bounds_tok[i][0], ctx_k, ctx_v, bounds,
+                            guidance.scale)
+                        if guidance.mode == "interleaved":
+                            ucache[i] = delta
+                        kvs = (k_loc, v_loc)
+                    else:                          # staged interleaved reuse
+                        eps_c, k_c, v_c, ck, cv = _jit_displaced_step(
+                            params, cfg, slabs[i], t_from, cond,
+                            bounds_tok[i][0], ctx_k[0], ctx_v[0], bounds)
+                        ctx_k = ctx_k.at[0].set(ck)
+                        ctx_v = ctx_v.at[0].set(cv)
+                        eps = sampler_lib.cfg_apply_delta(eps_c, ucache[i],
+                                                          guidance.scale)
+                        if f == 0:
+                            kvs = pp._stack_uncond((k_c, v_c), published,
+                                                   tok_lo, k_c.shape[2])
                     slabs[i] = sampler_lib.ddim_step(sched, slabs[i], eps,
                                                      t_from, t_to)
                     if f == 0:   # Alg.1: publish the interval-start K/V
-                        buf_lib.publish_local(pending, i, k_loc, v_loc,
-                                              bounds_tok[i][0]
-                                              * cfg.tokens_per_side)
+                        buf_lib.publish_local(pending, i, kvs[0], kvs[1],
+                                              tok_lo)
 
         elif isinstance(ev, ir.Exchange):
             bounds_lat = [(a * p, b * p) for a, b in
@@ -203,7 +268,8 @@ def run_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                 x = x.at[:, lat[0]:lat[1]].set(slabs[i])
             if ev.kind == "full":
                 prev_published = published
-                published = buf_lib.merge(published, pending, ev.fine_step)
+                published = buf_lib.merge(published, pending, ev.fine_step,
+                                          axis=tok_axis)
                 read_pub = published
             elif ev.kind == "skip":
                 read_pub = published
@@ -212,9 +278,11 @@ def run_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                                                ev.fine_step)
             # S > 1: the context persists across skip/predict boundaries
             # (the pipe stays full); the next StageShift resets it
-            records.append(ir.record(interval, ev.kind, fill=fill_pending))
+            records.append(ir.record(interval, ev.kind, fill=fill_pending,
+                                     uncond_fresh=fresh))
             fill_pending = False
+            fresh = True
 
     trace = ir.make_trace(records, plan0, patches0, cfg, int(B),
-                          stages=stages)
+                          stages=stages, guidance=guidance)
     return pp.RunResult(x, trace)

@@ -68,6 +68,24 @@ class StadiConfig:
     num_stages: int = 1
     micro_patches: int = 0
     depth: Optional[int] = None
+    # classifier-free guidance (DESIGN.md §12): cfg_scale > 0 turns every
+    # generation into a guided one (eps = eps_u + w*(eps_c - eps_u));
+    # guidance picks the placement — "none" defaults to "fused" when
+    # cfg_scale is set, or lets the stadi_guidance planner auto-search.
+    # "split"/"interleaved" placement requires planner="stadi_guidance"
+    # (logical workers become cond/uncond device pairs); uncond_refresh is
+    # the interleaved reuse cadence. latent_bytes / kv_row_bytes are byte
+    # provenance for the guided planner cost model — StadiPipeline fills
+    # them in from the model config (leave 0).
+    guidance: str = "none"
+    cfg_scale: float = 0.0
+    uncond_refresh: int = 2
+    latent_bytes: int = 0
+    kv_row_bytes: int = 0
+    # run the Pallas stale-KV attention kernel (repro.kernels) inside the
+    # DiT blocks instead of the reference buffer-rewrite attend — the
+    # fused freshness-select hot path (interpret mode off-TPU)
+    use_pallas_attention: bool = False
     # latency modeling ("simulate" backend; also latency reporting elsewhere)
     cost_model: Optional[CostModel] = None
     # online rebalancing (beyond-paper, DESIGN.md §7.1)
@@ -188,7 +206,8 @@ def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
                           plan.temporal, plan.patches,
                           interval_hook=interval_hook,
                           exchange=config.exchange,
-                          exchange_refresh=config.exchange_refresh)
+                          exchange_refresh=config.exchange_refresh,
+                          guidance=plan_guidance(plan, config))
     return res.image, res.trace
 
 
@@ -198,14 +217,37 @@ def spmd_executor(params, model_cfg, sched, x_T, cond, plan, config,
     # interval_hook is never passed here: generate() rejects rebalancing on
     # non-emulated backends (the shard_map program is static)
     from repro.core import spmd
+    gplan = plan_guidance(plan, config)
     img = spmd.run_spmd(params, model_cfg, sched, x_T, cond,
                         plan.temporal, plan.patches,
                         exchange=config.exchange,
-                        exchange_refresh=config.exchange_refresh)
+                        exchange_refresh=config.exchange_refresh,
+                        guidance=gplan)
     trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
                             batch=int(x_T.shape[0]),
                             exchange=config.exchange,
-                            exchange_refresh=config.exchange_refresh)
+                            exchange_refresh=config.exchange_refresh,
+                            guidance=gplan)
+    return img, trace
+
+
+@register_executor("spmd_guidance")
+def spmd_guidance_executor(params, model_cfg, sched, x_T, cond, plan,
+                           config, interval_hook=None):
+    """Split-CFG over a ("guide", "dev") shard_map mesh (DESIGN.md §12):
+    axis "guide" carries the cond/uncond branch groups, axis "dev" the
+    patch workers of each group; needs 2 * n_pairs devices."""
+    from repro.core import spmd
+    gplan = plan_guidance(plan, config)
+    img = spmd.run_spmd_guidance(params, model_cfg, sched, x_T, cond,
+                                 plan.temporal, plan.patches, gplan,
+                                 exchange=config.exchange,
+                                 exchange_refresh=config.exchange_refresh)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=int(x_T.shape[0]),
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh,
+                            guidance=gplan)
     return img, trace
 
 
@@ -216,7 +258,8 @@ def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
     trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
                             batch=batch, exchange=config.exchange,
                             exchange_refresh=config.exchange_refresh,
-                            stages=plan_stages(plan, model_cfg, config))
+                            stages=plan_stages(plan, model_cfg, config),
+                            guidance=plan_guidance(plan, config))
     return None, trace
 
 
@@ -241,6 +284,31 @@ def plan_stages(plan, model_cfg, config) -> Optional[List[int]]:
     return hetero.stage_partition(model_cfg.n_layers, chain)
 
 
+#: backends that can execute a guided (classifier-free guidance) plan; the
+#: mapping is mode-dependent — see check_backend_can_run
+GUIDED_BACKENDS = ("emulated", "pipefuse", "simulate", "spmd",
+                   "spmd_guidance")
+
+
+def plan_guidance(plan, config):
+    """The GuidancePlan an executor should run: the plan's own (from the
+    stadi_guidance planner) or, for plain planners with ``cfg_scale`` set,
+    a fused-placement plan (the --cfg-scale wiring). None = unguided."""
+    if plan.guidance is not None:
+        return plan.guidance
+    if config.cfg_scale <= 0.0 and config.guidance == "none":
+        return None
+    from repro.core.guidance import GuidancePlan
+    if config.guidance in ("split", "interleaved"):
+        raise ValueError(
+            f"guidance={config.guidance!r} placement pairs devices across "
+            "branch groups — plan it with planner='stadi_guidance' "
+            f"(planner {config.planner!r} allocates per-device workers)")
+    if config.cfg_scale <= 0.0:
+        raise ValueError(f"guidance={config.guidance!r} needs cfg_scale > 0")
+    return GuidancePlan("fused", config.cfg_scale)
+
+
 def check_backend_can_run(plan, config) -> None:
     """A staged plan silently degrades to whole-model patch parallelism on
     a non-staged backend (while staged costs/placements get reported), so
@@ -252,6 +320,29 @@ def check_backend_can_run(plan, config) -> None:
             f"the planned stage split {plan.stages} needs a staged backend "
             f"({sorted(STAGED_BACKENDS)}), not {config.backend!r}; pin "
             "num_stages=1 to force pure patch parallelism")
+    gplan = plan_guidance(plan, config)
+    if gplan is not None:
+        if config.backend not in GUIDED_BACKENDS:
+            raise ValueError(
+                f"guided generation (cfg_scale={gplan.scale}) needs a "
+                f"guided backend ({sorted(GUIDED_BACKENDS)}), not "
+                f"{config.backend!r}")
+        if gplan.mode != "fused" and config.backend == "spmd":
+            raise ValueError(
+                f"{gplan.mode!r} guidance on SPMD needs the guidance mesh "
+                "axis: use backend='spmd_guidance'")
+        if gplan.mode == "fused" and config.backend == "spmd_guidance":
+            raise ValueError(
+                "backend 'spmd_guidance' runs the split guidance mesh; "
+                "fused CFG runs on the plain 'spmd' backend")
+        if gplan.mode == "interleaved" and config.backend == "spmd_guidance":
+            raise ValueError(
+                "interleaved uncond reuse is not implemented on SPMD; use "
+                "the 'emulated' or 'pipefuse' backend")
+    elif config.backend == "spmd_guidance":
+        raise ValueError("backend 'spmd_guidance' needs a guided plan: set "
+                         "cfg_scale > 0 with planner='stadi_guidance' and "
+                         "guidance='split'")
 
 
 @register_executor("pipefuse")
@@ -265,7 +356,8 @@ def pipefuse_executor(params, model_cfg, sched, x_T, cond, plan, config,
                                 plan.temporal, plan.patches, stages,
                                 exchange=config.exchange,
                                 exchange_refresh=config.exchange_refresh,
-                                interval_hook=interval_hook)
+                                interval_hook=interval_hook,
+                                guidance=plan_guidance(plan, config))
     return res.image, res.trace
 
 
@@ -296,6 +388,10 @@ class StadiPipeline:
 
     def __init__(self, model_cfg: DiTConfig, params, sched: NoiseSchedule,
                  config: StadiConfig):
+        if config.use_pallas_attention:
+            # thread the kernel flag into the model config the executors'
+            # jitted steps close over (DiTConfig is the static jit key)
+            model_cfg = model_cfg.replace(use_pallas_attention=True)
         self.model_cfg = model_cfg
         self.params = params
         self.sched = sched
@@ -312,6 +408,17 @@ class StadiPipeline:
                 f"num_stages={config.num_stages} needs a staged backend "
                 f"({sorted(STAGED_BACKENDS)}), not {config.backend!r} — "
                 "the displaced patch pipeline (DESIGN.md §11)")
+        from repro.core.guidance import GUIDANCE_MODES
+        if config.guidance != "none" and config.guidance not in GUIDANCE_MODES:
+            raise ValueError(f"unknown guidance mode {config.guidance!r}; "
+                             f"one of {('none',) + GUIDANCE_MODES}")
+        if config.guidance != "none" and config.cfg_scale <= 0.0:
+            raise ValueError(f"guidance={config.guidance!r} needs "
+                             "cfg_scale > 0")
+        guided = config.cfg_scale > 0.0 or config.guidance != "none"
+        if guided and config.rebalance_every:
+            raise ValueError("online rebalancing is not supported with "
+                             "guidance (the branch pairing is static)")
 
     @property
     def p_total(self) -> int:
@@ -323,6 +430,13 @@ class StadiPipeline:
         knobs = self.config
         if knobs.depth is None:          # stage planning needs the DiT depth
             knobs = dataclasses.replace(knobs, depth=self.model_cfg.n_layers)
+        if knobs.latent_bytes == 0:      # guided planning needs byte sizes
+            cfg = self.model_cfg
+            knobs = dataclasses.replace(
+                knobs,
+                latent_bytes=int(cfg.latent_size ** 2 * cfg.channels * 4),
+                kv_row_bytes=int(2 * cfg.n_layers * cfg.tokens_per_side
+                                 * cfg.d_model * 2))
         return get_planner(self.config.planner)(speeds, knobs, self.p_total)
 
     def generate(self, x_T=None, cond=None, *,
@@ -381,7 +495,9 @@ class StadiPipeline:
                                 self.model_cfg, batch=1,
                                 exchange=self.config.exchange,
                                 exchange_refresh=self.config.exchange_refresh,
-                                stages=engine.stages)
+                                stages=engine.stages,
+                                guidance=plan_guidance(engine.plan,
+                                                       self.config))
         report_latency = self.config.cost_model is not None
         return [PipelineResult(r.image, trace, engine.plan,
                                r.modeled_latency_s if report_latency else None)

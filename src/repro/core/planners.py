@@ -37,6 +37,10 @@ class ExecutionPlan:
         in speed order. None = depth-unpartitioned (pure patch mode). When
         set, ``temporal``/``patches`` describe patch *micro-batches*
         streaming through the stage chain, not per-device ownership.
+    guidance: classifier-free guidance placement (DESIGN.md §12): a
+        :class:`repro.core.guidance.GuidancePlan`. None = unguided. In
+        split/interleaved mode ``temporal``/``patches`` describe logical
+        workers that are cond/uncond device PAIRS, not single devices.
     """
     temporal: TemporalPlan
     patches: List[int]
@@ -44,6 +48,7 @@ class ExecutionPlan:
     speeds: List[float]
     modeled_interval_cost: Optional[float] = None
     stages: Optional[List[int]] = None
+    guidance: Optional[object] = None
 
     @property
     def active(self) -> List[int]:
@@ -230,6 +235,111 @@ def stadi_pipefuse_planner(speeds, knobs, p_total) -> ExecutionPlan:
     if forced_s > 1:                     # pinned: drop the patch fallback
         best = min(candidates[1:], key=lambda c: c.modeled_interval_cost)
     return best
+
+
+def _guided_plan_cost(plan: ExecutionPlan, speeds, p_total: int, cm,
+                      kv_row: float, latent_bytes: float) -> float:
+    """Modeled seconds of one adaptive interval ending in a full boundary,
+    under the guided cost model of :func:`repro.core.simulate.
+    _simulate_guided` (fabric contention: fused serializes both branches'
+    staged K/V; split runs the branch domains concurrently and pays only
+    the per-substep epsilon combine across them). With no byte provenance
+    (kv_row == 0, standalone planner calls) this degenerates to the
+    compute-only makespan. Interleaved costs average the fresh/stale
+    interval mix over the uncond_refresh cadence."""
+    g = plan.guidance
+    t = plan.temporal
+    R = t.lcm
+    row_bytes = latent_bytes / max(p_total, 1)
+
+    def interval_cost(fresh: bool) -> float:
+        compute, eps_bytes, kv_bytes, hops = 0.0, 0.0, 0.0, 0
+        for i in plan.active:
+            sub = R // t.ratios[i]
+            rows = plan.patches[i]
+            if g.mode == "fused":
+                step_t = cm.t_fixed + cm.t_row * rows * 2.0
+                tt = sub * step_t / max(speeds[i], 1e-9)
+            else:
+                vc = speeds[g.cond_devices[i]]
+                vu = speeds[g.uncond_devices[i]]
+                step_t = cm.t_fixed + cm.t_row * rows
+                if fresh or not g.worker_reuses(i):
+                    tt = sub * step_t / max(min(vc, vu), 1e-9)
+                else:                    # reuse: uncond idles, cond runs
+                    tt = sub * step_t / max(vc, 1e-9)
+            compute = max(compute, tt)
+            eps_sub = sub if fresh or not g.worker_reuses(i) else 0
+            eps_bytes += 2 * eps_sub * rows * row_bytes
+            kv_bytes += kv_row * rows
+            hops = max(hops, eps_sub)
+        eps_t = 0.0
+        if g.mode != "fused":
+            eps_t = eps_bytes / cm.link_bw + hops * cm.link_latency
+        branch_factor = 2.0 if g.mode == "fused" else 1.0
+        kv_t = branch_factor * kv_bytes / cm.link_bw
+        from repro.core.comm import uneven_all_gather_rows
+        gather_rows = uneven_all_gather_rows(
+            [plan.patches[i] for i in plan.active])
+        gather_t = gather_rows * row_bytes / cm.link_bw
+        return max(compute, kv_t) + gather_t + cm.link_latency + eps_t
+
+    if g.mode != "interleaved":
+        return interval_cost(True)
+    E = g.uncond_refresh
+    return (interval_cost(True) + (E - 1) * interval_cost(False)) / E
+
+
+@register_planner("stadi_guidance")
+def stadi_guidance_planner(speeds, knobs, p_total) -> ExecutionPlan:
+    """Joint (steps, patches, guidance placement) search (DESIGN.md §12).
+
+    Candidates: FUSED — the plain STADI plan over all devices, every
+    worker computing both CFG branches; SPLIT — the cluster bipartitioned
+    by :func:`repro.core.guidance.guidance_groups`, logical workers =
+    rank-paired (cond, uncond) devices, the STADI allocator run over the
+    pairwise-min speeds; INTERLEAVED — split placement + uncond reuse on
+    ``knobs.uncond_refresh`` cadence (quality-lossy, so only considered
+    when forced). ``knobs.guidance`` pins the mode ("none" = auto over
+    fused/split); candidates are scored with the guided fabric-contention
+    cost model using ``knobs.cost_model`` byte provenance when available
+    (StadiPipeline fills in ``latent_bytes``/``kv_row_bytes`` from the
+    model config) and the cheapest wins. Requires ``knobs.cfg_scale > 0``.
+    """
+    from repro.core import guidance as guide_lib
+    from repro.core.simulate import CostModel
+    scale = getattr(knobs, "cfg_scale", 0.0)
+    if scale <= 0.0:
+        raise ValueError("the stadi_guidance planner plans GUIDED "
+                         "generation: set cfg_scale > 0 (and optionally "
+                         "guidance='fused'|'split'|'interleaved')")
+    mode = getattr(knobs, "guidance", "none")
+    refresh = getattr(knobs, "uncond_refresh", 2)
+    cm = getattr(knobs, "cost_model", None) or CostModel(t_fixed=1e-3,
+                                                         t_row=1e-3)
+    kv_row = getattr(knobs, "kv_row_bytes", 0)
+    latent_bytes = getattr(knobs, "latent_bytes", 0)
+    modes = [mode] if mode != "none" else ["fused", "split"]
+    candidates = []
+    for m in modes:
+        if m == "fused":
+            base = stadi_planner(speeds, knobs, p_total)
+            gp = guide_lib.GuidancePlan("fused", scale)
+        else:
+            if len(speeds) < 2:
+                if mode != "none":       # forced split on one device
+                    guide_lib.guidance_groups(speeds)   # raises with context
+                continue
+            gp = guide_lib.split_plan(speeds, m, scale,
+                                      uncond_refresh=refresh)
+            base = stadi_planner(gp.pair_speeds(speeds), knobs, p_total)
+        cand = dataclasses.replace(base, planner="stadi_guidance",
+                                   speeds=list(speeds), guidance=gp)
+        cost = _guided_plan_cost(cand, speeds, p_total, cm, kv_row,
+                                 latent_bytes)
+        candidates.append(dataclasses.replace(cand,
+                                              modeled_interval_cost=cost))
+    return min(candidates, key=lambda c: c.modeled_interval_cost)
 
 
 @register_planner("makespan")

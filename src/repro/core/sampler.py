@@ -64,6 +64,38 @@ def ddim_timesteps(T: int, M: int, warmup_offset: int = 0) -> jnp.ndarray:
 
 
 # ----------------------------------------------------------------------
+# classifier-free guidance (DESIGN.md §12)
+# ----------------------------------------------------------------------
+
+def cfg_combine(eps_c, eps_u, scale):
+    """The CFG combiner: ``eps_u + w * (eps_c - eps_u)`` in fp32, cast back
+    to eps_c's dtype. The ONE place the guidance formula lives — the fused-
+    batch reference (:func:`repro.models.diffusion.dit.forward_cfg`), the
+    emulated engine, the SPMD guidance bodies and the serving engine all
+    route through it, so the rule cannot drift between executors. ``scale``
+    may be a python float or a per-lane array broadcastable to eps_c."""
+    ec = eps_c.astype(jnp.float32)
+    eu = eps_u.astype(jnp.float32)
+    return (eu + scale * (ec - eu)).astype(eps_c.dtype)
+
+
+def cfg_delta(eps_c, eps_u):
+    """The guidance direction ``eps_c - eps_u`` (fp32): what interleaved
+    guidance caches. The class direction drifts far more slowly across
+    fine steps than eps_u itself (which tracks the noisy latent), so
+    reusing the DELTA keeps the reuse error ``(w-1) * dDelta`` small even
+    at production guidance weights."""
+    return eps_c.astype(jnp.float32) - eps_u.astype(jnp.float32)
+
+
+def cfg_apply_delta(eps_c, delta, scale):
+    """Interleaved reuse combiner: ``eps_c + (w-1) * delta`` — exactly
+    :func:`cfg_combine` when ``delta`` is this step's true eps_c - eps_u."""
+    ec = eps_c.astype(jnp.float32)
+    return (ec + (scale - 1.0) * delta).astype(eps_c.dtype)
+
+
+# ----------------------------------------------------------------------
 # single steps
 # ----------------------------------------------------------------------
 

@@ -40,7 +40,8 @@ from repro.core.events import ExecutionTrace, IntervalEvent  # noqa: F401
 
 def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
                 exchange: str = "sync", exchange_refresh: int = 2,
-                stages: Optional[Sequence[int]] = None) -> ExecutionTrace:
+                stages: Optional[Sequence[int]] = None,
+                guidance=None) -> ExecutionTrace:
     """Schedule trace without running numerics (latency-only replay).
 
     Replays :func:`repro.core.events.lower` for (plan, patches, policy) —
@@ -48,12 +49,15 @@ def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
     interprets — and converts it to trace records; the ``"simulate"``
     pipeline backend replays the result against a :class:`CostModel`
     instead of executing the denoiser. ``stages`` produces a displaced
-    patch-pipeline trace (DESIGN.md §11) with pipeline-fill provenance.
+    patch-pipeline trace (DESIGN.md §11) with pipeline-fill provenance;
+    ``guidance`` a CFG trace (DESIGN.md §12) with uncond-refresh
+    provenance.
     """
     policy = comm_lib.get_exchange(exchange, exchange_refresh)
-    records = ir.replay(plan, patches, policy, stages=stages)
+    records = ir.replay(plan, patches, policy, stages=stages,
+                        guidance=guidance)
     return ir.make_trace(records, plan, list(patches), cfg, batch,
-                         stages=stages)
+                         stages=stages, guidance=guidance)
 
 
 @dataclasses.dataclass
@@ -177,13 +181,20 @@ def _simulate_staged(trace: ExecutionTrace, speeds: Sequence[float],
     chain = chain_speeds(speeds, len(stages))
     total = 0.0
     rows_total = max(sum(trace.patches), 1)
+    # guided staged runs (DESIGN.md §12): both CFG branches stream through
+    # the chain as one branch-vmapped micro-task, so every task carries 2x
+    # the row work (the per-task fixed overhead is shared); the eps combine
+    # is chain-local, and each stage's doubled K/V context never crosses
+    # devices, so no extra wire term appears
+    mult = 2 if trace.guidance is not None else 1
     for ev in trace.events:
-        tasks = [(sub, rows) for sub, rows in zip(ev.substeps, ev.patches)
-                 if sub > 0 and rows > 0]
+        tasks = [(sub, rows * mult) for sub, rows
+                 in zip(ev.substeps, ev.patches) if sub > 0 and rows > 0]
         if not tasks:
             continue
         if ev.synchronous:
-            total += pipefuse_warmup_seconds(stages, chain, cm, rows_total,
+            total += pipefuse_warmup_seconds(stages, chain, cm,
+                                             rows_total * mult,
                                              trace.act_row_bytes)
         else:
             total += pipefuse_interval_seconds(
@@ -192,11 +203,90 @@ def _simulate_staged(trace: ExecutionTrace, speeds: Sequence[float],
     return total
 
 
+# ----------------------------------------------------------------------
+# classifier-free guidance costing (DESIGN.md §12)
+# ----------------------------------------------------------------------
+#
+# Guided traces price the cond/uncond branches by placement mode. The
+# binding constraint CFG adds is FABRIC CONTENTION: fused guidance doubles
+# every staged-K/V payload and broadcasts both branches over one fabric
+# domain, so a "full" boundary moves 2x the K/V bytes serially. Split
+# guidance maps the two branch groups onto disjoint fabric domains (e.g.
+# two nodes): each group broadcasts one branch's K/V concurrently, and the
+# only cross-domain traffic is the per-substep epsilon combine (latent-
+# sized — orders of magnitude below staged K/V). Interleaved guidance
+# additionally idles STRAGGLER pairs' uncond devices on non-refresh
+# intervals (the cond side reuses the cached eps_u, so their interval runs
+# at the cond device's speed and no epsilon crosses); fast pairs keep
+# computing fresh.
+
+def _guided_eps_seconds(ev, g, cm: CostModel, row_bytes: float,
+                        pairs: List[int], fresh: bool) -> float:
+    """Cross-group epsilon traffic of one interval: each pair exchanges
+    its slab's eps both ways at every substep it executes — none for
+    reusing (straggler) workers on interleaved reuse intervals, whose
+    cached eps_u lives cond-side."""
+    subs = {i: (ev.substeps[i] if fresh or not g.worker_reuses(i) else 0)
+            for i in pairs}
+    bytes_ = sum(2 * subs[i] * ev.patches[i] * row_bytes for i in pairs)
+    hops = max(subs.values(), default=0)
+    return bytes_ / cm.link_bw + hops * cm.link_latency
+
+
+def _simulate_guided(trace: ExecutionTrace, speeds: Sequence[float],
+                     cm: CostModel) -> float:
+    g = trace.guidance
+    kv_row = _kv_bytes_per_row(trace)
+    rows_total = max(sum(trace.patches), 1)
+    row_bytes = trace.latent_bytes / rows_total
+    total = 0.0
+    for ev in trace.events:
+        parts = [i for i, (sub, rows) in
+                 enumerate(zip(ev.substeps, ev.patches))
+                 if sub > 0 and rows > 0]
+        if not parts:
+            continue
+        fresh = ev.uncond_fresh
+        compute = 0.0
+        for i in parts:
+            step_t = cm.t_fixed + cm.t_row * ev.patches[i] \
+                * (2.0 if g.mode == "fused" else 1.0)
+            if g.mode == "fused":
+                t = ev.substeps[i] * step_t / max(speeds[i], 1e-9)
+            else:                        # worker i is a device PAIR
+                vc = speeds[g.cond_devices[i]]
+                vu = speeds[g.uncond_devices[i]]
+                if fresh or not g.worker_reuses(i):
+                    t = ev.substeps[i] * step_t / max(min(vc, vu), 1e-9)
+                else:                    # reuse: uncond idles, cond runs
+                    t = ev.substeps[i] * step_t / max(vc, 1e-9)
+            compute = max(compute, t)
+        eps_t = 0.0
+        if g.mode != "fused":
+            eps_t = _guided_eps_seconds(ev, g, cm, row_bytes, parts, fresh)
+        gather_rows = comm_lib.uneven_all_gather_rows(
+            [ev.patches[i] for i in parts])
+        kind = "full" if ev.synchronous else ev.exchange
+        if kind != "full" or len(parts) <= 1:
+            total += compute + eps_t     # no broadcast, no gather
+            continue
+        # "full" boundary: each branch domain broadcasts its staged K/V —
+        # fused serializes both branches on one fabric, split runs the two
+        # domains concurrently (one branch's worth of bytes)
+        branch_factor = 2.0 if g.mode == "fused" else 1.0
+        kv_bytes = branch_factor * sum(kv_row * ev.patches[i] for i in parts)
+        comm = gather_rows * row_bytes / cm.link_bw + cm.link_latency
+        total += max(compute, kv_bytes / cm.link_bw) + comm + eps_t
+    return total
+
+
 def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
                    cm: CostModel) -> float:
     """End-to-end makespan (s) of a schedule on devices with given speeds."""
     if trace.stages and len(trace.stages) > 1:
         return _simulate_staged(trace, speeds, cm)
+    if trace.guidance is not None:
+        return _simulate_guided(trace, speeds, cm)
     total = 0.0
     kv_row = _kv_bytes_per_row(trace)
     for ev in trace.events:

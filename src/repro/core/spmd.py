@@ -34,13 +34,21 @@ from repro.core.schedule import TemporalPlan
 
 def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
                   R, my_slab, cond, pub_k, pub_v, my_start, my_tok,
-                  my_ratio, m0):
+                  my_ratio, m0, guidance_scale=None, eps_combine=None):
     """R fine steps on this device's padded slab with activity masking: a
     device with interval ratio r only applies every r-th DDIM update (a
     no-op substep costs what it costs — the paper's per-GPU step skipping in
     SPMD lockstep). Publishes the FIRST substep's fresh K/V (Alg. 1).
     ``m0`` (first fine step) may be a python int (run_spmd's statically
-    unrolled loop) or a traced scalar (round-granular serving)."""
+    unrolled loop) or a traced scalar (round-granular serving).
+
+    Guidance (DESIGN.md §12): ``guidance_scale`` turns each eval into a
+    branch-vmapped fused CFG step against branch-stacked buffers (the
+    "spmd" fused path); ``eps_combine`` post-processes the raw local eps —
+    the "spmd_guidance" split path passes the cross-branch psum combine
+    over the guidance mesh axis.
+    """
+    import jax
     import jax.numpy as jnp
 
     from repro.core import sampler as sampler_lib
@@ -51,9 +59,19 @@ def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
         active = (s % my_ratio) == 0
         t_from = ts[m0 + s]
         t_to = ts[jnp.minimum(m0 + s + my_ratio, m_base)]
-        eps, kvs = dit.forward_patch(
-            params, cfg, my_slab, t_from, cond, my_start,
-            buffers=(pub_k, pub_v), return_kv=True, valid_tokens=my_tok)
+        if guidance_scale is not None:        # fused CFG: both branches here
+            def one(c, bk, bv):
+                return dit.forward_patch(
+                    params, cfg, my_slab, t_from, c, my_start,
+                    buffers=(bk, bv), return_kv=True, valid_tokens=my_tok)
+            eps2, kvs = jax.vmap(one)(dit.guidance_conds(cond), pub_k, pub_v)
+            eps = sampler_lib.cfg_combine(eps2[0], eps2[1], guidance_scale)
+        else:
+            eps, kvs = dit.forward_patch(
+                params, cfg, my_slab, t_from, cond, my_start,
+                buffers=(pub_k, pub_v), return_kv=True, valid_tokens=my_tok)
+        if eps_combine is not None:           # split CFG: eps crosses groups
+            eps = eps_combine(eps)
         stepped = sampler_lib.ddim_step(sched, my_slab, eps, t_from, t_to)
         my_slab = jnp.where(active, stepped, my_slab)
         if s == 0:                            # Alg.1: publish first substep
@@ -62,13 +80,15 @@ def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
 
 
 def _gather_and_merge(cfg: DiTConfig, patches, row_starts, my_slab,
-                      fresh_k, fresh_v, pub_k, pub_v, merge_kv: bool = True):
+                      fresh_k, fresh_v, pub_k, pub_v, merge_kv: bool = True,
+                      tok_axis: int = 2):
     """Interval boundary: uneven all-gathers (padded strategy) rebuild the
     full latent; with ``merge_kv`` every device's fresh K/V valid prefix is
     merged into the (scratch-padded) published buffers. ``merge_kv=False``
     is the "skip" exchange kind: slabs are disjoint so the latent gather is
     numerically transparent (and modeled as free), while the K/V buffers
-    deliberately stay stale."""
+    deliberately stay stale. ``tok_axis`` is the buffers' token axis — 2
+    for plain [L,B,N,H,hd], 3 for branch-stacked CFG buffers (§12)."""
     import jax
     import jax.numpy as jnp
 
@@ -78,17 +98,19 @@ def _gather_and_merge(cfg: DiTConfig, patches, row_starts, my_slab,
     x_full = jnp.concatenate(parts, axis=1)
     if not merge_kv:
         return x_full, pub_k, pub_v
-    gk = jax.lax.all_gather(fresh_k, "dev")           # [N,L,B,Nl_max,H,hd]
+    gk = jax.lax.all_gather(fresh_k, "dev")           # [N,(2,)L,B,Nl_max,H,hd]
     gv = jax.lax.all_gather(fresh_v, "dev")
     for i in range(N):                         # static merge, valid prefixes
         sz = patches[i] * wp
         if sz == 0:
             continue
         st = int(row_starts[i]) * wp
+        sl = [i] + [slice(None)] * (gk.ndim - 1)
+        sl[1 + tok_axis] = slice(0, sz)
         pub_k = jax.lax.dynamic_update_slice_in_dim(
-            pub_k, gk[i, :, :, :sz], st, axis=2)
+            pub_k, gk[tuple(sl)], st, axis=tok_axis)
         pub_v = jax.lax.dynamic_update_slice_in_dim(
-            pub_v, gv[i, :, :, :sz], st, axis=2)
+            pub_v, gv[tuple(sl)], st, axis=tok_axis)
     return x_full, pub_k, pub_v
 
 
@@ -341,7 +363,8 @@ def run_spmd_pipefuse(params, cfg: DiTConfig, sched: NoiseSchedule, x_T,
 
 def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
              plan: TemporalPlan, patches: Sequence[int],
-             exchange: str = "sync", exchange_refresh: int = 2):
+             exchange: str = "sync", exchange_refresh: int = 2,
+             guidance=None):
     """shard_map STADI across jax.devices(). Returns final image [B,H,W,C].
 
     The body is generated by statically unrolling the schedule IR event
@@ -349,6 +372,11 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     one ``_run_substeps`` per :class:`~repro.core.events.ComputeInterval`,
     and per :class:`~repro.core.events.Exchange` a boundary whose collective
     traffic follows the event's kind.
+
+    ``guidance`` (DESIGN.md §12): a FUSED GuidancePlan turns every eval
+    into a branch-vmapped CFG step (buffers branch-stacked per device);
+    split/interleaved placement needs the guidance mesh axis — use
+    :func:`run_spmd_guidance` (the "spmd_guidance" backend).
     """
     import jax
     import jax.numpy as jnp
@@ -357,8 +385,16 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     from repro.core import sampler as sampler_lib
     from repro.models.diffusion import dit
 
+    if guidance is not None and guidance.mode != "fused":
+        raise ValueError(
+            f"run_spmd executes fused guidance only; {guidance.mode!r} "
+            "placement needs the guidance mesh axis of run_spmd_guidance "
+            "(backend 'spmd_guidance')")
+    guided = guidance is not None
+    scale = guidance.scale if guided else None
+    tok_axis = 3 if guided else 2
     policy = comm_lib.get_exchange(exchange, exchange_refresh)
-    evs = list(ir.lower(plan, patches, policy))
+    evs = list(ir.lower(plan, patches, policy, guidance=guidance))
 
     devices = jax.devices()
     N = len(patches)
@@ -369,7 +405,7 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     ratios = [r if r else 1 for r in plan.ratios]
     ratios_arr = jnp.asarray(ratios, jnp.int32)
     ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
-    buf_pad = [(0, 0), (0, 0), (0, lay["Nl_max"]), (0, 0), (0, 0)]
+    buf_pad = [(0, 0)] * tok_axis + [(0, lay["Nl_max"])] + [(0, 0), (0, 0)]
 
     def _reslice(x_full, my_start):
         x_pad = jnp.pad(x_full, ((0, 0), (0, lay["Pmax"] * lay["p"]),
@@ -384,6 +420,17 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
         my_ratio = ratios_arr[idx]
         my_tok = my_rows * lay["wp"]
 
+        def _full_forward(x, t):
+            """Synchronous full-image eval (guided => fused CFG)."""
+            if guided:
+                def one(c):
+                    return dit.forward_patch(params, cfg, x, t, c, 0,
+                                             buffers=None, return_kv=True)
+                eps2, kvs = jax.vmap(one)(dit.guidance_conds(cond))
+                return sampler_lib.cfg_combine(eps2[0], eps2[1], scale), kvs
+            return dit.forward_patch(params, cfg, x, t, cond, 0,
+                                     buffers=None, return_kv=True)
+
         pub_k = pub_v = None          # last fully-exchanged K/V (padded)
         prev_k = prev_v = None        # the exchange before that (predictive)
         read_k = read_v = None        # what the substeps attend to
@@ -393,9 +440,7 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
         for ev in evs:
             if isinstance(ev, ir.Warmup):
                 # synchronous == full-image forward on every device
-                eps, kvs = dit.forward_patch(
-                    params, cfg, x_full, ts[ev.fine_step], cond, 0,
-                    buffers=None, return_kv=True)
+                eps, kvs = _full_forward(x_full, ts[ev.fine_step])
                 x_full = sampler_lib.ddim_step(sched, x_full, eps,
                                                ts[ev.fine_step],
                                                ts[ev.fine_step + 1])
@@ -405,9 +450,7 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
             elif isinstance(ev, ir.ComputeInterval):
                 if my_slab is None:   # entering the adaptive phase
                     if pub_k is None:             # M_w == 0: bootstrap once
-                        _, kvs = dit.forward_patch(
-                            params, cfg, x_full, ts[0], cond, 0,
-                            buffers=None, return_kv=True)
+                        _, kvs = _full_forward(x_full, ts[0])
                         pub_k, pub_v = kvs
                         m_last = -1
                     pub_k = jnp.pad(pub_k, buf_pad)   # scratch-padded
@@ -417,7 +460,7 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                 my_slab, fresh_k, fresh_v = _run_substeps(
                     params, cfg, sched, ts, plan.m_base, ev.length, my_slab,
                     cond, read_k, read_v, my_start, my_tok, my_ratio,
-                    ev.fine_step)
+                    ev.fine_step, guidance_scale=scale)
 
             elif isinstance(ev, ir.Exchange):
                 if ev.kind == "full":
@@ -425,7 +468,7 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                     m_prev, m_last = m_last, ev.fine_step
                     x_full, pub_k, pub_v = _gather_and_merge(
                         cfg, patches, lay["row_starts"], my_slab,
-                        fresh_k, fresh_v, pub_k, pub_v)
+                        fresh_k, fresh_v, pub_k, pub_v, tok_axis=tok_axis)
                     read_k, read_v = pub_k, pub_v
                     my_slab = _reslice(x_full, my_start)
                 elif ev.kind == "skip":
@@ -438,6 +481,141 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                         read_k = buf_lib.extrapolate_arrays(pub_k, prev_k, f)
                         read_v = buf_lib.extrapolate_arrays(pub_v, prev_v, f)
                     else:             # fewer than two exchanges: stale reuse
+                        read_k, read_v = pub_k, pub_v
+        return x_full
+
+    from repro.core.comm import shard_map_compat
+    fn = shard_map_compat(body, mesh, (P(), P(), P()), P())
+    return jax.jit(fn)(params, x_T, cond)
+
+
+def run_spmd_guidance(params, cfg: DiTConfig, sched: NoiseSchedule, x_T,
+                      cond, plan: TemporalPlan, patches: Sequence[int],
+                      guidance, exchange: str = "sync",
+                      exchange_refresh: int = 2):
+    """Split-guidance SPMD (DESIGN.md §12): shard_map over a
+    ``("guide", "dev")`` mesh — axis "guide" (size 2) holds the cond/uncond
+    branch groups, axis "dev" the ``n_pairs`` patch workers of each group.
+
+    Each guide slice runs the IDENTICAL statically-unrolled schedule body
+    as :func:`run_spmd` for its branch (cond ids on slice 0, the reserved
+    NULL_COND on slice 1), with per-branch published K/V that never crosses
+    the guide axis. The only cross-branch traffic is the per-substep
+    epsilon combine, a single ``psum`` of ``coeff * eps`` over "guide" with
+    ``coeff = (w, 1 - w)`` — algebraically ``eps_u + w*(eps_c - eps_u)``.
+    Needs ``2 * n_pairs`` devices. Returns the final image [B,H,W,C].
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import sampler as sampler_lib
+    from repro.core.guidance import NULL_COND
+    from repro.models.diffusion import dit
+
+    if guidance is None or guidance.mode not in ("split", "interleaved"):
+        raise ValueError("run_spmd_guidance needs a split/interleaved "
+                         f"GuidancePlan, got {guidance!r}")
+    if guidance.mode == "interleaved":
+        raise ValueError("interleaved uncond reuse is not implemented on "
+                         "the SPMD backend; use 'emulated'/'pipefuse' for "
+                         "interleaved numerics")
+    scale = guidance.scale
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
+    evs = list(ir.lower(plan, patches, policy, guidance=guidance))
+
+    devices = jax.devices()
+    N = len(patches)                     # logical workers = device pairs
+    if 2 * N > len(devices):
+        raise ValueError(
+            f"split guidance over {N} pairs needs {2 * N} devices, have "
+            f"{len(devices)} (set STADI_HOST_DEVICES)")
+    mesh = Mesh(np.asarray(devices[:2 * N]).reshape(2, N), ("guide", "dev"))
+
+    lay = _static_layout(cfg, patches)
+    ratios = [r if r else 1 for r in plan.ratios]
+    ratios_arr = jnp.asarray(ratios, jnp.int32)
+    ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
+    buf_pad = [(0, 0), (0, 0), (0, lay["Nl_max"]), (0, 0), (0, 0)]
+
+    def _reslice(x_full, my_start):
+        x_pad = jnp.pad(x_full, ((0, 0), (0, lay["Pmax"] * lay["p"]),
+                                 (0, 0), (0, 0)))
+        return jax.lax.dynamic_slice_in_dim(x_pad, my_start * lay["p"],
+                                            lay["Pmax"] * lay["p"], axis=1)
+
+    def body(params, x_full, cond):
+        guide = jax.lax.axis_index("guide")
+        idx = jax.lax.axis_index("dev")
+        my_rows = lay["rows_arr"][idx]
+        my_start = lay["starts_arr"][idx]
+        my_ratio = ratios_arr[idx]
+        my_tok = my_rows * lay["wp"]
+        # my branch: slice 0 evaluates the class ids, slice 1 the null
+        my_cond = jnp.where(guide == 0, cond,
+                            jnp.full_like(cond, NULL_COND))
+        coeff = jnp.where(guide == 0, scale, 1.0 - scale)
+
+        def eps_combine(eps):
+            return jax.lax.psum(coeff * eps.astype(jnp.float32),
+                                "guide").astype(eps.dtype)
+
+        pub_k = pub_v = None
+        prev_k = prev_v = None
+        read_k = read_v = None
+        my_slab = fresh_k = fresh_v = None
+        m_prev, m_last = None, None
+
+        for ev in evs:
+            if isinstance(ev, ir.Warmup):
+                eps, kvs = dit.forward_patch(
+                    params, cfg, x_full, ts[ev.fine_step], my_cond, 0,
+                    buffers=None, return_kv=True)
+                eps = eps_combine(eps)
+                x_full = sampler_lib.ddim_step(sched, x_full, eps,
+                                               ts[ev.fine_step],
+                                               ts[ev.fine_step + 1])
+                pub_k, pub_v = kvs
+                m_last = ev.fine_step
+
+            elif isinstance(ev, ir.ComputeInterval):
+                if my_slab is None:
+                    if pub_k is None:             # M_w == 0: bootstrap once
+                        _, kvs = dit.forward_patch(
+                            params, cfg, x_full, ts[0], my_cond, 0,
+                            buffers=None, return_kv=True)
+                        pub_k, pub_v = kvs
+                        m_last = -1
+                    pub_k = jnp.pad(pub_k, buf_pad)
+                    pub_v = jnp.pad(pub_v, buf_pad)
+                    read_k, read_v = pub_k, pub_v
+                    my_slab = _reslice(x_full, my_start)
+                my_slab, fresh_k, fresh_v = _run_substeps(
+                    params, cfg, sched, ts, plan.m_base, ev.length, my_slab,
+                    my_cond, read_k, read_v, my_start, my_tok, my_ratio,
+                    ev.fine_step, eps_combine=eps_combine)
+
+            elif isinstance(ev, ir.Exchange):
+                if ev.kind == "full":
+                    prev_k, prev_v = pub_k, pub_v
+                    m_prev, m_last = m_last, ev.fine_step
+                    # per-branch gather/merge: "dev"-axis collectives run
+                    # inside each guide slice; K/V never crosses "guide"
+                    x_full, pub_k, pub_v = _gather_and_merge(
+                        cfg, patches, lay["row_starts"], my_slab,
+                        fresh_k, fresh_v, pub_k, pub_v)
+                    read_k, read_v = pub_k, pub_v
+                    my_slab = _reslice(x_full, my_start)
+                elif ev.kind == "skip":
+                    read_k, read_v = pub_k, pub_v
+                elif ev.kind == "predict":
+                    f = (buf_lib.extrapolation_factor(m_prev, m_last,
+                                                      ev.fine_step)
+                         if m_prev is not None else 0.0)
+                    if f:
+                        read_k = buf_lib.extrapolate_arrays(pub_k, prev_k, f)
+                        read_v = buf_lib.extrapolate_arrays(pub_v, prev_v, f)
+                    else:
                         read_k, read_v = pub_k, pub_v
         return x_full
 

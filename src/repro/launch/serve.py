@@ -54,10 +54,13 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                     backend: str = "emulated", reduced: bool = True,
                     slo_s: float = None, seed: int = 0,
                     exchange: str = "sync", exchange_refresh: int = 2,
-                    num_stages: int = 1):
+                    num_stages: int = 1, cfg_scale: float = 0.0):
     """Continuous batching on a heterogeneous cluster: requests enter a FIFO
     queue, the :class:`DiffusionServingEngine` admits them into ``slots``
-    concurrent lanes and drains the queue with batched denoise rounds."""
+    concurrent lanes and drains the queue with batched denoise rounds.
+    ``cfg_scale > 0`` makes every other request a classifier-free-guidance
+    one (DESIGN.md §12) — the mixed CFG / non-CFG workload the engine's
+    per-lane guidance state exists for."""
     from repro.core import sampler as sampler_lib
     from repro.core.pipeline import StadiConfig, StadiPipeline
     from repro.models.diffusion import dit
@@ -77,11 +80,15 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
     engine = DiffusionServingEngine(pipe, slots=slots)
     rng = np.random.default_rng(seed)
     t0 = time.time()
+    n_guided = 0
     for uid in range(n_requests):
         x_T = jax.random.normal(jax.random.PRNGKey(seed + 1 + uid),
                                 (1, cfg.latent_size, cfg.latent_size,
                                  cfg.channels))
-        engine.submit(x_T, int(rng.integers(0, cfg.n_classes)), slo_s=slo_s)
+        scale = cfg_scale if (cfg_scale > 0 and uid % 2 == 0) else None
+        n_guided += scale is not None
+        engine.submit(x_T, int(rng.integers(0, cfg.n_classes)), slo_s=slo_s,
+                      cfg_scale=scale)
     done = engine.run_to_completion()
     dt = time.time() - t0
     for req in done:
@@ -90,11 +97,11 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
     note = ("" if stats["cost_model"] == "configured"
             else " [default-uncalibrated cost model]")
     print(f"served {stats['n_completed']}/{n_requests} generation requests "
-          f"in {dt:.2f}s ({stats['n_completed']/dt:.2f} img/s wall, "
-          f"{stats['throughput_modeled_rps']:.2f} img/s modeled{note}) "
-          f"planner={planner} backend={backend} slots={slots} "
-          f"rounds={stats['rounds']} patches={engine.plan.patches} "
-          f"stages={engine.stages}")
+          f"({n_guided} CFG) in {dt:.2f}s ({stats['n_completed']/dt:.2f} "
+          f"img/s wall, {stats['throughput_modeled_rps']:.2f} img/s "
+          f"modeled{note}) planner={planner} backend={backend} "
+          f"slots={slots} rounds={stats['rounds']} "
+          f"patches={engine.plan.patches} stages={engine.stages}")
     for r in stats["requests"]:
         slo = "" if r["slo_met"] is None else f" slo_met={r['slo_met']}"
         print(f"  req {r['uid']}: queued {r['queue_rounds']} rounds, "
@@ -138,6 +145,10 @@ def main():
                          "only, DESIGN.md §11): DiT blocks are split over a "
                          "speed-proportional stage chain; 1 = pure patch "
                          "parallelism, 0 = let stadi_pipefuse search")
+    ap.add_argument("--cfg-scale", type=float, default=0.0,
+                    help="classifier-free guidance weight (diffusion only, "
+                         "DESIGN.md §12): > 0 submits every other request "
+                         "as a CFG request — a mixed guided/unguided batch")
     args = ap.parse_args()
     if args.diffusion:
         if args.arch == ap.get_default("arch"):
@@ -154,7 +165,8 @@ def main():
                                if args.slo_ms is not None else None),
                         exchange=args.exchange,
                         exchange_refresh=args.exchange_refresh,
-                        num_stages=args.num_stages)
+                        num_stages=args.num_stages,
+                        cfg_scale=args.cfg_scale)
     else:
         serve(args.arch, n_requests=args.requests, slots=args.slots,
               prompt_len=args.prompt_len, max_new=args.max_new)

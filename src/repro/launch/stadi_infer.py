@@ -43,10 +43,10 @@ def main():
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--planner", default="stadi",
                     choices=["uniform", "spatial", "temporal", "stadi",
-                             "makespan", "stadi_pipefuse"])
+                             "makespan", "stadi_pipefuse", "stadi_guidance"])
     ap.add_argument("--backend", default="emulated",
                     choices=["emulated", "spmd", "simulate", "pipefuse",
-                             "spmd_pipefuse"])
+                             "spmd_pipefuse", "spmd_guidance"])
     ap.add_argument("--spmd", action="store_true",
                     help="alias for --backend spmd")
     ap.add_argument("--num-stages", type=int, default=1,
@@ -56,6 +56,22 @@ def main():
     ap.add_argument("--micro-patches", type=int, default=0,
                     help="micro-batches streaming through the stage chain "
                          "(0 = auto)")
+    ap.add_argument("--cfg-scale", type=float, default=0.0,
+                    help="classifier-free guidance weight w (DESIGN.md "
+                         "§12): 0 = unguided; > 0 runs CFG "
+                         "(eps_u + w*(eps_c - eps_u))")
+    ap.add_argument("--guidance", default="none",
+                    choices=["none", "fused", "split", "interleaved"],
+                    help="CFG placement: fused-batch on every worker, "
+                         "split cond/uncond device groups, or interleaved "
+                         "uncond reuse; split/interleaved need "
+                         "--planner stadi_guidance ('none' + --cfg-scale "
+                         "lets stadi_guidance auto-search)")
+    ap.add_argument("--uncond-refresh", type=int, default=2,
+                    help="interleaved guidance: recompute the uncond "
+                         "branch every E adaptive intervals")
+    ap.add_argument("--cond", type=int, default=0,
+                    help="class id to condition on")
     ap.add_argument("--rebalance-every", type=int, default=0)
     ap.add_argument("--exchange", default="sync",
                     choices=["sync", "stale_async", "predictive"],
@@ -88,7 +104,7 @@ def main():
     x_T = jax.random.normal(jax.random.PRNGKey(args.seed + 1),
                             (args.batch, cfg.latent_size, cfg.latent_size,
                              cfg.channels))
-    cond = jnp.zeros((args.batch,), jnp.int32)
+    cond = jnp.full((args.batch,), args.cond % cfg.n_classes, jnp.int32)
 
     knobs = {}
     if backend == "simulate":
@@ -104,13 +120,16 @@ def main():
         rebalance_every=args.rebalance_every, exchange=args.exchange,
         exchange_refresh=args.exchange_refresh,
         num_stages=args.num_stages, micro_patches=args.micro_patches,
+        guidance=args.guidance, cfg_scale=args.cfg_scale,
+        uncond_refresh=args.uncond_refresh,
         **knobs)
-    from repro.core.pipeline import plan_stages
+    from repro.core.pipeline import plan_guidance, plan_stages
     pipe = StadiPipeline(cfg, params, sched, config)
     plan = pipe.plan()
     print(f"speeds={config.speeds} steps={plan.temporal.steps} "
           f"ratios={plan.temporal.ratios} patches={plan.patches} "
-          f"stages={plan_stages(plan, cfg, config)}")
+          f"stages={plan_stages(plan, cfg, config)} "
+          f"guidance={plan_guidance(plan, config)}")
 
     t0 = time.time()
     res = pipe.generate(x_T, cond)
@@ -124,7 +143,7 @@ def main():
     print(f"{backend} run ({len(jax.devices())} devices): "
           f"{time.time()-t0:.2f}s image {img.shape} "
           f"finite={np.all(np.isfinite(img))}")
-    if backend == "spmd" and args.check_vs_emulation:
+    if backend in ("spmd", "spmd_guidance") and args.check_vs_emulation:
         emu = StadiPipeline(cfg, params, sched,
                             dataclasses.replace(config, backend="emulated"))
         ref = np.asarray(emu.generate(x_T, cond).image)

@@ -111,6 +111,38 @@ def nondegenerate_params(params, seed: int = 7):
     return params
 
 
+def _stale_kernel_attend(q, k_fresh, v_fresh, k_stale, v_stale,
+                         tok_start: int, blk: int):
+    """Fused freshness-select attention via the Pallas stale-KV kernel
+    (repro.kernels.stale_kv_attention): the per-block fresh/stale select
+    happens inside the flash loop, so the stale buffer is never rewritten
+    in HBM — the kernelized form of the dynamic_update_slice + attend
+    reference path below. Layout [B,Nl,H,hd] <-> kernel's [B,H,Nl,hd]."""
+    from repro.kernels import ops as kops
+    from repro.kernels import stale_kv_attention as ska
+    to = lambda a: jnp.moveaxis(a.astype(q.dtype), 2, 1)
+    out = ska.stale_kv_attention_bhsd(
+        to(q), to(k_fresh), to(v_fresh), to(k_stale), to(v_stale),
+        tok_start, bq=blk, bk=blk, interpret=kops._interpret())
+    return jnp.moveaxis(out, 1, 2)
+
+
+def _pallas_block(cfg, tok_start, Nl: int, N: int,
+                  valid_tokens, enable) -> int:
+    """Kernel tile size for the stale-KV attention, or 0 when the layout
+    needs the reference path: traced offsets (SPMD per-device starts),
+    scratch padding (valid_tokens) and stage masking (enable) are not
+    kernel-compatible, and tok_start/Nl/N must share a power-of-two tile
+    >= 8 (token counts are multiples of tokens_per_side, so any practical
+    grid qualifies)."""
+    if not (cfg.use_pallas_attention and valid_tokens is None
+            and enable is None and isinstance(tok_start, int)):
+        return 0
+    g = math.gcd(math.gcd(Nl, N), tok_start) if tok_start else math.gcd(Nl, N)
+    blk = min(g & (-g), 128)             # largest power-of-two divisor
+    return blk if blk >= 8 else 0
+
+
 def _modulate(x, shift, scale):
     return x * (1 + scale[:, None]) + shift[:, None]
 
@@ -129,7 +161,13 @@ def _cond_vector(params, cfg, t, cond, B):
     if cond is None:
         cemb = 0.0
     else:
-        cemb = params["cond_embed"][jnp.broadcast_to(jnp.asarray(cond, jnp.int32), (B,))]
+        # class ids >= 0 gather their embedding; the reserved NULL_COND (-1)
+        # id selects the zero (unconditional) embedding — the traced-data
+        # null branch classifier-free guidance evaluates (DESIGN.md §12)
+        idx = jnp.broadcast_to(jnp.asarray(cond, jnp.int32), (B,))
+        gathered = params["cond_embed"][jnp.clip(idx, 0)]
+        cemb = jnp.where((idx >= 0)[:, None], gathered,
+                         jnp.zeros_like(gathered))
     return jax.nn.silu(temb + cemb)                      # [B, D]
 
 
@@ -178,6 +216,9 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
     B, Nl, D = h.shape[0], h.shape[1], cfg.d_model
     H = cfg.n_heads
     hd = D // H
+    pallas_blk = (_pallas_block(cfg, tok_start, Nl, buffers[0].shape[2],
+                                valid_tokens, enable)
+                  if buffers is not None else 0)
 
     def block(x, scanned):
         if enable is not None:
@@ -193,6 +234,10 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
         q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
         if buffers is None:
             att = layers.attend(q, k, v)                 # local-only (exact if full)
+        elif pallas_blk:
+            # fused freshness-select flash kernel: no HBM buffer rewrite
+            att = _stale_kernel_attend(q, k, v, bk, bv, tok_start,
+                                       pallas_blk)
         else:
             # SPMD path: buffers are scratch-padded to N + Nl tokens so the
             # read-modify-write below never clamps; the padded tail of the
@@ -264,6 +309,26 @@ def forward(params, cfg: DiTConfig, x, t, cond=None):
     """Full-image denoiser: [B,H,W,C] -> eps [B,H,W,C] (the Origin path)."""
     eps, _ = forward_patch(params, cfg, x, t, cond, 0, buffers=None, return_kv=False)
     return eps
+
+
+def guidance_conds(cond) -> jnp.ndarray:
+    """[2, B] branch-stacked class ids: row 0 = conditional, row 1 = the
+    reserved NULL_COND unconditional branch."""
+    from repro.core.guidance import NULL_COND
+    cond = jnp.asarray(cond, jnp.int32)
+    return jnp.stack([cond, jnp.full_like(cond, NULL_COND)])
+
+
+def forward_cfg(params, cfg: DiTConfig, x, t, cond, scale):
+    """Fused-batch classifier-free guidance reference (DESIGN.md §12): one
+    branch-vmapped dispatch evaluates the conditional and unconditional
+    forwards, combined as ``eps_u + scale * (eps_c - eps_u)``. This is the
+    CFG analogue of :func:`forward` ("Origin"): exact, single-device, and
+    the bitwise reference every guided schedule path is tested against."""
+    from repro.core.sampler import cfg_combine
+    eps2 = jax.vmap(lambda c: forward(params, cfg, x, t, c))(
+        guidance_conds(cond))
+    return cfg_combine(eps2[0], eps2[1], scale)
 
 
 def buffer_shape(cfg: DiTConfig, batch: int):

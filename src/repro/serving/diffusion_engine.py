@@ -51,8 +51,8 @@ from repro.core import pipefuse as pipefuse_lib
 from repro.core import sampler as sampler_lib
 from repro.core import simulate as sim
 from repro.core.pipeline import (StadiPipeline, check_backend_can_run,
-                                 get_stepper_factory, plan_stages,
-                                 register_stepper_factory)
+                                 get_stepper_factory, plan_guidance,
+                                 plan_stages, register_stepper_factory)
 from repro.core.planners import ExecutionPlan
 from repro.core.schedule import patch_bounds
 from repro.core.simulate import CostModel
@@ -71,6 +71,14 @@ class DiffusionRequest:
     x_T: jnp.ndarray                     # [1, H, W, C]
     cond: jnp.ndarray                    # [1] int32
     slo_s: Optional[float] = None        # modeled-latency SLO target
+    # classifier-free guidance (DESIGN.md §12): None = unguided request;
+    # > 0 = this request denoises with eps_u + cfg_scale*(eps_c - eps_u)
+    # (per-lane state; CFG and non-CFG requests coexist in one batch)
+    cfg_scale: Optional[float] = None
+
+    @property
+    def guided(self) -> bool:
+        return self.cfg_scale is not None and self.cfg_scale > 0.0
     # engine-owned state
     fine_step: int = 0
     image: Optional[jnp.ndarray] = None
@@ -137,24 +145,69 @@ def _vmap_patch_step(params, cfg, xs_loc, ts, conds, bks, bvs, row_start):
     return jax.vmap(one)(xs_loc, ts, conds, bks, bvs)
 
 
+# Guided (classifier-free guidance, DESIGN.md §12) lane steps: the per-lane
+# body is the SAME branch-vmapped fused-CFG eval as the single-request
+# engine's pp._jit_guided_*_step, lane-vmapped on top — so a guided lane
+# stays bitwise identical to a single-request guided ``generate``. scales
+# is per-lane data: one compiled program serves every cfg_scale in flight.
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _vmap_guided_full_step(params, cfg, xs, ts, conds, scales):
+    """Lane-stacked guided synchronous step: xs [G,1,H,W,C], scales [G].
+    Returns (eps [G,1,H,W,C], (k2, v2) [G,2,L,1,N,H,hd])."""
+    def one(x, t, cond, scale):
+        def branch(c):
+            return dit.forward_patch(params, cfg, x, t, c, 0, buffers=None,
+                                     return_kv=True)
+        eps2, kv2 = jax.vmap(branch)(dit.guidance_conds(cond))
+        return sampler_lib.cfg_combine(eps2[0], eps2[1], scale), kv2
+    return jax.vmap(one)(xs, ts, conds, scales)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "row_start"))
+def _vmap_guided_patch_step(params, cfg, xs_loc, ts, conds, bk2s, bv2s,
+                            scales, row_start):
+    """Lane-stacked guided stale-KV patch step against branch-stacked
+    published buffers bk2s/bv2s [G,2,L,1,N,H,hd]."""
+    def one(x_loc, t, cond, bk2, bv2, scale):
+        def branch(c, bk, bv):
+            return dit.forward_patch(params, cfg, x_loc, t, c, row_start,
+                                     buffers=(bk, bv), return_kv=True)
+        eps2, kv2 = jax.vmap(branch)(dit.guidance_conds(cond), bk2, bv2)
+        return sampler_lib.cfg_combine(eps2[0], eps2[1], scale), kv2
+    return jax.vmap(one)(xs_loc, ts, conds, bk2s, bv2s, scales)
+
+
 class _VmapWarmupMixin:
     """Warmup / bootstrap steps shared by both steppers: synchronous
     full-image forwards, vmapped over lanes (per-lane timestep)."""
+
+    #: can this stepper run guided (CFG) lanes? (DESIGN.md §12)
+    supports_guidance = False
 
     def _init_warmup(self, params, model_cfg, sched):
         self.params = params
         self.model_cfg = model_cfg
         self.sched = sched
 
-    def warmup_step(self, xs, t_from, t_to, conds):
-        """One synchronous fine step per lane: returns (xs', ks, vs)."""
-        G = xs.shape[0]
-        eps, (ks, vs) = _vmap_full_step(self.params, self.model_cfg, xs,
-                                        t_from, conds)
-        shape = (G,) + (1,) * (xs.ndim - 1)
+    def _warmup_finish(self, xs, t_from, t_to, eps, ks, vs):
+        shape = (xs.shape[0],) + (1,) * (xs.ndim - 1)
         xs = sampler_lib.ddim_step(self.sched, xs, eps,
                                    t_from.reshape(shape), t_to.reshape(shape))
         return xs, ks, vs
+
+    def warmup_step(self, xs, t_from, t_to, conds):
+        """One synchronous fine step per lane: returns (xs', ks, vs)."""
+        eps, (ks, vs) = _vmap_full_step(self.params, self.model_cfg, xs,
+                                        t_from, conds)
+        return self._warmup_finish(xs, t_from, t_to, eps, ks, vs)
+
+    def warmup_step_guided(self, xs, t_from, t_to, conds, scales):
+        """Guided synchronous step per lane: returns (xs', k2s, v2s) with
+        branch-stacked fresh K/V [G,2,L,1,N,H,hd]."""
+        eps, (k2s, v2s) = _vmap_guided_full_step(self.params, self.model_cfg,
+                                                 xs, t_from, conds, scales)
+        return self._warmup_finish(xs, t_from, t_to, eps, k2s, v2s)
 
 
 
@@ -166,6 +219,7 @@ class EmulatedStepper(_VmapWarmupMixin):
     lane to the single-request engine."""
 
     cohort_only = False
+    supports_guidance = True
 
     def __init__(self, pipeline: StadiPipeline, plan: ExecutionPlan,
                  slots: int):
@@ -174,15 +228,13 @@ class EmulatedStepper(_VmapWarmupMixin):
         self._ts = sampler_lib.ddim_timesteps(pipeline.sched.T,
                                               plan.temporal.m_base)
 
-    def interval(self, xs, fine0, conds, pub_k, pub_v, merge: bool = True):
-        """One adaptive interval (plan.lcm fine steps) for every lane.
-
-        xs [G,1,H,W,C]; fine0 int per lane; pub_{k,v} [G,L,1,N,H,hd] — the
-        READ buffers (the engine passes extrapolated copies for predictive
-        boundaries). ``merge=False`` is the "skip"/"predict" trailing
-        boundary: fresh K/V is never broadcast, the buffers come back
-        untouched.
-        """
+    def _interval_impl(self, xs, fine0, conds, pub_k, pub_v, merge,
+                       step_fn, tok_axis):
+        """The ONE lane-interval loop both the plain and guided entry
+        points share: per (worker, substep) one ``step_fn`` dispatch covers
+        every lane, slabs scatter back, and first-substep K/V merges into
+        the published buffers at ``tok_axis`` (3 plain, 4 branch-stacked)
+        in ascending worker order — mirroring ``buffers.merge``."""
         plan, cfg = self.plan.temporal, self.model_cfg
         R, p = plan.lcm, cfg.patch_size
         G = xs.shape[0]
@@ -200,9 +252,7 @@ class EmulatedStepper(_VmapWarmupMixin):
             for s in range(R // r):
                 t_from = self._ts[fine0 + s * r]
                 t_to = self._ts[fine0 + (s + 1) * r]
-                eps, (k, v) = _vmap_patch_step(self.params, cfg, x_loc,
-                                               t_from, conds, pub_k, pub_v,
-                                               bounds_tok[i][0])
+                eps, (k, v) = step_fn(x_loc, t_from, bounds_tok[i][0])
                 x_loc = sampler_lib.ddim_step(self.sched, x_loc, eps,
                                               t_from.reshape(tshape),
                                               t_to.reshape(tshape))
@@ -219,10 +269,38 @@ class EmulatedStepper(_VmapWarmupMixin):
                 k, v = pending[i]
                 start = bounds_tok[i][0] * cfg.tokens_per_side
                 pub_k = jax.lax.dynamic_update_slice_in_dim(
-                    pub_k, k.astype(pub_k.dtype), start, axis=3)
+                    pub_k, k.astype(pub_k.dtype), start, axis=tok_axis)
                 pub_v = jax.lax.dynamic_update_slice_in_dim(
-                    pub_v, v.astype(pub_v.dtype), start, axis=3)
+                    pub_v, v.astype(pub_v.dtype), start, axis=tok_axis)
         return xs, pub_k, pub_v
+
+    def interval(self, xs, fine0, conds, pub_k, pub_v, merge: bool = True):
+        """One adaptive interval (plan.lcm fine steps) for every lane.
+
+        xs [G,1,H,W,C]; fine0 int per lane; pub_{k,v} [G,L,1,N,H,hd] — the
+        READ buffers (the engine passes extrapolated copies for predictive
+        boundaries). ``merge=False`` is the "skip"/"predict" trailing
+        boundary: fresh K/V is never broadcast, the buffers come back
+        untouched.
+        """
+        def step(x_loc, t_from, row0):
+            return _vmap_patch_step(self.params, self.model_cfg, x_loc,
+                                    t_from, conds, pub_k, pub_v, row0)
+        return self._interval_impl(xs, fine0, conds, pub_k, pub_v, merge,
+                                   step, tok_axis=3)
+
+    def interval_guided(self, xs, fine0, conds, scales, pub_k, pub_v,
+                        merge: bool = True):
+        """One adaptive interval for GUIDED lanes (DESIGN.md §12): the
+        same worker/substep structure as :meth:`interval`, every denoiser
+        dispatch a branch-vmapped fused-CFG eval against branch-stacked
+        buffers pub_{k,v} [G,2,L,1,N,H,hd]; scales [G] is per-lane data."""
+        def step(x_loc, t_from, row0):
+            return _vmap_guided_patch_step(self.params, self.model_cfg,
+                                           x_loc, t_from, conds, pub_k,
+                                           pub_v, scales, row0)
+        return self._interval_impl(xs, fine0, conds, pub_k, pub_v, merge,
+                                   step, tok_axis=4)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "row_start", "bounds"))
@@ -254,6 +332,12 @@ class PipefuseStepper(EmulatedStepper):
     @property
     def wants_ctx(self) -> bool:
         return len(self.stages) > 1
+
+    @property
+    def supports_guidance(self) -> bool:
+        # at one stage this IS the EmulatedStepper; lane-stacked displaced
+        # contexts don't carry guided branch state (future work)
+        return not self.wants_ctx
 
     def interval_ctx(self, xs, fine0, conds, pub_k, pub_v, ctx_k, ctx_v,
                      merge: bool = True):
@@ -388,8 +472,24 @@ class DiffusionServingEngine:
         self.slots = slots
         self.plan = pipeline.plan()
         check_backend_can_run(self.plan, config)
+        # classifier-free guidance (DESIGN.md §12): serving batches FUSED
+        # CFG lanes (per-request cfg_scale, mixed with non-CFG lanes);
+        # split/interleaved placement pairs devices per generation and is a
+        # single-request optimization
+        gplan = plan_guidance(self.plan, config)
+        if gplan is not None and gplan.mode != "fused":
+            raise ValueError(
+                f"serving batches fused-CFG lanes; {gplan.mode!r} guidance "
+                "placement is per-generation — use pipe.generate, or set "
+                "guidance='fused'")
+        self.default_scale = gplan.scale if gplan is not None else None
         self.stepper = get_stepper_factory(config.backend)(
             pipeline, self.plan, slots)
+        if (self.default_scale is not None
+                and not self.stepper.supports_guidance):
+            raise ValueError(f"backend {config.backend!r} has no guided "
+                             "serving stepper (guided lanes need "
+                             "'emulated' or single-stage 'pipefuse')")
         self.cm = cost_model or config.cost_model
         # placement needs SOME cost model; flag the uncalibrated fallback so
         # modeled latencies / SLO verdicts are never mistaken for calibrated
@@ -406,6 +506,14 @@ class DiffusionServingEngine:
         self._pub_k = jnp.zeros(kshape, kdt)
         self._pub_v = jnp.zeros(kshape, kdt)
         self._cond = jnp.zeros((slots, 1), jnp.int32)
+        # guided lanes: branch-stacked published K/V [slots,2,L,1,N,H,hd]
+        # + per-lane cfg_scale; allocated on the first guided submission so
+        # CFG-free serving carries no extra state
+        self._kshape2 = (slots, 2) + dit.buffer_shape(cfg, 1)
+        self._kdt = kdt
+        self._gk = self._gv = None
+        self._prev_gk = self._prev_gv = None
+        self._scales = np.zeros(slots, np.float32)
         # displaced patch pipeline (DESIGN.md §11): stage chain + per-lane
         # displaced contexts (only materialized when depth is partitioned)
         self.stages = plan_stages(self.plan, cfg, config)
@@ -475,8 +583,15 @@ class DiffusionServingEngine:
     # ---------------- submission & admission ----------------
 
     def submit(self, x_T, cond, *, slo_s: Optional[float] = None,
-               uid: Optional[int] = None) -> DiffusionRequest:
-        """Queue one request. x_T: [H,W,C] or [1,H,W,C]; cond: int or [1]."""
+               uid: Optional[int] = None,
+               cfg_scale: Optional[float] = None) -> DiffusionRequest:
+        """Queue one request. x_T: [H,W,C] or [1,H,W,C]; cond: int or [1].
+
+        cfg_scale > 0 makes this a GUIDED request (classifier-free
+        guidance, DESIGN.md §12); None inherits the pipeline config's
+        cfg_scale (0 = unguided). CFG and non-CFG requests mix freely —
+        guidance state is per lane.
+        """
         x_T = jnp.asarray(x_T)
         if x_T.ndim == 3:
             x_T = x_T[None]
@@ -488,7 +603,22 @@ class DiffusionServingEngine:
             uid, self._next_uid = self._next_uid, self._next_uid + 1
         else:
             self._next_uid = max(self._next_uid, uid + 1)
-        req = DiffusionRequest(uid=uid, x_T=x_T, cond=cond, slo_s=slo_s)
+        if cfg_scale is None:
+            cfg_scale = self.default_scale
+        req = DiffusionRequest(uid=uid, x_T=x_T, cond=cond, slo_s=slo_s,
+                               cfg_scale=cfg_scale)
+        if req.guided:
+            if not self.stepper.supports_guidance:
+                raise ValueError(
+                    f"backend {self.pipeline.config.backend!r} has no "
+                    "guided serving stepper (guided requests need "
+                    "'emulated' or single-stage 'pipefuse')")
+            if self._gk is None:
+                self._gk = jnp.zeros(self._kshape2, self._kdt)
+                self._gv = jnp.zeros(self._kshape2, self._kdt)
+                if self._track_prev:
+                    self._prev_gk = jnp.zeros(self._kshape2, self._kdt)
+                    self._prev_gv = jnp.zeros(self._kshape2, self._kdt)
         req.submit_round = len(self.rounds)
         req.submit_clock_s = self.modeled_clock_s
         req._submit_wall = time.perf_counter()
@@ -502,16 +632,25 @@ class DiffusionServingEngine:
             slot = next(s for s in range(self.slots) if s not in self.active)
             self._x = self._x.at[slot].set(req.x_T)
             self._cond = self._cond.at[slot].set(req.cond)
+            self._scales[slot] = req.cfg_scale if req.guided else 0.0
             req.fine_step = 0
             req.admit_round = report.index
             if M_w == 0:
                 # run_schedule's buffer bootstrap: one full forward at ts[0]
                 # (shares the jit cache with the single-request engine)
-                _, kvs = pp._jit_full_step(self.pipeline.params,
-                                           self.pipeline.model_cfg, req.x_T,
-                                           self._ts[0], req.cond)
-                self._pub_k = self._pub_k.at[slot].set(kvs[0])
-                self._pub_v = self._pub_v.at[slot].set(kvs[1])
+                if req.guided:
+                    _, _, kvs2 = pp._jit_guided_full_step(
+                        self.pipeline.params, self.pipeline.model_cfg,
+                        req.x_T, self._ts[0], req.cond, req.cfg_scale)
+                    self._gk = self._gk.at[slot].set(kvs2[0])
+                    self._gv = self._gv.at[slot].set(kvs2[1])
+                else:
+                    _, kvs = pp._jit_full_step(self.pipeline.params,
+                                               self.pipeline.model_cfg,
+                                               req.x_T, self._ts[0],
+                                               req.cond)
+                    self._pub_k = self._pub_k.at[slot].set(kvs[0])
+                    self._pub_v = self._pub_v.at[slot].set(kvs[1])
             self.active[slot] = req
             report.admitted.append((req.uid, slot))
 
@@ -530,23 +669,61 @@ class DiffusionServingEngine:
                        if r.fine_step >= M_w)
         report.warmup_lanes, report.adaptive_lanes = warm, adapt
 
-        if warm:
-            idx = self._pad(warm)
+        for guided, lanes in self._by_guided(warm):
+            idx = self._pad(lanes)
             fine = np.asarray([self.active[s].fine_step for s in idx])
-            xs, ks, vs = self.stepper.warmup_step(
-                self._x[idx], self._ts[fine], self._ts[fine + 1],
-                self._cond[idx])
-            self._scatter(idx, xs, ks, vs)
-            for s in warm:
+            if guided:
+                xs, k2s, v2s = self.stepper.warmup_step_guided(
+                    self._x[idx], self._ts[fine], self._ts[fine + 1],
+                    self._cond[idx], jnp.asarray(self._scales[idx]))
+                self._x = self._x.at[idx].set(xs)
+                self._gk = self._gk.at[idx].set(k2s)
+                self._gv = self._gv.at[idx].set(v2s)
+            else:
+                xs, ks, vs = self.stepper.warmup_step(
+                    self._x[idx], self._ts[fine], self._ts[fine + 1],
+                    self._cond[idx])
+                self._scatter(idx, xs, ks, vs)
+            for s in lanes:
                 self.active[s].fine_step += 1
-            _, report.modeled_s = self._phase_cost(len(warm), warm=True)
+            _, cost = self._phase_cost(len(lanes), warm=True, guided=guided)
+            report.modeled_s += cost
 
         if adapt:
             placement = None
             wants_ctx = getattr(self.stepper, "wants_ctx", False)
-            for group, (read_factor, trail_kind, fill) in self._groups(adapt):
+            for group, (read_factor, trail_kind, fill,
+                        guided) in self._groups(adapt):
                 idx = self._pad(group)
                 fine = np.asarray([self.active[s].fine_step for s in idx])
+                merge = trail_kind == "full"
+                if guided:           # branch-stacked per-lane CFG state
+                    bk, bv = self._gk[idx], self._gv[idx]
+                    if read_factor:
+                        bk = buf_lib.extrapolate_arrays(
+                            bk, self._prev_gk[idx], read_factor)
+                        bv = buf_lib.extrapolate_arrays(
+                            bv, self._prev_gv[idx], read_factor)
+                    xs, ks, vs = self.stepper.interval_guided(
+                        self._x[idx], fine, self._cond[idx],
+                        jnp.asarray(self._scales[idx]), bk, bv, merge=merge)
+                    self._x = self._x.at[idx].set(xs)
+                    if merge:
+                        if self._track_prev:
+                            self._prev_gk = self._prev_gk.at[idx].set(
+                                self._gk[idx])
+                            self._prev_gv = self._prev_gv.at[idx].set(
+                                self._gv[idx])
+                        self._gk = self._gk.at[idx].set(ks)
+                        self._gv = self._gv.at[idx].set(vs)
+                    for s in group:
+                        self.active[s].fine_step += R
+                    placement, cost = self._phase_cost(
+                        len(group), warm=False, kind=trail_kind, fill=fill,
+                        guided=True)
+                    report.modeled_s += cost
+                    report.exchange_kinds.append(trail_kind)
+                    continue
                 bk, bv = self._pub_k[idx], self._pub_v[idx]
                 # predictive boundary before this group — staged steppers
                 # never read the extrapolation (ctx subsumes it), so skip
@@ -564,15 +741,15 @@ class DiffusionServingEngine:
                     xs, ks, vs, ck, cv = self.stepper.interval_ctx(
                         self._x[idx], fine, self._cond[idx], bk, bv,
                         self._ctx_k[idx], self._ctx_v[idx],
-                        merge=(trail_kind == "full"))
+                        merge=merge)
                     self._ctx_k = self._ctx_k.at[idx].set(ck)
                     self._ctx_v = self._ctx_v.at[idx].set(cv)
                 else:
                     xs, ks, vs = self.stepper.interval(
                         self._x[idx], fine, self._cond[idx], bk, bv,
-                        merge=(trail_kind == "full"))
+                        merge=merge)
                 self._x = self._x.at[idx].set(xs)
-                if trail_kind == "full":
+                if merge:
                     if self._track_prev:
                         # pre-merge buffers become the extrapolation base
                         self._prev_k = self._prev_k.at[idx].set(
@@ -634,15 +811,24 @@ class DiffusionServingEngine:
         self._pub_k = self._pub_k.at[idx].set(ks)
         self._pub_v = self._pub_v.at[idx].set(vs)
 
+    def _by_guided(self, lanes: List[int]
+                   ) -> List[Tuple[bool, List[int]]]:
+        """Split a lane list into (guided?, lanes) batches, plain first —
+        CFG and non-CFG lanes run different dispatch shapes."""
+        plain = [s for s in lanes if not self.active[s].guided]
+        guided = [s for s in lanes if self.active[s].guided]
+        return [(g, ls) for g, ls in ((False, plain), (True, guided)) if ls]
+
     def _groups(self, lanes: List[int]
-                ) -> List[Tuple[List[int], Tuple[float, str]]]:
-        """Batchable lane groups + their (read_factor, trail_kind) exchange
-        info. The vmapped stepper batches every lane whose boundary behavior
-        matches (under "sync" that is ONE group, as before); the cohort-only
-        (spmd) stepper groups by fine-step position, which pins the exchange
-        info automatically."""
+                ) -> List[Tuple[List[int], Tuple[float, str, bool, bool]]]:
+        """Batchable lane groups + their (read_factor, trail_kind, fill,
+        guided) info. The vmapped stepper batches every lane whose boundary
+        behavior AND guidance state match (under "sync" with no CFG lanes
+        that is ONE group, as before); the cohort-only (spmd) stepper
+        groups by fine-step position, which pins the exchange info
+        automatically (it never serves guided lanes)."""
         if not self.stepper.cohort_only:
-            keyed: Dict[Tuple[float, str], List[int]] = {}
+            keyed: Dict[Tuple[float, str, bool, bool], List[int]] = {}
             for s in lanes:
                 keyed.setdefault(self._lane_info(s), []).append(s)
             return [(keyed[k], k) for k in sorted(keyed)]
@@ -652,13 +838,14 @@ class DiffusionServingEngine:
         return [(cohorts[f], self._lane_info(cohorts[f][0]))
                 for f in sorted(cohorts)]
 
-    def _lane_info(self, slot: int) -> Tuple[float, str]:
-        return self._interval_info[self.active[slot].fine_step]
+    def _lane_info(self, slot: int) -> Tuple[float, str, bool, bool]:
+        info = self._interval_info[self.active[slot].fine_step]
+        return info + (self.active[slot].guided,)
 
     # ---------------- modeled cost & placement ----------------
 
     def _phase_cost(self, group: int, warm: bool, kind: str = "full",
-                    fill: bool = False
+                    fill: bool = False, guided: bool = False
                     ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
         """Placement + modeled seconds for one batched phase of a round.
 
@@ -668,17 +855,21 @@ class DiffusionServingEngine:
         Latent traffic is the per-worker uneven all-gather (padded slabs),
         and "skip"/"predict" boundaries move no bytes at all. With a stage
         chain (DESIGN.md §11) the placement maps STAGES to devices instead
-        of whole-model patch workers.
+        of whole-model patch workers. Guided (fused-CFG) phases double the
+        per-row work and the staged-K/V payload — both branches ride every
+        lane (DESIGN.md §12).
         """
         if self.stages is not None and len(self.stages) > 1:
             return self._staged_phase_cost(group, warm, kind, fill)
         plan, cm = self.plan, self.cm
         temporal = plan.temporal
+        branch = 2 if guided else 1
         workers = [i for i in temporal.active if plan.patches[i] > 0]
         loads = {}
         for i in workers:
             sub = 1 if warm else temporal.lcm // temporal.ratios[i]
-            loads[i] = sub * (cm.t_fixed + cm.t_row * plan.patches[i] * group)
+            loads[i] = sub * (cm.t_fixed
+                              + cm.t_row * plan.patches[i] * group * branch)
         by_load = sorted(workers, key=lambda i: (-loads[i], i))
         speeds = self.pipeline.config.speeds
         by_speed = sorted(range(len(speeds)), key=lambda d: (-speeds[d], d))
@@ -693,11 +884,12 @@ class DiffusionServingEngine:
             [plan.patches[i] for i in workers])
         comm_bytes = gather_rows * row_bytes * group
         if warm:
-            comm_bytes += sum(self._kv_bytes[w] for w in workers) * group
+            comm_bytes += sum(self._kv_bytes[w] for w in workers) \
+                * group * branch
             async_t = 0.0
         else:
             async_t = max(self._kv_bytes[w] for w, _ in placement) \
-                * group / cm.link_bw
+                * group * branch / cm.link_bw
         comm = comm_bytes / cm.link_bw + cm.link_latency
         return placement, max(compute, async_t) + comm
 

@@ -1,0 +1,616 @@
+"""Classifier-free guidance as a fourth scheduling dimension (DESIGN.md
+§12): the guidance-group partitioner (hypothesis properties), the null-cond
+model path, the split==fused bitwise contract on the emulated backend, the
+interleaved uncond-reuse cadence, the GuidanceExchange IR semantics, the
+stadi_guidance planner, guided latency modeling, mixed CFG/non-CFG serving
+parity under every exchange policy, the Pallas stale-KV attention flag, and
+the SPMD guidance mesh (subprocess, forced host devices)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import events as ir
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core import simulate as sim
+from repro.core.guidance import GuidancePlan, guidance_groups, split_plan
+from repro.core.pipeline import (EXECUTORS, StadiConfig, StadiPipeline,
+                                 get_executor, plan_guidance)
+from repro.core.planners import PLANNERS, get_planner
+from repro.core.schedule import TemporalPlan
+from repro.core.simulate import CostModel
+from repro.models.diffusion import dit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-dit").reduced()      # 2 blocks, 8 token rows
+    params = dit.nondegenerate_params(dit.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+    sched = sampler_lib.linear_schedule(T=100)
+    x_T = jax.random.normal(jax.random.PRNGKey(1),
+                            (2, cfg.latent_size, cfg.latent_size,
+                             cfg.channels))
+    cond = jnp.array([1, 2])
+    return cfg, params, sched, x_T, cond
+
+
+def _config(speeds, **kw):
+    from repro.core.hetero import DeviceProfile
+    cluster = tuple(DeviceProfile(f"dev{i}", c=v) for i, v in enumerate(speeds))
+    return StadiConfig(cluster=cluster, **kw)
+
+
+# ----------------------------------------------------------------------
+# guidance-group partitioner (satellite: property coverage)
+# ----------------------------------------------------------------------
+
+def _check_groups(speeds):
+    cond, uncond = guidance_groups(speeds)
+    both = cond + uncond
+    assert len(set(both)) == len(both)                  # disjoint
+    assert sorted(both) == list(range(len(speeds)))     # cover all devices
+    assert abs(len(cond) - len(uncond)) <= 1            # pairable sizes
+    sc = sum(speeds[i] for i in cond)
+    su = sum(speeds[i] for i in uncond)
+    assert sc >= su - 1e-9                              # cond = faster group
+    # split respects speed ratios: no size-respecting bipartition balances
+    # the aggregate speeds strictly better (brute force, n is small here)
+    import itertools
+    n, size_a = len(speeds), len(speeds) // 2
+    best = min(abs(sum(speeds[i] for i in combo)
+                   - (sum(speeds) - sum(speeds[i] for i in combo)))
+               for combo in itertools.combinations(range(n), size_a))
+    assert abs(sc - su) <= best + 1e-9, (cond, uncond, speeds)
+    # groups come back fastest-first (the rank pairing order)
+    for grp in (cond, uncond):
+        vs = [speeds[i] for i in grp]
+        assert vs == sorted(vs, reverse=True)
+
+
+def test_guidance_groups_deterministic():
+    for speeds in [[1.0, 0.5], [1.0, 1.0, 0.5, 0.5], [1.0, 0.5, 0.9, 0.4],
+                   [2.0, 1.0, 1.0], [0.3] * 5, [4.0, 0.1, 0.1, 0.1]]:
+        _check_groups(speeds)
+    with pytest.raises(ValueError):
+        guidance_groups([1.0])
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(speeds=st.lists(st.floats(0.05, 4.0), min_size=2, max_size=8))
+    def test_guidance_groups_properties(speeds):
+        _check_groups(speeds)
+
+    @settings(max_examples=50, deadline=None)
+    @given(speeds=st.lists(st.floats(0.05, 4.0), min_size=2, max_size=8),
+           scale=st.floats(0.5, 8.0))
+    def test_split_plan_properties(speeds, scale):
+        gp = split_plan(speeds, "split", scale)
+        assert gp.n_pairs == len(speeds) // 2
+        both = gp.cond_devices + gp.uncond_devices
+        assert len(set(both)) == len(both)              # pairs disjoint
+        ps = gp.pair_speeds(speeds)
+        for i, (c, u) in enumerate(zip(gp.cond_devices, gp.uncond_devices)):
+            assert ps[i] == min(speeds[c], speeds[u])
+
+
+def test_guidance_plan_validation():
+    with pytest.raises(ValueError, match="cfg_scale"):
+        GuidancePlan("fused", 0.0)
+    with pytest.raises(ValueError, match="mode"):
+        GuidancePlan("both", 1.0)
+    with pytest.raises(ValueError, match="disjoint"):
+        GuidancePlan("split", 2.0, (0, 1), (1, 2))
+    with pytest.raises(ValueError, match="1:1"):
+        GuidancePlan("split", 2.0, (0, 1), (2,))
+    with pytest.raises(ValueError, match="device groups"):
+        GuidancePlan("fused", 2.0, (0,), (1,))
+    gp = GuidancePlan("interleaved", 2.0, (0,), (1,), uncond_refresh=3)
+    assert [gp.uncond_fresh(i) for i in range(6)] == \
+        [True, False, False, True, False, False]
+    assert GuidancePlan("split", 2.0, (0,), (1,)).uncond_fresh(5)
+
+
+# ----------------------------------------------------------------------
+# model layer: null cond + fused-batch CFG reference
+# ----------------------------------------------------------------------
+
+def test_null_cond_matches_uncond_bitwise(setup):
+    cfg, params, _, x_T, _ = setup
+    a = dit.forward(params, cfg, x_T, 50.0, jnp.array([-1, -1]))
+    b = dit.forward(params, cfg, x_T, 50.0, None)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_positive_cond_unchanged_bitwise(setup):
+    """The NULL_COND select must not perturb the existing cond path."""
+    cfg, params, _, x_T, cond = setup
+    a = dit.forward(params, cfg, x_T, 50.0, cond)
+    gathered = params["cond_embed"][np.asarray(cond)]
+    assert np.asarray(gathered).any()                  # gather is live
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(dit.forward(params, cfg, x_T, 50.0,
+                                              jnp.asarray(cond))))
+
+
+def test_cfg_combine_formula():
+    ec, eu = jnp.array([3.0]), jnp.array([1.0])
+    assert float(sampler_lib.cfg_combine(ec, eu, 2.0)[0]) == 5.0
+    assert float(sampler_lib.cfg_combine(ec, eu, 1.0)[0]) == 3.0  # cond-only
+
+
+def test_single_worker_guided_matches_origin_cfg(setup):
+    """One full-row worker under sync == the fused-batch CFG Origin (the
+    buffer is fully overwritten fresh every step)."""
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8], [1], [False], 8, 2)
+    res = pp.run_schedule(params, cfg, sched, x_T, cond, plan,
+                          [cfg.tokens_per_side],
+                          guidance=GuidancePlan("fused", 2.5))
+    ref = pp.run_origin_cfg(params, cfg, sched, x_T, cond, 8, 2.5)
+    np.testing.assert_allclose(np.asarray(res.image), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# the bitwise contract: split == fused under one schedule
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("exchange", ["sync", "stale_async", "predictive"])
+def test_split_cfg_bitwise_equals_fused_reference(setup, exchange):
+    """Split guidance moves work between devices, never between math: under
+    the same (temporal, patches) schedule its output is bitwise-identical
+    to the fused-batch CFG reference — the acceptance contract."""
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8, 6], [1, 2], [False, False], 8, 2)
+    patches = [5, 3]
+    kw = dict(exchange=exchange, exchange_refresh=2)
+    fused = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                            guidance=GuidancePlan("fused", 2.5), **kw)
+    split = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                            guidance=GuidancePlan("split", 2.5, (0, 1),
+                                                  (2, 3)), **kw)
+    np.testing.assert_array_equal(np.asarray(fused.image),
+                                  np.asarray(split.image))
+
+
+def test_interleaved_refresh_one_is_split_bitwise(setup):
+    """uncond_refresh=1 recomputes every interval — exactly split."""
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8, 6], [1, 2], [False, False], 8, 2)
+    patches = [5, 3]
+    gs = GuidancePlan("split", 2.5, (0, 1), (2, 3))
+    g1 = GuidancePlan("interleaved", 2.5, (0, 1), (2, 3), uncond_refresh=1)
+    a = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                        guidance=gs)
+    b = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                        guidance=g1)
+    np.testing.assert_array_equal(np.asarray(a.image), np.asarray(b.image))
+
+
+def test_interleaved_reuse_drifts_but_stays_close(setup):
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8, 6], [1, 2], [False, False], 8, 2)
+    patches = [5, 3]
+    gs = GuidancePlan("split", 2.0, (0, 1), (2, 3))
+    g2 = GuidancePlan("interleaved", 2.0, (0, 1), (2, 3), uncond_refresh=2)
+    a = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                        guidance=gs)
+    b = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                        guidance=g2)
+    assert not np.array_equal(np.asarray(a.image), np.asarray(b.image))
+    # trace carries the reuse provenance (lcm 2 -> 3 adaptive intervals)
+    fresh = [e.uncond_fresh for e in b.trace.events if not e.synchronous]
+    assert fresh == [True, False, True]
+    assert all(e.uncond_fresh for e in a.trace.events)
+    err = float(jnp.abs(a.image - b.image).max())
+    assert err < 0.5, err                               # bounded drift
+
+
+def test_pipefuse_guided_matches_emulated(setup):
+    """Single-stage pipefuse guided == emulated guided bitwise; staged
+    guided runs with small displaced-context drift."""
+    from repro.core import pipefuse as pf
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8, 6], [1, 2], [False, False], 8, 2)
+    patches = [5, 3]
+    gp = GuidancePlan("fused", 2.5)
+    a = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                        guidance=gp)
+    b = pf.run_pipefuse(params, cfg, sched, x_T, cond, plan, patches,
+                        [cfg.n_layers], guidance=gp)
+    np.testing.assert_array_equal(np.asarray(a.image), np.asarray(b.image))
+    c = pf.run_pipefuse(params, cfg, sched, x_T, cond, plan, patches,
+                        [1, 1], guidance=gp)
+    assert np.isfinite(np.asarray(c.image)).all()
+    rel = (np.linalg.norm(np.asarray(c.image - a.image))
+           / np.linalg.norm(np.asarray(a.image)))
+    assert rel < 0.05, rel
+
+
+# ----------------------------------------------------------------------
+# IR: GuidanceExchange cadence
+# ----------------------------------------------------------------------
+
+def test_guidance_exchange_cadence():
+    plan = TemporalPlan([16, 16], [1, 1], [False, False], 16, 4)
+    gi = GuidancePlan("interleaved", 2.0, (0,), (1,), uncond_refresh=3)
+    evs = list(ir.lower(plan, [4, 4], guidance=gi))
+    gx = [e for e in evs if isinstance(e, ir.GuidanceExchange)]
+    ci = [e for e in evs if isinstance(e, ir.ComputeInterval)]
+    assert len(gx) == len(ci)                       # one per interval
+    assert [g.fine_step for g in gx] == [c.fine_step for c in ci]
+    assert [g.fresh for g in gx] == [i % 3 == 0 for i in range(len(gx))]
+    # every interval of a SPLIT plan is fresh; fused/unguided emit none
+    gs = GuidancePlan("split", 2.0, (0,), (1,))
+    assert all(e.fresh for e in ir.lower(plan, [4, 4], guidance=gs)
+               if isinstance(e, ir.GuidanceExchange))
+    assert not any(isinstance(e, ir.GuidanceExchange)
+                   for e in ir.lower(plan, [4, 4]))
+    assert not any(isinstance(e, ir.GuidanceExchange)
+                   for e in ir.lower(plan, [4, 4],
+                                     guidance=GuidancePlan("fused", 2.0)))
+    # replay folds the verdicts into the trace records
+    recs = [r for r in ir.replay(plan, [4, 4], guidance=gi)
+            if not r.synchronous]
+    assert [r.uncond_fresh for r in recs] == \
+        [i % 3 == 0 for i in range(len(recs))]
+
+
+# ----------------------------------------------------------------------
+# registries (satellite: KeyError listings name the guidance entries)
+# ----------------------------------------------------------------------
+
+def test_registry_errors_list_guidance_names():
+    assert "stadi_guidance" in PLANNERS
+    assert "spmd_guidance" in EXECUTORS
+    with pytest.raises(KeyError, match="stadi_guidance"):
+        get_planner("nope")
+    with pytest.raises(KeyError, match="spmd_guidance"):
+        get_executor("nope")
+
+
+# ----------------------------------------------------------------------
+# planner + pipeline wiring
+# ----------------------------------------------------------------------
+
+def test_stadi_guidance_planner_modes():
+    knobs = _config([1.0, 1.0, 0.5, 0.5], m_base=16, m_warmup=4,
+                    planner="stadi_guidance", cfg_scale=2.0)
+    for mode in ("fused", "split", "interleaved"):
+        plan = get_planner("stadi_guidance")(
+            knobs.speeds, dataclasses.replace(knobs, guidance=mode), 8)
+        assert plan.guidance.mode == mode
+        assert plan.planner == "stadi_guidance"
+        assert plan.modeled_interval_cost is not None
+        if mode != "fused":
+            assert len(plan.patches) == 2           # pair workers
+            assert sum(plan.patches) == 8
+    with pytest.raises(ValueError, match="cfg_scale"):
+        get_planner("stadi_guidance")(
+            [1.0, 0.5], dataclasses.replace(knobs, cfg_scale=0.0), 8)
+
+
+def test_stadi_guidance_auto_picks_split_when_comm_bound():
+    """Fused CFG serializes both branches' staged K/V on one fabric; under
+    the comm-bound 2-tier profile the planner must pick split."""
+    cm = CostModel(t_fixed=5e-3, t_row=5.5e-4, link_bw=1.25e9,
+                   link_latency=50e-6)
+    cfg = get_config("sdxl-dit")
+    config = _config([1.0, 1.0, 0.5, 0.5], m_base=16, m_warmup=4,
+                     planner="stadi_guidance", cfg_scale=5.0,
+                     cost_model=cm, granularity=2)
+    plan = StadiPipeline(cfg, None, None,
+                         dataclasses.replace(config,
+                                             backend="simulate")).plan()
+    assert plan.guidance.mode == "split"
+    # compute-bound default: fused keeps all devices busy
+    plan2 = get_planner("stadi_guidance")(config.speeds, config, 8)
+    assert plan2.guidance.mode == "fused"
+
+
+def test_guided_simulate_split_beats_fused():
+    cm = CostModel(t_fixed=5e-3, t_row=5.5e-4, link_bw=1.25e9,
+                   link_latency=50e-6)
+    cfg = get_config("sdxl-dit")
+    base = _config([1.0, 1.0, 0.5, 0.5], m_base=32, m_warmup=4,
+                   planner="stadi_guidance", cfg_scale=5.0,
+                   backend="simulate", cost_model=cm, granularity=2)
+    lat = {}
+    for mode in ("fused", "split"):
+        res = StadiPipeline(cfg, None, None,
+                            dataclasses.replace(base,
+                                                guidance=mode)).generate()
+        assert res.trace.guidance.mode == mode
+        lat[mode] = res.latency_s
+    assert lat["split"] < 0.8 * lat["fused"], lat   # >= 20% modeled win
+
+
+def test_plan_guidance_wiring_and_errors(setup):
+    cfg, params, sched, x_T, cond = setup
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, cfg_scale=2.0)
+    plan = StadiPipeline(cfg, params, sched, config).plan()
+    gp = plan_guidance(plan, config)
+    assert gp.mode == "fused" and gp.scale == 2.0   # --cfg-scale wiring
+    assert plan_guidance(plan, dataclasses.replace(config,
+                                                   cfg_scale=0.0)) is None
+    with pytest.raises(ValueError, match="stadi_guidance"):
+        plan_guidance(plan, dataclasses.replace(config, guidance="split"))
+    with pytest.raises(ValueError, match="cfg_scale"):
+        StadiPipeline(cfg, params, sched,
+                      dataclasses.replace(config, cfg_scale=0.0,
+                                          guidance="fused"))
+    with pytest.raises(ValueError, match="rebalancing"):
+        StadiPipeline(cfg, params, sched,
+                      dataclasses.replace(config, rebalance_every=2))
+    # backend gating
+    with pytest.raises(ValueError, match="spmd_guidance"):
+        StadiPipeline(cfg, params, sched,
+                      dataclasses.replace(config, cfg_scale=0.0,
+                                          backend="spmd_guidance")
+                      ).generate(x_T, cond)
+    split_cfg = _config([1.0, 1.0, 0.5, 0.5], m_base=8, m_warmup=2,
+                        planner="stadi_guidance", cfg_scale=2.0,
+                        guidance="split", backend="spmd")
+    with pytest.raises(ValueError, match="guidance mesh"):
+        StadiPipeline(cfg, params, sched, split_cfg).generate(x_T, cond)
+
+
+def test_guided_generate_needs_cond(setup):
+    cfg, params, sched, x_T, _ = setup
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, cfg_scale=2.0)
+    with pytest.raises(ValueError, match="condition"):
+        StadiPipeline(cfg, params, sched, config).generate(x_T, None)
+
+
+# ----------------------------------------------------------------------
+# serving: mixed CFG / non-CFG lanes, per-request bitwise parity
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("exchange", ["sync", "stale_async", "predictive"])
+def test_serving_mixed_cfg_bitwise_vs_generate(setup, exchange):
+    """The acceptance contract: a mixed batch of CFG and non-CFG requests
+    drains with every request bitwise-identical to a single-request
+    ``generate`` under each exchange policy."""
+    from repro.serving.diffusion_engine import DiffusionServingEngine
+    cfg, params, sched, *_ = setup
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, exchange=exchange)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=3)
+    subs = []
+    for uid in range(5):
+        x = jax.random.normal(jax.random.PRNGKey(20 + uid),
+                              (1, cfg.latent_size, cfg.latent_size,
+                               cfg.channels))
+        scale = 2.5 if uid % 2 == 0 else None
+        subs.append((engine.submit(x, uid % cfg.n_classes,
+                                   cfg_scale=scale), x, uid, scale))
+    engine.run_to_completion()
+    for req, x, uid, scale in subs:
+        ref_cfg = dataclasses.replace(config, cfg_scale=scale or 0.0)
+        ref = StadiPipeline(cfg, params, sched, ref_cfg).generate(
+            x, jnp.array([uid % cfg.n_classes])).image
+        np.testing.assert_array_equal(np.asarray(req.image),
+                                      np.asarray(ref))
+
+
+def test_serving_guided_bootstrap_no_warmup(setup):
+    from repro.serving.diffusion_engine import DiffusionServingEngine
+    cfg, params, sched, *_ = setup
+    config = _config([1.0, 0.5], m_base=6, m_warmup=0)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=2)
+    x = jax.random.normal(jax.random.PRNGKey(3),
+                          (1, cfg.latent_size, cfg.latent_size,
+                           cfg.channels))
+    req = engine.submit(x, 4, cfg_scale=3.0)
+    engine.run_to_completion()
+    ref = StadiPipeline(cfg, params, sched,
+                        dataclasses.replace(config, cfg_scale=3.0)
+                        ).generate(x, jnp.array([4])).image
+    np.testing.assert_array_equal(np.asarray(req.image), np.asarray(ref))
+
+
+def test_serving_default_scale_and_guards(setup):
+    from repro.serving.diffusion_engine import DiffusionServingEngine
+    cfg, params, sched, *_ = setup
+    # config-level cfg_scale becomes the default for every request
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, cfg_scale=2.0)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=2)
+    x = jax.random.normal(jax.random.PRNGKey(5),
+                          (1, cfg.latent_size, cfg.latent_size,
+                           cfg.channels))
+    req = engine.submit(x, 1)
+    assert req.guided and req.cfg_scale == 2.0
+    # split placement is per-generation, not a serving mode
+    split_cfg = _config([1.0, 1.0, 0.5, 0.5], m_base=8, m_warmup=2,
+                        planner="stadi_guidance", cfg_scale=2.0,
+                        guidance="split")
+    with pytest.raises(ValueError, match="fused"):
+        DiffusionServingEngine(StadiPipeline(cfg, params, sched, split_cfg),
+                               slots=2)
+
+
+def test_generate_many_guided_matches_generate(setup):
+    cfg, params, sched, *_ = setup
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, cfg_scale=2.0)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    xs = [jax.random.normal(jax.random.PRNGKey(30 + i),
+                            (1, cfg.latent_size, cfg.latent_size,
+                             cfg.channels)) for i in range(3)]
+    conds = [jnp.array([i]) for i in range(3)]
+    results = pipe.generate_many(xs, conds, slots=2)
+    for x, c, res in zip(xs, conds, results):
+        ref = pipe.generate(x, c).image
+        np.testing.assert_array_equal(np.asarray(res.image),
+                                      np.asarray(ref))
+
+
+# ----------------------------------------------------------------------
+# Pallas stale-KV attention flag (satellite)
+# ----------------------------------------------------------------------
+
+def test_pallas_attention_parity(setup):
+    """use_pallas_attention swaps the buffered attend for the fused
+    freshness-select kernel (interpret mode): same schedule, tight
+    tolerance (flash online softmax vs reference softmax)."""
+    cfg, params, sched, x_T, cond = setup
+    base = _config([1.0, 0.5], m_base=8, m_warmup=2)
+    ref = StadiPipeline(cfg, params, sched, base).generate(x_T, cond).image
+    out = StadiPipeline(cfg, params, sched,
+                        dataclasses.replace(base, use_pallas_attention=True)
+                        ).generate(x_T, cond).image
+    assert not np.shares_memory(np.asarray(out), np.asarray(ref))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_pallas_attention_guided_parity(setup):
+    cfg, params, sched, x_T, cond = setup
+    base = _config([1.0, 0.5], m_base=8, m_warmup=2, cfg_scale=2.0)
+    ref = StadiPipeline(cfg, params, sched, base).generate(x_T, cond).image
+    out = StadiPipeline(cfg, params, sched,
+                        dataclasses.replace(base, use_pallas_attention=True)
+                        ).generate(x_T, cond).image
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_pallas_block_gating():
+    """Traced offsets / SPMD padding / non-tileable layouts fall back."""
+    cfg = get_config("tiny-dit").reduced().replace(use_pallas_attention=True)
+    assert dit._pallas_block(cfg, 0, 40, 64, None, None) == 8
+    assert dit._pallas_block(cfg, 24, 40, 64, None, None) == 8
+    assert dit._pallas_block(cfg, jnp.int32(0), 40, 64, None, None) == 0
+    assert dit._pallas_block(cfg, 0, 40, 64, jnp.int32(40), None) == 0
+    assert dit._pallas_block(cfg, 4, 40, 64, None, None) == 0  # gcd 4 < 8
+    off = cfg.replace(use_pallas_attention=False)
+    assert dit._pallas_block(off, 0, 40, 64, None, None) == 0
+
+
+# ----------------------------------------------------------------------
+# SPMD guidance mesh (subprocess, forced host devices)
+# ----------------------------------------------------------------------
+
+SPMD_GUIDANCE_SCRIPT = textwrap.dedent("""
+    from repro.hostenv import force_host_devices
+    force_host_devices()
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.core import patch_parallel as pp, sampler as sampler_lib
+    from repro.core import spmd
+    from repro.core.guidance import GuidancePlan
+    from repro.core.schedule import TemporalPlan
+    from repro.models.diffusion import dit
+
+    cfg = get_config("tiny-dit").reduced()
+    params = dit.nondegenerate_params(
+        dit.init_params(jax.random.PRNGKey(0), cfg))
+    sched = sampler_lib.linear_schedule(T=100)
+    x_T = jax.random.normal(jax.random.PRNGKey(1),
+                            (2, cfg.latent_size, cfg.latent_size,
+                             cfg.channels))
+    cond = jnp.array([1, 2])
+    plan = TemporalPlan([8, 6], [1, 2], [False, False], 8, 2)
+    patches = [5, 3]
+
+    gf = GuidancePlan("fused", 2.5)
+    ref = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                          guidance=gf).image
+    img = spmd.run_spmd(params, cfg, sched, x_T, cond, plan, patches,
+                        guidance=gf)
+    err = float(np.linalg.norm(np.asarray(img) - np.asarray(ref))
+                / np.linalg.norm(np.asarray(ref)))
+    assert err < 1e-3, ("fused", err)
+
+    gs = GuidancePlan("split", 2.5, (0, 1), (2, 3))
+    ref2 = pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                           guidance=gs).image
+    img2 = spmd.run_spmd_guidance(params, cfg, sched, x_T, cond, plan,
+                                  patches, gs)
+    err2 = float(np.linalg.norm(np.asarray(img2) - np.asarray(ref2))
+                 / np.linalg.norm(np.asarray(ref2)))
+    assert err2 < 1e-3, ("split", err2)
+    print("OK", err, err2)
+""")
+
+
+@pytest.mark.slow
+def test_spmd_guidance_subprocess():
+    env = dict(os.environ, STADI_HOST_DEVICES="4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", SPMD_GUIDANCE_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+def test_run_spmd_guidance_validation(setup):
+    from repro.core import spmd
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8], [1], [False], 8, 2)
+    with pytest.raises(ValueError, match="split"):
+        spmd.run_spmd_guidance(params, cfg, sched, x_T, cond, plan, [8],
+                               GuidancePlan("fused", 2.0))
+    with pytest.raises(ValueError, match="interleaved"):
+        spmd.run_spmd_guidance(params, cfg, sched, x_T, cond, plan, [8],
+                               GuidancePlan("interleaved", 2.0, (0,), (1,)))
+
+
+# ----------------------------------------------------------------------
+# guided trace provenance
+# ----------------------------------------------------------------------
+
+def test_simulate_staged_guided_charges_both_branches():
+    """A guided displaced-pipeline trace (pipefuse + CFG) must cost more
+    than the unguided one: both branches stream through the chain."""
+    plan = TemporalPlan([8, 6], [1, 2], [False, False], 8, 2)
+    cfg = get_config("tiny-dit").reduced()
+    cm = CostModel(t_fixed=1e-3, t_row=1e-3)
+    base = sim.simulate_trace(
+        sim.build_trace(plan, [5, 3], cfg, stages=[1, 1]), [1.0, 0.5], cm)
+    guided = sim.simulate_trace(
+        sim.build_trace(plan, [5, 3], cfg, stages=[1, 1],
+                        guidance=GuidancePlan("fused", 2.0)),
+        [1.0, 0.5], cm)
+    assert guided > base * 1.5, (guided, base)
+
+
+def test_build_trace_guidance_provenance():
+    plan = TemporalPlan([8, 6], [1, 2], [False, False], 8, 2)
+    cfg = get_config("tiny-dit").reduced()
+    gp = GuidancePlan("interleaved", 2.0, (0, 1), (2, 3), uncond_refresh=2)
+    trace = sim.build_trace(plan, [5, 3], cfg, guidance=gp)
+    assert trace.guidance is gp
+    fresh = [e.uncond_fresh for e in trace.events if not e.synchronous]
+    assert fresh == [True, False, True]
+    # the emulated engine's trace carries the identical records
+    params = dit.init_params(jax.random.PRNGKey(0), cfg)
+    sched = sampler_lib.linear_schedule(T=100)
+    x_T = jnp.zeros((1, cfg.latent_size, cfg.latent_size, cfg.channels))
+    res = pp.run_schedule(params, cfg, sched, x_T, jnp.array([0]), plan,
+                          [5, 3], guidance=gp)
+    got = [(e.fine_step, tuple(e.substeps), e.exchange, e.uncond_fresh)
+           for e in res.trace.events]
+    want = [(e.fine_step, tuple(e.substeps), e.exchange, e.uncond_fresh)
+            for e in trace.events]
+    assert got == want
