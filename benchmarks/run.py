@@ -25,6 +25,7 @@ REGISTRY = [
     ("exchange", "benchmarks.bench_exchange", "boundary-exchange modes, DESIGN §10"),
     ("pipefuse", "benchmarks.bench_pipefuse", "displaced patch pipeline, DESIGN §11"),
     ("guidance", "benchmarks.bench_guidance", "CFG guidance placement, DESIGN §12"),
+    ("seqpar", "benchmarks.bench_seqpar", "sequence-parallel attention, DESIGN §13"),
     ("roofline", "benchmarks.bench_roofline", "deliverable g"),
     ("serving", "benchmarks.bench_serving", "continuous batching, DESIGN §9"),
 ]

@@ -116,6 +116,19 @@ def ring_all_reduce_bytes(n: int, nbytes: int) -> float:
     return 2.0 * (n - 1) / n * nbytes
 
 
+def ring_hop_rows(segments: Sequence[int]) -> int:
+    """Modeled wire rows per rank for ONE ring hop of sequence-parallel
+    attention (DESIGN.md §13): every rank forwards one K/V segment to its
+    ring neighbor per hop, and uneven speed-proportional segments travel
+    padded to max(segments) — the same padded-collective convention as
+    :func:`uneven_all_gather_rows`. A single segment (or none) hops
+    nothing."""
+    active = [s for s in segments if s > 0]
+    if len(active) <= 1:
+        return 0
+    return max(active)
+
+
 def uneven_all_gather_rows(sizes: Sequence[int]) -> int:
     """Modeled wire rows per rank for the padded uneven all-gather: each of
     the N participating ranks receives N-1 remote slabs padded to
@@ -210,3 +223,21 @@ def _predictive(refresh_every: int) -> BoundaryExchange:
     back to stale reuse until two refreshes have landed)."""
     return BoundaryExchange("predictive", refresh_every=refresh_every,
                             degraded_kind="predict")
+
+
+@register_exchange("ring")
+def _ring(refresh_every: int) -> BoundaryExchange:
+    """Sequence-parallel ring staging (DESIGN.md §13): per-hop staged K/V.
+
+    Between full refreshes the cross-worker boundary is skipped — exactly
+    the stale_async verdict — while WITHIN each worker the ring hops of
+    every attention keep forwarding fresh per-segment K/V, so ring hops
+    carry stale *neighbors* precisely the way DistriFusion halos do. The
+    per-boundary kinds are therefore the existing "skip"/"full" grammar
+    (nothing new for executors to interpret); what "ring" adds is the
+    per-hop staging the seq-aware executors and the ring-contention cost
+    model key off the IR's :class:`~repro.core.events.SeqShard` events.
+    This is also why stale_async/predictive compose naturally with the
+    sequence axis: the ring is orthogonal to the cross-worker verdict."""
+    return BoundaryExchange("ring", refresh_every=refresh_every,
+                            degraded_kind="skip")

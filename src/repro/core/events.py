@@ -7,20 +7,41 @@ intervals -> publish/merge) was re-implemented three times — the emulated
 engine (`patch_parallel.run_schedule`), the SPMD backend
 (`spmd.run_spmd` / `spmd.make_interval_step`) and the latency simulator
 (`simulate.build_trace`) — and the three copies could (and did) drift.
-Now :func:`lower` is the single source of schedule structure:
+Now :func:`lower` is the single source of schedule structure. The FULL
+five-axis event grammar (steps x patches x stages x guidance x sequence —
+this block is the one authoritative statement of it; the per-event
+docstrings below only add detail):
 
-    Warmup(m)             one synchronous full-image fine step
-    StageShift(m, stages) the displaced patch pipeline (DESIGN.md §11)
-                          (re)fills: stage contexts reset to the published
-                          buffers; only emitted when lowering with a
+    stream   := Warmup*  adaptive*
+    adaptive := StageShift?  GuidanceExchange?  SeqShard?
+                ComputeInterval  Exchange  Replan?
+
+    Warmup(m)             one synchronous full-image fine step (all axes
+                          collapse: every worker runs the exact forward)
+    StageShift(m, stages) DEPTH axis (DESIGN.md §11): the displaced patch
+                          pipeline (re)fills — stage contexts reset to the
+                          published buffers. Emitted before the first
+                          adaptive interval and again after every draining
+                          ("full") boundary, only when lowering with a
                           ``stages`` partition of depth > 1
-    ComputeInterval(m0,R) R fine steps of stale-KV patch compute
+    GuidanceExchange(m)   GUIDANCE axis (DESIGN.md §12): emitted before
+                          every adaptive interval of a split/interleaved
+                          CFG plan, carrying the uncond-recompute verdict
+                          for the coming interval
+    SeqShard(m)           SEQUENCE axis (DESIGN.md §13): emitted before
+                          every adaptive interval of a seq-sharded plan,
+                          carrying the Ulysses head partition and the ring
+                          segment sizing every attention in the interval
+                          scatters over (hops = shards - 1 per attention)
+    ComputeInterval(m0,R) STEPS x PATCHES axes: R fine steps of stale-KV
+                          patch compute (per-worker substeps = R / ratio)
     Exchange(m, kind)     the interval boundary; ``kind`` comes from the
                           :class:`repro.core.comm.BoundaryExchange` policy:
                           "full" (latent all-gather + KV merge), "skip"
-                          (stale-async: no traffic, buffers stay stale) or
-                          "predict" (extrapolate remote K/V from the last
-                          two exchanged versions)
+                          (stale-async: no traffic, buffers stay stale —
+                          also what the "ring" policy emits between
+                          refreshes) or "predict" (extrapolate remote K/V
+                          from the last two exchanged versions)
     Replan(m, plan)       an online re-allocation took effect at boundary m
 
 Consumers either iterate the stream (``for ev in lower(...)``) or drive it
@@ -67,6 +88,10 @@ class IntervalEvent:
     # intervals that reuse the cached eps_u (the simulator idles the uncond
     # group there and charges no cross-branch eps traffic)
     uncond_fresh: bool = True
+    # sequence provenance (DESIGN.md §13): ring hops per attention in this
+    # interval (= seq shards - 1; 0 = unsharded) — the simulator prices the
+    # per-hop staged K/V segments against the link model here
+    seq_hops: int = 0
 
 
 @dataclasses.dataclass
@@ -87,6 +112,12 @@ class ExecutionTrace:
     # "workers" are logical device PAIRS, not devices — the guided cost
     # model maps them back through the plan's pairing.
     guidance: Optional[object] = None
+    # sequence provenance (DESIGN.md §13): the SeqPlan (head partition +
+    # ring segment sizing) the schedule executed under (None = unsharded).
+    # Trace "workers" of a seq-sharded run are logical device GROUPS of
+    # ``seq.n_shards`` devices each — the ring cost model maps them back
+    # through the speed-sorted grouping convention.
+    seq: Optional[object] = None
 
 
 # ----------------------------------------------------------------------
@@ -164,8 +195,29 @@ class GuidanceExchange:
     index: int                           # 0-based adaptive interval counter
 
 
+@dataclasses.dataclass(frozen=True)
+class SeqShard:
+    """Sequence-parallel attention staging (DESIGN.md §13): emitted before
+    each adaptive interval when lowering a seq-sharded plan. Within the
+    coming interval every attention scatters its heads over ``len(heads)``
+    sequence shards (Ulysses all-to-all) and assembles the worker's fresh
+    K/V through ``hops`` ring hops of speed-proportionally sized segments
+    — each hop carries staged neighbor K/V exactly like a DistriFusion
+    halo, which is how the "ring" boundary policy composes with
+    stale_async/predictive: degraded boundaries leave the cross-worker
+    buffers stale while the ring keeps the within-worker context fresh."""
+    fine_step: int                       # first fine step of the interval
+    heads: Tuple[int, ...]               # attention heads per seq shard
+    segments: Tuple[int, ...]            # ring segment token-rows per shard
+    index: int                           # 0-based adaptive interval counter
+
+    @property
+    def hops(self) -> int:
+        return len(self.segments) - 1
+
+
 Event = object   # Warmup | StageShift | ComputeInterval | Exchange | Replan
-                 # | GuidanceExchange
+                 # | GuidanceExchange | SeqShard
 
 
 def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
@@ -180,9 +232,10 @@ def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
 def lower(plan: TemporalPlan, patches: Sequence[int],
           policy: Optional["comm_lib.BoundaryExchange"] = None,
           stages: Optional[Sequence[int]] = None,
-          guidance=None) -> Iterator[Event]:
-    """Lower (plan, patches, exchange policy[, stage split[, guidance]])
-    into events.
+          guidance=None, seq_shards=None) -> Iterator[Event]:
+    """Lower (plan, patches, exchange policy[, stage split[, guidance
+    [, seq shards]]]) into events — see the module docstring for the one
+    authoritative statement of the five-axis event grammar.
 
     A coroutine-style generator: iterate it normally, or reply to an
     :class:`Exchange` event with ``gen.send((new_plan, new_patches))`` to
@@ -201,6 +254,15 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
     uncond-recompute verdict, so the emulated engine, the SPMD guidance
     body and the latency simulator agree on the interleaved reuse cadence.
     Fused guidance emits no extra events (the combine is worker-local).
+
+    ``seq_shards`` (a :class:`~repro.core.seqpar.SeqPlan`, DESIGN.md §13)
+    adds the sequence dimension: plans with more than one shard emit a
+    :class:`SeqShard` before every adaptive interval carrying the head
+    partition and ring segment sizing, so the emulated reference, the SPMD
+    seq body and the ring-contention cost model agree on exactly how many
+    hops every attention pays. A single-shard plan emits nothing — the
+    stream (and therefore every executor's numerics) is identical to the
+    unsharded lowering by construction.
     """
     policy = policy or comm_lib.get_exchange("sync")
     patches = list(patches)
@@ -208,6 +270,7 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
     stages = tuple(stages) if stages else ()
     pipelined = len(stages) > 1
     guided_exchange = guidance is not None and guidance.mode != "fused"
+    seq_sharded = seq_shards is not None and len(seq_shards.segments) > 1
     # fine steps count in ABSOLUTE coordinates of the original plan; a
     # replanned TemporalPlan covers the remaining steps (its m_base is the
     # remaining count) and only contributes ratios/activity from then on
@@ -228,6 +291,9 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
             yield GuidanceExchange(m0, guidance.mode,
                                    guidance.uncond_fresh(interval_idx),
                                    interval_idx)
+        if seq_sharded:
+            yield SeqShard(m0, tuple(seq_shards.heads),
+                           tuple(seq_shards.segments), interval_idx)
         interval_idx += 1
         R = plan.lcm
         workers = active_workers(plan, patches)
@@ -255,11 +321,11 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
 # ----------------------------------------------------------------------
 
 def record(interval: ComputeInterval, kind: str, fill: bool = False,
-           uncond_fresh: bool = True) -> IntervalEvent:
+           uncond_fresh: bool = True, seq_hops: int = 0) -> IntervalEvent:
     """The trace record for one adaptive interval + its boundary kind."""
     return IntervalEvent(interval.fine_step, list(interval.substeps),
                          list(interval.patches), exchange=kind, fill=fill,
-                         uncond_fresh=uncond_fresh)
+                         uncond_fresh=uncond_fresh, seq_hops=seq_hops)
 
 
 def warmup_record(ev: Warmup) -> IntervalEvent:
@@ -270,7 +336,7 @@ def warmup_record(ev: Warmup) -> IntervalEvent:
 def replay(plan: TemporalPlan, patches: Sequence[int],
            policy: Optional["comm_lib.BoundaryExchange"] = None,
            stages: Optional[Sequence[int]] = None,
-           guidance=None) -> List[IntervalEvent]:
+           guidance=None, seq_shards=None) -> List[IntervalEvent]:
     """Trace records of the whole schedule without executing any numerics —
     the latency-only path (`simulate.build_trace`) and the numerics paths
     (`patch_parallel.run_schedule`, `pipefuse.run_pipefuse`) all derive
@@ -280,18 +346,22 @@ def replay(plan: TemporalPlan, patches: Sequence[int],
     pending: Optional[ComputeInterval] = None
     fill = False
     fresh = True
-    for ev in lower(plan, patches, policy, stages, guidance=guidance):
+    hops = 0
+    for ev in lower(plan, patches, policy, stages, guidance=guidance,
+                    seq_shards=seq_shards):
         if isinstance(ev, Warmup):
             out.append(warmup_record(ev))
         elif isinstance(ev, StageShift):
             fill = True
         elif isinstance(ev, GuidanceExchange):
             fresh = ev.fresh
+        elif isinstance(ev, SeqShard):
+            hops = ev.hops
         elif isinstance(ev, ComputeInterval):
             pending = ev
         elif isinstance(ev, Exchange):
             out.append(record(pending, ev.kind, fill=fill,
-                              uncond_fresh=fresh))
+                              uncond_fresh=fresh, seq_hops=hops))
             fill = False
             fresh = True
     return out
@@ -300,7 +370,7 @@ def replay(plan: TemporalPlan, patches: Sequence[int],
 def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
                patches: Sequence[int], cfg, batch: int,
                stages: Optional[Sequence[int]] = None,
-               guidance=None) -> ExecutionTrace:
+               guidance=None, seq=None) -> ExecutionTrace:
     """Byte-size provenance shared by every trace producer."""
     H = cfg.latent_size
     lat_bytes = int(batch * H * H * cfg.channels * 4)
@@ -310,4 +380,4 @@ def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
     return ExecutionTrace(records, plan, list(patches), cfg.n_tokens,
                           lat_bytes, kv_bytes,
                           stages=list(stages) if stages else None,
-                          act_row_bytes=act_row, guidance=guidance)
+                          act_row_bytes=act_row, guidance=guidance, seq=seq)

@@ -146,7 +146,8 @@ def guided_substep(params, cfg, x_loc, t_from, cond, row_start, read_pub,
 def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                  plan: TemporalPlan, patches: Sequence[int],
                  interval_hook=None, exchange: str = "sync",
-                 exchange_refresh: int = 2, guidance=None) -> RunResult:
+                 exchange_refresh: int = 2, guidance=None,
+                 seq=None) -> RunResult:
     """Execute Algorithm 1 by interpreting the schedule IR event stream.
 
     patches: token-rows per worker (sum == cfg.tokens_per_side; 0 = excluded).
@@ -170,6 +171,15 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     identical (placement only differs in the cost model), "interleaved"
     reuses the cached eps_u on non-refresh intervals per the IR's
     :class:`~repro.core.events.GuidanceExchange` verdicts.
+
+    seq: optional :class:`repro.core.seqpar.SeqPlan` (DESIGN.md §13). The
+    sequence dimension repartitions WHERE attention runs (Ulysses head
+    groups x ring K/V segments), never WHAT it computes, so the emulated
+    engine's numerics are shard-count invariant: the IR's
+    :class:`~repro.core.events.SeqShard` events are replayed for trace
+    provenance (per-interval ring hops) and the trace carries the plan for
+    the ring-contention cost model; the head-scattered realization lives
+    in ``spmd_seq``.
     """
     p = cfg.patch_size
     M_base = plan.m_base
@@ -198,6 +208,7 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     ucache = {}                          # interleaved: last eps_u per worker
     interval: Optional[ir.ComputeInterval] = None
     fresh = True                         # uncond recomputed this interval?
+    seq_hops = 0                         # ring hops of the coming interval
 
     def _full_step(t):
         if guided:
@@ -206,7 +217,7 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
             return eps, kvs2
         return _jit_full_step(params, cfg, x, t, cond)
 
-    gen = ir.lower(plan, patches, policy, guidance=guidance)
+    gen = ir.lower(plan, patches, policy, guidance=guidance, seq_shards=seq)
     send = None
     while True:
         try:
@@ -226,6 +237,11 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
 
         elif isinstance(ev, ir.GuidanceExchange):
             fresh = ev.fresh             # verdict for the coming interval
+
+        elif isinstance(ev, ir.SeqShard):
+            # head/segment repartitioning only moves attention across the
+            # ring — no numerics here; record the hop count for the trace
+            seq_hops = ev.hops
 
         elif isinstance(ev, ir.ComputeInterval):
             if published is None:        # M_w == 0: bootstrap buffers once
@@ -278,7 +294,8 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
             elif ev.kind == "predict":
                 read_pub = buf_lib.extrapolate(prev_published, published,
                                                ev.fine_step)
-            rec = ir.record(interval, ev.kind, uncond_fresh=fresh)
+            rec = ir.record(interval, ev.kind, uncond_fresh=fresh,
+                            seq_hops=seq_hops)
             fresh = True
             records.append(rec)
             if interval_hook is not None and ev.fine_step < M_base:
@@ -290,7 +307,7 @@ def run_schedule(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
         # already carries the new patches/ratios
 
     trace = ir.make_trace(records, plan0, patches0, cfg, int(B),
-                          guidance=guidance)
+                          guidance=guidance, seq=seq)
     return RunResult(x, trace)
 
 

@@ -82,6 +82,13 @@ class StadiConfig:
     uncond_refresh: int = 2
     latent_bytes: int = 0
     kv_row_bytes: int = 0
+    # sequence-parallel attention (DESIGN.md §13): number of Ulysses/ring
+    # shards each patch worker's attention is split across (1 = attention-
+    # unsharded; 0 = let the stadi_seq planner search). n_heads is the
+    # attention head count the seq planner scatters — StadiPipeline fills
+    # it in from the model config (leave None).
+    seq_shards: int = 1
+    n_heads: Optional[int] = None
     # run the Pallas stale-KV attention kernel (repro.kernels) inside the
     # DiT blocks instead of the reference buffer-rewrite attend — the
     # fused freshness-select hot path (interpret mode off-TPU)
@@ -207,7 +214,8 @@ def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
                           interval_hook=interval_hook,
                           exchange=config.exchange,
                           exchange_refresh=config.exchange_refresh,
-                          guidance=plan_guidance(plan, config))
+                          guidance=plan_guidance(plan, config),
+                          seq=plan_seq(plan, model_cfg, config))
     return res.image, res.trace
 
 
@@ -259,8 +267,39 @@ def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
                             batch=batch, exchange=config.exchange,
                             exchange_refresh=config.exchange_refresh,
                             stages=plan_stages(plan, model_cfg, config),
-                            guidance=plan_guidance(plan, config))
+                            guidance=plan_guidance(plan, config),
+                            seq=plan_seq(plan, model_cfg, config))
     return None, trace
+
+
+@register_executor("spmd_seq")
+def spmd_seq_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                      interval_hook=None):
+    """Sequence-parallel SPMD over a ("seq", "dev") shard_map mesh
+    (DESIGN.md §13): axis "seq" carries the Ulysses/ring members of every
+    patch-worker group; needs seq_shards * n_workers devices."""
+    from repro.core import spmd
+    splan = plan_seq(plan, model_cfg, config)
+    if splan is None:
+        raise ValueError(
+            "backend 'spmd_seq' runs the sequence mesh and needs a "
+            "seq-sharded plan: set seq_shards > 1, or planner='stadi_seq' "
+            "with seq_shards=0 (auto); an attention-unsharded plan runs on "
+            "the plain 'spmd' backend")
+    if plan_guidance(plan, config) is not None:
+        raise ValueError("guided generation is not implemented on the "
+                         "'spmd_seq' backend; the 'emulated' backend runs "
+                         "seq x CFG numerics")
+    img = spmd.run_spmd_seq(params, model_cfg, sched, x_T, cond,
+                            plan.temporal, plan.patches, splan,
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=int(x_T.shape[0]),
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh,
+                            seq=splan)
+    return img, trace
 
 
 #: backends that can execute a depth-partitioned (staged) plan
@@ -282,6 +321,35 @@ def plan_stages(plan, model_cfg, config) -> Optional[List[int]]:
             "(the stadi_pipefuse planner rejects this identically)")
     chain = sim.chain_speeds(config.speeds, config.num_stages)
     return hetero.stage_partition(model_cfg.n_layers, chain)
+
+
+#: backends that can execute a sequence-sharded plan (DESIGN.md §13)
+SEQ_BACKENDS = ("emulated", "simulate", "spmd_seq")
+
+
+def plan_seq(plan, model_cfg, config):
+    """The SeqPlan an executor should run: the plan's own (from the
+    stadi_seq planner) or, for plain planners with ``seq_shards > 1``, a
+    uniform-shard plan (the --seq-shards wiring). None = attention-
+    unsharded."""
+    if plan.seq is not None and len(plan.seq.segments) > 1:
+        return plan.seq
+    S = config.seq_shards
+    if S in (0, 1):
+        return None
+    from repro.core import seqpar
+    if S > config.n_devices:
+        raise ValueError(
+            f"seq_shards={S} is infeasible: every patch-worker group needs "
+            f"one device per sequence shard and the cluster has "
+            f"{config.n_devices} (the stadi_seq planner rejects this "
+            "identically)")
+    if model_cfg.n_heads < S:
+        raise ValueError(
+            f"seq_shards={S} cannot scatter {model_cfg.n_heads} attention "
+            "heads (Ulysses needs >= 1 head per shard)")
+    return seqpar.make_seq_plan(model_cfg.n_heads, model_cfg.tokens_per_side,
+                                S)
 
 
 #: backends that can execute a guided (classifier-free guidance) plan; the
@@ -343,6 +411,28 @@ def check_backend_can_run(plan, config) -> None:
         raise ValueError("backend 'spmd_guidance' needs a guided plan: set "
                          "cfg_scale > 0 with planner='stadi_guidance' and "
                          "guidance='split'")
+    seq_sharded = ((plan.seq is not None and len(plan.seq.segments) > 1)
+                   or config.seq_shards > 1)
+    if seq_sharded and config.backend not in SEQ_BACKENDS:
+        raise ValueError(
+            f"a sequence-sharded plan (seq_shards > 1) needs a seq backend "
+            f"({sorted(SEQ_BACKENDS)}), not {config.backend!r}; pin "
+            "seq_shards=1 to force attention-unsharded execution")
+    if config.backend == "spmd_seq":
+        if not seq_sharded:
+            raise ValueError(
+                "backend 'spmd_seq' runs the sequence mesh and needs a "
+                "seq-sharded plan: set seq_shards > 1, or planner="
+                "'stadi_seq' with seq_shards=0 (auto); an attention-"
+                "unsharded plan runs on the plain 'spmd' backend")
+        if (plan.seq is not None and len(plan.seq.segments) > 1
+                and not plan.seq.even_heads()):
+            raise ValueError(
+                f"spmd_seq needs an even head scatter for the all-to-all "
+                f"(got {list(plan.seq.heads)}); speed-proportional uneven "
+                "heads are the cost model's planning view — run uneven "
+                "plans on the 'emulated' backend, or pin seq_shards to a "
+                "divisor of n_heads")
 
 
 @register_executor("pipefuse")
@@ -419,6 +509,29 @@ class StadiPipeline:
         if guided and config.rebalance_every:
             raise ValueError("online rebalancing is not supported with "
                              "guidance (the branch pairing is static)")
+        if config.seq_shards < 0:
+            raise ValueError(f"seq_shards must be >= 0 (0 = auto), got "
+                             f"{config.seq_shards}")
+        if config.seq_shards > config.n_devices:
+            raise ValueError(
+                f"seq_shards={config.seq_shards} is infeasible: every "
+                "patch-worker group needs one device per sequence shard "
+                f"and the cluster has {config.n_devices}")
+        if config.seq_shards > 1:
+            if config.backend not in SEQ_BACKENDS:
+                raise ValueError(
+                    f"seq_shards={config.seq_shards} needs a seq backend "
+                    f"({sorted(SEQ_BACKENDS)}), not {config.backend!r} — "
+                    "sequence-parallel attention (DESIGN.md §13)")
+            if model_cfg.n_heads < config.seq_shards:
+                raise ValueError(
+                    f"seq_shards={config.seq_shards} cannot scatter "
+                    f"{model_cfg.n_heads} attention heads (Ulysses needs "
+                    ">= 1 head per shard)")
+            if config.rebalance_every:
+                raise ValueError("online rebalancing is not supported with "
+                                 "sequence sharding (the device grouping "
+                                 "is static)")
 
     @property
     def p_total(self) -> int:
@@ -430,6 +543,9 @@ class StadiPipeline:
         knobs = self.config
         if knobs.depth is None:          # stage planning needs the DiT depth
             knobs = dataclasses.replace(knobs, depth=self.model_cfg.n_layers)
+        if knobs.n_heads is None:        # seq planning needs the head count
+            knobs = dataclasses.replace(knobs,
+                                        n_heads=self.model_cfg.n_heads)
         if knobs.latent_bytes == 0:      # guided planning needs byte sizes
             cfg = self.model_cfg
             knobs = dataclasses.replace(

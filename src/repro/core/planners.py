@@ -41,6 +41,13 @@ class ExecutionPlan:
         :class:`repro.core.guidance.GuidancePlan`. None = unguided. In
         split/interleaved mode ``temporal``/``patches`` describe logical
         workers that are cond/uncond device PAIRS, not single devices.
+    seq:      sequence-parallel attention (DESIGN.md §13): a
+        :class:`repro.core.seqpar.SeqPlan` (Ulysses head partition + ring
+        K/V segments). None / single-shard = attention-unsharded. When
+        multi-shard, ``temporal``/``patches`` describe logical workers
+        that are device GROUPS of ``seq.n_shards`` members each (the
+        column-dealt placement of :func:`repro.core.seqpar.
+        seq_group_speeds`); ``speeds`` stays the raw cluster.
     """
     temporal: TemporalPlan
     patches: List[int]
@@ -49,6 +56,7 @@ class ExecutionPlan:
     modeled_interval_cost: Optional[float] = None
     stages: Optional[List[int]] = None
     guidance: Optional[object] = None
+    seq: Optional[object] = None
 
     @property
     def active(self) -> List[int]:
@@ -339,6 +347,114 @@ def stadi_guidance_planner(speeds, knobs, p_total) -> ExecutionPlan:
                                  latent_bytes)
         candidates.append(dataclasses.replace(cand,
                                               modeled_interval_cost=cost))
+    return min(candidates, key=lambda c: c.modeled_interval_cost)
+
+
+def _seq_plan_cost(plan: ExecutionPlan, groups, p_total: int, cm,
+                   kv_row: float, latent_bytes: float,
+                   refresh: int) -> float:
+    """Modeled seconds of one adaptive interval under the ring-contention
+    cost model of :func:`repro.core.simulate._simulate_seq`, averaged over
+    the "ring" policy's refresh cadence (1 full boundary + E-1 degraded
+    per E). ``groups`` is the member-speed grouping of a multi-shard
+    candidate (None for the pure patch-parallel candidate, whose workers
+    are single devices). With no byte provenance (kv_row == 0, standalone
+    planner calls) the wire terms vanish and the score degenerates to the
+    compute makespan — where the t_ctx attention term still rewards head
+    scattering on attention-bound profiles."""
+    from repro.core.comm import uneven_all_gather_rows
+    t = plan.temporal
+    R = t.lcm
+    row_bytes = latent_bytes / max(p_total, 1)
+    seq = plan.seq
+    if seq is not None and len(seq.segments) > 1:
+        headf, segf = seq.head_fracs, seq.seg_fracs
+        hops, seg_pad = len(seq.segments) - 1, max(seq.seg_fracs)
+    else:
+        headf, segf, hops, seg_pad = [1.0], [1.0], 0, 1.0
+    compute = ring_t = async_b = 0.0
+    for i in plan.active:
+        sub = R // t.ratios[i]
+        rows = plan.patches[i]
+        members = groups[i] if groups is not None else [plan.speeds[i]]
+        wt = max((cm.t_fixed + cm.t_row * rows * segf[j]) / max(v, 1e-9)
+                 + cm.attn_time(p_total, headf[j], v)
+                 for j, v in enumerate(members))
+        compute = max(compute, sub * wt)
+        ring_t = max(ring_t, sub * hops * (kv_row * rows * seg_pad
+                                           / cm.link_bw + cm.link_latency))
+        async_b = max(async_b, kv_row * rows)
+    gather_rows = uneven_all_gather_rows(
+        [plan.patches[i] for i in plan.active])
+    gather_t = gather_rows * row_bytes / cm.link_bw
+    full = max(compute, async_b / cm.link_bw, ring_t) \
+        + gather_t + cm.link_latency
+    degraded = max(compute, ring_t)
+    E = max(refresh, 1)
+    return (full + (E - 1) * degraded) / E
+
+
+@register_planner("stadi_seq")
+def stadi_seq_planner(speeds, knobs, p_total) -> ExecutionPlan:
+    """Joint (steps, patches, seq shards) search (DESIGN.md §13).
+
+    Candidates: the pure patch-parallel STADI plan (seq_shards == 1) and,
+    for each shard count S, a sequence-sharded plan whose workers are
+    device groups of S members (column-dealt by :func:`repro.core.seqpar.
+    seq_group_speeds`), with the STADI allocator run over the per-group
+    aggregate speeds and the head/segment partitions sized speed-
+    proportionally over the per-shard-row aggregates. All candidates are
+    scored by the ring-contention cost model (:func:`_seq_plan_cost`,
+    mirroring ``simulate._simulate_seq``) and the cheapest wins — on
+    attention-bound profiles (``cost_model.t_ctx`` large) head scattering
+    divides the context-read wall no patch split can cut, which is what
+    makes a multi-shard candidate win despite its ring traffic.
+
+    ``knobs.seq_shards > 0`` pins S (1 = force pure patch); 0 = auto.
+    ``knobs.n_heads`` (filled in by StadiPipeline from the model config)
+    is required for S > 1.
+    """
+    from repro.core import seqpar as seqpar_lib
+    from repro.core.simulate import CostModel
+    n = len(speeds)
+    forced = getattr(knobs, "seq_shards", 0) or 0
+    n_heads = getattr(knobs, "n_heads", None)
+    cm = getattr(knobs, "cost_model", None) or CostModel(t_fixed=1e-3,
+                                                         t_row=1e-3)
+    kv_row = getattr(knobs, "kv_row_bytes", 0)
+    latent_bytes = getattr(knobs, "latent_bytes", 0)
+    refresh = getattr(knobs, "exchange_refresh", 2)
+    candidates = []
+    if forced in (0, 1):
+        base = stadi_planner(speeds, knobs, p_total)
+        cand = dataclasses.replace(base, planner="stadi_seq")
+        candidates.append(dataclasses.replace(
+            cand, modeled_interval_cost=_seq_plan_cost(
+                cand, None, p_total, cm, kv_row, latent_bytes, refresh)))
+    if n_heads is None and forced > 1:
+        raise ValueError("stadi_seq needs knobs.n_heads (the attention "
+                         "head count) to scatter heads; StadiPipeline "
+                         "fills it in from the model config")
+    if forced == 1:                       # pinned pure patch: no seq search
+        return candidates[0]
+    s_options = ([forced] if forced > 1 else
+                 range(2, min(n, n_heads or 1) + 1))
+    for S in s_options:
+        if S < 2 or S > min(n, n_heads or 0) or n // S < 1 or S > p_total:
+            continue
+        groups, shard_speeds = seqpar_lib.seq_group_speeds(speeds, S)
+        worker_speeds = [sum(g) for g in groups]
+        base = stadi_planner(worker_speeds, knobs, p_total)
+        seq = seqpar_lib.make_seq_plan(n_heads, p_total, S, shard_speeds)
+        cand = dataclasses.replace(base, planner="stadi_seq",
+                                   speeds=list(speeds), seq=seq)
+        candidates.append(dataclasses.replace(
+            cand, modeled_interval_cost=_seq_plan_cost(
+                cand, groups, p_total, cm, kv_row, latent_bytes, refresh)))
+    if not candidates:
+        raise ValueError(
+            f"seq_shards={forced} is infeasible: need 1 <= S <= "
+            f"min(n_devices={n}, n_heads={n_heads}, p_total={p_total})")
     return min(candidates, key=lambda c: c.modeled_interval_cost)
 
 

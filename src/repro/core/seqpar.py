@@ -1,0 +1,294 @@
+"""Sequence-parallel attention as the fifth schedule dimension (DESIGN.md
+§13): Ulysses head scattering + ring K/V segment staging, composed with the
+STADI IR.
+
+At high-resolution latents per-patch self-attention over the FULL token
+sequence becomes the wall no patch split can cut: every patch worker must
+read the whole-context K/V with all heads regardless of how few query rows
+it owns. This module makes the sequence itself an allocatable axis:
+
+  * :func:`head_partition` — Ulysses all-to-all head scattering, sized
+    speed-proportionally by the same largest-remainder allocator as the
+    depth dimension (:func:`repro.core.hetero.stage_partition`): shard j
+    attends with ``heads[j]`` of the H heads over the full context, so a
+    faster shard carries more heads.
+  * :func:`ring_segments` — ring-attention K/V segment sizing over the
+    token rows, speed-proportional for the same reason: each ring hop
+    forwards one shard's segment to its neighbor, and the slowest link /
+    largest (padded) segment gates the hop.
+  * :class:`SeqPlan` — the (heads, segments) pair every consumer shares:
+    the IR lowers it into :class:`~repro.core.events.SeqShard` events, the
+    SPMD executor (``spmd_seq``) realizes it with ``jax.lax.all_to_all`` +
+    ``ppermute`` ring hops, and the ring-contention cost model
+    (:func:`repro.core.simulate` ``_simulate_seq``) prices it.
+  * :func:`run_seqpar` — the emulated reference. The sequence dimension
+    repartitions WHERE attention is computed (heads x segments), never
+    WHAT is computed: ring hops assemble exactly the fresh-local ⊕
+    stale-remote context the patch engine already attends over, so the
+    reference delegates to :func:`repro.core.patch_parallel.run_schedule`
+    and is bitwise-identical to the ``emulated`` backend at
+    ``seq_shards=1`` — and shard-count invariant beyond it. Staleness
+    enters only through the boundary policy ("ring" degrades to "skip"
+    between refreshes, see :mod:`repro.core.comm`), which is the ring x
+    stale-exchange composition: hops carry stale cross-worker neighbors
+    exactly like DistriFusion halos.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import hetero
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqPlan:
+    """The sequence-axis allocation every consumer shares (DESIGN.md §13).
+
+    heads:    attention heads per seq shard (Ulysses scatter), sum == H
+    segments: ring K/V segment token-rows per shard, sum == p_total
+    """
+    heads: Tuple[int, ...]
+    segments: Tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.heads) != len(self.segments):
+            raise ValueError(f"head partition ({len(self.heads)} shards) and "
+                             f"ring segments ({len(self.segments)} shards) "
+                             "disagree on the shard count")
+        if any(h < 1 for h in self.heads):
+            raise ValueError(f"every seq shard needs >= 1 head, got "
+                             f"{list(self.heads)}")
+        if any(s < 1 for s in self.segments):
+            raise ValueError(f"every ring segment needs >= 1 token row, got "
+                             f"{list(self.segments)}")
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.heads)
+
+    @property
+    def hops(self) -> int:
+        """Ring hops per attention (one fewer than the shard count)."""
+        return self.n_shards - 1
+
+    @property
+    def head_fracs(self) -> List[float]:
+        t = sum(self.heads)
+        return [h / t for h in self.heads]
+
+    @property
+    def seg_fracs(self) -> List[float]:
+        t = sum(self.segments)
+        return [s / t for s in self.segments]
+
+    def even_heads(self) -> bool:
+        """True when the head scatter is uniform — the layout
+        ``jax.lax.all_to_all`` can realize without padding heads."""
+        return len(set(self.heads)) == 1
+
+
+def head_partition(n_heads: int, n_shards: int,
+                   speeds: Optional[Sequence[float]] = None) -> List[int]:
+    """Heads per seq shard, speed-proportional with every shard keeping at
+    least one head — the sequence analogue of the depth allocator
+    (:func:`repro.core.hetero.stage_partition`, same largest-remainder
+    rounding). ``speeds=None`` partitions uniformly."""
+    if n_shards < 1:
+        raise ValueError(f"need at least one seq shard, got {n_shards}")
+    if n_shards > n_heads:
+        raise ValueError(
+            f"seq_shards={n_shards} cannot scatter {n_heads} attention "
+            "heads (Ulysses needs >= 1 head per shard)")
+    sp = list(speeds)[:n_shards] if speeds else [1.0] * n_shards
+    if len(sp) < n_shards:
+        sp = sp + [sp[-1]] * (n_shards - len(sp))
+    return hetero.stage_partition(n_heads, sp)
+
+
+def ring_segments(rows: int, n_shards: int,
+                  speeds: Optional[Sequence[float]] = None) -> List[int]:
+    """Ring K/V segment token-rows per shard, speed-proportional: a hop
+    forwards one segment padded to max(segments) (the padded-collective
+    convention of :mod:`repro.core.comm`), so sizing segments to the shard
+    speeds keeps the per-hop wire/compute overlap balanced."""
+    if n_shards < 1:
+        raise ValueError(f"need at least one seq shard, got {n_shards}")
+    if n_shards > rows:
+        raise ValueError(f"seq_shards={n_shards} cannot segment {rows} "
+                         "token rows (>= 1 row per ring segment)")
+    sp = list(speeds)[:n_shards] if speeds else [1.0] * n_shards
+    if len(sp) < n_shards:
+        sp = sp + [sp[-1]] * (n_shards - len(sp))
+    return hetero.stage_partition(rows, sp)
+
+
+def make_seq_plan(n_heads: int, rows: int, n_shards: int,
+                  speeds: Optional[Sequence[float]] = None) -> SeqPlan:
+    """The (head partition, ring segments) pair for ``n_shards`` shards.
+
+    ``speeds`` are the per-SHARD aggregate speeds (see
+    :func:`seq_group_speeds`); None = uniform shards."""
+    return SeqPlan(tuple(head_partition(n_heads, n_shards, speeds)),
+                   tuple(ring_segments(rows, n_shards, speeds)))
+
+
+def seq_group_speeds(speeds: Sequence[float], n_shards: int
+                     ) -> Tuple[List[List[float]], List[float]]:
+    """Device placement convention of a seq-sharded plan — the ONE grouping
+    every consumer (planner, cost model, spmd_seq mesh) shares, the seq
+    analogue of :func:`repro.core.simulate.chain_speeds`.
+
+    The speed-sorted device list is dealt COLUMN-wise into
+    ``n_workers = n // n_shards`` patch-worker groups of ``n_shards``
+    devices: member j of group g is the (j * n_workers + g)-th fastest
+    device, so shard row j has similar speed across groups and one global
+    head partition fits every group. Leftover devices (n % n_shards) idle,
+    like temporally excluded workers. Returns (groups, shard_speeds):
+    ``groups[g]`` = member speeds of patch worker g, ``shard_speeds[j]`` =
+    aggregate speed of shard row j across all groups.
+    """
+    n = len(speeds)
+    if n_shards < 1:
+        raise ValueError(f"need at least one seq shard, got {n_shards}")
+    n_workers = n // n_shards
+    if n_workers < 1:
+        raise ValueError(
+            f"seq_shards={n_shards} needs at least {n_shards} devices, "
+            f"the cluster has {n}")
+    order = sorted(speeds, reverse=True)
+    groups = [[order[j * n_workers + g] for j in range(n_shards)]
+              for g in range(n_workers)]
+    shard_speeds = [sum(order[j * n_workers + g] for g in range(n_workers))
+                    for j in range(n_shards)]
+    return groups, shard_speeds
+
+
+# ----------------------------------------------------------------------
+# pure ring-attention reference (no mesh)
+# ----------------------------------------------------------------------
+
+def ring_attention_reference(q, k, v, seq: SeqPlan, mask=None):
+    """Ulysses head-scatter + ring segment accumulation in plain jnp.
+
+    Computes exactly what the ``spmd_seq`` executor computes per attention,
+    without a mesh: shard j attends with its ``seq.heads[j]`` head slice,
+    accumulating over K/V segments in ring arrival order (own segment
+    first, then hop-1 neighbor, hop-2, ...) with streaming fp32
+    log-sum-exp — the online-softmax form of ring attention. Head groups
+    are independent, so the concatenated output matches
+    :func:`repro.models.layers.attend` up to reduction order (tested to
+    <= 1e-5): the partition changes WHERE attention happens, not WHAT.
+
+    q: [B, S, H, hd]; k/v: [B, T, H, hd]; mask: broadcastable [B, 1, S, T]
+    (True = attend), same contract as ``layers.attend``.
+    """
+    import jax.numpy as jnp
+
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    n = seq.n_shards
+    assert sum(seq.heads) == H, (seq.heads, H)
+    scale = 1.0 / (hd ** 0.5)
+    head_lo = [sum(seq.heads[:j]) for j in range(n)]
+    seg_rows = list(seq.segments)
+    total = sum(seg_rows)
+    # segment bounds in key tokens: rows scale to T (the reference is used
+    # on raw token grids where rows == tokens when T == sum(segments))
+    per = T // total
+    seg_lo = [sum(seg_rows[:j]) * per for j in range(n)]
+    seg_sz = [s * per for s in seg_rows]
+
+    outs = []
+    for j in range(n):
+        qj = q[:, :, head_lo[j]:head_lo[j] + seq.heads[j]].astype(jnp.float32)
+        qj = jnp.einsum("bshd->bhsd", qj) * scale
+        m = jnp.full(qj.shape[:3], -jnp.inf, jnp.float32)       # [B,Hj,S]
+        den = jnp.zeros(qj.shape[:3], jnp.float32)
+        num = jnp.zeros(qj.shape[:3] + (hd,), jnp.float32)
+        for hop in range(n):                 # ring arrival order from shard j
+            s = (j - hop) % n
+            ks = k[:, seg_lo[s]:seg_lo[s] + seg_sz[s],
+                   head_lo[j]:head_lo[j] + seq.heads[j]].astype(jnp.float32)
+            vs = v[:, seg_lo[s]:seg_lo[s] + seg_sz[s],
+                   head_lo[j]:head_lo[j] + seq.heads[j]].astype(jnp.float32)
+            logits = jnp.einsum("bhsd,bthd->bhst", qj, ks)
+            if mask is not None:
+                mseg = jnp.broadcast_to(mask, (B, 1, S, T))[
+                    :, :, :, seg_lo[s]:seg_lo[s] + seg_sz[s]]
+                logits = jnp.where(mseg, logits, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            p = jnp.exp(logits - m_safe[..., None])
+            den = den * corr + jnp.sum(p, axis=-1)
+            num = num * corr[..., None] + jnp.einsum("bhst,bthd->bhsd", p, vs)
+            m = m_new
+        outs.append(jnp.einsum("bhsd->bshd",
+                               num / jnp.maximum(den, 1e-30)[..., None]))
+    return jnp.concatenate(outs, axis=2).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# emulated reference executor
+# ----------------------------------------------------------------------
+
+def validate_seq(seq: SeqPlan, n_heads: int, rows: int) -> None:
+    """Fail fast when a SeqPlan does not fit the model geometry."""
+    if sum(seq.heads) != n_heads:
+        raise ValueError(f"head partition {list(seq.heads)} sums to "
+                         f"{sum(seq.heads)}, model has {n_heads} heads")
+    if sum(seq.segments) != rows:
+        raise ValueError(f"ring segments {list(seq.segments)} sum to "
+                         f"{sum(seq.segments)}, image has {rows} token rows")
+
+
+def run_seqpar(params, cfg, sched, x_T, cond, plan, patches,
+               seq: Optional[SeqPlan], exchange: str = "ring",
+               exchange_refresh: int = 2, guidance=None):
+    """Emulated sequence-parallel reference (DESIGN.md §13).
+
+    Interprets the same IR stream as ``run_schedule`` — including the
+    :class:`~repro.core.events.SeqShard` events a multi-shard plan lowers
+    to — and returns a :class:`~repro.core.patch_parallel.RunResult` whose
+    trace carries the seq provenance the ring-contention cost model needs.
+
+    Numerics: the sequence dimension repartitions attention across heads
+    and ring segments without changing what any head computes — ring hops
+    assemble exactly the fresh-local ⊕ policy-stale-remote context the
+    patch engine attends over (the "ring" policy's degraded boundaries are
+    "skip", see :mod:`repro.core.comm`). The trajectory is therefore
+    shard-count invariant and BITWISE-identical to the ``emulated``
+    backend at ``seq_shards=1`` (same code path, same jitted steps); the
+    real head-scatter/ppermute realization lives in
+    :func:`repro.core.spmd.run_spmd_seq` and is tested against this
+    reference.
+    """
+    from repro.core import patch_parallel as pp
+
+    if seq is not None and seq.n_shards > 1:
+        validate_seq(seq, cfg.n_heads, cfg.tokens_per_side)
+    else:
+        seq = None
+    return pp.run_schedule(params, cfg, sched, x_T, cond, plan, patches,
+                           exchange=exchange,
+                           exchange_refresh=exchange_refresh,
+                           guidance=guidance, seq=seq)
+
+
+def max_hop_staleness(records) -> int:
+    """Worst staleness age (in adaptive intervals) of the cross-worker K/V
+    the ring hops carry, over a trace's records: age resets at every
+    synchronous step / "full" boundary and grows by one per degraded
+    boundary — bounded by ``refresh_every - 1`` under the "ring" policy
+    (tested). Intervals without ring hops (unsharded) contribute 0."""
+    age = 0
+    worst = 0
+    for ev in records:
+        if ev.synchronous:
+            age = 0
+            continue
+        if ev.seq_hops:
+            worst = max(worst, age)
+        age = 0 if ev.exchange == "full" else age + 1
+    return worst

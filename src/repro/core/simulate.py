@@ -41,7 +41,7 @@ from repro.core.events import ExecutionTrace, IntervalEvent  # noqa: F401
 def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
                 exchange: str = "sync", exchange_refresh: int = 2,
                 stages: Optional[Sequence[int]] = None,
-                guidance=None) -> ExecutionTrace:
+                guidance=None, seq=None) -> ExecutionTrace:
     """Schedule trace without running numerics (latency-only replay).
 
     Replays :func:`repro.core.events.lower` for (plan, patches, policy) —
@@ -51,13 +51,15 @@ def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
     instead of executing the denoiser. ``stages`` produces a displaced
     patch-pipeline trace (DESIGN.md §11) with pipeline-fill provenance;
     ``guidance`` a CFG trace (DESIGN.md §12) with uncond-refresh
-    provenance.
+    provenance; ``seq`` (a :class:`repro.core.seqpar.SeqPlan`, DESIGN.md
+    §13) a sequence-sharded trace whose records carry per-interval ring
+    hops.
     """
     policy = comm_lib.get_exchange(exchange, exchange_refresh)
     records = ir.replay(plan, patches, policy, stages=stages,
-                        guidance=guidance)
+                        guidance=guidance, seq_shards=seq)
     return ir.make_trace(records, plan, list(patches), cfg, batch,
-                         stages=stages, guidance=guidance)
+                         stages=stages, guidance=guidance, seq=seq)
 
 
 @dataclasses.dataclass
@@ -66,9 +68,22 @@ class CostModel:
     t_row: float              # per token-row marginal cost (s) at v=1
     link_bw: float = 25e9     # bytes/s (PCIe4 x16 ~ paper's testbed)
     link_latency: float = 30e-6
+    # per context-token-row x full-head attention K/V read cost (s) at v=1
+    # (DESIGN.md §13): self-attention reads the WHOLE context's K/V with
+    # every head regardless of how few query rows the patch owns, so at
+    # high-resolution latents this memory-bound term dwarfs t_row * rows
+    # and no patch split cuts it. Sequence sharding divides it by the head
+    # fraction — the Ulysses motivation. 0.0 (default) reproduces the
+    # pre-seq model exactly.
+    t_ctx: float = 0.0
 
     def step_time(self, rows: int, v: float) -> float:
         return (self.t_fixed + self.t_row * rows) / max(v, 1e-9)
+
+    def attn_time(self, ctx_rows: int, heads_frac: float, v: float) -> float:
+        """Per-step attention context-read time: proportional to context
+        rows x resident head fraction, independent of query rows."""
+        return self.t_ctx * ctx_rows * heads_frac / max(v, 1e-9)
 
 
 def fit_cost_model(rows: Sequence[int], times: Sequence[float], **kw) -> CostModel:
@@ -280,11 +295,82 @@ def _simulate_guided(trace: ExecutionTrace, speeds: Sequence[float],
     return total
 
 
+# ----------------------------------------------------------------------
+# sequence-parallel ring-contention costing (DESIGN.md §13)
+# ----------------------------------------------------------------------
+#
+# In a seq-sharded run trace "workers" are device GROUPS of S members (the
+# column-dealt placement of seqpar.seq_group_speeds). Member j of a group
+# computes its speed-proportional ring-segment share of the worker's query
+# rows and — the point of the axis — reads the full context with only its
+# head fraction, so the memory-bound t_ctx term divides by headf[j] where a
+# pure patch worker pays it whole. What seq adds back is the ring: every
+# attention performs S-1 ppermute hops, each forwarding one K/V segment
+# padded to the largest (comm.ring_hop_rows convention), and hops overlap
+# with compute exactly like DistriFusion's async halos (the "ring" policy's
+# degraded boundaries) — so ring traffic enters as a bandwidth bottleneck
+# competing with compute, not a per-hop stall, with only the per-hop link
+# latency unavoidable.
+
+def _simulate_seq(trace: ExecutionTrace, speeds: Sequence[float],
+                  cm: CostModel) -> float:
+    """Makespan of a sequence-sharded trace: member-level compute split
+    (segments x heads) + per-substep ring hops. Guidance does not compose
+    with the seq axis in the cost model yet (the planner only pairs seq
+    with unguided plans); staged plans dispatch before seq."""
+    from repro.core import seqpar as seqpar_lib
+
+    seq = trace.seq
+    S = len(seq.segments)
+    groups, _ = seqpar_lib.seq_group_speeds(speeds, S)
+    headf, segf = seq.head_fracs, seq.seg_fracs
+    seg_pad = max(segf)
+    kv_row = _kv_bytes_per_row(trace)
+    total = 0.0
+    for ev in trace.events:
+        parts: List[int] = []
+        total_rows = max(sum(ev.patches), 1)
+        row_bytes = trace.latent_bytes / total_rows
+        compute = 0.0
+        ring_t = 0.0
+        # synchronous warmup steps ring too (the attention is sharded in
+        # every jitted step); adaptive intervals carry the IR's hop count
+        hops = (S - 1) if ev.synchronous else ev.seq_hops
+        for i, (sub, rows) in enumerate(zip(ev.substeps, ev.patches)):
+            if sub == 0 or rows == 0:
+                continue
+            parts.append(i)
+            g = groups[i] if i < len(groups) else groups[-1]
+            wt = max((cm.t_fixed + cm.t_row * rows * segf[j])
+                     / max(v, 1e-9) + cm.attn_time(total_rows, headf[j], v)
+                     for j, v in enumerate(g))
+            compute = max(compute, sub * wt)
+            hop_bytes = kv_row * rows * seg_pad
+            ring_t = max(ring_t, sub * hops *
+                         (hop_bytes / cm.link_bw + cm.link_latency))
+        if not parts:
+            continue
+        gather_rows = comm_lib.uneven_all_gather_rows(
+            [ev.patches[i] for i in parts])
+        kind = "full" if ev.synchronous else ev.exchange
+        if kind != "full" or len(parts) <= 1:
+            # degraded boundary: ring hops carry stale neighbors like
+            # DistriFusion halos — fully overlapped, pay only the excess
+            total += max(compute, ring_t)
+            continue
+        comm = gather_rows * row_bytes / cm.link_bw + cm.link_latency
+        async_bytes = max(kv_row * ev.patches[i] for i in parts)
+        total += max(compute, async_bytes / cm.link_bw, ring_t) + comm
+    return total
+
+
 def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
                    cm: CostModel) -> float:
     """End-to-end makespan (s) of a schedule on devices with given speeds."""
     if trace.stages and len(trace.stages) > 1:
         return _simulate_staged(trace, speeds, cm)
+    if trace.seq is not None and len(trace.seq.segments) > 1:
+        return _simulate_seq(trace, speeds, cm)
     if trace.guidance is not None:
         return _simulate_guided(trace, speeds, cm)
     total = 0.0
@@ -292,12 +378,16 @@ def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
     for ev in trace.events:
         compute = 0.0
         parts: List[int] = []            # workers that actually exchanged
+        total_rows = max(sum(ev.patches), 1)
         for i, (sub, rows) in enumerate(zip(ev.substeps, ev.patches)):
             if sub == 0 or rows == 0:
                 continue
             parts.append(i)
-            compute = max(compute, sub * cm.step_time(rows, speeds[i]))
-        total_rows = max(sum(ev.patches), 1)
+            # every patch worker reads the FULL context's K/V with all
+            # heads (heads_frac 1.0) — the attention wall seq sharding cuts
+            step_t = cm.step_time(rows, speeds[i]) \
+                + cm.attn_time(total_rows, 1.0, speeds[i])
+            compute = max(compute, sub * step_t)
         row_bytes = trace.latent_bytes / total_rows
         # uneven all-gather of x: per-worker padded slab wire bytes — a lone
         # worker (or an all-skip boundary) moves nothing

@@ -34,7 +34,8 @@ from repro.core.schedule import TemporalPlan
 
 def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
                   R, my_slab, cond, pub_k, pub_v, my_start, my_tok,
-                  my_ratio, m0, guidance_scale=None, eps_combine=None):
+                  my_ratio, m0, guidance_scale=None, eps_combine=None,
+                  attend_fn=None):
     """R fine steps on this device's padded slab with activity masking: a
     device with interval ratio r only applies every r-th DDIM update (a
     no-op substep costs what it costs — the paper's per-GPU step skipping in
@@ -47,6 +48,10 @@ def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
     "spmd" fused path); ``eps_combine`` post-processes the raw local eps —
     the "spmd_guidance" split path passes the cross-branch psum combine
     over the guidance mesh axis.
+
+    ``attend_fn`` (DESIGN.md §13) replaces the buffered attention read in
+    ``dit.block_stack`` — the "spmd_seq" path passes the Ulysses
+    all-to-all + ring-ppermute read over the sequence mesh axis.
     """
     import jax
     import jax.numpy as jnp
@@ -69,7 +74,8 @@ def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
         else:
             eps, kvs = dit.forward_patch(
                 params, cfg, my_slab, t_from, cond, my_start,
-                buffers=(pub_k, pub_v), return_kv=True, valid_tokens=my_tok)
+                buffers=(pub_k, pub_v), return_kv=True, valid_tokens=my_tok,
+                attend_fn=attend_fn)
         if eps_combine is not None:           # split CFG: eps crosses groups
             eps = eps_combine(eps)
         stepped = sampler_lib.ddim_step(sched, my_slab, eps, t_from, t_to)
@@ -481,6 +487,191 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                         read_k = buf_lib.extrapolate_arrays(pub_k, prev_k, f)
                         read_v = buf_lib.extrapolate_arrays(pub_v, prev_v, f)
                     else:             # fewer than two exchanges: stale reuse
+                        read_k, read_v = pub_k, pub_v
+        return x_full
+
+    from repro.core.comm import shard_map_compat
+    fn = shard_map_compat(body, mesh, (P(), P(), P()), P())
+    return jax.jit(fn)(params, x_T, cond)
+
+
+def run_spmd_seq(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
+                 plan: TemporalPlan, patches: Sequence[int], seq,
+                 exchange: str = "ring", exchange_refresh: int = 2):
+    """Sequence-parallel SPMD (DESIGN.md §13): shard_map over a
+    ``("seq", "dev")`` mesh — axis "dev" holds the ``len(patches)`` patch
+    workers, axis "seq" the ``seq.n_shards`` sequence members of each
+    worker group.
+
+    Each seq slice runs the IDENTICAL statically-unrolled schedule body as
+    :func:`run_spmd` — including the IR's :class:`~repro.core.events.
+    SeqShard` events, which carry no numerics — but every buffered
+    attention read routes through the sequence axis:
+
+      1. RING: each member extracts its own token segment of the
+         freshness-blended whole-image K/V and reassembles the full
+         context via ``n_shards - 1`` ``ppermute`` hops (the per-hop
+         staged K/V of the "ring" policy; segments carry exactly the
+         fresh-local ⊕ policy-stale-remote values the dense read uses, so
+         the assembled context is bitwise-identical).
+      2. ULYSSES: one ``all_to_all`` scatters query head groups over
+         "seq", each member attends its ``n_heads / n_shards`` heads over
+         the full context, and the reverse ``all_to_all`` regathers heads.
+
+    Head groups are independent under softmax, so the sharded read equals
+    the dense ``layers.attend`` up to reduction order (tested <= 1e-5 vs
+    the emulated reference). Requires ``n_heads % n_shards == 0`` (the
+    all-to-all's even head split; speed-proportional uneven heads are the
+    cost model's planning view) and ``n_shards * len(patches)`` devices.
+    As with the other SPMD backends, the wall-clock benefit of the ring
+    overlap is modeled by the simulator; this backend proves the
+    collective mechanics and the numerics. Returns the final image.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import sampler as sampler_lib
+    from repro.models import layers
+    from repro.models.diffusion import dit
+
+    if seq is None or len(seq.segments) < 2:
+        return run_spmd(params, cfg, sched, x_T, cond, plan, patches,
+                        exchange=exchange, exchange_refresh=exchange_refresh)
+    S = len(seq.segments)
+    if cfg.n_heads % S:
+        raise ValueError(
+            f"spmd_seq needs n_heads divisible by seq_shards for the "
+            f"all-to-all head scatter: {cfg.n_heads} % {S} != 0")
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
+    evs = list(ir.lower(plan, patches, policy, seq_shards=seq))
+
+    devices = jax.devices()
+    N = len(patches)
+    if S * N > len(devices):
+        raise ValueError(
+            f"seq_shards={S} over {N} patch workers needs {S * N} devices, "
+            f"have {len(devices)} (set STADI_HOST_DEVICES)")
+    mesh = Mesh(np.asarray(devices[:S * N]).reshape(S, N), ("seq", "dev"))
+
+    lay = _static_layout(cfg, patches)
+    ratios = [r if r else 1 for r in plan.ratios]
+    ratios_arr = jnp.asarray(ratios, jnp.int32)
+    ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
+    buf_pad = [(0, 0), (0, 0), (0, lay["Nl_max"]), (0, 0), (0, 0)]
+    Hs = cfg.n_heads // S
+    ring_perm = [(s, (s + 1) % S) for s in range(S)]
+
+    def _ring_assemble(full):
+        """Reassemble the whole-context tensor from per-member token
+        segments via S-1 ring hops: member j starts holding segment j and
+        at hop h receives segment (j - h) mod S from its ring neighbor."""
+        j = jax.lax.axis_index("seq")
+        cpad = -full.shape[1] % S
+        fp = jnp.pad(full, ((0, 0), (0, cpad), (0, 0), (0, 0)))
+        cseg = fp.shape[1] // S
+        hold = jax.lax.dynamic_slice_in_dim(fp, j * cseg, cseg, axis=1)
+        out = jnp.zeros_like(fp)
+        for h in range(S):
+            src = (j - h) % S
+            out = jax.lax.dynamic_update_slice_in_dim(out, hold, src * cseg,
+                                                      axis=1)
+            if h < S - 1:
+                hold = jax.lax.ppermute(hold, "seq", ring_perm)
+        return out[:, :full.shape[1]]
+
+    def attend_fn(q, full_k, full_v, key_mask):
+        j = jax.lax.axis_index("seq")
+        kr = _ring_assemble(full_k)
+        vr = _ring_assemble(full_v)
+        # Ulysses: scatter query head groups over "seq" (head group j of
+        # every member lands on member j, token blocks concatenated)...
+        q_g = jax.lax.all_to_all(q, "seq", split_axis=2, concat_axis=1,
+                                 tiled=True)
+        k_h = jax.lax.dynamic_slice_in_dim(kr, j * Hs, Hs, axis=2)
+        v_h = jax.lax.dynamic_slice_in_dim(vr, j * Hs, Hs, axis=2)
+        att_g = layers.attend(q_g, k_h, v_h, mask=key_mask)
+        # ...attend my heads over the full ring-assembled context, then
+        # regather: head group j returns from member j
+        return jax.lax.all_to_all(att_g, "seq", split_axis=1, concat_axis=2,
+                                  tiled=True)
+
+    def _reslice(x_full, my_start):
+        x_pad = jnp.pad(x_full, ((0, 0), (0, lay["Pmax"] * lay["p"]),
+                                 (0, 0), (0, 0)))
+        return jax.lax.dynamic_slice_in_dim(x_pad, my_start * lay["p"],
+                                            lay["Pmax"] * lay["p"], axis=1)
+
+    def body(params, x_full, cond):
+        idx = jax.lax.axis_index("dev")
+        my_rows = lay["rows_arr"][idx]
+        my_start = lay["starts_arr"][idx]
+        my_ratio = ratios_arr[idx]
+        my_tok = my_rows * lay["wp"]
+
+        pub_k = pub_v = None
+        prev_k = prev_v = None
+        read_k = read_v = None
+        my_slab = fresh_k = fresh_v = None
+        m_prev, m_last = None, None
+
+        for ev in evs:
+            if isinstance(ev, ir.Warmup):
+                # synchronous == full-image forward on every device (the
+                # local-only attention of an unbuffered full forward is
+                # exact; no ring needed)
+                eps, kvs = dit.forward_patch(
+                    params, cfg, x_full, ts[ev.fine_step], cond, 0,
+                    buffers=None, return_kv=True)
+                x_full = sampler_lib.ddim_step(sched, x_full, eps,
+                                               ts[ev.fine_step],
+                                               ts[ev.fine_step + 1])
+                pub_k, pub_v = kvs
+                m_last = ev.fine_step
+
+            elif isinstance(ev, ir.SeqShard):
+                pass                     # repartitioning carries no numerics
+
+            elif isinstance(ev, ir.ComputeInterval):
+                if my_slab is None:
+                    if pub_k is None:             # M_w == 0: bootstrap once
+                        _, kvs = dit.forward_patch(
+                            params, cfg, x_full, ts[0], cond, 0,
+                            buffers=None, return_kv=True)
+                        pub_k, pub_v = kvs
+                        m_last = -1
+                    pub_k = jnp.pad(pub_k, buf_pad)
+                    pub_v = jnp.pad(pub_v, buf_pad)
+                    read_k, read_v = pub_k, pub_v
+                    my_slab = _reslice(x_full, my_start)
+                my_slab, fresh_k, fresh_v = _run_substeps(
+                    params, cfg, sched, ts, plan.m_base, ev.length, my_slab,
+                    cond, read_k, read_v, my_start, my_tok, my_ratio,
+                    ev.fine_step, attend_fn=attend_fn)
+
+            elif isinstance(ev, ir.Exchange):
+                if ev.kind == "full":
+                    prev_k, prev_v = pub_k, pub_v
+                    m_prev, m_last = m_last, ev.fine_step
+                    # per-seq-slice gather/merge: "dev"-axis collectives
+                    # run inside each seq row; published K/V stays
+                    # replicated over "seq" (every member computes the
+                    # identical merge)
+                    x_full, pub_k, pub_v = _gather_and_merge(
+                        cfg, patches, lay["row_starts"], my_slab,
+                        fresh_k, fresh_v, pub_k, pub_v)
+                    read_k, read_v = pub_k, pub_v
+                    my_slab = _reslice(x_full, my_start)
+                elif ev.kind == "skip":
+                    read_k, read_v = pub_k, pub_v
+                elif ev.kind == "predict":
+                    f = (buf_lib.extrapolation_factor(m_prev, m_last,
+                                                      ev.fine_step)
+                         if m_prev is not None else 0.0)
+                    if f:
+                        read_k = buf_lib.extrapolate_arrays(pub_k, prev_k, f)
+                        read_v = buf_lib.extrapolate_arrays(pub_v, prev_v, f)
+                    else:
                         read_k, read_v = pub_k, pub_v
         return x_full
 

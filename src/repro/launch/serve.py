@@ -54,7 +54,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                     backend: str = "emulated", reduced: bool = True,
                     slo_s: float = None, seed: int = 0,
                     exchange: str = "sync", exchange_refresh: int = 2,
-                    num_stages: int = 1, cfg_scale: float = 0.0):
+                    num_stages: int = 1, cfg_scale: float = 0.0,
+                    seq_shards: int = 1):
     """Continuous batching on a heterogeneous cluster: requests enter a FIFO
     queue, the :class:`DiffusionServingEngine` admits them into ``slots``
     concurrent lanes and drains the queue with batched denoise rounds.
@@ -75,7 +76,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                                           m_warmup=m_warmup, planner=planner,
                                           backend=backend, exchange=exchange,
                                           exchange_refresh=exchange_refresh,
-                                          num_stages=num_stages)
+                                          num_stages=num_stages,
+                                          seq_shards=seq_shards)
     pipe = StadiPipeline(cfg, params, sched, config)
     engine = DiffusionServingEngine(pipe, slots=slots)
     rng = np.random.default_rng(seed)
@@ -101,7 +103,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
           f"img/s wall, {stats['throughput_modeled_rps']:.2f} img/s "
           f"modeled{note}) planner={planner} backend={backend} "
           f"slots={slots} rounds={stats['rounds']} "
-          f"patches={engine.plan.patches} stages={engine.stages}")
+          f"patches={engine.plan.patches} stages={engine.stages} "
+          f"seq={engine.seq}")
     for r in stats["requests"]:
         slo = "" if r["slo_met"] is None else f" slo_met={r['slo_met']}"
         print(f"  req {r['uid']}: queued {r['queue_rounds']} rounds, "
@@ -135,9 +138,10 @@ def main():
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request modeled-latency SLO (diffusion only)")
     ap.add_argument("--exchange", default="sync",
-                    choices=["sync", "stale_async", "predictive"],
+                    choices=["sync", "stale_async", "predictive", "ring"],
                     help="boundary-exchange policy (diffusion only, "
-                         "DESIGN.md §10)")
+                         "DESIGN.md §10; 'ring' = per-hop-staged seq-"
+                         "parallel variant, DESIGN.md §13)")
     ap.add_argument("--exchange-refresh", type=int, default=2,
                     help="full refresh every E boundaries (stale/predictive)")
     ap.add_argument("--num-stages", type=int, default=1,
@@ -149,6 +153,11 @@ def main():
                     help="classifier-free guidance weight (diffusion only, "
                          "DESIGN.md §12): > 0 submits every other request "
                          "as a CFG request — a mixed guided/unguided batch")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="sequence-parallel attention (diffusion only, "
+                         "DESIGN.md §13): Ulysses/ring shards per patch "
+                         "worker; lanes batch by ring-hop identity (1 = "
+                         "attention-unsharded, 0 = let stadi_seq search)")
     args = ap.parse_args()
     if args.diffusion:
         if args.arch == ap.get_default("arch"):
@@ -166,7 +175,8 @@ def main():
                         exchange=args.exchange,
                         exchange_refresh=args.exchange_refresh,
                         num_stages=args.num_stages,
-                        cfg_scale=args.cfg_scale)
+                        cfg_scale=args.cfg_scale,
+                        seq_shards=args.seq_shards)
     else:
         serve(args.arch, n_requests=args.requests, slots=args.slots,
               prompt_len=args.prompt_len, max_new=args.max_new)

@@ -43,10 +43,11 @@ def main():
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--planner", default="stadi",
                     choices=["uniform", "spatial", "temporal", "stadi",
-                             "makespan", "stadi_pipefuse", "stadi_guidance"])
+                             "makespan", "stadi_pipefuse", "stadi_guidance",
+                             "stadi_seq"])
     ap.add_argument("--backend", default="emulated",
                     choices=["emulated", "spmd", "simulate", "pipefuse",
-                             "spmd_pipefuse", "spmd_guidance"])
+                             "spmd_pipefuse", "spmd_guidance", "spmd_seq"])
     ap.add_argument("--spmd", action="store_true",
                     help="alias for --backend spmd")
     ap.add_argument("--num-stages", type=int, default=1,
@@ -70,12 +71,19 @@ def main():
     ap.add_argument("--uncond-refresh", type=int, default=2,
                     help="interleaved guidance: recompute the uncond "
                          "branch every E adaptive intervals")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="sequence-parallel attention (DESIGN.md §13): "
+                         "Ulysses/ring shards per patch worker (1 = "
+                         "attention-unsharded, 0 = let stadi_seq search; "
+                         "spmd_seq needs seq_shards * workers host devices)")
     ap.add_argument("--cond", type=int, default=0,
                     help="class id to condition on")
     ap.add_argument("--rebalance-every", type=int, default=0)
     ap.add_argument("--exchange", default="sync",
-                    choices=["sync", "stale_async", "predictive"],
-                    help="boundary-exchange policy (DESIGN.md §10)")
+                    choices=["sync", "stale_async", "predictive", "ring"],
+                    help="boundary-exchange policy (DESIGN.md §10; 'ring' "
+                         "is the per-hop-staged seq-parallel variant, "
+                         "DESIGN.md §13)")
     ap.add_argument("--exchange-refresh", type=int, default=2,
                     help="full refresh every E boundaries (stale/predictive)")
     ap.add_argument("--seed", type=int, default=0)
@@ -122,14 +130,16 @@ def main():
         num_stages=args.num_stages, micro_patches=args.micro_patches,
         guidance=args.guidance, cfg_scale=args.cfg_scale,
         uncond_refresh=args.uncond_refresh,
+        seq_shards=args.seq_shards,
         **knobs)
-    from repro.core.pipeline import plan_guidance, plan_stages
+    from repro.core.pipeline import plan_guidance, plan_seq, plan_stages
     pipe = StadiPipeline(cfg, params, sched, config)
     plan = pipe.plan()
     print(f"speeds={config.speeds} steps={plan.temporal.steps} "
           f"ratios={plan.temporal.ratios} patches={plan.patches} "
           f"stages={plan_stages(plan, cfg, config)} "
-          f"guidance={plan_guidance(plan, config)}")
+          f"guidance={plan_guidance(plan, config)} "
+          f"seq={plan_seq(plan, cfg, config)}")
 
     t0 = time.time()
     res = pipe.generate(x_T, cond)
@@ -143,7 +153,8 @@ def main():
     print(f"{backend} run ({len(jax.devices())} devices): "
           f"{time.time()-t0:.2f}s image {img.shape} "
           f"finite={np.all(np.isfinite(img))}")
-    if backend in ("spmd", "spmd_guidance") and args.check_vs_emulation:
+    if (backend in ("spmd", "spmd_guidance", "spmd_seq")
+            and args.check_vs_emulation):
         emu = StadiPipeline(cfg, params, sched,
                             dataclasses.replace(config, backend="emulated"))
         ref = np.asarray(emu.generate(x_T, cond).image)

@@ -196,7 +196,8 @@ def embed_patch(params, cfg: DiTConfig, x_rows, t, cond, row_start):
 
 def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
                 buffers: Optional[Tuple] = None, return_kv: bool = True,
-                valid_tokens: Optional[jnp.ndarray] = None, enable=None):
+                valid_tokens: Optional[jnp.ndarray] = None, enable=None,
+                attend_fn=None):
     """Run a contiguous stack of DiT blocks over hidden states ``h``.
 
     The ONE place the block math lives: ``forward_patch`` runs the whole
@@ -211,6 +212,12 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
     enable:  optional [n_blocks] bool — a disabled block is an exact
              identity (SPMD stage padding); None compiles with no masking at
              all, preserving the monolithic forward bitwise
+    attend_fn: optional replacement for the buffered attention read,
+             called as ``attend_fn(q, full_k, full_v, key_mask)`` with the
+             freshness-blended whole-image context — the hook the
+             sequence-parallel executor (DESIGN.md §13) uses to route the
+             read through Ulysses all-to-all + ring hops without touching
+             the block math. None preserves the dense read bitwise.
     Returns (h', kvs) with kvs [n_blocks, B, Nl, H, hd] pairs (or None).
     """
     B, Nl, D = h.shape[0], h.shape[1], cfg.d_model
@@ -218,7 +225,7 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
     hd = D // H
     pallas_blk = (_pallas_block(cfg, tok_start, Nl, buffers[0].shape[2],
                                 valid_tokens, enable)
-                  if buffers is not None else 0)
+                  if buffers is not None and attend_fn is None else 0)
 
     def block(x, scanned):
         if enable is not None:
@@ -254,7 +261,10 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
                 key_mask = (jnp.arange(bk.shape[1]) < cfg.n_tokens)[None, None, None, :]
             full_k = jax.lax.dynamic_update_slice_in_dim(bk, ku.astype(bk.dtype), tok_start, axis=1)
             full_v = jax.lax.dynamic_update_slice_in_dim(bv, vu.astype(bv.dtype), tok_start, axis=1)
-            att = layers.attend(q, full_k, full_v, mask=key_mask)
+            if attend_fn is not None:
+                att = attend_fn(q, full_k, full_v, key_mask)
+            else:
+                att = layers.attend(q, full_k, full_v, mask=key_mask)
         x2 = x + g1[:, None] * (att.reshape(B, Nl, D) @ bp["wo"])
         xn = _modulate(_ln(x2), sh2, sc2)
         hmid = jax.nn.gelu(xn @ bp["w1"]) @ bp["w2"]
@@ -280,7 +290,8 @@ def final_head(params, cfg: DiTConfig, h, c, rows_tok: int):
 
 def forward_patch(params, cfg: DiTConfig, x_rows, t, cond,
                   row_start: int, buffers: Optional[Tuple] = None,
-                  return_kv: bool = True, valid_tokens: Optional[jnp.ndarray] = None):
+                  return_kv: bool = True, valid_tokens: Optional[jnp.ndarray] = None,
+                  attend_fn=None):
     """Denoise a row-patch with stale remote K/V.
 
     x_rows: [B, rows_local, W, C] latent slab (full width).
@@ -300,7 +311,7 @@ def forward_patch(params, cfg: DiTConfig, x_rows, t, cond,
     tok_start = row_start * cfg.tokens_per_side
     h, kvs = block_stack(params["blocks"], cfg, h, c, tok_start,
                          buffers=buffers, return_kv=return_kv,
-                         valid_tokens=valid_tokens)
+                         valid_tokens=valid_tokens, attend_fn=attend_fn)
     eps = final_head(params, cfg, h, c, rows_tok)
     return eps, kvs
 

@@ -52,7 +52,8 @@ from repro.core import sampler as sampler_lib
 from repro.core import simulate as sim
 from repro.core.pipeline import (StadiPipeline, check_backend_can_run,
                                  get_stepper_factory, plan_guidance,
-                                 plan_stages, register_stepper_factory)
+                                 plan_seq, plan_stages,
+                                 register_stepper_factory)
 from repro.core.planners import ExecutionPlan
 from repro.core.schedule import patch_bounds
 from repro.core.simulate import CostModel
@@ -520,6 +521,27 @@ class DiffusionServingEngine:
         staged = self.stages is not None and len(self.stages) > 1
         self._ctx_k = jnp.zeros(kshape, kdt) if staged else None
         self._ctx_v = jnp.zeros(kshape, kdt) if staged else None
+        # sequence-parallel attention (DESIGN.md §13): seq sharding
+        # repartitions WHERE attention runs (device groups + ring hops),
+        # never WHAT is computed, so the emulated stepper serves seq-sharded
+        # lanes bitwise unchanged — only the lane group key (per-interval
+        # ring hop count) and the modeled round cost see the shards.
+        self.seq = plan_seq(self.plan, cfg, config)
+        if self.seq is not None and len(self.seq.segments) < 2:
+            self.seq = None
+        if self.seq is not None and staged:
+            raise ValueError(
+                "serving does not compose sequence sharding with a "
+                "displaced stage chain; run seq-sharded lanes on the "
+                "single-stage 'emulated' backend")
+        self._seq_groups = None
+        self._seq_seg_pad = 0.0
+        if self.seq is not None:
+            from repro.core import seqpar
+            groups, _ = seqpar.seq_group_speeds(list(config.speeds),
+                                                self.seq.n_shards)
+            self._seq_groups = groups
+            self._seq_seg_pad = max(self.seq.seg_fracs)
         # boundary-exchange policy (DESIGN.md §10): replay the SAME schedule
         # IR every lane follows and precompute, per adaptive-interval start
         # fine step, (read_factor, trail_kind, fill): read_factor is the K/V
@@ -530,21 +552,27 @@ class DiffusionServingEngine:
         # behaviors.
         self.policy = comm_lib.get_exchange(config.exchange,
                                             config.exchange_refresh)
-        self._interval_info: Dict[int, Tuple[float, str, bool]] = {}
+        self._interval_info: Dict[int, Tuple[float, str, bool, int]] = {}
         read_factor = 0.0
         m_prev: Optional[int] = None
         m_last = self.plan.temporal.m_warmup - 1   # warmup publish (-1 = boot)
         cur: Optional[int] = None
         fill = False
+        seq_hops = 0
         for ev in ir.lower(self.plan.temporal, self.plan.patches, self.policy,
-                           stages=self.stages if staged else None):
+                           stages=self.stages if staged else None,
+                           seq_shards=self.seq):
             if isinstance(ev, ir.StageShift):
                 fill = True
+            elif isinstance(ev, ir.SeqShard):
+                seq_hops = ev.hops
             elif isinstance(ev, ir.ComputeInterval):
                 cur = ev.fine_step
             elif isinstance(ev, ir.Exchange):
-                self._interval_info[cur] = (read_factor, ev.kind, fill)
+                self._interval_info[cur] = (read_factor, ev.kind, fill,
+                                            seq_hops)
                 fill = False
+                seq_hops = 0
                 if ev.kind == "full":
                     m_prev, m_last = m_last, ev.fine_step
                     read_factor = 0.0
@@ -692,7 +720,7 @@ class DiffusionServingEngine:
         if adapt:
             placement = None
             wants_ctx = getattr(self.stepper, "wants_ctx", False)
-            for group, (read_factor, trail_kind, fill,
+            for group, (read_factor, trail_kind, fill, seq_hops,
                         guided) in self._groups(adapt):
                 idx = self._pad(group)
                 fine = np.asarray([self.active[s].fine_step for s in idx])
@@ -720,7 +748,7 @@ class DiffusionServingEngine:
                         self.active[s].fine_step += R
                     placement, cost = self._phase_cost(
                         len(group), warm=False, kind=trail_kind, fill=fill,
-                        guided=True)
+                        guided=True, seq_hops=seq_hops)
                     report.modeled_s += cost
                     report.exchange_kinds.append(trail_kind)
                     continue
@@ -762,7 +790,8 @@ class DiffusionServingEngine:
                     self.active[s].fine_step += R
                 placement, cost = self._phase_cost(len(group), warm=False,
                                                    kind=trail_kind,
-                                                   fill=fill)
+                                                   fill=fill,
+                                                   seq_hops=seq_hops)
                 report.modeled_s += cost
                 report.exchange_kinds.append(trail_kind)
             report.placement = placement
@@ -820,15 +849,17 @@ class DiffusionServingEngine:
         return [(g, ls) for g, ls in ((False, plain), (True, guided)) if ls]
 
     def _groups(self, lanes: List[int]
-                ) -> List[Tuple[List[int], Tuple[float, str, bool, bool]]]:
+                ) -> List[Tuple[List[int],
+                                Tuple[float, str, bool, int, bool]]]:
         """Batchable lane groups + their (read_factor, trail_kind, fill,
-        guided) info. The vmapped stepper batches every lane whose boundary
-        behavior AND guidance state match (under "sync" with no CFG lanes
-        that is ONE group, as before); the cohort-only (spmd) stepper
-        groups by fine-step position, which pins the exchange info
-        automatically (it never serves guided lanes)."""
+        seq_hops, guided) info. The vmapped stepper batches every lane whose
+        boundary behavior, seq-shard ring identity AND guidance state match
+        (under "sync" with no CFG lanes and no seq sharding that is ONE
+        group, as before); the cohort-only (spmd) stepper groups by
+        fine-step position, which pins the exchange info automatically (it
+        never serves guided lanes)."""
         if not self.stepper.cohort_only:
-            keyed: Dict[Tuple[float, str, bool, bool], List[int]] = {}
+            keyed: Dict[Tuple[float, str, bool, int, bool], List[int]] = {}
             for s in lanes:
                 keyed.setdefault(self._lane_info(s), []).append(s)
             return [(keyed[k], k) for k in sorted(keyed)]
@@ -838,14 +869,15 @@ class DiffusionServingEngine:
         return [(cohorts[f], self._lane_info(cohorts[f][0]))
                 for f in sorted(cohorts)]
 
-    def _lane_info(self, slot: int) -> Tuple[float, str, bool, bool]:
+    def _lane_info(self, slot: int) -> Tuple[float, str, bool, int, bool]:
         info = self._interval_info[self.active[slot].fine_step]
         return info + (self.active[slot].guided,)
 
     # ---------------- modeled cost & placement ----------------
 
     def _phase_cost(self, group: int, warm: bool, kind: str = "full",
-                    fill: bool = False, guided: bool = False
+                    fill: bool = False, guided: bool = False,
+                    seq_hops: int = 0
                     ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
         """Placement + modeled seconds for one batched phase of a round.
 
@@ -857,7 +889,11 @@ class DiffusionServingEngine:
         chain (DESIGN.md §11) the placement maps STAGES to devices instead
         of whole-model patch workers. Guided (fused-CFG) phases double the
         per-row work and the staged-K/V payload — both branches ride every
-        lane (DESIGN.md §12).
+        lane (DESIGN.md §12). Sequence-sharded lanes (DESIGN.md §13) run
+        each patch worker on a GROUP of ``seq.n_shards`` devices (placement
+        entries map workers to groups, speed = group aggregate) and overlap
+        ``seq_hops`` ring K/V hops per substep with compute, exactly as in
+        ``simulate._simulate_seq``.
         """
         if self.stages is not None and len(self.stages) > 1:
             return self._staged_phase_cost(group, warm, kind, fill)
@@ -872,12 +908,27 @@ class DiffusionServingEngine:
                               + cm.t_row * plan.patches[i] * group * branch)
         by_load = sorted(workers, key=lambda i: (-loads[i], i))
         speeds = self.pipeline.config.speeds
+        if self._seq_groups is not None:
+            # each worker = one device group; the group's members split the
+            # worker's rows/heads, so its serving throughput is the sum
+            speeds = [sum(g) for g in self._seq_groups]
         by_speed = sorted(range(len(speeds)), key=lambda d: (-speeds[d], d))
         placement = tuple(sorted((w, d) for w, d in zip(by_load, by_speed)))
         compute = max(loads[w] / max(speeds[d], 1e-9)
                       for w, d in placement)
+        ring_t = 0.0
+        if self._seq_groups is not None:
+            hops = (self.seq.n_shards - 1) if warm else seq_hops
+            if hops:
+                for w in workers:
+                    sub = 1 if warm else temporal.lcm // temporal.ratios[w]
+                    ring_t = max(ring_t, sub * hops * (
+                        self._kv_bytes[w] * self._seq_seg_pad * group
+                        * branch / cm.link_bw + cm.link_latency))
         if (not warm and kind != "full") or len(workers) <= 1:
-            return placement, compute        # stale/predict: pure compute
+            # stale/predict (or lone worker): no gather, but ring hops
+            # still serialize against compute
+            return placement, max(compute, ring_t)
         rows_total = max(sum(plan.patches), 1)
         row_bytes = self._latent_bytes / rows_total
         gather_rows = comm_lib.uneven_all_gather_rows(
@@ -891,7 +942,7 @@ class DiffusionServingEngine:
             async_t = max(self._kv_bytes[w] for w, _ in placement) \
                 * group * branch / cm.link_bw
         comm = comm_bytes / cm.link_bw + cm.link_latency
-        return placement, max(compute, async_t) + comm
+        return placement, max(compute, async_t, ring_t) + comm
 
     def _staged_phase_cost(self, group: int, warm: bool, kind: str,
                            fill: bool

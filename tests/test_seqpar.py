@@ -1,0 +1,495 @@
+"""Sequence-parallel attention (DESIGN.md §13): the head/segment
+partitioners, the device-grouping convention, the ring-attention reference,
+SeqShard IR semantics, ring x stale-exchange staleness bounds, the bitwise
+shard-invariance contract of the emulated reference, the stadi_seq joint
+planner, the ring-contention cost model, seq-sharded serving, and the real
+spmd_seq mesh executor (subprocess with forced host devices, like the other
+distributed tests)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import comm as comm_lib
+from repro.core import events as ir
+from repro.core import sampler as sampler_lib
+from repro.core import seqpar
+from repro.core import simulate as sim
+from repro.core.pipeline import (SEQ_BACKENDS, StadiConfig, StadiPipeline,
+                                 check_backend_can_run, get_executor,
+                                 plan_seq)
+from repro.core.planners import get_planner
+from repro.core.schedule import TemporalPlan
+from repro.core.simulate import CostModel
+from repro.models import layers
+from repro.models.diffusion import dit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-dit").reduced()      # 4 heads, 8 token rows
+    params = dit.nondegenerate_params(dit.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+    sched = sampler_lib.linear_schedule(T=100)
+    x_T = jax.random.normal(jax.random.PRNGKey(1),
+                            (1, cfg.latent_size, cfg.latent_size,
+                             cfg.channels))
+    cond = jnp.array([1])
+    return cfg, params, sched, x_T, cond
+
+
+# ----------------------------------------------------------------------
+# head / ring-segment partitioners (satellite: property coverage)
+# ----------------------------------------------------------------------
+
+def test_head_partition_basics():
+    assert seqpar.head_partition(4, 1) == [4]
+    assert seqpar.head_partition(4, 2) == [2, 2]
+    assert seqpar.head_partition(8, 2, [1.0, 0.5]) == [5, 3]
+    assert seqpar.head_partition(3, 3, [10.0, 0.01, 0.01]) == [1, 1, 1]
+    with pytest.raises(ValueError, match="1 head per shard"):
+        seqpar.head_partition(2, 3)
+    with pytest.raises(ValueError):
+        seqpar.head_partition(4, 0)
+
+
+def test_ring_segments_basics():
+    assert seqpar.ring_segments(8, 1) == [8]
+    assert seqpar.ring_segments(8, 2, [1.0, 1.0]) == [4, 4]
+    assert seqpar.ring_segments(8, 2, [3.0, 1.0]) == [6, 2]
+    with pytest.raises(ValueError, match="1 row per ring segment"):
+        seqpar.ring_segments(2, 4)
+
+
+def _check_seq_plan(n_heads, rows, n_shards, speeds):
+    plan = seqpar.make_seq_plan(n_heads, rows, n_shards, speeds)
+    assert plan.n_shards == n_shards
+    assert plan.hops == n_shards - 1
+    assert sum(plan.heads) == n_heads                      # covers, disjoint
+    assert sum(plan.segments) == rows
+    assert all(h >= 1 for h in plan.heads)
+    assert all(s >= 1 for s in plan.segments)
+    sp = (list(speeds)[:n_shards] if speeds else [1.0] * n_shards)
+    if len(sp) < n_shards:
+        sp = sp + [sp[-1]] * (n_shards - len(sp))
+    for i, vi in enumerate(sp):                            # monotone
+        for j, vj in enumerate(sp):
+            if vi > vj:
+                assert plan.heads[i] >= plan.heads[j], (plan.heads, sp)
+                assert plan.segments[i] >= plan.segments[j], \
+                    (plan.segments, sp)
+    assert abs(sum(plan.head_fracs) - 1.0) < 1e-9
+    assert abs(sum(plan.seg_fracs) - 1.0) < 1e-9
+
+
+def test_seq_plan_properties_deterministic():
+    for n_heads, rows, n_shards, speeds in [
+        (4, 8, 1, None), (4, 8, 2, None), (4, 8, 4, [1.0, 0.8, 0.6, 0.5]),
+        (16, 64, 3, [2.0, 1.0, 0.5]), (8, 8, 8, None), (5, 9, 2, [9.0, 1.0]),
+    ]:
+        _check_seq_plan(n_heads, rows, n_shards, speeds)
+
+
+def test_seq_plan_validation():
+    with pytest.raises(ValueError, match="disagree on the shard count"):
+        seqpar.SeqPlan(heads=(2, 2), segments=(8,))
+    with pytest.raises(ValueError, match=">= 1 head"):
+        seqpar.SeqPlan(heads=(4, 0), segments=(4, 4))
+    with pytest.raises(ValueError, match=">= 1 token row"):
+        seqpar.SeqPlan(heads=(2, 2), segments=(8, 0))
+    with pytest.raises(ValueError, match="sums to"):
+        seqpar.validate_seq(seqpar.SeqPlan((2, 2), (4, 4)), n_heads=8,
+                            rows=8)
+    with pytest.raises(ValueError, match="token rows"):
+        seqpar.validate_seq(seqpar.SeqPlan((2, 2), (4, 4)), n_heads=4,
+                            rows=16)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                         # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(n_heads=st.integers(1, 64), rows=st.integers(1, 128),
+           n_shards=st.integers(1, 8),
+           speeds=st.one_of(st.none(),
+                            st.lists(st.floats(0.05, 4.0), min_size=1,
+                                     max_size=8)))
+    def test_seq_plan_properties(n_heads, rows, n_shards, speeds):
+        n_shards = min(n_shards, n_heads, rows)
+        _check_seq_plan(n_heads, rows, n_shards, speeds)
+
+
+def test_seq_group_speeds_column_dealt():
+    """4 devices, 2 shards: members are dealt column-wise so shard row j
+    has comparable speed across groups (one global head partition fits)."""
+    groups, shard_speeds = seqpar.seq_group_speeds([1.0, 0.5, 0.8, 0.6], 2)
+    assert groups == [[1.0, 0.6], [0.8, 0.5]]
+    assert shard_speeds == [1.0 + 0.8, 0.6 + 0.5]
+    # leftover devices idle (5 devices, 2 shards -> 2 groups, 1 idle)
+    groups5, _ = seqpar.seq_group_speeds([1.0, 0.9, 0.8, 0.7, 0.1], 2)
+    assert len(groups5) == 2 and all(len(g) == 2 for g in groups5)
+    assert 0.1 not in [v for g in groups5 for v in g]
+    with pytest.raises(ValueError, match="at least 3 devices"):
+        seqpar.seq_group_speeds([1.0, 0.5], 3)
+
+
+# ----------------------------------------------------------------------
+# ring-attention reference vs dense attend
+# ----------------------------------------------------------------------
+
+def test_ring_attention_reference_matches_attend():
+    """Head-scattered, ring-segmented log-sum-exp attention equals the
+    dense softmax up to reduction order — including uneven
+    speed-proportional heads and segments."""
+    B, S, T, H, hd = 2, 6, 8, 4, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, hd))
+    dense = layers.attend(q, k, v)
+    for seq in [seqpar.SeqPlan((4,), (8,)),
+                seqpar.SeqPlan((2, 2), (4, 4)),
+                seqpar.SeqPlan((2, 1, 1), (3, 3, 2))]:
+        ring = seqpar.ring_attention_reference(q, k, v, seq)
+        err = float(jnp.linalg.norm(ring - dense) / jnp.linalg.norm(dense))
+        assert err <= 1e-5, (seq, err)
+    # with a key mask (the buffered-attend contract)
+    mask = (jnp.arange(T) < 6)[None, None, None, :]
+    dense_m = layers.attend(q, k, v, mask=mask)
+    ring_m = seqpar.ring_attention_reference(
+        q, k, v, seqpar.SeqPlan((2, 2), (5, 3)), mask=mask)
+    err = float(jnp.linalg.norm(ring_m - dense_m) / jnp.linalg.norm(dense_m))
+    assert err <= 1e-5, err
+
+
+# ----------------------------------------------------------------------
+# IR: SeqShard cadence + ring policy + staleness bound
+# ----------------------------------------------------------------------
+
+def test_seqshard_emitted_per_adaptive_interval():
+    plan = TemporalPlan([16, 16], [1, 1], [False, False], 16, 4)
+    policy = comm_lib.get_exchange("ring", 2)
+    seq = seqpar.SeqPlan((2, 2), (4, 4))
+    evs = list(ir.lower(plan, [4, 4], policy, seq_shards=seq))
+    shards = [e for e in evs if isinstance(e, ir.SeqShard)]
+    intervals = [e for e in evs if isinstance(e, ir.ComputeInterval)]
+    assert len(shards) == len(intervals)                   # one per interval
+    assert all(s.hops == 1 for s in shards)
+    assert [s.fine_step for s in shards] == [c.fine_step for c in intervals]
+    # no SeqShard without a multi-shard plan
+    assert not any(isinstance(e, ir.SeqShard)
+                   for e in ir.lower(plan, [4, 4], policy))
+    assert not any(isinstance(e, ir.SeqShard)
+                   for e in ir.lower(plan, [4, 4], policy,
+                                     seq_shards=seqpar.SeqPlan((4,), (8,))))
+
+
+def test_replay_records_seq_hops():
+    plan = TemporalPlan([16, 16], [1, 2], [False, False], 16, 4)
+    policy = comm_lib.get_exchange("ring", 3)
+    seq = seqpar.SeqPlan((2, 1, 1), (3, 3, 2))
+    recs = ir.replay(plan, [4, 4], policy, seq_shards=seq)
+    warm = [r for r in recs if r.synchronous]
+    adapt = [r for r in recs if not r.synchronous]
+    assert all(r.seq_hops == 0 for r in warm)
+    assert all(r.seq_hops == 2 for r in adapt)
+    # the ring policy's degraded boundaries are plain "skip" — nothing new
+    # for executors to interpret
+    kinds = {r.exchange for r in adapt}
+    assert kinds <= {"full", "skip"}
+    assert "skip" in kinds and "full" in kinds
+
+
+def test_ring_policy_and_hop_rows():
+    pol = comm_lib.get_exchange("ring", 3)
+    assert pol.degraded_kind == "skip"
+    assert comm_lib.ring_hop_rows([3, 3, 2]) == 3          # padded to max
+    assert comm_lib.ring_hop_rows([8]) == 0                # nothing to hop
+    assert comm_lib.ring_hop_rows([5, 0, 3]) == 5          # idle shard
+
+
+def test_max_hop_staleness_bounded_by_refresh(setup):
+    """Ring hops carry stale cross-worker neighbors exactly like
+    DistriFusion halos: the worst staleness age of hopped K/V is bounded by
+    refresh_every - 1 under the "ring" policy."""
+    cfg, params, sched, x_T, cond = setup
+    for E in (2, 3):
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.4], m_base=8, m_warmup=2, seq_shards=2,
+            exchange="ring", exchange_refresh=E)
+        res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+        worst = seqpar.max_hop_staleness(res.trace.events)
+        assert 0 < worst <= E - 1, (E, worst)
+    # synthetic: a synchronous step resets the age
+    recs = ir.replay(TemporalPlan([16, 16], [1, 1], [False, False], 16, 4),
+                     [4, 4], comm_lib.get_exchange("ring", 4),
+                     seq_shards=seqpar.SeqPlan((2, 2), (4, 4)))
+    assert seqpar.max_hop_staleness(recs) == 3
+
+
+# ----------------------------------------------------------------------
+# emulated reference: bitwise parity + shard-count invariance
+# ----------------------------------------------------------------------
+
+def test_seq_shards_one_is_bitwise_emulated(setup):
+    """seq_shards=1 is the emulated backend, bit for bit."""
+    cfg, params, sched, x_T, cond = setup
+    base = StadiConfig.from_occupancies([0.0, 0.4], m_base=8, m_warmup=2,
+                                        exchange="stale_async")
+    ref = StadiPipeline(cfg, params, sched, base).generate(x_T, cond)
+    one = StadiPipeline(cfg, params, sched, dataclasses.replace(
+        base, seq_shards=1)).generate(x_T, cond)
+    np.testing.assert_array_equal(np.asarray(one.image),
+                                  np.asarray(ref.image))
+
+
+def test_trajectory_is_shard_count_invariant(setup):
+    """The sequence dimension repartitions WHERE attention runs, never WHAT
+    is computed: the emulated trajectory is identical for every shard
+    count (ring hops assemble exactly the context the dense read uses)."""
+    cfg, params, sched, x_T, cond = setup
+    imgs = {}
+    for S in (1, 2, 4):
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.2, 0.4, 0.5], m_base=8, m_warmup=2, seq_shards=S,
+            exchange="ring", exchange_refresh=2)
+        res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+        imgs[S] = np.asarray(res.image)
+        splan = res.trace.seq
+        if S == 1:
+            assert splan is None
+        else:
+            assert splan.n_shards == S
+            assert all(r.seq_hops == S - 1 for r in res.trace.events
+                       if not r.synchronous)
+    np.testing.assert_array_equal(imgs[1], imgs[2])
+    np.testing.assert_array_equal(imgs[1], imgs[4])
+
+
+# ----------------------------------------------------------------------
+# fail-fast paths (satellite)
+# ----------------------------------------------------------------------
+
+def test_plan_seq_rejects_bad_geometry(setup):
+    cfg, params, sched, _, _ = setup
+    config = StadiConfig.from_occupancies([0.0, 0.4], m_base=8, m_warmup=2,
+                                          seq_shards=2)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    plan = pipe.plan()
+    with pytest.raises(ValueError, match="seq_shards=3"):
+        plan_seq(plan, cfg, dataclasses.replace(config, seq_shards=3))
+    # pipeline-level validation mirrors the planner's
+    with pytest.raises(ValueError, match="seq_shards"):
+        StadiPipeline(cfg, params, sched,
+                      dataclasses.replace(config, seq_shards=3))
+    with pytest.raises(ValueError, match="1 head per shard"):
+        StadiPipeline(cfg, params, sched, StadiConfig.from_occupancies(
+            [0.0] * 8, m_base=8, m_warmup=2, seq_shards=8))  # 4 heads
+    with pytest.raises(ValueError, match=">= 0"):
+        StadiPipeline(cfg, params, sched,
+                      dataclasses.replace(config, seq_shards=-1))
+    with pytest.raises(ValueError, match="rebalancing"):
+        StadiPipeline(cfg, params, sched,
+                      dataclasses.replace(config, rebalance_every=2))
+
+
+def test_check_backend_can_run_rejects_seq_mismatch(setup):
+    cfg, params, sched, _, _ = setup
+    config = StadiConfig.from_occupancies([0.0, 0.4], m_base=8, m_warmup=2)
+    plan = StadiPipeline(cfg, params, sched, config).plan()
+    # a seq-sharded run needs a seq backend
+    with pytest.raises(ValueError, match="seq backend"):
+        check_backend_can_run(plan, dataclasses.replace(
+            config, seq_shards=2, backend="spmd"))
+    with pytest.raises(ValueError, match="seq backend"):
+        check_backend_can_run(plan, dataclasses.replace(
+            config, seq_shards=2, backend="pipefuse"))
+    for backend in SEQ_BACKENDS:
+        if backend == "spmd_seq":
+            continue
+        check_backend_can_run(plan, dataclasses.replace(
+            config, seq_shards=2, backend=backend))        # fine
+    # spmd_seq without a seq-sharded plan is a config error, not a silent
+    # fall-through to plain spmd
+    with pytest.raises(ValueError, match="seq-sharded plan"):
+        check_backend_can_run(plan, dataclasses.replace(
+            config, backend="spmd_seq"))
+    # uneven speed-proportional heads are the cost model's planning view;
+    # the all-to-all needs the even scatter
+    uneven = dataclasses.replace(plan,
+                                 seq=seqpar.SeqPlan((2, 1, 1), (3, 3, 2)))
+    with pytest.raises(ValueError, match="even head scatter"):
+        check_backend_can_run(uneven, dataclasses.replace(
+            config, seq_shards=3, backend="spmd_seq"))
+
+
+def test_registry_errors_name_seq_entries():
+    with pytest.raises(KeyError, match="spmd_seq"):
+        get_executor("no-such-backend")
+    with pytest.raises(KeyError, match="stadi_seq"):
+        get_planner("no-such-planner")
+
+
+def test_spmd_seq_rejects_indivisible_heads(setup):
+    from repro.core import spmd
+    cfg, params, sched, x_T, cond = setup                  # 4 heads
+    plan = TemporalPlan([8, 8], [1, 1], [False, False], 8, 2)
+    with pytest.raises(ValueError, match="divisible"):
+        spmd.run_spmd_seq(params, cfg, sched, x_T, cond, plan, [4, 4],
+                          seq=seqpar.SeqPlan((2, 1, 1), (3, 3, 2)))
+
+
+# ----------------------------------------------------------------------
+# stadi_seq joint planner + ring-contention cost model
+# ----------------------------------------------------------------------
+
+def _knobs(**kw):
+    defaults = dict(occupancies=[0.0, 0.2, 0.4, 0.5], m_base=16, m_warmup=4,
+                    planner="stadi_seq", seq_shards=0, n_heads=4,
+                    kv_row_bytes=4096, latent_bytes=16384,
+                    exchange_refresh=2)
+    occ = defaults.pop("occupancies")
+    defaults.update(kw)
+    return StadiConfig.from_occupancies(occ, **defaults)
+
+
+def test_stadi_seq_prefers_patch_when_compute_bound():
+    """With no attention term (t_ctx=0) head scattering buys nothing and
+    costs ring traffic: the planner returns the pure patch plan."""
+    knobs = _knobs(cost_model=CostModel(t_fixed=1e-3, t_row=5e-4, t_ctx=0.0,
+                                        link_bw=1e6, link_latency=1e-3))
+    plan = get_planner("stadi_seq")(knobs.speeds, knobs, 8)
+    assert plan.planner == "stadi_seq"
+    assert plan.seq is None
+
+
+def test_stadi_seq_shards_when_attention_bound():
+    """When the per-substep wall is the full-context K/V read (t_ctx
+    dominates), scattering heads divides it — a multi-shard candidate wins
+    despite the ring traffic."""
+    knobs = _knobs(cost_model=CostModel(t_fixed=1e-5, t_row=1e-5, t_ctx=5e-3,
+                                        link_bw=1e9, link_latency=1e-7))
+    plan = get_planner("stadi_seq")(knobs.speeds, knobs, 8)
+    assert plan.seq is not None and plan.seq.n_shards > 1
+    assert sum(plan.seq.heads) == 4
+    assert sum(plan.seq.segments) == 8
+    # grouped workers: patches has one slab per device GROUP
+    assert len(plan.patches) <= len(knobs.speeds) // plan.seq.n_shards
+
+
+def test_stadi_seq_pinning_and_infeasible():
+    knobs = _knobs(seq_shards=2,
+                   cost_model=CostModel(t_fixed=1e-3, t_row=5e-4))
+    plan = get_planner("stadi_seq")(knobs.speeds, knobs, 8)
+    assert plan.seq is not None and plan.seq.n_shards == 2   # pinned
+    one = get_planner("stadi_seq")(knobs.speeds, _knobs(seq_shards=1), 8)
+    assert one.seq is None                                   # pinned pure
+    with pytest.raises(ValueError, match="infeasible"):
+        get_planner("stadi_seq")(knobs.speeds, _knobs(seq_shards=8), 8)
+    with pytest.raises(ValueError, match="n_heads"):
+        get_planner("stadi_seq")([1.0, 1.0],
+                                 _knobs(seq_shards=2, n_heads=None), 8)
+
+
+def test_simulate_prices_ring_hops(setup):
+    """The simulate backend replays SeqShard rows: latency is finite,
+    grows with link latency (hops serialize), and at t_ctx-dominated
+    profiles the sharded plan models faster than the pure patch one."""
+    cfg, params, sched, x_T, cond = setup
+    bound = CostModel(t_fixed=1e-5, t_row=1e-5, t_ctx=2e-3)
+    lat = {}
+    for S in (1, 2):
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.2, 0.4, 0.5], m_base=8, m_warmup=2, backend="simulate",
+            seq_shards=S, exchange="ring", cost_model=bound)
+        res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+        assert res.image is None and res.latency_s > 0
+        lat[S] = res.latency_s
+    assert lat[2] < lat[1], lat
+    # ring hops pay link latency: a slower link costs more
+    slow = dataclasses.replace(bound, link_latency=5e-3)
+    config = StadiConfig.from_occupancies(
+        [0.0, 0.2, 0.4, 0.5], m_base=8, m_warmup=2, backend="simulate",
+        seq_shards=2, exchange="ring", cost_model=slow)
+    res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+    assert res.latency_s > lat[2]
+
+
+# ----------------------------------------------------------------------
+# serving: seq-sharded lanes batch by ring identity, bitwise unchanged
+# ----------------------------------------------------------------------
+
+def test_serving_seq_sharded_lanes_bitwise(setup):
+    from repro.serving import DiffusionServingEngine
+    cfg, params, sched, x_T, cond = setup
+    config = StadiConfig.from_occupancies(
+        [0.0, 0.2, 0.4, 0.5], m_base=8, m_warmup=2, seq_shards=2,
+        exchange="ring", exchange_refresh=2)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=2)
+    assert engine.seq is not None and engine.seq.n_shards == 2
+    req = engine.submit(x_T, 1)
+    engine.run_to_completion()
+    ref = pipe.generate(x_T, cond)
+    np.testing.assert_array_equal(np.asarray(req.image),
+                                  np.asarray(ref.image))
+    # the lane group key carries the ring-hop identity
+    assert any(info[3] == 1 for info in engine._interval_info.values())
+
+
+# ----------------------------------------------------------------------
+# spmd_seq mesh executor (subprocess, real host devices)
+# ----------------------------------------------------------------------
+
+def test_spmd_seq_matches_emulated():
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core import sampler as sampler_lib
+        from repro.core.pipeline import StadiConfig, StadiPipeline
+        from repro.models.diffusion import dit
+
+        cfg = get_config('tiny-dit').reduced()
+        params = dit.nondegenerate_params(
+            dit.init_params(jax.random.PRNGKey(0), cfg))
+        sched = sampler_lib.linear_schedule(T=1000)
+        x_T = jax.random.normal(jax.random.PRNGKey(1),
+                                (1, cfg.latent_size, cfg.latent_size,
+                                 cfg.channels))
+        cond = jnp.zeros((1,), jnp.int32)
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.4], m_base=8, m_warmup=2, backend='spmd_seq',
+            seq_shards=2, exchange='ring', exchange_refresh=2)
+        spmd = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+        emu = StadiPipeline(cfg, params, sched, dataclasses.replace(
+            config, backend='emulated')).generate(x_T, cond)
+        a, b = np.asarray(spmd.image), np.asarray(emu.image)
+        err = float(np.linalg.norm(a - b) / np.linalg.norm(b))
+        assert err < 1e-5, err
+        assert spmd.trace.seq is not None
+        assert spmd.trace.seq.n_shards == 2
+        print('SPMD_SEQ_OK', err)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=520, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "SPMD_SEQ_OK" in r.stdout
