@@ -1,0 +1,240 @@
+"""Load-generator harness for the diffusion serving engine (DESIGN.md §14).
+
+Drives :class:`~repro.serving.diffusion_engine.DiffusionServingEngine` with
+an open-loop arrival process in MODELED time (the engine's calibrated
+cluster clock, so the curve is about scheduling, not host wall jitter):
+
+  * Poisson and bursty-trace arrivals over a mixed request population —
+    three SLO tiers (gold = CFG-guided + tight SLO, silver = unguided +
+    relaxed SLO, bronze = unguided best-effort);
+  * admission control: a queue-depth cap rejects work at saturation
+    instead of letting latency diverge;
+  * priority scheduling + preemption: queued gold requests jump the line
+    and may evict an active bronze lane (``engine.preempt``) when every
+    slot is busy;
+  * an offered-load sweep producing the saturation-throughput curve
+    (delivered rps, latency percentiles, per-tier SLO hit-rates,
+    rejection/preemption counts vs offered rate);
+  * the persistent plan cache: the sweep is planned twice against one
+    cache directory — the second identical-workload sweep must be a 100%
+    plan-cache hit-rate with zero planner searches.
+
+Structured results go to ``results/load.json`` (uploaded as a CI artifact
+by the bench-smoke job); summary rows go to the shared CSV.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core import sampler as sampler_lib
+from repro.core.pipeline import StadiConfig, StadiPipeline
+from repro.models.diffusion import dit
+from repro.serving import DiffusionServingEngine
+
+OCC = [0.0, 0.55]                  # 2-tier cluster, temporal ratios {1, 2}
+SLOTS = 8
+QUEUE_CAP = 2 * SLOTS              # admission control: reject past this depth
+CACHE_DIR = os.path.join(common.RESULTS, "plan_cache")
+
+#: (name, arrival weight, cfg_scale, SLO multiple of the unloaded latency,
+#:  priority — lower preempts higher)
+CLASSES: List[Tuple[str, float, float, Optional[float], int]] = [
+    ("gold", 0.2, 3.0, 2.5, 0),
+    ("silver", 0.5, 0.0, 6.0, 1),
+    ("bronze", 0.3, 0.0, None, 2),
+]
+_PRIO = {name: prio for name, _, _, _, prio in CLASSES}
+
+
+def _arrivals(rate: float, n: int, rng: np.random.Generator,
+              trace: str = "poisson") -> List[Tuple[float, str]]:
+    """n (arrival_time, class_name) pairs, sorted. ``poisson`` draws i.i.d.
+    exponential gaps at ``rate``; ``bursty`` alternates 2.5x / 0.4x phases
+    (same mean rate) so the queue sees real bursts."""
+    names = [c[0] for c in CLASSES]
+    weights = np.asarray([c[1] for c in CLASSES])
+    kinds = rng.choice(names, size=n, p=weights / weights.sum())
+    t, out = 0.0, []
+    for i in range(n):
+        if trace == "bursty":
+            phase_rate = rate * (2.5 if (i // max(1, n // 6)) % 2 == 0 else 0.4)
+        else:
+            phase_rate = rate
+        t += rng.exponential(1.0 / phase_rate)
+        out.append((t, str(kinds[i])))
+    return out
+
+
+def _schedule(engine: DiffusionServingEngine, klass_of: Dict[int, str]) -> None:
+    """Harness-level policy on top of the engine's FIFO: priority-order the
+    queue, and let a queued gold request evict the youngest active bronze
+    lane when every slot is taken."""
+    engine.queue.sort(key=lambda r: _PRIO[klass_of[r.uid]])
+    if (engine.queue and _PRIO[klass_of[engine.queue[0].uid]] == 0
+            and len(engine.active) >= engine.slots):
+        bronze = [r for r in engine.active.values()
+                  if _PRIO[klass_of[r.uid]] == 2]
+        if bronze:
+            victim = min(bronze, key=lambda r: r.fine_step)  # least sunk work
+            engine.preempt(victim.uid)
+            engine.queue.sort(key=lambda r: _PRIO[klass_of[r.uid]])
+
+
+def _run_point(pipe, cfg, rate: float, n: int, base_lat: float, seed: int,
+               trace: str = "poisson") -> Dict:
+    """Open-loop load at ``rate`` req/s (modeled) until the queue drains."""
+    rng = np.random.default_rng(seed)
+    arrivals = _arrivals(rate, n, rng, trace)
+    engine = DiffusionServingEngine(pipe, slots=SLOTS)
+    klass_of: Dict[int, str] = {}
+    rejected = {c[0]: 0 for c in CLASSES}
+    slo_of = {name: (mult * base_lat if mult is not None else None)
+              for name, _, _, mult, _ in CLASSES}
+    scale_of = {name: scale for name, _, scale, _, _ in CLASSES}
+    i, peak_queue = 0, 0
+    while i < len(arrivals) or engine.queue or engine.active:
+        while i < len(arrivals) and arrivals[i][0] <= engine.modeled_clock_s:
+            t_arr, name = arrivals[i]
+            i += 1
+            if len(engine.queue) >= QUEUE_CAP:
+                rejected[name] += 1
+                continue
+            x = jax.random.normal(
+                jax.random.PRNGKey(seed * 100_003 + i),
+                (1, cfg.latent_size, cfg.latent_size, cfg.channels))
+            req = engine.submit(x, int(rng.integers(0, cfg.n_classes)),
+                                slo_s=slo_of[name],
+                                cfg_scale=scale_of[name])
+            klass_of[req.uid] = name
+        if not engine.queue and not engine.active:
+            engine.modeled_clock_s = max(engine.modeled_clock_s,
+                                         arrivals[i][0])  # idle-skip to next
+            continue
+        _schedule(engine, klass_of)
+        peak_queue = max(peak_queue, len(engine.queue))
+        engine.step()
+    done = engine.completed
+    lats = np.asarray([r.modeled_latency_s for r in done])
+    per_class = {}
+    for name, _, _, mult, _ in CLASSES:
+        rs = [r for r in done if klass_of[r.uid] == name]
+        met = [r.slo_met for r in rs if r.slo_met is not None]
+        per_class[name] = {
+            "completed": len(rs),
+            "rejected": rejected[name],
+            "latency_p50_s": (float(np.percentile(
+                [r.modeled_latency_s for r in rs], 50)) if rs else None),
+            "slo_met_frac": (sum(met) / len(met)) if met else None,
+        }
+    return {
+        "offered_rps": rate,
+        "trace": trace,
+        "n_offered": n,
+        "delivered_rps": len(done) / engine.modeled_clock_s,
+        "latency_p50_s": float(np.percentile(lats, 50)),
+        "latency_p95_s": float(np.percentile(lats, 95)),
+        "rejected": sum(rejected.values()),
+        "preemptions": engine.stats()["preemptions"],
+        "peak_queue": peak_queue,
+        "classes": per_class,
+    }
+
+
+def _sweep_plans(cfg, params, sched, config) -> Dict:
+    """Plan every sweep configuration through the shared cache directory and
+    return {planner_calls, cache stats} — sweep 2 of the bench is this call
+    hitting 100%."""
+    pipe = StadiPipeline(cfg, params, sched, config)
+    pipe.plan()
+    return {"planner_calls": pipe.planner_calls, **pipe.plan_cache.stats()}
+
+
+def run(emit: bool = True) -> Dict:
+    smoke = common.smoke()
+    m_base, m_warmup = (8, 2) if smoke else (16, 4)
+    n_per_point = 32 if smoke else 400
+    load_mults = [0.5, 2.0] if smoke else [0.25, 0.5, 1.0, 1.5, 2.0]
+    cfg = get_config("tiny-dit").reduced()
+    params = dit.init_params(jax.random.PRNGKey(0), cfg)
+    sched = sampler_lib.linear_schedule(T=1000)
+    cm = common.calibrate_cost_model(cfg, params)
+    shutil.rmtree(CACHE_DIR, ignore_errors=True)   # deterministic miss count
+    config = StadiConfig.from_occupancies(OCC, m_base=m_base,
+                                          m_warmup=m_warmup, cost_model=cm,
+                                          plan_cache_dir=CACHE_DIR)
+    pipe = StadiPipeline(cfg, params, sched, config)
+
+    # unloaded reference latency (sets the SLO tiers) + capacity estimate
+    probe = DiffusionServingEngine(pipe, slots=SLOTS)
+    for k in range(SLOTS):
+        probe.submit(jax.random.normal(
+            jax.random.PRNGKey(7 + k),
+            (1, cfg.latent_size, cfg.latent_size, cfg.channels)),
+            k % cfg.n_classes)
+    probe.run_to_completion()
+    base_lat = float(np.median([r.modeled_latency_s
+                                for r in probe.completed]))
+    capacity = len(probe.completed) / probe.modeled_clock_s
+
+    curve = [_run_point(pipe, cfg, mult * capacity, n_per_point, base_lat,
+                        seed=17 + k)
+             for k, mult in enumerate(load_mults)]
+    burst = _run_point(pipe, cfg, 0.75 * capacity, n_per_point, base_lat,
+                       seed=41, trace="bursty")
+    sweep1 = {"planner_calls": pipe.planner_calls, **pipe.plan_cache.stats()}
+
+    # -- second identical-workload sweep: pure plan-cache hits -------------
+    config2 = StadiConfig.from_occupancies(
+        OCC, m_base=m_base, m_warmup=m_warmup, cost_model=cm,
+        plan_cache_dir=CACHE_DIR)
+    sweep2 = _sweep_plans(cfg, params, sched, config2)
+    assert sweep2["planner_calls"] == 0 and sweep2["hit_rate"] == 1.0, sweep2
+
+    payload = {
+        "smoke": smoke,
+        "cluster": {"occupancies": OCC, "slots": SLOTS,
+                    "queue_cap": QUEUE_CAP,
+                    "capacity_rps_modeled": capacity,
+                    "base_latency_s": base_lat},
+        "classes": [{"name": n, "weight": w, "cfg_scale": s,
+                     "slo_x_base": m, "priority": p}
+                    for n, w, s, m, p in CLASSES],
+        "curve": curve,
+        "bursty": burst,
+        "plan_cache": {"sweep1": sweep1, "sweep2": sweep2},
+    }
+    common.write_json("load.json", payload)
+    if emit:
+        for row in curve:
+            common.emit(f"load/x{row['offered_rps'] / capacity:.2f}",
+                        row["latency_p95_s"] * 1e6,
+                        f"delivered={row['delivered_rps']:.2f}rps "
+                        f"rej={row['rejected']} pre={row['preemptions']}")
+        common.emit("load/cache_sweep2", 0.0,
+                    f"hit_rate={sweep2['hit_rate']:.2f} "
+                    f"planner_calls={sweep2['planner_calls']}")
+    return payload
+
+
+def main():
+    out = run()
+    sat = out["curve"][-1]
+    print(f"# saturation: offered {sat['offered_rps']:.2f} rps -> delivered "
+          f"{sat['delivered_rps']:.2f} rps, p95 {sat['latency_p95_s']:.3f}s, "
+          f"{sat['rejected']} rejected, {sat['preemptions']} preempted; "
+          f"second sweep plan-cache hit-rate "
+          f"{out['plan_cache']['sweep2']['hit_rate']:.0%}")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["STADI_BENCH_SMOKE"] = "1"
+    main()

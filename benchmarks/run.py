@@ -28,6 +28,7 @@ REGISTRY = [
     ("seqpar", "benchmarks.bench_seqpar", "sequence-parallel attention, DESIGN §13"),
     ("roofline", "benchmarks.bench_roofline", "deliverable g"),
     ("serving", "benchmarks.bench_serving", "continuous batching, DESIGN §9"),
+    ("load", "benchmarks.bench_load", "load generator + plan cache, DESIGN §14"),
 ]
 
 

@@ -67,7 +67,7 @@ def main():
     from repro.configs import get_config
     from repro.core import patch_parallel as pp
     from repro.core import sampler as sampler_lib
-    from repro.core.pipeline import StadiConfig, StadiPipeline, plan_guidance
+    from repro.core.pipeline import StadiConfig, StadiPipeline
     from repro.models.diffusion import dit
 
     cfg = get_config("tiny-dit").reduced()
@@ -88,7 +88,7 @@ def main():
         guidance=args.guidance)
     pipe = StadiPipeline(cfg, params, sched, config)
     plan = pipe.plan()
-    gp = plan_guidance(plan, config)
+    gp = plan.guidance                   # plan() populates every axis
     print(f"cluster speeds {config.speeds} -> guidance mode {gp.mode!r} "
           f"(scale {gp.scale})")
     if gp.mode != "fused":

@@ -60,7 +60,7 @@ def main():
     from repro.configs import get_config
     from repro.core import sampler as sampler_lib
     from repro.core import seqpar
-    from repro.core.pipeline import StadiConfig, StadiPipeline, plan_seq
+    from repro.core.pipeline import StadiConfig, StadiPipeline
     from repro.core.simulate import CostModel
     from repro.models.diffusion import dit
 
@@ -113,7 +113,7 @@ def main():
         exchange="ring", exchange_refresh=4)
     pipe = StadiPipeline(cfg, params, sched, run_cfg)
     plan = pipe.plan()
-    splan = plan_seq(plan, cfg, run_cfg)
+    splan = plan.seq                     # plan() populates every axis
     print(f"\ntiny-dit run: planner chose seq="
           f"{splan and (list(splan.heads), list(splan.segments))} over "
           f"patches {plan.patches}")

@@ -121,3 +121,26 @@ class OnlineProfiler:
     def drift(self, init_speeds: Sequence[float]) -> float:
         return max(abs(s - s0) / max(s0, 1e-9)
                    for s, s0 in zip(self.speeds, init_speeds))
+
+
+def feed_profiler(profiler: OnlineProfiler, cm, substeps: Sequence[int],
+                  patches: Sequence[int], true_speeds: Sequence[float],
+                  device_map: Optional[Sequence[Sequence[int]]] = None
+                  ) -> None:
+    """Synthesize one interval's measured per-device latencies and feed them
+    through the profiler's EWMA — the single-host emulation of per-interval
+    timers used by both the pipeline rebalance hook and the serving engine.
+
+    Worker i did ``substeps[i]`` substeps over ``patches[i]`` rows; its
+    nominal work (seconds at v=1, via the cost model) divided by the latency
+    at the ground-truth speed makes ``observed_v`` converge on that speed.
+    device_map[i] lists the devices worker i occupies (a cond/uncond pair
+    under split guidance); default is the identity worker->device mapping.
+    """
+    for i, (sub, rows) in enumerate(zip(substeps, patches)):
+        if sub == 0 or rows == 0:
+            continue
+        work = sub * (cm.t_fixed + cm.t_row * rows)
+        devices = (device_map[i] if device_map is not None else (i,))
+        for d in devices:
+            profiler.update(d, work, work / max(true_speeds[d], 1e-9))

@@ -1,5 +1,5 @@
 """Unified STADI pipeline: one config object, pluggable planners and
-execution backends (DESIGN.md §8).
+execution backends (DESIGN.md §8, §14).
 
     cfg    = get_config("tiny-dit").reduced()
     params = dit.init_params(jax.random.PRNGKey(0), cfg)
@@ -16,6 +16,22 @@ Planners live in :mod:`repro.core.planners`; backends are registered here:
     "spmd"      real shard_map execution over jax.devices() (core/spmd)
     "simulate"  trace-only latency modeling (no numerics; needs a CostModel)
 
+``StadiPipeline.plan()`` is the ONE planning entrypoint: it runs the
+configured planner and returns a fully-populated five-axis
+:class:`~repro.core.planners.ExecutionPlan` (steps x patches x stages x
+guidance x seq) in a single pass — the ``--num-stages`` / ``--cfg-scale`` /
+``--seq-shards`` config wiring is resolved onto the plan there, not at
+execution time. The historical ``plan_stages`` / ``plan_guidance`` /
+``plan_seq`` free functions survive as deprecation shims. With
+``plan_cache_dir`` set, ``plan()`` consults a persistent
+:class:`~repro.serving.plan_cache.PlanCache` before any planner search
+(DESIGN.md §14).
+
+Backends declare what they can execute at registration time —
+``register_executor(name, supports={...}, requires={...})`` — and
+:func:`check_backend_can_run` rejects plan/backend mismatches uniformly
+from that declaration, so a new executor cannot silently skip gating.
+
 ``rebalance_every=k`` turns on online rebalancing (emulated backend): every k
 adaptive intervals the measured per-device interval latencies are fed through
 :class:`repro.core.hetero.OnlineProfiler`, and when the EWMA speed estimate
@@ -27,6 +43,9 @@ speeds the run actually experiences, e.g. after an occupancy change).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import inspect
+import warnings
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 from repro.configs.diffusion import DiTConfig
@@ -99,6 +118,11 @@ class StadiConfig:
     rebalance_every: int = 0             # adaptive intervals between checks; 0 = off
     rebalance_threshold: float = 0.2     # max relative speed drift tolerated
     profiler_alpha: float = 0.5          # EWMA weight for OnlineProfiler
+    # persistent plan cache (DESIGN.md §14): directory for serialized
+    # planner outputs keyed by (cluster signature, model hash, workload
+    # shape). None = no cache; StadiPipeline.plan() consults it before any
+    # planner search and OnlineProfiler drift invalidates stale entries.
+    plan_cache_dir: Optional[str] = None
 
     @classmethod
     def from_occupancies(cls, occupancies: Sequence[float],
@@ -150,22 +174,86 @@ class Executor(Protocol):
         ...
 
 
-EXECUTORS: Dict[str, Executor] = {}
+# ----------------------------------------------------------------------
+# executor registry: declarative backend capabilities (DESIGN.md §14)
+# ----------------------------------------------------------------------
+
+#: the ONE normalized executor call signature — StadiPipeline invokes every
+#: backend strictly by these keywords, and register_executor rejects any
+#: executor whose signature spells them differently (the historical
+#: per-backend kwarg drift cannot re-enter the registry)
+EXECUTOR_KWARGS = ("params", "model_cfg", "sched", "x_T", "cond", "plan",
+                   "config", "interval_hook")
+
+#: every feature token a plan can demand from a backend
+PLAN_FEATURES = ("stages", "guidance.fused", "guidance.split",
+                 "guidance.interleaved", "seq", "seq.uneven")
+
+#: valid ``requires=`` tokens: a concrete feature, or a bare axis prefix
+#: ("guidance", "seq") satisfied by any mode of that axis
+_REQUIRE_PREFIXES = ("guidance", "seq", "stages")
 
 
-def register_executor(name: str) -> Callable[[Executor], Executor]:
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One registered executor plus its declared capabilities.
+
+    supports: feature tokens (from :data:`PLAN_FEATURES`) the backend can
+        execute; a plan demanding anything else is rejected uniformly by
+        :func:`check_backend_can_run`.
+    requires: tokens the backend NEEDS a plan to demand (e.g. the
+        "spmd_guidance" mesh is meaningless without a guided plan).
+    """
+    fn: Executor
+    supports: frozenset
+    requires: frozenset
+
+
+EXECUTORS: Dict[str, BackendSpec] = {}
+
+
+def register_executor(name: str, *, supports: Sequence[str] = (),
+                      requires: Sequence[str] = ()
+                      ) -> Callable[[Executor], Executor]:
+    supports_f = frozenset(supports)
+    requires_f = frozenset(requires)
+    bad = (supports_f - set(PLAN_FEATURES)) | \
+        (requires_f - set(PLAN_FEATURES) - set(_REQUIRE_PREFIXES))
+    if bad:
+        raise ValueError(f"executor {name!r} declares unknown capability "
+                         f"tokens {sorted(bad)}; known: {PLAN_FEATURES}")
+
     def deco(fn: Executor) -> Executor:
-        EXECUTORS[name] = fn
+        sig = tuple(inspect.signature(fn).parameters)
+        if sig != EXECUTOR_KWARGS:
+            raise TypeError(
+                f"executor {name!r} must accept exactly the normalized "
+                f"kwargs {EXECUTOR_KWARGS}, got {sig}")
+        EXECUTORS[name] = BackendSpec(fn, supports_f, requires_f)
         return fn
     return deco
 
 
-def get_executor(name: str) -> Executor:
+def get_executor_spec(name: str) -> BackendSpec:
     try:
         return EXECUTORS[name]
     except KeyError:
         raise KeyError(f"unknown backend {name!r}; registered: "
                        f"{sorted(EXECUTORS)}") from None
+
+
+def get_executor(name: str) -> Executor:
+    return get_executor_spec(name).fn
+
+
+def backends_supporting(feature: str) -> Tuple[str, ...]:
+    """All registered backends whose declaration covers ``feature`` (a
+    token from :data:`PLAN_FEATURES`, or a bare axis prefix matching any
+    mode, e.g. "guidance")."""
+    def covers(spec: BackendSpec) -> bool:
+        return any(f == feature or f.startswith(feature + ".")
+                   for f in spec.supports)
+    return tuple(sorted(n for n, s in EXECUTORS.items() if covers(s)))
 
 
 # ----------------------------------------------------------------------
@@ -206,107 +294,16 @@ def get_stepper_factory(name: str):
             "numerics to serve)") from None
 
 
-@register_executor("emulated")
-def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
-                      interval_hook=None):
-    res = pp.run_schedule(params, model_cfg, sched, x_T, cond,
-                          plan.temporal, plan.patches,
-                          interval_hook=interval_hook,
-                          exchange=config.exchange,
-                          exchange_refresh=config.exchange_refresh,
-                          guidance=plan_guidance(plan, config),
-                          seq=plan_seq(plan, model_cfg, config))
-    return res.image, res.trace
+# ----------------------------------------------------------------------
+# plan-axis resolution: config knobs -> plan fields (DESIGN.md §14)
+# ----------------------------------------------------------------------
+#
+# StadiPipeline.plan() populates all five axes onto the ExecutionPlan in
+# one pass via these private resolvers; executors read plan.stages /
+# plan.guidance / plan.seq directly. The historical plan_stages /
+# plan_guidance / plan_seq free functions below are deprecation shims.
 
-
-@register_executor("spmd")
-def spmd_executor(params, model_cfg, sched, x_T, cond, plan, config,
-                  interval_hook=None):
-    # interval_hook is never passed here: generate() rejects rebalancing on
-    # non-emulated backends (the shard_map program is static)
-    from repro.core import spmd
-    gplan = plan_guidance(plan, config)
-    img = spmd.run_spmd(params, model_cfg, sched, x_T, cond,
-                        plan.temporal, plan.patches,
-                        exchange=config.exchange,
-                        exchange_refresh=config.exchange_refresh,
-                        guidance=gplan)
-    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
-                            batch=int(x_T.shape[0]),
-                            exchange=config.exchange,
-                            exchange_refresh=config.exchange_refresh,
-                            guidance=gplan)
-    return img, trace
-
-
-@register_executor("spmd_guidance")
-def spmd_guidance_executor(params, model_cfg, sched, x_T, cond, plan,
-                           config, interval_hook=None):
-    """Split-CFG over a ("guide", "dev") shard_map mesh (DESIGN.md §12):
-    axis "guide" carries the cond/uncond branch groups, axis "dev" the
-    patch workers of each group; needs 2 * n_pairs devices."""
-    from repro.core import spmd
-    gplan = plan_guidance(plan, config)
-    img = spmd.run_spmd_guidance(params, model_cfg, sched, x_T, cond,
-                                 plan.temporal, plan.patches, gplan,
-                                 exchange=config.exchange,
-                                 exchange_refresh=config.exchange_refresh)
-    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
-                            batch=int(x_T.shape[0]),
-                            exchange=config.exchange,
-                            exchange_refresh=config.exchange_refresh,
-                            guidance=gplan)
-    return img, trace
-
-
-@register_executor("simulate")
-def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
-                      interval_hook=None):
-    batch = int(x_T.shape[0]) if x_T is not None else 1
-    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
-                            batch=batch, exchange=config.exchange,
-                            exchange_refresh=config.exchange_refresh,
-                            stages=plan_stages(plan, model_cfg, config),
-                            guidance=plan_guidance(plan, config),
-                            seq=plan_seq(plan, model_cfg, config))
-    return None, trace
-
-
-@register_executor("spmd_seq")
-def spmd_seq_executor(params, model_cfg, sched, x_T, cond, plan, config,
-                      interval_hook=None):
-    """Sequence-parallel SPMD over a ("seq", "dev") shard_map mesh
-    (DESIGN.md §13): axis "seq" carries the Ulysses/ring members of every
-    patch-worker group; needs seq_shards * n_workers devices."""
-    from repro.core import spmd
-    splan = plan_seq(plan, model_cfg, config)
-    if splan is None:
-        raise ValueError(
-            "backend 'spmd_seq' runs the sequence mesh and needs a "
-            "seq-sharded plan: set seq_shards > 1, or planner='stadi_seq' "
-            "with seq_shards=0 (auto); an attention-unsharded plan runs on "
-            "the plain 'spmd' backend")
-    if plan_guidance(plan, config) is not None:
-        raise ValueError("guided generation is not implemented on the "
-                         "'spmd_seq' backend; the 'emulated' backend runs "
-                         "seq x CFG numerics")
-    img = spmd.run_spmd_seq(params, model_cfg, sched, x_T, cond,
-                            plan.temporal, plan.patches, splan,
-                            exchange=config.exchange,
-                            exchange_refresh=config.exchange_refresh)
-    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
-                            batch=int(x_T.shape[0]),
-                            exchange=config.exchange,
-                            exchange_refresh=config.exchange_refresh,
-                            seq=splan)
-    return img, trace
-
-
-#: backends that can execute a depth-partitioned (staged) plan
-STAGED_BACKENDS = ("pipefuse", "spmd_pipefuse", "simulate")
-
-
-def plan_stages(plan, model_cfg, config) -> Optional[List[int]]:
+def _resolve_stages(plan, model_cfg, config) -> Optional[List[int]]:
     """The stage split a staged executor should run: the plan's own (from
     the stadi_pipefuse planner) or, for plain planners, a speed-
     proportional split of config.num_stages (the --num-stages wiring)."""
@@ -323,11 +320,7 @@ def plan_stages(plan, model_cfg, config) -> Optional[List[int]]:
     return hetero.stage_partition(model_cfg.n_layers, chain)
 
 
-#: backends that can execute a sequence-sharded plan (DESIGN.md §13)
-SEQ_BACKENDS = ("emulated", "simulate", "spmd_seq")
-
-
-def plan_seq(plan, model_cfg, config):
+def _resolve_seq(plan, model_cfg, config):
     """The SeqPlan an executor should run: the plan's own (from the
     stadi_seq planner) or, for plain planners with ``seq_shards > 1``, a
     uniform-shard plan (the --seq-shards wiring). None = attention-
@@ -352,13 +345,7 @@ def plan_seq(plan, model_cfg, config):
                                 S)
 
 
-#: backends that can execute a guided (classifier-free guidance) plan; the
-#: mapping is mode-dependent — see check_backend_can_run
-GUIDED_BACKENDS = ("emulated", "pipefuse", "simulate", "spmd",
-                   "spmd_guidance")
-
-
-def plan_guidance(plan, config):
+def _resolve_guidance(plan, config):
     """The GuidancePlan an executor should run: the plan's own (from the
     stadi_guidance planner) or, for plain planners with ``cfg_scale`` set,
     a fused-placement plan (the --cfg-scale wiring). None = unguided."""
@@ -377,86 +364,268 @@ def plan_guidance(plan, config):
     return GuidancePlan("fused", config.cfg_scale)
 
 
-def check_backend_can_run(plan, config) -> None:
-    """A staged plan silently degrades to whole-model patch parallelism on
-    a non-staged backend (while staged costs/placements get reported), so
-    fail fast — reachable via planner='stadi_pipefuse', num_stages=0
-    (auto) picking a pipeline on backend='emulated'."""
-    if (plan.stages is not None and len(plan.stages) > 1
-            and config.backend not in STAGED_BACKENDS):
-        raise ValueError(
-            f"the planned stage split {plan.stages} needs a staged backend "
-            f"({sorted(STAGED_BACKENDS)}), not {config.backend!r}; pin "
-            "num_stages=1 to force pure patch parallelism")
-    gplan = plan_guidance(plan, config)
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; {new}", DeprecationWarning,
+                  stacklevel=3)
+
+
+def plan_stages(plan, model_cfg, config) -> Optional[List[int]]:
+    """Deprecated: ``StadiPipeline.plan()`` populates ``plan.stages``."""
+    _deprecated("plan_stages()",
+                "StadiPipeline.plan() returns a fully-populated plan — "
+                "read plan.stages")
+    return _resolve_stages(plan, model_cfg, config)
+
+
+def plan_seq(plan, model_cfg, config):
+    """Deprecated: ``StadiPipeline.plan()`` populates ``plan.seq``."""
+    _deprecated("plan_seq()",
+                "StadiPipeline.plan() returns a fully-populated plan — "
+                "read plan.seq")
+    return _resolve_seq(plan, model_cfg, config)
+
+
+def plan_guidance(plan, config):
+    """Deprecated: ``StadiPipeline.plan()`` populates ``plan.guidance``."""
+    _deprecated("plan_guidance()",
+                "StadiPipeline.plan() returns a fully-populated plan — "
+                "read plan.guidance")
+    return _resolve_guidance(plan, config)
+
+
+# ----------------------------------------------------------------------
+# uniform plan/backend gating from the capability declarations
+# ----------------------------------------------------------------------
+
+def required_features(plan, config) -> Tuple[List[str], Optional[object]]:
+    """Feature tokens a (plan, config) pair demands of a backend, in the
+    deterministic check order (stages, guidance, seq), plus the resolved
+    GuidancePlan (None = unguided)."""
+    feats: List[str] = []
+    if plan.stages is not None and len(plan.stages) > 1:
+        feats.append("stages")
+    gplan = _resolve_guidance(plan, config)
     if gplan is not None:
-        if config.backend not in GUIDED_BACKENDS:
-            raise ValueError(
-                f"guided generation (cfg_scale={gplan.scale}) needs a "
-                f"guided backend ({sorted(GUIDED_BACKENDS)}), not "
-                f"{config.backend!r}")
-        if gplan.mode != "fused" and config.backend == "spmd":
-            raise ValueError(
-                f"{gplan.mode!r} guidance on SPMD needs the guidance mesh "
-                "axis: use backend='spmd_guidance'")
-        if gplan.mode == "fused" and config.backend == "spmd_guidance":
-            raise ValueError(
-                "backend 'spmd_guidance' runs the split guidance mesh; "
-                "fused CFG runs on the plain 'spmd' backend")
-        if gplan.mode == "interleaved" and config.backend == "spmd_guidance":
-            raise ValueError(
-                "interleaved uncond reuse is not implemented on SPMD; use "
-                "the 'emulated' or 'pipefuse' backend")
-    elif config.backend == "spmd_guidance":
-        raise ValueError("backend 'spmd_guidance' needs a guided plan: set "
-                         "cfg_scale > 0 with planner='stadi_guidance' and "
-                         "guidance='split'")
+        feats.append("guidance." + gplan.mode)
     seq_sharded = ((plan.seq is not None and len(plan.seq.segments) > 1)
                    or config.seq_shards > 1)
-    if seq_sharded and config.backend not in SEQ_BACKENDS:
-        raise ValueError(
-            f"a sequence-sharded plan (seq_shards > 1) needs a seq backend "
-            f"({sorted(SEQ_BACKENDS)}), not {config.backend!r}; pin "
-            "seq_shards=1 to force attention-unsharded execution")
-    if config.backend == "spmd_seq":
-        if not seq_sharded:
-            raise ValueError(
-                "backend 'spmd_seq' runs the sequence mesh and needs a "
-                "seq-sharded plan: set seq_shards > 1, or planner="
-                "'stadi_seq' with seq_shards=0 (auto); an attention-"
-                "unsharded plan runs on the plain 'spmd' backend")
+    if seq_sharded:
+        feats.append("seq")
         if (plan.seq is not None and len(plan.seq.segments) > 1
                 and not plan.seq.even_heads()):
-            raise ValueError(
-                f"spmd_seq needs an even head scatter for the all-to-all "
-                f"(got {list(plan.seq.heads)}); speed-proportional uneven "
-                "heads are the cost model's planning view — run uneven "
-                "plans on the 'emulated' backend, or pin seq_shards to a "
-                "divisor of n_heads")
+            feats.append("seq.uneven")
+    return feats, gplan
 
 
-@register_executor("pipefuse")
+#: per-(backend, feature) rejection messages more specific than the
+#: generic capability complaint — kept at least as pointed as the historic
+#: if-chain's (tested); format fields: mode, scale, backend, stages, heads
+_BACKEND_FEATURE_ERRORS: Dict[Tuple[str, str], str] = {
+    ("spmd", "guidance.split"):
+        "{mode!r} guidance on SPMD needs the guidance mesh axis: use "
+        "backend='spmd_guidance'",
+    ("spmd", "guidance.interleaved"):
+        "{mode!r} guidance on SPMD needs the guidance mesh axis: use "
+        "backend='spmd_guidance'",
+    ("spmd_guidance", "guidance.fused"):
+        "backend 'spmd_guidance' runs the split guidance mesh; fused CFG "
+        "runs on the plain 'spmd' backend",
+    ("spmd_guidance", "guidance.interleaved"):
+        "interleaved uncond reuse is not implemented on SPMD; use the "
+        "'emulated' or 'pipefuse' backend",
+    ("spmd_seq", "seq.uneven"):
+        "spmd_seq needs an even head scatter for the all-to-all (got "
+        "{heads}); speed-proportional uneven heads are the cost model's "
+        "planning view — run uneven plans on the 'emulated' backend, or "
+        "pin seq_shards to a divisor of n_heads",
+}
+
+#: messages for a backend whose ``requires`` declaration is unmet
+_BACKEND_REQUIRES_ERRORS: Dict[Tuple[str, str], str] = {
+    ("spmd_guidance", "guidance"):
+        "backend 'spmd_guidance' needs a guided plan: set cfg_scale > 0 "
+        "with planner='stadi_guidance' and guidance='split'",
+    ("spmd_seq", "seq"):
+        "backend 'spmd_seq' runs the sequence mesh and needs a "
+        "seq-sharded plan: set seq_shards > 1, or planner='stadi_seq' "
+        "with seq_shards=0 (auto); an attention-unsharded plan runs on "
+        "the plain 'spmd' backend",
+}
+
+
+def _reject_message(backend: str, feature: str, plan, gplan) -> str:
+    heads = list(plan.seq.heads) if plan.seq is not None else None
+    override = _BACKEND_FEATURE_ERRORS.get((backend, feature))
+    if override is not None:
+        return override.format(
+            mode=getattr(gplan, "mode", None),
+            scale=getattr(gplan, "scale", None),
+            backend=backend, stages=plan.stages, heads=heads)
+    if feature == "stages":
+        return (f"the planned stage split {plan.stages} needs a staged "
+                f"backend ({list(backends_supporting('stages'))}), not "
+                f"{backend!r}; pin num_stages=1 to force pure patch "
+                "parallelism")
+    if feature.startswith("guidance."):
+        return (f"guided generation (cfg_scale={gplan.scale}) needs a "
+                f"guided backend ({list(backends_supporting('guidance'))}), "
+                f"not {backend!r}")
+    if feature == "seq":
+        return (f"a sequence-sharded plan (seq_shards > 1) needs a seq "
+                f"backend ({list(backends_supporting('seq'))}), not "
+                f"{backend!r}; pin seq_shards=1 to force attention-"
+                "unsharded execution")
+    return (f"{backend!r} does not support the planned {feature!r} "
+            f"(supported by {list(backends_supporting(feature))})")
+
+
+def check_backend_can_run(plan, config) -> None:
+    """Reject plan/backend mismatches from the capability declarations.
+
+    A staged plan silently degrades to whole-model patch parallelism on a
+    non-staged backend (while staged costs/placements get reported), so
+    fail fast — reachable via planner='stadi_pipefuse', num_stages=0
+    (auto) picking a pipeline on backend='emulated'. Every demanded
+    feature must be in the backend's ``supports``; every backend
+    ``requires`` token must be demanded by the plan.
+    """
+    spec = get_executor_spec(config.backend)
+    feats, gplan = required_features(plan, config)
+    for f in feats:
+        if f not in spec.supports:
+            raise ValueError(_reject_message(config.backend, f, plan, gplan))
+    for req in spec.requires:
+        if not any(f == req or f.startswith(req + ".") for f in feats):
+            msg = _BACKEND_REQUIRES_ERRORS.get((config.backend, req))
+            raise ValueError(msg or f"backend {config.backend!r} requires "
+                             f"a plan demanding {req!r}")
+
+
+# ----------------------------------------------------------------------
+# registered executors
+# ----------------------------------------------------------------------
+
+@register_executor("emulated", supports={"guidance.fused", "guidance.split",
+                                         "guidance.interleaved", "seq",
+                                         "seq.uneven"})
+def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                      interval_hook=None):
+    res = pp.run_schedule(params, model_cfg, sched, x_T, cond,
+                          plan.temporal, plan.patches,
+                          interval_hook=interval_hook,
+                          exchange=config.exchange,
+                          exchange_refresh=config.exchange_refresh,
+                          guidance=plan.guidance,
+                          seq=plan.seq)
+    return res.image, res.trace
+
+
+@register_executor("spmd", supports={"guidance.fused"})
+def spmd_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                  interval_hook=None):
+    # interval_hook is never passed here: generate() rejects rebalancing on
+    # non-emulated backends (the shard_map program is static)
+    from repro.core import spmd
+    img = spmd.run_spmd(params, model_cfg, sched, x_T, cond,
+                        plan.temporal, plan.patches,
+                        exchange=config.exchange,
+                        exchange_refresh=config.exchange_refresh,
+                        guidance=plan.guidance)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=int(x_T.shape[0]),
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh,
+                            guidance=plan.guidance)
+    return img, trace
+
+
+@register_executor("spmd_guidance", supports={"guidance.split"},
+                   requires={"guidance"})
+def spmd_guidance_executor(params, model_cfg, sched, x_T, cond, plan,
+                           config, interval_hook=None):
+    """Split-CFG over a ("guide", "dev") shard_map mesh (DESIGN.md §12):
+    axis "guide" carries the cond/uncond branch groups, axis "dev" the
+    patch workers of each group; needs 2 * n_pairs devices."""
+    from repro.core import spmd
+    img = spmd.run_spmd_guidance(params, model_cfg, sched, x_T, cond,
+                                 plan.temporal, plan.patches, plan.guidance,
+                                 exchange=config.exchange,
+                                 exchange_refresh=config.exchange_refresh)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=int(x_T.shape[0]),
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh,
+                            guidance=plan.guidance)
+    return img, trace
+
+
+@register_executor("simulate", supports=PLAN_FEATURES)
+def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                      interval_hook=None):
+    batch = int(x_T.shape[0]) if x_T is not None else 1
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=batch, exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh,
+                            stages=plan.stages,
+                            guidance=plan.guidance,
+                            seq=plan.seq)
+    return None, trace
+
+
+@register_executor("spmd_seq", supports={"seq"}, requires={"seq"})
+def spmd_seq_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                      interval_hook=None):
+    """Sequence-parallel SPMD over a ("seq", "dev") shard_map mesh
+    (DESIGN.md §13): axis "seq" carries the Ulysses/ring members of every
+    patch-worker group; needs seq_shards * n_workers devices."""
+    from repro.core import spmd
+    splan = plan.seq
+    if splan is None:
+        raise ValueError(
+            "backend 'spmd_seq' runs the sequence mesh and needs a "
+            "seq-sharded plan: set seq_shards > 1, or planner='stadi_seq' "
+            "with seq_shards=0 (auto); an attention-unsharded plan runs on "
+            "the plain 'spmd' backend")
+    if plan.guidance is not None:
+        raise ValueError("guided generation is not implemented on the "
+                         "'spmd_seq' backend; the 'emulated' backend runs "
+                         "seq x CFG numerics")
+    img = spmd.run_spmd_seq(params, model_cfg, sched, x_T, cond,
+                            plan.temporal, plan.patches, splan,
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=int(x_T.shape[0]),
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh,
+                            seq=splan)
+    return img, trace
+
+
+@register_executor("pipefuse", supports={"stages", "guidance.fused",
+                                         "guidance.split",
+                                         "guidance.interleaved"})
 def pipefuse_executor(params, model_cfg, sched, x_T, cond, plan, config,
                       interval_hook=None):
     """Displaced patch pipeline (DESIGN.md §11): emulated interpreter;
     bitwise-identical to "emulated" when the stage count is 1."""
     from repro.core import pipefuse
-    stages = plan_stages(plan, model_cfg, config) or [model_cfg.n_layers]
+    stages = plan.stages or [model_cfg.n_layers]
     res = pipefuse.run_pipefuse(params, model_cfg, sched, x_T, cond,
                                 plan.temporal, plan.patches, stages,
                                 exchange=config.exchange,
                                 exchange_refresh=config.exchange_refresh,
                                 interval_hook=interval_hook,
-                                guidance=plan_guidance(plan, config))
+                                guidance=plan.guidance)
     return res.image, res.trace
 
 
-@register_executor("spmd_pipefuse")
+@register_executor("spmd_pipefuse", supports={"stages"})
 def spmd_pipefuse_executor(params, model_cfg, sched, x_T, cond, plan,
                            config, interval_hook=None):
     """Real shard_map stage chain over jax.devices() (devices = stages)."""
     from repro.core import spmd
-    stages = plan_stages(plan, model_cfg, config) or [model_cfg.n_layers]
+    stages = plan.stages or [model_cfg.n_layers]
     img = spmd.run_spmd_pipefuse(params, model_cfg, sched, x_T, cond,
                                  plan.temporal, plan.patches, stages,
                                  exchange=config.exchange,
@@ -469,11 +638,25 @@ def spmd_pipefuse_executor(params, model_cfg, sched, x_T, cond, plan,
     return img, trace
 
 
+#: backends that can execute a depth-partitioned (staged) plan — derived
+#: from the capability declarations, kept as module names for back-compat
+STAGED_BACKENDS = backends_supporting("stages")
+
+#: backends that can execute a sequence-sharded plan (DESIGN.md §13)
+SEQ_BACKENDS = backends_supporting("seq")
+
+#: backends that can execute a guided (classifier-free guidance) plan; the
+#: mapping is mode-dependent — see check_backend_can_run
+GUIDED_BACKENDS = backends_supporting("guidance")
+
+
 class StadiPipeline:
     """One-call STADI inference: plan -> execute -> (optionally) rebalance.
 
     model_cfg/params/sched describe the denoiser; config describes the
-    cluster and strategy. ``generate`` is the only entry point callers need.
+    cluster and strategy. ``generate`` is the only entry point callers need;
+    ``plan`` is the one planning entrypoint (a fully-populated five-axis
+    ExecutionPlan, cached persistently when ``plan_cache_dir`` is set).
     """
 
     def __init__(self, model_cfg: DiTConfig, params, sched: NoiseSchedule,
@@ -532,14 +715,27 @@ class StadiPipeline:
                 raise ValueError("online rebalancing is not supported with "
                                  "sequence sharding (the device grouping "
                                  "is static)")
+        # persistent plan cache (DESIGN.md §14)
+        self.plan_cache = None
+        self.last_plan_key: Optional[str] = None
+        #: live planner searches actually executed (cache hits skip these)
+        self.planner_calls = 0
+        if config.plan_cache_dir:
+            from repro.serving.plan_cache import PlanCache
+            self.plan_cache = PlanCache(config.plan_cache_dir)
 
     @property
     def p_total(self) -> int:
         return self.model_cfg.tokens_per_side
 
-    def plan(self, speeds: Optional[Sequence[float]] = None) -> ExecutionPlan:
-        """Run the configured planner (no execution)."""
-        speeds = list(speeds) if speeds is not None else self.config.speeds
+    # ------------------------------------------------------------------
+    # planning: the ONE entrypoint (steps x patches x stages x guidance
+    # x seq resolved in a single pass)
+    # ------------------------------------------------------------------
+
+    def _plan_knobs(self) -> StadiConfig:
+        """The config with model-derived provenance filled in (depth, head
+        count, byte sizes) — what planners actually see."""
         knobs = self.config
         if knobs.depth is None:          # stage planning needs the DiT depth
             knobs = dataclasses.replace(knobs, depth=self.model_cfg.n_layers)
@@ -553,7 +749,66 @@ class StadiPipeline:
                 latent_bytes=int(cfg.latent_size ** 2 * cfg.channels * 4),
                 kv_row_bytes=int(2 * cfg.n_layers * cfg.tokens_per_side
                                  * cfg.d_model * 2))
-        return get_planner(self.config.planner)(speeds, knobs, self.p_total)
+        return knobs
+
+    def _model_key(self) -> str:
+        """Content hash of the model config (DiTConfig is a frozen
+        dataclass, so its repr is a deterministic fingerprint)."""
+        return hashlib.sha256(repr(self.model_cfg).encode()).hexdigest()[:16]
+
+    def _workload_key(self, knobs: StadiConfig) -> Dict:
+        """The workload-shape component of the plan-cache key: every knob
+        that changes what the planner returns (resolution enters through
+        p_total / byte provenance, steps through m_base)."""
+        cm = knobs.cost_model
+        return {
+            "planner": knobs.planner,
+            "p_total": self.p_total,
+            "m_base": knobs.m_base, "m_warmup": knobs.m_warmup,
+            "a": knobs.a, "b": knobs.b, "tiers": list(knobs.tiers),
+            "granularity": knobs.granularity, "min_patch": knobs.min_patch,
+            "exchange": knobs.exchange,
+            "exchange_refresh": knobs.exchange_refresh,
+            "num_stages": knobs.num_stages,
+            "micro_patches": knobs.micro_patches, "depth": knobs.depth,
+            "guidance": knobs.guidance, "cfg_scale": knobs.cfg_scale,
+            "uncond_refresh": knobs.uncond_refresh,
+            "latent_bytes": knobs.latent_bytes,
+            "kv_row_bytes": knobs.kv_row_bytes,
+            "seq_shards": knobs.seq_shards, "n_heads": knobs.n_heads,
+            "cost_model": (None if cm is None else dataclasses.asdict(cm)),
+        }
+
+    def plan(self, speeds: Optional[Sequence[float]] = None, *,
+             use_cache: bool = True) -> ExecutionPlan:
+        """Run the configured planner (no execution) and return a fully-
+        populated five-axis ExecutionPlan: ``stages`` / ``guidance`` /
+        ``seq`` are resolved from the planner output or the config knobs in
+        this one pass. With a plan cache configured, the persistent cache
+        is consulted before any planner search (``use_cache=False`` forces
+        a live search without touching the cache)."""
+        speeds = list(speeds) if speeds is not None else self.config.speeds
+        knobs = self._plan_knobs()
+        key = None
+        if self.plan_cache is not None and use_cache:
+            key = self.plan_cache.signature(speeds, self._model_key(),
+                                            self._workload_key(knobs))
+            hit = self.plan_cache.get(key)
+            if hit is not None:
+                self.last_plan_key = key
+                return hit
+        raw = get_planner(self.config.planner)(speeds, knobs, self.p_total)
+        self.planner_calls += 1
+        plan = dataclasses.replace(
+            raw,
+            stages=_resolve_stages(raw, self.model_cfg, knobs),
+            guidance=_resolve_guidance(raw, knobs),
+            seq=(raw.seq if raw.seq is not None
+                 else _resolve_seq(raw, self.model_cfg, knobs)))
+        if key is not None:
+            self.plan_cache.put(key, plan)
+            self.last_plan_key = key
+        return plan
 
     def generate(self, x_T=None, cond=None, *,
                  measured_speeds: Optional[Sequence[float]] = None
@@ -575,8 +830,11 @@ class StadiPipeline:
                 raise ValueError("rebalance_every requires the 'emulated' "
                                  f"backend, not {config.backend!r}")
             hook = self._make_rebalance_hook(plan, measured_speeds, replans)
+        # ONE normalized call shape for every backend (EXECUTOR_KWARGS):
+        # strictly keyword, so per-backend kwarg drift cannot creep back in
         image, trace = get_executor(config.backend)(
-            self.params, self.model_cfg, self.sched, x_T, cond, plan, config,
+            params=self.params, model_cfg=self.model_cfg, sched=self.sched,
+            x_T=x_T, cond=cond, plan=plan, config=config,
             interval_hook=hook)
         latency = None
         if config.cost_model is not None:
@@ -612,8 +870,7 @@ class StadiPipeline:
                                 exchange=self.config.exchange,
                                 exchange_refresh=self.config.exchange_refresh,
                                 stages=engine.stages,
-                                guidance=plan_guidance(engine.plan,
-                                                       self.config))
+                                guidance=engine.plan.guidance)
         report_latency = self.config.cost_model is not None
         return [PipelineResult(r.image, trace, engine.plan,
                                r.modeled_latency_s if report_latency else None)
@@ -637,12 +894,8 @@ class StadiPipeline:
             # feed measured per-device interval latencies into the profiler;
             # work is nominal seconds at v=1 so observed_v converges on the
             # device's true effective speed
-            for i, (sub, rows) in enumerate(zip(ev.substeps, ev.patches)):
-                if sub == 0 or rows == 0:
-                    continue
-                work = sub * (cm.t_fixed + cm.t_row * rows)
-                measured = work / max(true_speeds[i], 1e-9)
-                profiler.update(i, work, measured)
+            hetero.feed_profiler(profiler, cm, ev.substeps, ev.patches,
+                                 true_speeds)
             state["since"] += 1
             if state["since"] < config.rebalance_every:
                 return None
@@ -658,6 +911,10 @@ class StadiPipeline:
                                               self.p_total)
             if f_rem % new.temporal.lcm:
                 return None              # cannot fit an interval; keep going
+            if self.plan_cache is not None and self.last_plan_key:
+                # the persisted plan was computed from speeds that no
+                # longer hold — drop it so the next plan() re-searches
+                self.plan_cache.invalidate(self.last_plan_key)
             replans.append(ReplanEvent(next_fine_step, drift,
                                        list(state["baseline"]),
                                        list(profiler.speeds), new))

@@ -55,7 +55,7 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                     slo_s: float = None, seed: int = 0,
                     exchange: str = "sync", exchange_refresh: int = 2,
                     num_stages: int = 1, cfg_scale: float = 0.0,
-                    seq_shards: int = 1):
+                    seq_shards: int = 1, plan_cache_dir: str = None):
     """Continuous batching on a heterogeneous cluster: requests enter a FIFO
     queue, the :class:`DiffusionServingEngine` admits them into ``slots``
     concurrent lanes and drains the queue with batched denoise rounds.
@@ -77,7 +77,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                                           backend=backend, exchange=exchange,
                                           exchange_refresh=exchange_refresh,
                                           num_stages=num_stages,
-                                          seq_shards=seq_shards)
+                                          seq_shards=seq_shards,
+                                          plan_cache_dir=plan_cache_dir)
     pipe = StadiPipeline(cfg, params, sched, config)
     engine = DiffusionServingEngine(pipe, slots=slots)
     rng = np.random.default_rng(seed)
@@ -105,6 +106,12 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
           f"slots={slots} rounds={stats['rounds']} "
           f"patches={engine.plan.patches} stages={engine.stages} "
           f"seq={engine.seq}")
+    if stats["plan_cache"] is not None:
+        c = stats["plan_cache"]
+        print(f"  plan cache: {c['hits']} hits / {c['misses']} misses "
+              f"(hit rate {c['hit_rate']:.0%}), "
+              f"{c['invalidations']} invalidated — a warm cache skips "
+              "planner search on restart")
     for r in stats["requests"]:
         slo = "" if r["slo_met"] is None else f" slo_met={r['slo_met']}"
         print(f"  req {r['uid']}: queued {r['queue_rounds']} rounds, "
@@ -153,6 +160,11 @@ def main():
                     help="classifier-free guidance weight (diffusion only, "
                          "DESIGN.md §12): > 0 submits every other request "
                          "as a CFG request — a mixed guided/unguided batch")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persistent plan-cache directory (diffusion only, "
+                         "DESIGN.md §14): planner outputs are keyed by "
+                         "(cluster, model, workload) and reused across "
+                         "restarts; e.g. results/plan_cache")
     ap.add_argument("--seq-shards", type=int, default=1,
                     help="sequence-parallel attention (diffusion only, "
                          "DESIGN.md §13): Ulysses/ring shards per patch "
@@ -176,7 +188,8 @@ def main():
                         exchange_refresh=args.exchange_refresh,
                         num_stages=args.num_stages,
                         cfg_scale=args.cfg_scale,
-                        seq_shards=args.seq_shards)
+                        seq_shards=args.seq_shards,
+                        plan_cache_dir=args.plan_cache)
     else:
         serve(args.arch, n_requests=args.requests, slots=args.slots,
               prompt_len=args.prompt_len, max_new=args.max_new)

@@ -132,14 +132,13 @@ def main():
         uncond_refresh=args.uncond_refresh,
         seq_shards=args.seq_shards,
         **knobs)
-    from repro.core.pipeline import plan_guidance, plan_seq, plan_stages
     pipe = StadiPipeline(cfg, params, sched, config)
     plan = pipe.plan()
     print(f"speeds={config.speeds} steps={plan.temporal.steps} "
           f"ratios={plan.temporal.ratios} patches={plan.patches} "
-          f"stages={plan_stages(plan, cfg, config)} "
-          f"guidance={plan_guidance(plan, config)} "
-          f"seq={plan_seq(plan, cfg, config)}")
+          f"stages={plan.stages} "
+          f"guidance={plan.guidance} "
+          f"seq={plan.seq}")
 
     t0 = time.time()
     res = pipe.generate(x_T, cond)

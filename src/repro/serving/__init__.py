@@ -1,3 +1,4 @@
 from repro.serving.engine import ServingEngine, Request  # noqa
 from repro.serving.diffusion_engine import (  # noqa
     DiffusionRequest, DiffusionServingEngine)
+from repro.serving.plan_cache import PlanCache  # noqa

@@ -46,13 +46,13 @@ import numpy as np
 from repro.core import buffers as buf_lib
 from repro.core import comm as comm_lib
 from repro.core import events as ir
+from repro.core import hetero
 from repro.core import patch_parallel as pp
 from repro.core import pipefuse as pipefuse_lib
 from repro.core import sampler as sampler_lib
 from repro.core import simulate as sim
-from repro.core.pipeline import (StadiPipeline, check_backend_can_run,
-                                 get_stepper_factory, plan_guidance,
-                                 plan_seq, plan_stages,
+from repro.core.pipeline import (ReplanEvent, StadiPipeline,
+                                 check_backend_can_run, get_stepper_factory,
                                  register_stepper_factory)
 from repro.core.planners import ExecutionPlan
 from repro.core.schedule import patch_bounds
@@ -84,6 +84,7 @@ class DiffusionRequest:
     fine_step: int = 0
     image: Optional[jnp.ndarray] = None
     done: bool = False
+    preempt_count: int = 0               # evictions back to the queue head
     # statistics (rounds are engine scheduling rounds; latency is modeled
     # wall-clock on the configured cluster, queueing included)
     submit_round: int = -1
@@ -326,8 +327,7 @@ class PipefuseStepper(EmulatedStepper):
     def __init__(self, pipeline: StadiPipeline, plan: ExecutionPlan,
                  slots: int):
         super().__init__(pipeline, plan, slots)
-        self.stages = (plan_stages(plan, pipeline.model_cfg, pipeline.config)
-                       or [pipeline.model_cfg.n_layers])
+        self.stages = plan.stages or [pipeline.model_cfg.n_layers]
         self.bounds = pipefuse_lib.stage_bounds(self.stages)
 
     @property
@@ -462,35 +462,35 @@ class DiffusionServingEngine:
     """
 
     def __init__(self, pipeline: StadiPipeline, *, slots: int = 4,
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 rebalance_every: int = 0,
+                 rebalance_threshold: float = 0.2,
+                 measured_speeds: Optional[Sequence[float]] = None):
         config = pipeline.config
         if config.rebalance_every:
             raise ValueError("serving drives placement per round; disable "
-                             "rebalance_every on the pipeline config")
+                             "rebalance_every on the pipeline config (the "
+                             "engine's own rebalance_every kwarg replans "
+                             "between rounds)")
         if slots < 1:
             raise ValueError("need at least one slot")
         self.pipeline = pipeline
         self.slots = slots
         self.plan = pipeline.plan()
         check_backend_can_run(self.plan, config)
-        # classifier-free guidance (DESIGN.md §12): serving batches FUSED
-        # CFG lanes (per-request cfg_scale, mixed with non-CFG lanes);
-        # split/interleaved placement pairs devices per generation and is a
-        # single-request optimization
-        gplan = plan_guidance(self.plan, config)
-        if gplan is not None and gplan.mode != "fused":
+        # classifier-free guidance (DESIGN.md §12/§14): serving batches
+        # FUSED lane cohorts (every worker computes both branches) and
+        # SPLIT lane cohorts (workers are cond/uncond device PAIRS, eps
+        # exchanged between dispatches — same numerics by construction,
+        # pair-placed cost). Interleaved uncond reuse remains a
+        # per-generation optimization.
+        gplan = self.plan.guidance
+        if gplan is not None and gplan.mode == "interleaved":
             raise ValueError(
-                f"serving batches fused-CFG lanes; {gplan.mode!r} guidance "
-                "placement is per-generation — use pipe.generate, or set "
-                "guidance='fused'")
+                "serving batches fused- or split-CFG lane cohorts; "
+                "'interleaved' uncond reuse is per-generation — use "
+                "pipe.generate, or set guidance='fused'|'split'")
         self.default_scale = gplan.scale if gplan is not None else None
-        self.stepper = get_stepper_factory(config.backend)(
-            pipeline, self.plan, slots)
-        if (self.default_scale is not None
-                and not self.stepper.supports_guidance):
-            raise ValueError(f"backend {config.backend!r} has no guided "
-                             "serving stepper (guided lanes need "
-                             "'emulated' or single-stage 'pipefuse')")
         self.cm = cost_model or config.cost_model
         # placement needs SOME cost model; flag the uncalibrated fallback so
         # modeled latencies / SLO verdicts are never mistaken for calibrated
@@ -504,6 +504,7 @@ class DiffusionServingEngine:
         self._x = jnp.zeros((slots, 1, H, H, C), jnp.float32)
         kshape = (slots,) + dit.buffer_shape(cfg, 1)
         kdt = jnp.dtype(cfg.dtype)
+        self._kshape = kshape
         self._pub_k = jnp.zeros(kshape, kdt)
         self._pub_v = jnp.zeros(kshape, kdt)
         self._cond = jnp.zeros((slots, 1), jnp.int32)
@@ -514,10 +515,11 @@ class DiffusionServingEngine:
         self._kdt = kdt
         self._gk = self._gv = None
         self._prev_gk = self._prev_gv = None
+        self._prev_k = self._prev_v = None
         self._scales = np.zeros(slots, np.float32)
         # displaced patch pipeline (DESIGN.md §11): stage chain + per-lane
         # displaced contexts (only materialized when depth is partitioned)
-        self.stages = plan_stages(self.plan, cfg, config)
+        self.stages = self.plan.stages
         staged = self.stages is not None and len(self.stages) > 1
         self._ctx_k = jnp.zeros(kshape, kdt) if staged else None
         self._ctx_v = jnp.zeros(kshape, kdt) if staged else None
@@ -526,7 +528,7 @@ class DiffusionServingEngine:
         # never WHAT is computed, so the emulated stepper serves seq-sharded
         # lanes bitwise unchanged — only the lane group key (per-interval
         # ring hop count) and the modeled round cost see the shards.
-        self.seq = plan_seq(self.plan, cfg, config)
+        self.seq = self.plan.seq
         if self.seq is not None and len(self.seq.segments) < 2:
             self.seq = None
         if self.seq is not None and staged:
@@ -542,6 +544,76 @@ class DiffusionServingEngine:
                                                 self.seq.n_shards)
             self._seq_groups = groups
             self._seq_seg_pad = max(self.seq.seg_fracs)
+        self.policy = comm_lib.get_exchange(config.exchange,
+                                            config.exchange_refresh)
+        # online replanning (DESIGN.md §7.1 composed with §12/§14): the
+        # ground-truth speeds the cluster actually runs at (emulation's
+        # stand-in for per-interval timers), the drift profiler, and the
+        # replan cadence. With split guidance a replan re-pairs the
+        # cond/uncond device groups (the stadi_guidance planner re-runs
+        # guidance_groups over the profiled speeds).
+        self.measured_speeds = (list(measured_speeds)
+                                if measured_speeds is not None
+                                else list(config.speeds))
+        if len(self.measured_speeds) != config.n_devices:
+            raise ValueError(f"measured_speeds has "
+                             f"{len(self.measured_speeds)} entries for a "
+                             f"{config.n_devices}-device cluster")
+        self.rebalance_every = int(rebalance_every)
+        self.rebalance_threshold = rebalance_threshold
+        self.replans: List[ReplanEvent] = []
+        self.preemptions = 0
+        self._pending_plan: Optional[Tuple[ExecutionPlan, float]] = None
+        self._rounds_since_check = 0
+        self.profiler: Optional[hetero.OnlineProfiler] = None
+        if self.rebalance_every:
+            if staged or self.seq is not None:
+                raise ValueError(
+                    "engine replanning re-deals patch workers; staged / "
+                    "seq-sharded plans pin their device grouping — serve "
+                    "them with rebalance_every=0")
+            self.profiler = hetero.OnlineProfiler(
+                list(config.speeds), alpha=config.profiler_alpha)
+            self._baseline = list(config.speeds)
+        self.queue: List[DiffusionRequest] = []
+        self.active: Dict[int, DiffusionRequest] = {}   # slot -> request
+        self.completed: List[DiffusionRequest] = []
+        self.rounds: List[RoundReport] = []
+        self.modeled_clock_s = 0.0
+        self._next_uid = 0
+        self._install_plan(self.plan)
+        if self.rebalance_every and self.stepper.cohort_only:
+            raise ValueError("engine replanning rebuilds the lane stepper "
+                             "per plan; the cohort-only (spmd) stepper "
+                             "compiles one static program — serve it with "
+                             "rebalance_every=0")
+
+    def _install_plan(self, plan: ExecutionPlan) -> None:
+        """(Re)build every plan-derived piece of engine state: the lane
+        stepper, the split-guidance pair map, the per-fine-step boundary
+        info, the predictive-extrapolation buffers, and the comm byte
+        sizing. Called once at construction and again at every online
+        replan (same m_base/m_warmup grid; stages/seq replans are rejected
+        up front)."""
+        pipeline, config = self.pipeline, self.pipeline.config
+        cfg = pipeline.model_cfg
+        self.plan = plan
+        gplan = plan.guidance
+        # split-guidance lane cohorts: logical worker i is the device pair
+        # (cond_devices[i], uncond_devices[i]) — used for pair-placed round
+        # costs and for feeding the profiler both pair members
+        self._guide_pairs = (list(zip(gplan.cond_devices,
+                                      gplan.uncond_devices))
+                             if gplan is not None and gplan.mode == "split"
+                             else None)
+        self.stepper = get_stepper_factory(config.backend)(
+            pipeline, plan, self.slots)
+        if (self.default_scale is not None
+                and not self.stepper.supports_guidance):
+            raise ValueError(f"backend {config.backend!r} has no guided "
+                             "serving stepper (guided lanes need "
+                             "'emulated' or single-stage 'pipefuse')")
+        staged = self.stages is not None and len(self.stages) > 1
         # boundary-exchange policy (DESIGN.md §10): replay the SAME schedule
         # IR every lane follows and precompute, per adaptive-interval start
         # fine step, (read_factor, trail_kind, fill): read_factor is the K/V
@@ -550,16 +622,14 @@ class DiffusionServingEngine:
         # it, fill whether the displaced pipe refills entering it. Lanes are
         # grouped by this info, so one batched dispatch never mixes boundary
         # behaviors.
-        self.policy = comm_lib.get_exchange(config.exchange,
-                                            config.exchange_refresh)
         self._interval_info: Dict[int, Tuple[float, str, bool, int]] = {}
         read_factor = 0.0
         m_prev: Optional[int] = None
-        m_last = self.plan.temporal.m_warmup - 1   # warmup publish (-1 = boot)
+        m_last = plan.temporal.m_warmup - 1   # warmup publish (-1 = boot)
         cur: Optional[int] = None
         fill = False
         seq_hops = 0
-        for ev in ir.lower(self.plan.temporal, self.plan.patches, self.policy,
+        for ev in ir.lower(plan.temporal, plan.patches, self.policy,
                            stages=self.stages if staged else None,
                            seq_shards=self.seq):
             if isinstance(ev, ir.StageShift):
@@ -591,18 +661,16 @@ class DiffusionServingEngine:
         self._track_prev = (not staged
                             and any(info[0] for info in
                                     self._interval_info.values()))
-        self._prev_k = jnp.zeros(kshape, kdt) if self._track_prev else None
-        self._prev_v = jnp.zeros(kshape, kdt) if self._track_prev else None
-        self.queue: List[DiffusionRequest] = []
-        self.active: Dict[int, DiffusionRequest] = {}   # slot -> request
-        self.completed: List[DiffusionRequest] = []
-        self.rounds: List[RoundReport] = []
-        self.modeled_clock_s = 0.0
-        self._next_uid = 0
+        if self._track_prev and self._prev_k is None:
+            self._prev_k = jnp.zeros(self._kshape, self._kdt)
+            self._prev_v = jnp.zeros(self._kshape, self._kdt)
+        if self._track_prev and self._gk is not None and self._prev_gk is None:
+            self._prev_gk = jnp.zeros(self._kshape2, self._kdt)
+            self._prev_gv = jnp.zeros(self._kshape2, self._kdt)
         # per-lane comm sizing: taken from the same trace builder the
         # simulate backend replays, so serving cost accounting cannot
         # diverge from simulate_trace's
-        trace = sim.build_trace(self.plan.temporal, self.plan.patches, cfg,
+        trace = sim.build_trace(plan.temporal, plan.patches, cfg,
                                 batch=1, stages=self.stages)
         self._latent_bytes = trace.latent_bytes
         self._kv_bytes = trace.kv_bytes_per_worker
@@ -682,12 +750,77 @@ class DiffusionServingEngine:
             self.active[slot] = req
             report.admitted.append((req.uid, slot))
 
+    def preempt(self, uid: int) -> bool:
+        """Evict an active request back to the FRONT of the queue (it
+        restarts from x_T on readmission — diffusion state is cheap to
+        recompute relative to holding a slot past an SLO breach). True if
+        the request was active; False if it was queued or already done."""
+        for slot, req in list(self.active.items()):
+            if req.uid == uid:
+                del self.active[slot]
+                req.fine_step = 0
+                req.preempt_count += 1
+                self.preemptions += 1
+                self.queue.insert(0, req)
+                return True
+        return False
+
+    # ---------------- online replanning (DESIGN.md §7.1 + §12/§14) -------
+
+    def _feed_profiler(self) -> None:
+        """One adaptive round's synthesized per-device interval timings.
+        Under split guidance each logical worker feeds BOTH its pair
+        devices, so the profiler sees every device's true speed."""
+        temporal = self.plan.temporal
+        subs = [0] * len(self.plan.patches)
+        for i in temporal.active:
+            if self.plan.patches[i] > 0:
+                subs[i] = temporal.lcm // temporal.ratios[i]
+        hetero.feed_profiler(self.profiler, self.cm, subs, self.plan.patches,
+                             self.measured_speeds,
+                             device_map=self._guide_pairs)
+
+    def _maybe_replan(self) -> None:
+        """Drift check at the rebalance cadence: when the profiled speeds
+        left the planned ones behind, re-run the configured planner over
+        them (re-pairing cond/uncond device groups under split guidance),
+        invalidate the now-stale plan-cache entry, and stage the new plan
+        for installation at the next grid-aligned round."""
+        drift = self.profiler.drift(self._baseline)
+        if drift <= self.rebalance_threshold:
+            return
+        pipe = self.pipeline
+        stale_key = pipe.last_plan_key
+        new = pipe.plan(self.profiler.speeds)
+        if (pipe.plan_cache is not None and stale_key
+                and stale_key != pipe.last_plan_key):
+            pipe.plan_cache.invalidate(stale_key)
+        self._pending_plan = (new, drift)
+
+    def _try_install_pending(self) -> None:
+        """Install a staged replan once every active adaptive lane sits on
+        the new plan's interval grid (lanes advance plan.lcm fine steps per
+        round, so a misaligned cohort retries next round)."""
+        new, drift = self._pending_plan
+        M_w = self.plan.temporal.m_warmup
+        for req in self.active.values():
+            if req.fine_step > M_w and (req.fine_step - M_w) % new.temporal.lcm:
+                return
+        self._pending_plan = None
+        fine = min((r.fine_step for r in self.active.values()), default=M_w)
+        self.replans.append(ReplanEvent(fine, drift, list(self._baseline),
+                                        list(self.profiler.speeds), new))
+        self._baseline = list(self.profiler.speeds)
+        self._install_plan(new)
+
     # ---------------- one scheduling round ----------------
 
     def step(self) -> List[DiffusionRequest]:
         """One round: admit -> warmup group -> adaptive group(s) -> retire."""
         report = RoundReport(index=len(self.rounds))
         wall0 = time.perf_counter()
+        if self._pending_plan is not None:
+            self._try_install_pending()
         self._admit(report)
         temporal = self.plan.temporal
         M_w, M_base, R = temporal.m_warmup, temporal.m_base, temporal.lcm
@@ -795,6 +928,13 @@ class DiffusionServingEngine:
                 report.modeled_s += cost
                 report.exchange_kinds.append(trail_kind)
             report.placement = placement
+            if self.profiler is not None:
+                self._feed_profiler()
+                self._rounds_since_check += 1
+                if (self._rounds_since_check >= self.rebalance_every
+                        and self._pending_plan is None):
+                    self._rounds_since_check = 0
+                    self._maybe_replan()
 
         self.modeled_clock_s += report.modeled_s
         done_slots = [s for s, r in sorted(self.active.items())
@@ -897,6 +1037,8 @@ class DiffusionServingEngine:
         """
         if self.stages is not None and len(self.stages) > 1:
             return self._staged_phase_cost(group, warm, kind, fill)
+        if guided and self._guide_pairs is not None:
+            return self._split_phase_cost(group, warm, kind)
         plan, cm = self.plan, self.cm
         temporal = plan.temporal
         branch = 2 if guided else 1
@@ -907,7 +1049,7 @@ class DiffusionServingEngine:
             loads[i] = sub * (cm.t_fixed
                               + cm.t_row * plan.patches[i] * group * branch)
         by_load = sorted(workers, key=lambda i: (-loads[i], i))
-        speeds = self.pipeline.config.speeds
+        speeds = self.measured_speeds
         if self._seq_groups is not None:
             # each worker = one device group; the group's members split the
             # worker's rows/heads, so its serving throughput is the sum
@@ -944,6 +1086,53 @@ class DiffusionServingEngine:
         comm = comm_bytes / cm.link_bw + cm.link_latency
         return placement, max(compute, async_t, ring_t) + comm
 
+    def _split_phase_cost(self, group: int, warm: bool, kind: str = "full"
+                          ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
+        """Split-guidance cohort placement + modeled seconds (DESIGN.md
+        §12/§14): logical worker i runs BOTH branches concurrently on its
+        (cond, uncond) device pair — per-row work is NOT doubled but the
+        pair moves at its slower member — and every substep exchanges the
+        two branches' epsilons across the pair link before the CFG combine.
+        Mirrors ``planners._guided_plan_cost``'s fresh split interval (the
+        planner's scoring and the engine's accounting cannot diverge);
+        batching scales row work and wire bytes by the lane count.
+        Placement entries are (worker, cond_device) — the pairing is the
+        plan's, not a per-round search (re-pairing happens at replans).
+        """
+        plan, cm, g = self.plan, self.cm, self.plan.guidance
+        temporal = plan.temporal
+        speeds = self.measured_speeds
+        workers = [i for i in temporal.active if plan.patches[i] > 0]
+        rows_total = max(sum(plan.patches), 1)
+        row_bytes = self._latent_bytes / rows_total
+        compute, eps_bytes, hops = 0.0, 0.0, 0
+        for i in workers:
+            sub = 1 if warm else temporal.lcm // temporal.ratios[i]
+            rows = plan.patches[i]
+            pair_v = min(speeds[g.cond_devices[i]],
+                         speeds[g.uncond_devices[i]])
+            step_t = cm.t_fixed + cm.t_row * rows * group
+            compute = max(compute, sub * step_t / max(pair_v, 1e-9))
+            eps_bytes += 2 * sub * rows * row_bytes * group
+            hops = max(hops, sub)
+        eps_t = eps_bytes / cm.link_bw + hops * cm.link_latency
+        placement = tuple(sorted((i, g.cond_devices[i]) for i in workers))
+        if (not warm and kind != "full") or len(workers) <= 1:
+            return placement, compute + eps_t
+        gather_rows = comm_lib.uneven_all_gather_rows(
+            [plan.patches[i] for i in workers])
+        comm_bytes = gather_rows * row_bytes * group
+        if warm:
+            # branch factor 1: each branch's staged K/V stays inside its
+            # own device group, the two groups broadcast concurrently
+            comm_bytes += sum(self._kv_bytes[w] for w in workers) * group
+            async_t = 0.0
+        else:
+            async_t = max(self._kv_bytes[w] for w in workers) \
+                * group / cm.link_bw
+        comm = comm_bytes / cm.link_bw + cm.link_latency
+        return placement, max(compute, async_t) + comm + eps_t
+
     def _staged_phase_cost(self, group: int, warm: bool, kind: str,
                            fill: bool
                            ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
@@ -957,7 +1146,7 @@ class DiffusionServingEngine:
         plan, cm = self.plan, self.cm
         temporal = plan.temporal
         S = len(self.stages)
-        speeds = self.pipeline.config.speeds
+        speeds = self.measured_speeds
         by_speed = sorted(range(len(speeds)), key=lambda d: (-speeds[d], d))
         chain = [speeds[d] for d in by_speed[:S]]
         placement = tuple((s, by_speed[s]) for s in range(S))
@@ -980,11 +1169,16 @@ class DiffusionServingEngine:
         lats = [r.modeled_latency_s for r in done]
         wall = sum(r.wall_s for r in self.rounds)
         slo = [r.slo_met for r in done if r.slo_met is not None]
+        cache = self.pipeline.plan_cache
         return {
             "n_completed": len(done),
             "cost_model": ("configured" if self.cm_calibrated
                            else "default-uncalibrated"),
             "rounds": len(self.rounds),
+            "replans": len(self.replans),
+            "preemptions": self.preemptions,
+            "planner_calls": self.pipeline.planner_calls,
+            "plan_cache": cache.stats() if cache is not None else None,
             "modeled_makespan_s": self.modeled_clock_s,
             "wall_s": wall,
             "throughput_modeled_rps": (len(done) / self.modeled_clock_s
@@ -1001,5 +1195,6 @@ class DiffusionServingEngine:
                 "wall_latency_s": r.wall_latency_s,
                 "slo_s": r.slo_s,
                 "slo_met": r.slo_met,
+                "preemptions": r.preempt_count,
             } for r in done],
         }

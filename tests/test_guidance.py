@@ -347,12 +347,17 @@ def test_plan_guidance_wiring_and_errors(setup):
     cfg, params, sched, x_T, cond = setup
     config = _config([1.0, 0.5], m_base=8, m_warmup=2, cfg_scale=2.0)
     plan = StadiPipeline(cfg, params, sched, config).plan()
-    gp = plan_guidance(plan, config)
-    assert gp.mode == "fused" and gp.scale == 2.0   # --cfg-scale wiring
-    assert plan_guidance(plan, dataclasses.replace(config,
-                                                   cfg_scale=0.0)) is None
+    # the unified plan() populates the guidance axis (--cfg-scale wiring)
+    assert plan.guidance.mode == "fused" and plan.guidance.scale == 2.0
+    with pytest.warns(DeprecationWarning):      # shim resolves identically
+        assert plan_guidance(plan, config) == plan.guidance
+    unguided = StadiPipeline(
+        cfg, params, sched,
+        dataclasses.replace(config, cfg_scale=0.0)).plan()
+    assert unguided.guidance is None
     with pytest.raises(ValueError, match="stadi_guidance"):
-        plan_guidance(plan, dataclasses.replace(config, guidance="split"))
+        StadiPipeline(cfg, params, sched,
+                      dataclasses.replace(config, guidance="split")).plan()
     with pytest.raises(ValueError, match="cfg_scale"):
         StadiPipeline(cfg, params, sched,
                       dataclasses.replace(config, cfg_scale=0.0,
@@ -440,13 +445,88 @@ def test_serving_default_scale_and_guards(setup):
                            cfg.channels))
     req = engine.submit(x, 1)
     assert req.guided and req.cfg_scale == 2.0
-    # split placement is per-generation, not a serving mode
+    # split placement is a first-class serving mode (DESIGN.md §14): the
+    # engine runs pair-cohort lanes with the plan's device pairing
     split_cfg = _config([1.0, 1.0, 0.5, 0.5], m_base=8, m_warmup=2,
                         planner="stadi_guidance", cfg_scale=2.0,
                         guidance="split")
-    with pytest.raises(ValueError, match="fused"):
-        DiffusionServingEngine(StadiPipeline(cfg, params, sched, split_cfg),
+    split_engine = DiffusionServingEngine(
+        StadiPipeline(cfg, params, sched, split_cfg), slots=2)
+    assert split_engine.plan.guidance.mode == "split"
+    assert split_engine._guide_pairs is not None
+    # interleaved uncond reuse stays per-generation
+    inter_cfg = dataclasses.replace(split_cfg, guidance="interleaved")
+    with pytest.raises(ValueError, match="interleaved"):
+        DiffusionServingEngine(StadiPipeline(cfg, params, sched, inter_cfg),
                                slots=2)
+
+
+@pytest.mark.parametrize("exchange", ["sync", "stale_async", "predictive"])
+def test_serving_split_guidance_bitwise_vs_generate(setup, exchange):
+    """Tentpole acceptance (DESIGN.md §14): split-guidance serving lane
+    cohorts stay per-request bitwise-identical to single-request
+    ``generate`` under every exchange policy — split repartitions WHERE
+    the branches run (device pairs, eps exchanged between dispatches),
+    never WHAT is computed."""
+    from repro.serving.diffusion_engine import DiffusionServingEngine
+    cfg, params, sched, *_ = setup
+    config = _config([1.0, 1.0, 0.5, 0.5], m_base=8, m_warmup=2,
+                     planner="stadi_guidance", cfg_scale=2.0,
+                     guidance="split", exchange=exchange)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=3)
+    subs = []
+    for uid in range(4):
+        x = jax.random.normal(jax.random.PRNGKey(50 + uid),
+                              (1, cfg.latent_size, cfg.latent_size,
+                               cfg.channels))
+        subs.append((engine.submit(x, uid % cfg.n_classes), x, uid))
+    engine.run_to_completion()
+    for req, x, uid in subs:
+        ref = pipe.generate(x, jnp.array([uid % cfg.n_classes])).image
+        np.testing.assert_array_equal(np.asarray(req.image),
+                                      np.asarray(ref))
+
+
+def test_serving_guidance_aware_replanning_improves_throughput(setup):
+    """Tentpole acceptance (DESIGN.md §14): after an injected speed drift
+    on the comm-bound 2-tier profile, engine replanning — which re-pairs
+    the cond/uncond device groups via the stadi_guidance planner — must
+    improve modeled drain throughput by >= 15% over the frozen plan."""
+    from repro.serving.diffusion_engine import DiffusionServingEngine
+    cfg, params, sched, *_ = setup
+    cm = CostModel(t_fixed=5e-3, t_row=5.5e-4, link_bw=1.25e9,
+                   link_latency=50e-6)
+    config = _config([1.0, 1.0, 0.5, 0.5], m_base=16, m_warmup=2,
+                     planner="stadi_guidance", cfg_scale=2.0,
+                     guidance="split", cost_model=cm)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    measured = [1.0, 0.1, 0.5, 0.5]        # device 1 fell off a cliff
+    xs = [jax.random.normal(jax.random.PRNGKey(70 + i),
+                            (1, cfg.latent_size, cfg.latent_size,
+                             cfg.channels)) for i in range(6)]
+
+    def drain(**kw):
+        engine = DiffusionServingEngine(pipe, slots=4,
+                                        measured_speeds=measured, **kw)
+        for i, x in enumerate(xs):
+            engine.submit(x, i % cfg.n_classes)
+        engine.run_to_completion()
+        return engine
+
+    frozen = drain()
+    live = drain(rebalance_every=1)
+    assert frozen.stats()["replans"] == 0
+    assert live.stats()["replans"] >= 1
+    # the replanner actually re-paired the branch groups at least once
+    pairings = {(ev.plan.guidance.cond_devices,
+                 ev.plan.guidance.uncond_devices) for ev in live.replans}
+    base_pairing = (frozen.plan.guidance.cond_devices,
+                    frozen.plan.guidance.uncond_devices)
+    assert pairings - {base_pairing}
+    t_frozen = frozen.stats()["throughput_modeled_rps"]
+    t_live = live.stats()["throughput_modeled_rps"]
+    assert t_live >= 1.15 * t_frozen, (t_frozen, t_live)
 
 
 def test_generate_many_guided_matches_generate(setup):

@@ -246,3 +246,73 @@ def test_spmd_backend_matches_emulated():
                        text=True, timeout=520, env=env)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     assert "PIPE_SPMD_OK" in r.stdout
+
+
+# ----------------------------------------------------------------------
+# capability registry + normalized executor kwargs + unified plan() API
+# ----------------------------------------------------------------------
+
+def test_every_executor_accepts_normalized_kwargs():
+    """Satellite regression: generate/generate_many invoke executors strictly
+    by keyword, so every registered backend must accept exactly the
+    normalized kwarg set (registration enforces it; pin it here too)."""
+    import inspect
+    from repro.core.pipeline import EXECUTOR_KWARGS
+    for name, spec in EXECUTORS.items():
+        sig = tuple(inspect.signature(spec.fn).parameters)
+        assert sig == EXECUTOR_KWARGS, (name, sig)
+        hook = inspect.signature(spec.fn).parameters["interval_hook"]
+        assert hook.default is None, name
+
+
+def test_capability_registry_declarations():
+    from repro.core.pipeline import (PLAN_FEATURES, backends_supporting,
+                                     get_executor_spec, register_executor)
+    for spec in EXECUTORS.values():
+        assert spec.supports <= set(PLAN_FEATURES)
+    assert "stages" in get_executor_spec("pipefuse").supports
+    assert get_executor_spec("simulate").supports == set(PLAN_FEATURES)
+    assert "guidance" in get_executor_spec("spmd_guidance").requires
+    assert "seq" in get_executor_spec("spmd_seq").requires
+    # axis-prefix query covers every mode of the axis
+    assert set(backends_supporting("guidance")) >= {"emulated", "simulate",
+                                                    "spmd", "spmd_guidance"}
+    assert backends_supporting("seq") == ("emulated", "simulate", "spmd_seq")
+    # uniform rejection comes from declarations, not an if-chain
+    with pytest.raises(ValueError, match="unknown capability"):
+        register_executor("bogus", supports=("guidance.sideways",))
+    with pytest.raises(TypeError, match="normalized"):
+        register_executor("bogus")(lambda params, plan: None)
+    assert "bogus" not in EXECUTORS
+
+
+def test_unified_plan_populates_all_axes(setup):
+    cfg, params, sched, x_T, cond = setup
+    from repro.core.simulate import CostModel
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, num_stages=2,
+                     cfg_scale=2.0, guidance="fused", seq_shards=2,
+                     backend="simulate", cost_model=CostModel(t_fixed=1e-3, t_row=1e-4))
+    plan = StadiPipeline(cfg, params, sched, config).plan()
+    assert plan.stages is not None and len(plan.stages) == 2
+    assert plan.guidance is not None and plan.guidance.mode == "fused"
+    assert plan.seq is not None and plan.seq.n_shards == 2
+
+
+def test_deprecated_plan_helpers_shim(setup):
+    """plan_stages/plan_seq/plan_guidance warn and resolve identically to
+    the fields the unified plan() already populated."""
+    from repro.core.pipeline import plan_guidance, plan_seq, plan_stages
+    cfg, params, sched, x_T, cond = setup
+    from repro.core.simulate import CostModel
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, num_stages=2,
+                     cfg_scale=2.0, guidance="fused", seq_shards=2,
+                     backend="simulate", cost_model=CostModel(t_fixed=1e-3, t_row=1e-4))
+    pipe = StadiPipeline(cfg, params, sched, config)
+    plan = pipe.plan()
+    with pytest.warns(DeprecationWarning, match="plan_stages"):
+        assert plan_stages(plan, cfg, config) == plan.stages
+    with pytest.warns(DeprecationWarning, match="plan_guidance"):
+        assert plan_guidance(plan, config) == plan.guidance
+    raw = dataclasses.replace(plan, seq=None)
+    with pytest.warns(DeprecationWarning, match="plan_seq"):
+        assert plan_seq(raw, cfg, config) == plan.seq

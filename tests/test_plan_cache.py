@@ -1,0 +1,217 @@
+"""Persistent plan cache (DESIGN.md §14): hit/miss key semantics, drift
+invalidation through the serving replanner, and loud corrupt-entry
+fallback. The cache must make a second identical workload skip planner
+search entirely (planner_calls counter) while any key-component change —
+cluster speeds, model config, workload shape — misses."""
+import dataclasses
+import glob
+import os
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import sampler as sampler_lib
+from repro.core.pipeline import StadiConfig, StadiPipeline
+from repro.core.simulate import CostModel
+from repro.models.diffusion import dit
+from repro.serving.plan_cache import PlanCache
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-dit").reduced()
+    params = dit.nondegenerate_params(dit.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+    sched = sampler_lib.linear_schedule(T=100)
+    return cfg, params, sched
+
+
+def _config(speeds, **kw):
+    from repro.core.hetero import DeviceProfile
+    cluster = tuple(DeviceProfile(f"dev{i}", c=v)
+                    for i, v in enumerate(speeds))
+    return StadiConfig(cluster=cluster, **kw)
+
+
+def _pipe(setup, tmp_path, speeds=(1.0, 0.5), cfg=None, **kw):
+    mcfg, params, sched = setup
+    config = _config(list(speeds), m_base=8, m_warmup=2,
+                     plan_cache_dir=str(tmp_path), **kw)
+    return StadiPipeline(cfg or mcfg, params, sched, config)
+
+
+def test_hit_on_identical_key_skips_planner_search(setup, tmp_path):
+    pipe = _pipe(setup, tmp_path)
+    p1 = pipe.plan()
+    assert pipe.planner_calls == 1
+    assert pipe.plan_cache.stats()["misses"] == 1
+    p2 = pipe.plan()
+    assert p2 == p1
+    assert pipe.planner_calls == 1          # search was skipped
+    assert pipe.plan_cache.stats()["hits"] == 1
+    assert pipe.plan_cache.stats()["hit_rate"] == 0.5
+
+
+def test_restart_persistence(setup, tmp_path):
+    _pipe(setup, tmp_path).plan()
+    fresh = _pipe(setup, tmp_path)          # new process, same cache dir
+    plan = fresh.plan()
+    assert fresh.planner_calls == 0
+    assert fresh.plan_cache.hits == 1
+    assert plan == _pipe(setup, tmp_path).plan()
+
+
+def test_miss_on_any_key_component_change(setup, tmp_path):
+    cfg, params, sched = setup
+    base = _pipe(setup, tmp_path)
+    base.plan()
+    # cluster signature: different profiled speeds
+    other_speeds = _pipe(setup, tmp_path, speeds=(1.0, 0.6))
+    other_speeds.plan()
+    assert other_speeds.planner_calls == 1
+    # workload shape: any planner-visible knob
+    other_steps = StadiPipeline(cfg, params, sched, dataclasses.replace(
+        base.config, m_base=16))
+    other_steps.plan()
+    assert other_steps.planner_calls == 1
+    # model config hash
+    cfg2 = dataclasses.replace(cfg, n_layers=cfg.n_layers + 1)
+    other_model = _pipe(setup, tmp_path, cfg=cfg2)
+    other_model.plan()
+    assert other_model.planner_calls == 1
+    # ... while the original key still hits
+    again = _pipe(setup, tmp_path)
+    again.plan()
+    assert again.planner_calls == 0
+
+
+def test_sub_jitter_speeds_share_an_entry(setup, tmp_path):
+    """The cluster signature rounds speeds, so measurement jitter below
+    the rounding grain maps onto the same cache entry."""
+    _pipe(setup, tmp_path).plan()
+    jittered = _pipe(setup, tmp_path, speeds=(1.001, 0.499))
+    jittered.plan()
+    assert jittered.planner_calls == 0
+    assert jittered.plan_cache.hits == 1
+
+
+def test_corrupt_entry_falls_back_loudly(setup, tmp_path):
+    pipe = _pipe(setup, tmp_path)
+    live = pipe.plan()
+    path = pipe.plan_cache._path(pipe.last_plan_key)
+    with open(path, "w") as f:
+        f.write("{not json")
+    fresh = _pipe(setup, tmp_path)
+    with pytest.warns(RuntimeWarning, match="falling back to live planning"):
+        recovered = fresh.plan()
+    assert recovered == live                # live planning still works
+    assert fresh.planner_calls == 1
+    assert fresh.plan_cache.corrupt == 1
+    # the bad entry was dropped and re-written by the live plan
+    third = _pipe(setup, tmp_path)
+    third.plan()
+    assert third.planner_calls == 0
+
+
+def test_unversioned_entry_is_corrupt(setup, tmp_path):
+    pipe = _pipe(setup, tmp_path)
+    pipe.plan()
+    path = pipe.plan_cache._path(pipe.last_plan_key)
+    with open(path, "w") as f:
+        f.write('{"version": 999}')
+    fresh = _pipe(setup, tmp_path)
+    with pytest.warns(RuntimeWarning, match="version"):
+        fresh.plan()
+    assert fresh.plan_cache.corrupt == 1
+
+
+def test_cache_roundtrips_all_five_axes(setup, tmp_path):
+    """A fully-populated plan (stages + guidance + seq) survives the disk
+    round trip bit-exactly — dataclass equality on every axis."""
+    cfg, params, sched = setup
+    config = _config([1.0, 0.5], m_base=8, m_warmup=2, num_stages=2,
+                     cfg_scale=2.0, guidance="fused", seq_shards=2,
+                     backend="simulate",
+                     cost_model=CostModel(t_fixed=1e-3, t_row=1e-4),
+                     plan_cache_dir=str(tmp_path))
+    pipe = StadiPipeline(cfg, params, sched, config)
+    planned = pipe.plan()
+    cached = StadiPipeline(cfg, params, sched, config).plan()
+    assert cached == planned
+    assert cached.stages == planned.stages
+    assert cached.guidance == planned.guidance
+    assert cached.seq == planned.seq
+
+
+def test_use_cache_false_bypasses(setup, tmp_path):
+    pipe = _pipe(setup, tmp_path)
+    pipe.plan()
+    pipe.plan(use_cache=False)
+    assert pipe.planner_calls == 2
+    assert pipe.plan_cache.hits == 0
+
+
+def test_no_cache_dir_means_no_cache(setup):
+    cfg, params, sched = setup
+    pipe = StadiPipeline(cfg, params, sched,
+                         _config([1.0, 0.5], m_base=8, m_warmup=2))
+    assert pipe.plan_cache is None
+    pipe.plan()
+    pipe.plan()
+    assert pipe.planner_calls == 2
+
+
+def test_drift_replan_invalidates_stale_entry(setup, tmp_path):
+    """Serving-engine replanning: when OnlineProfiler drift exceeds the
+    threshold, the engine replans from the profiled speeds AND drops the
+    cache entry the stale plan came from (the persisted pairing no longer
+    matches the cluster)."""
+    from repro.serving.diffusion_engine import DiffusionServingEngine
+    cfg, params, sched = setup
+    cm = CostModel(t_fixed=5e-3, t_row=5.5e-4, link_bw=1.25e9,
+                   link_latency=50e-6)
+    config = _config([1.0, 1.0, 0.5, 0.5], m_base=16, m_warmup=2,
+                     planner="stadi_guidance", cfg_scale=2.0,
+                     guidance="split", cost_model=cm,
+                     plan_cache_dir=str(tmp_path))
+    pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=4, rebalance_every=1,
+                                    measured_speeds=[1.0, 0.1, 0.5, 0.5])
+    stale_key = pipe.last_plan_key
+    assert stale_key is not None
+    for i in range(4):
+        x = jax.random.normal(jax.random.PRNGKey(80 + i),
+                              (1, cfg.latent_size, cfg.latent_size,
+                               cfg.channels))
+        engine.submit(x, i % cfg.n_classes)
+    engine.run_to_completion()
+    assert engine.stats()["replans"] >= 1
+    cache_stats = engine.stats()["plan_cache"]
+    assert cache_stats is not None and cache_stats["invalidations"] >= 1
+    assert not os.path.exists(pipe.plan_cache._path(stale_key))
+    # replanned entries for the drifted cluster were persisted in turn
+    assert glob.glob(os.path.join(str(tmp_path), "*.json"))
+
+
+def test_engine_stats_surface_cache_counters(setup, tmp_path):
+    from repro.serving.diffusion_engine import DiffusionServingEngine
+    cfg, params, sched = setup
+    pipe = _pipe(setup, tmp_path, speeds=(1.0, 0.5),
+                 cost_model=CostModel(t_fixed=1e-3, t_row=1e-4))
+    engine = DiffusionServingEngine(pipe, slots=2)
+    s = engine.stats()
+    assert s["planner_calls"] == 1
+    assert s["plan_cache"]["misses"] == 1
+    # second engine over the same pipeline-config: pure cache hit
+    pipe2 = _pipe(setup, tmp_path, speeds=(1.0, 0.5),
+                  cost_model=CostModel(t_fixed=1e-3, t_row=1e-4))
+    DiffusionServingEngine(pipe2, slots=2)
+    assert pipe2.planner_calls == 0
+    assert pipe2.plan_cache.hits == 1
+
+
+def test_plan_cache_standalone_invalidate_counts_real_removals(tmp_path):
+    cache = PlanCache(cache_dir=str(tmp_path))
+    assert cache.invalidate("deadbeef") is False
+    assert cache.invalidations == 0

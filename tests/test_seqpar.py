@@ -289,8 +289,12 @@ def test_plan_seq_rejects_bad_geometry(setup):
                                           seq_shards=2)
     pipe = StadiPipeline(cfg, params, sched, config)
     plan = pipe.plan()
-    with pytest.raises(ValueError, match="seq_shards=3"):
-        plan_seq(plan, cfg, dataclasses.replace(config, seq_shards=3))
+    assert plan.seq is not None and plan.seq.n_shards == 2
+    # the shim resolves a planner-raw (seq-less) plan like plan() does
+    raw = dataclasses.replace(plan, seq=None)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="seq_shards=3"):
+            plan_seq(raw, cfg, dataclasses.replace(config, seq_shards=3))
     # pipeline-level validation mirrors the planner's
     with pytest.raises(ValueError, match="seq_shards"):
         StadiPipeline(cfg, params, sched,
