@@ -1,7 +1,15 @@
-"""Kernel microbenches: correctness deltas vs oracle + CPU wall-time of the
-algorithmic stand-ins (naive vs chunked attention; scan vs chunked SSM).
-Interpret-mode Pallas wall-time is NOT a TPU proxy — the derived column
-reports max|err| vs the oracle and the analytic HBM-bytes saving instead."""
+"""Kernel microbenches: parity vs oracle for every Pallas body, wall-time of
+the fused paths vs their assemble-then-attend references, and analytic HBM
+traffic deltas — written to ``results/kernels.json`` (the kernel perf
+trajectory artifact, DESIGN.md §15).
+
+Timing honesty: off-TPU the Pallas kernels run in interpret mode, whose
+wall-clock is NOT a TPU proxy — the JSON labels every timing with
+``timing_mode`` ("tpu-compiled" vs "cpu-interpret") and the reference paths
+are always real jitted XLA, so only same-mode comparisons are meaningful.
+On TPU (``STADI_PALLAS_INTERPRET=0`` or auto-detected) the same benches
+compile for real.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,19 +17,46 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core import sampler as sampler_lib
 from repro.kernels import ops, ref
 from repro.models.attention import chunked_attend
 from repro.models import layers
 
 
+def _rand(key, *shapes):
+    ks = jax.random.split(jax.random.PRNGKey(key), len(shapes))
+    return [jax.random.normal(k, s) for k, s in zip(ks, shapes)]
+
+
+def _padded_reference(q, kf, vf, kst, vst, tok_start, valid, n_tokens):
+    """The unfused SPMD attend: mask-blend the local slab, materialize the
+    whole-image K/V via dynamic_update_slice, masked dense attend — what
+    dit.block_stack runs when the kernel is off."""
+    Nl = q.shape[1]
+    mask = (jnp.arange(Nl) < valid)[None, :, None, None]
+    cur_k = jax.lax.dynamic_slice_in_dim(kst, tok_start, Nl, axis=1)
+    cur_v = jax.lax.dynamic_slice_in_dim(vst, tok_start, Nl, axis=1)
+    ku = jnp.where(mask, kf, cur_k)
+    vu = jnp.where(mask, vf, cur_v)
+    full_k = jax.lax.dynamic_update_slice_in_dim(kst, ku, tok_start, axis=1)
+    full_v = jax.lax.dynamic_update_slice_in_dim(vst, vu, tok_start, axis=1)
+    key_mask = (jnp.arange(kst.shape[1]) < n_tokens)[None, None, None, :]
+    return layers.attend(q, full_k, full_v, mask=key_mask)
+
+
 def run(emit=True):
     out = {}
-    # flash attention kernel vs oracle
+    interp = ops._interpret()
+    timing_mode = "cpu-interpret" if interp else "tpu-compiled"
+    results = {"timing_mode": timing_mode,
+               "note": ("interpret-mode kernel timings are NOT a TPU proxy; "
+                        "reference timings are real jitted XLA"
+                        if interp else "compiled TPU timings"),
+               "cases": {}}
+
+    # ---------------- parity: flash attention vs oracle ----------------
     B, S, H, hd = 1, 256, 4, 64
-    ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    q = jax.random.normal(ks[0], (B, S, H, hd))
-    k = jax.random.normal(ks[1], (B, S, H, hd))
-    v = jax.random.normal(ks[2], (B, S, H, hd))
+    q, k, v = _rand(0, (B, S, H, hd), (B, S, H, hd), (B, S, H, hd))
     got = ops.flash_attention(q, k, v, causal=True)
     want = jnp.moveaxis(ref.attention_ref(
         jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
@@ -35,14 +70,11 @@ def run(emit=True):
                     f"{flash_bytes/1e6:.1f}MB")
     out["flash_err"] = err
 
-    # stale-kv kernel vs oracle (the paper's hot op)
+    # ---------------- parity: static stale-kv vs oracle ----------------
     N, Nl, st = 256, 64, 128
-    ks = jax.random.split(jax.random.PRNGKey(1), 5)
-    qf = jax.random.normal(ks[0], (B, Nl, H, hd))
-    kf = jax.random.normal(ks[1], (B, Nl, H, hd))
-    vf = jax.random.normal(ks[2], (B, Nl, H, hd))
-    kst = jax.random.normal(ks[3], (B, N, H, hd))
-    vst = jax.random.normal(ks[4], (B, N, H, hd))
+    qf, kf, vf, kst, vst = _rand(1, (B, Nl, H, hd), (B, Nl, H, hd),
+                                 (B, Nl, H, hd), (B, N, H, hd),
+                                 (B, N, H, hd))
     got = ops.stale_kv_attention(qf, kf, vf, kst, vst, tok_start=st)
     want = jnp.moveaxis(ref.stale_kv_attention_ref(
         jnp.moveaxis(qf, 2, 1), jnp.moveaxis(kf, 2, 1), jnp.moveaxis(vf, 2, 1),
@@ -54,32 +86,145 @@ def run(emit=True):
                     f"{2*N*H*hd*4/1e6:.2f}MB/step/layer")
     out["stale_err"] = err
 
-    # chunked attention stand-in: wall time + memory vs naive (CPU-real)
+    # ------- fused padded stale-kv: parity + wall time vs reference -------
+    # the shard_map hot op: padded local slab, scratch-padded buffers,
+    # traced tok_start/valid_tokens
+    Np = N + Nl
+    qp, kfp, vfp, ksp, vsp = _rand(2, (B, Nl, H, hd), (B, Nl, H, hd),
+                                   (B, Nl, H, hd), (B, Np, H, hd),
+                                   (B, Np, H, hd))
+    tok_start, valid = 128, 48
+
+    fused = jax.jit(lambda ts, va: ops.stale_kv_attention_padded(
+        qp, kfp, vfp, ksp, vsp, ts, va, n_tokens=N))
+    unfused = jax.jit(lambda ts, va: _padded_reference(
+        qp, kfp, vfp, ksp, vsp, ts, va, N))
+    got = fused(tok_start, valid)
+    want = unfused(tok_start, valid)
+    err = float(jnp.max(jnp.abs(got - want)))
+    out["padded_err"] = err
+    t_fused = common.time_fn(lambda: fused(tok_start, valid))
+    t_ref = common.time_fn(lambda: unfused(tok_start, valid))
+    # reference materializes blended full_k/full_v in HBM (write, then
+    # re-read in the dense attend); the kernel streams fresh+stale tiles
+    itemsize = np.dtype(np.float32).itemsize
+    hbm_saved = 2 * 2 * B * Np * H * hd * itemsize   # k+v, write+reread
+    if emit:
+        common.emit("kernels/stale_kv_padded_fused", t_fused * 1e6,
+                    f"{timing_mode}, max_err={err:.2e}")
+        common.emit("kernels/stale_kv_padded_reference", t_ref * 1e6,
+                    "jitted blend+update_slice+attend")
+    results["cases"]["stale_kv_padded"] = {
+        "shape": {"B": B, "H": H, "hd": hd, "Nl": Nl, "Npad": Np,
+                  "n_tokens": N},
+        "max_err_vs_reference": err,
+        "fused_wall_us": t_fused * 1e6,
+        "reference_wall_us": t_ref * 1e6,
+        "hbm_bytes_saved_per_layer_step": hbm_saved,
+    }
+
+    # ------- guided (branch-stacked) stale-kv: parity both modes -------
+    g_ops = _rand(3, (2, B, Nl, H, hd), (2, B, Nl, H, hd),
+                  (2, B, Nl, H, hd), (2, B, Np, H, hd), (2, B, Np, H, hd))
+    qg, kfg, vfg, ksg, vsg = g_ops
+    for uncond_fresh in (1, 0):
+        got = ops.stale_kv_attention_guided(
+            qg, kfg, vfg, ksg, vsg, tok_start, valid, uncond_fresh,
+            n_tokens=N)
+        want_c = _padded_reference(qg[0], kfg[0], vfg[0], ksg[0], vsg[0],
+                                   tok_start, valid, N)
+        # uncond_fresh=0 is the interleaved body: branch 1 attends pure
+        # stale (its fresh slab masked out in-kernel)
+        want_u = _padded_reference(qg[1], kfg[1], vfg[1], ksg[1], vsg[1],
+                                   tok_start,
+                                   valid if uncond_fresh else 0, N)
+        err = float(jnp.max(jnp.abs(got - jnp.stack([want_c, want_u]))))
+        out[f"guided_err_uf{uncond_fresh}"] = err
+        if emit:
+            common.emit(f"kernels/stale_kv_guided_uf{uncond_fresh}", 0.0,
+                        f"max_err={err:.2e}")
+        results["cases"][f"stale_kv_guided_uncond_fresh{uncond_fresh}"] = {
+            "max_err_vs_reference": err}
+
+    # ------- lse ring partial: parity of the streamed combine -------
+    # two segments merged by log-sum-exp == one dense attend
+    T_seg = 128
+    qr, k1, v1, k2, v2 = _rand(4, (B, S, H, hd), (B, T_seg, H, hd),
+                               (B, T_seg, H, hd), (B, T_seg, H, hd),
+                               (B, T_seg, H, hd))
+    valid2 = 96                                      # scratch tail on seg 2
+    o1, l1 = ops.lse_attention(qr, k1, v1, T_seg)
+    o2, l2 = ops.lse_attention(qr, k2, v2, valid2)
+    m = jnp.maximum(l1, l2)
+    w1, w2 = jnp.exp(l1 - m), jnp.exp(l2 - m)
+    merged = ((o1 * w1[..., None] + o2 * w2[..., None])
+              / (w1 + w2)[..., None])
+    kcat = jnp.concatenate([k1, k2[:, :valid2]], axis=1)
+    vcat = jnp.concatenate([v1, v2[:, :valid2]], axis=1)
+    want = layers.attend(qr, kcat, vcat)
+    err = float(jnp.max(jnp.abs(merged - want)))
+    out["lse_err"] = err
+    if emit:
+        common.emit("kernels/lse_ring_partial", 0.0,
+                    f"max_err={err:.2e} segment-mem "
+                    f"{2*B*2*T_seg*H*hd*4/1e6:.1f}MB->"
+                    f"{2*B*T_seg*H*hd*4/1e6:.1f}MB")
+    results["cases"]["lse_ring_partial"] = {
+        "max_err_vs_dense": err,
+        "kv_bytes_per_member_assembled": 2 * B * 2 * T_seg * H * hd * itemsize,
+        "kv_bytes_per_member_streamed": 2 * B * T_seg * H * hd * itemsize,
+    }
+
+    # ------- fused CFG epilogue: parity + wall time vs two-pass -------
+    E = (1, 64, 64, 3) if common.smoke() else (1, 128, 128, 3)
+    ec, eu = _rand(5, E, E)
+    scale = 4.5
+    fused_cfg = jax.jit(lambda a, b: ops.cfg_epilogue(a, b, scale))
+    unfused_cfg = jax.jit(lambda a, b: (
+        sampler_lib.cfg_combine(a, b, scale), sampler_lib.cfg_delta(a, b)))
+    (gc, gd), (wc, wd) = fused_cfg(ec, eu), unfused_cfg(ec, eu)
+    err = float(max(jnp.max(jnp.abs(gc - wc)), jnp.max(jnp.abs(gd - wd))))
+    out["cfg_err"] = err
+    t_fused = common.time_fn(lambda: fused_cfg(ec, eu))
+    t_ref = common.time_fn(lambda: unfused_cfg(ec, eu))
+    n_el = int(np.prod(E))
+    # unfused: each branch read twice (combine pass + delta pass); fused:
+    # each branch read once — writes identical
+    hbm_saved = 2 * n_el * itemsize
+    if emit:
+        common.emit("kernels/cfg_epilogue_fused", t_fused * 1e6,
+                    f"{timing_mode}, max_err={err:.2e}")
+        common.emit("kernels/cfg_epilogue_reference", t_ref * 1e6,
+                    "jitted cfg_combine+cfg_delta")
+    results["cases"]["cfg_epilogue"] = {
+        "shape": list(E),
+        "max_err_vs_sampler": err,
+        "fused_wall_us": t_fused * 1e6,
+        "reference_wall_us": t_ref * 1e6,
+        "hbm_bytes_saved_per_step": hbm_saved,
+    }
+
+    # ------- chunked attention stand-in (CPU-real timings) -------
     S2 = 1024
-    ks = jax.random.split(jax.random.PRNGKey(2), 3)
-    q2 = jax.random.normal(ks[0], (1, S2, 4, 64))
-    k2 = jax.random.normal(ks[1], (1, S2, 4, 64))
-    v2 = jax.random.normal(ks[2], (1, S2, 4, 64))
+    q2, k2c, v2c = _rand(6, (1, S2, 4, 64), (1, S2, 4, 64), (1, S2, 4, 64))
     naive = jax.jit(lambda q, k, v: layers.attend(
         q, k, v, mask=layers.causal_mask(S2, S2, 0)))
     chunked = jax.jit(lambda q, k, v: chunked_attend(
         q, k, v, causal=True, chunk=128))
-    t_n = common.time_fn(lambda: naive(q2, k2, v2))
-    t_c = common.time_fn(lambda: chunked(q2, k2, v2))
-    err = float(jnp.max(jnp.abs(naive(q2, k2, v2) - chunked(q2, k2, v2))))
+    t_n = common.time_fn(lambda: naive(q2, k2c, v2c))
+    t_c = common.time_fn(lambda: chunked(q2, k2c, v2c))
+    err = float(jnp.max(jnp.abs(naive(q2, k2c, v2c) - chunked(q2, k2c, v2c))))
     if emit:
         common.emit("kernels/attend_naive_s1024", t_n * 1e6, "CPU wall")
         common.emit("kernels/attend_chunked_s1024", t_c * 1e6,
                     f"CPU wall, max_err={err:.2e}")
     out["chunked_err"] = err
 
-    # ssm kernel vs oracle
+    # ---------------- parity: ssm scan vs oracle ----------------
     B3, S3, Di, Nst = 1, 256, 256, 16
-    ks = jax.random.split(jax.random.PRNGKey(3), 4)
-    x = jax.random.normal(ks[0], (B3, S3, Di))
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (B3, S3, Di))) * 0.1
-    b_t = jax.random.normal(ks[2], (B3, S3, Nst))
-    c_t = jax.random.normal(ks[3], (B3, S3, Nst))
+    x, dt_r, b_t, c_t = _rand(7, (B3, S3, Di), (B3, S3, Di),
+                              (B3, S3, Nst), (B3, S3, Nst))
+    dt = jax.nn.softplus(dt_r) * 0.1
     a = -jnp.exp(jnp.linspace(-2, 1, Nst))[None].repeat(Di, 0)
     d_skip = jnp.ones((Di,))
     got = ops.ssm_scan(x, dt, b_t, c_t, a, d_skip)
@@ -92,6 +237,10 @@ def run(emit=True):
                     f"max_err={err:.2e} state-HBM {state_hbm_naive/1e6:.1f}MB"
                     f"->{state_hbm_chunk/1e6:.1f}MB")
     out["ssm_err"] = err
+
+    results["parity"] = {k: v for k, v in out.items()}
+    if emit:
+        common.write_json("kernels.json", results)
     return out
 
 
@@ -99,6 +248,11 @@ def main():
     out = run()
     assert out["flash_err"] < 1e-4
     assert out["stale_err"] < 1e-4
+    assert out["padded_err"] < 1e-4
+    assert out["guided_err_uf1"] < 1e-4
+    assert out["guided_err_uf0"] < 1e-4
+    assert out["lse_err"] < 1e-4
+    assert out["cfg_err"] < 1e-5
     assert out["chunked_err"] < 1e-4
     assert out["ssm_err"] < 1e-3
 

@@ -84,6 +84,17 @@ def _jit_full_step(params, cfg, x, t, cond):
 # the cost model, never between math — which is why split CFG is bitwise-
 # identical to the fused reference under one schedule (tested).
 
+def _cfg_tail(cfg, eps2, scale):
+    """(eps_combined, delta) from the branch pair: the fused Pallas CFG
+    epilogue when the config routes attention through kernels (one HBM
+    pass computes both, DESIGN.md §15), else the two sampler formulas."""
+    if cfg.use_pallas_attention:
+        from repro.kernels import ops as kops
+        return kops.cfg_epilogue(eps2[0], eps2[1], scale)
+    return (sampler_lib.cfg_combine(eps2[0], eps2[1], scale),
+            sampler_lib.cfg_delta(eps2[0], eps2[1]))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _jit_guided_full_step(params, cfg, x, t, cond, scale):
     """Synchronous CFG step: returns (eps_combined, delta, (k2, v2)) with
@@ -92,8 +103,7 @@ def _jit_guided_full_step(params, cfg, x, t, cond, scale):
         return dit.forward_patch(params, cfg, x, t, c, 0, buffers=None,
                                  return_kv=True)
     eps2, kvs2 = jax.vmap(one)(dit.guidance_conds(cond))
-    return (sampler_lib.cfg_combine(eps2[0], eps2[1], scale),
-            sampler_lib.cfg_delta(eps2[0], eps2[1]), kvs2)
+    return _cfg_tail(cfg, eps2, scale) + (kvs2,)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "row_start"))
@@ -107,8 +117,7 @@ def _jit_guided_patch_step(params, cfg, x_loc, t, cond, row_start, bk2, bv2,
         return dit.forward_patch(params, cfg, x_loc, t, c, row_start,
                                  buffers=(bk, bv), return_kv=True)
     eps2, kvs2 = jax.vmap(one)(dit.guidance_conds(cond), bk2, bv2)
-    return (sampler_lib.cfg_combine(eps2[0], eps2[1], scale),
-            sampler_lib.cfg_delta(eps2[0], eps2[1]), kvs2)
+    return _cfg_tail(cfg, eps2, scale) + (kvs2,)
 
 
 def guided_substep(params, cfg, x_loc, t_from, cond, row_start, read_pub,

@@ -45,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import inspect
+import os
 import warnings
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
@@ -163,6 +164,10 @@ class PipelineResult:
     plan: ExecutionPlan
     latency_s: Optional[float] = None
     replans: List[ReplanEvent] = dataclasses.field(default_factory=list)
+    #: Pallas kernel path hits/misses recorded while TRACING this call
+    #: ({"hits": {kind: n}, "misses": {reason: n}}) — jit caching means a
+    #: repeat call with cached traces legitimately reports {} (§15).
+    kernel_stats: Dict = dataclasses.field(default_factory=dict)
 
 
 class Executor(Protocol):
@@ -650,6 +655,13 @@ SEQ_BACKENDS = backends_supporting("seq")
 GUIDED_BACKENDS = backends_supporting("guidance")
 
 
+def _env_use_pallas() -> bool:
+    """STADI_USE_PALLAS=1 force-routes every pipeline through the Pallas
+    kernel bodies (the CI kernel leg; combine with STADI_PALLAS_INTERPRET=1
+    off-TPU)."""
+    return os.environ.get("STADI_USE_PALLAS", "").strip() not in ("", "0")
+
+
 class StadiPipeline:
     """One-call STADI inference: plan -> execute -> (optionally) rebalance.
 
@@ -661,10 +673,14 @@ class StadiPipeline:
 
     def __init__(self, model_cfg: DiTConfig, params, sched: NoiseSchedule,
                  config: StadiConfig):
-        if config.use_pallas_attention:
+        if config.use_pallas_attention or _env_use_pallas():
             # thread the kernel flag into the model config the executors'
-            # jitted steps close over (DiTConfig is the static jit key)
+            # jitted steps close over (DiTConfig is the static jit key).
+            # STADI_USE_PALLAS=1 force-enables it process-wide — the CI
+            # kernel leg runs the whole matrix through the Pallas bodies
+            # without touching each test's config.
             model_cfg = model_cfg.replace(use_pallas_attention=True)
+            config = dataclasses.replace(config, use_pallas_attention=True)
         self.model_cfg = model_cfg
         self.params = params
         self.sched = sched
@@ -720,6 +736,11 @@ class StadiPipeline:
         self.last_plan_key: Optional[str] = None
         #: live planner searches actually executed (cache hits skip these)
         self.planner_calls = 0
+        #: cumulative Pallas kernel path hits/misses traced by this
+        #: pipeline's generate() calls (per-call deltas land on each
+        #: PipelineResult.kernel_stats)
+        self.kernel_stats: Dict[str, Dict[str, int]] = {"hits": {},
+                                                        "misses": {}}
         if config.plan_cache_dir:
             from repro.serving.plan_cache import PlanCache
             self.plan_cache = PlanCache(config.plan_cache_dir)
@@ -832,10 +853,18 @@ class StadiPipeline:
             hook = self._make_rebalance_hook(plan, measured_speeds, replans)
         # ONE normalized call shape for every backend (EXECUTOR_KWARGS):
         # strictly keyword, so per-backend kwarg drift cannot creep back in
+        from repro.kernels import ops as kops
+        kstats_before = kops.kernel_stats_snapshot()
         image, trace = get_executor(config.backend)(
             params=self.params, model_cfg=self.model_cfg, sched=self.sched,
             x_T=x_T, cond=cond, plan=plan, config=config,
             interval_hook=hook)
+        kernel_stats = kops.kernel_stats_delta(
+            kstats_before, kops.kernel_stats_snapshot())
+        for bucket, counts in kernel_stats.items():
+            for key, n in counts.items():
+                self.kernel_stats[bucket][key] = (
+                    self.kernel_stats[bucket].get(key, 0) + n)
         latency = None
         if config.cost_model is not None:
             lat_speeds = (list(measured_speeds) if measured_speeds is not None
@@ -843,7 +872,8 @@ class StadiPipeline:
             latency = sim.simulate_trace(trace, lat_speeds, config.cost_model)
         elif config.backend == "simulate":
             raise ValueError("the 'simulate' backend needs config.cost_model")
-        return PipelineResult(image, trace, plan, latency, replans)
+        return PipelineResult(image, trace, plan, latency, replans,
+                              kernel_stats)
 
     def generate_many(self, x_Ts: Sequence, conds: Sequence, *,
                       slots: int = 4) -> List[PipelineResult]:

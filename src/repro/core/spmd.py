@@ -70,7 +70,13 @@ def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
                     params, cfg, my_slab, t_from, c, my_start,
                     buffers=(bk, bv), return_kv=True, valid_tokens=my_tok)
             eps2, kvs = jax.vmap(one)(dit.guidance_conds(cond), pub_k, pub_v)
-            eps = sampler_lib.cfg_combine(eps2[0], eps2[1], guidance_scale)
+            if cfg.use_pallas_attention:   # fused combine: one HBM pass
+                from repro.kernels import ops as kops
+                eps = kops.cfg_epilogue(eps2[0], eps2[1], guidance_scale,
+                                        with_delta=False)
+            else:
+                eps = sampler_lib.cfg_combine(eps2[0], eps2[1],
+                                              guidance_scale)
         else:
             eps, kvs = dit.forward_patch(
                 params, cfg, my_slab, t_from, cond, my_start,
@@ -433,6 +439,10 @@ def run_spmd(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                     return dit.forward_patch(params, cfg, x, t, c, 0,
                                              buffers=None, return_kv=True)
                 eps2, kvs = jax.vmap(one)(dit.guidance_conds(cond))
+                if cfg.use_pallas_attention:
+                    from repro.kernels import ops as kops
+                    return kops.cfg_epilogue(eps2[0], eps2[1], scale,
+                                             with_delta=False), kvs
                 return sampler_lib.cfg_combine(eps2[0], eps2[1], scale), kvs
             return dit.forward_patch(params, cfg, x, t, cond, 0,
                                      buffers=None, return_kv=True)
@@ -508,31 +518,36 @@ def run_spmd_seq(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     SeqShard` events, which carry no numerics — but every buffered
     attention read routes through the sequence axis:
 
-      1. RING: each member extracts its own token segment of the
-         freshness-blended whole-image K/V and reassembles the full
-         context via ``n_shards - 1`` ``ppermute`` hops (the per-hop
-         staged K/V of the "ring" policy; segments carry exactly the
-         fresh-local ⊕ policy-stale-remote values the dense read uses, so
-         the assembled context is bitwise-identical).
+      1. RING: each member holds ONE token segment of the
+         freshness-blended whole-image K/V; segments rotate via
+         ``n_shards - 1`` ``ppermute`` hops while per-hop flash-style
+         partials (normalized output + log-sum-exp) stream through an
+         online softmax merge — the full context is never materialized
+         on any member (O(segment) K/V memory, DESIGN.md §15). Segments
+         carry exactly the fresh-local ⊕ policy-stale-remote values the
+         dense read uses.
       2. ULYSSES: one ``all_to_all`` scatters query head groups over
          "seq", each member attends its ``n_heads / n_shards`` heads over
-         the full context, and the reverse ``all_to_all`` regathers heads.
+         the rotating segments, and the reverse ``all_to_all`` regathers
+         heads.
 
-    Head groups are independent under softmax, so the sharded read equals
-    the dense ``layers.attend`` up to reduction order (tested <= 1e-5 vs
-    the emulated reference). Requires ``n_heads % n_shards == 0`` (the
+    Head groups are independent under softmax and the log-sum-exp merge
+    is exact, so the sharded read equals the dense ``layers.attend`` up
+    to reduction order (tested <= 1e-5 vs the emulated reference). Requires ``n_heads % n_shards == 0`` (the
     all-to-all's even head split; speed-proportional uneven heads are the
     cost model's planning view) and ``n_shards * len(patches)`` devices.
     As with the other SPMD backends, the wall-clock benefit of the ring
     overlap is modeled by the simulator; this backend proves the
     collective mechanics and the numerics. Returns the final image.
     """
+    import math
+
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh, PartitionSpec as P
 
     from repro.core import sampler as sampler_lib
-    from repro.models import layers
+    from repro.kernels import ops as kops
     from repro.models.diffusion import dit
 
     if seq is None or len(seq.segments) < 2:
@@ -562,36 +577,69 @@ def run_spmd_seq(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
     Hs = cfg.n_heads // S
     ring_perm = [(s, (s + 1) % S) for s in range(S)]
 
-    def _ring_assemble(full):
-        """Reassemble the whole-context tensor from per-member token
-        segments via S-1 ring hops: member j starts holding segment j and
-        at hop h receives segment (j - h) mod S from its ring neighbor."""
-        j = jax.lax.axis_index("seq")
-        cpad = -full.shape[1] % S
-        fp = jnp.pad(full, ((0, 0), (0, cpad), (0, 0), (0, 0)))
-        cseg = fp.shape[1] // S
-        hold = jax.lax.dynamic_slice_in_dim(fp, j * cseg, cseg, axis=1)
-        out = jnp.zeros_like(fp)
-        for h in range(S):
-            src = (j - h) % S
-            out = jax.lax.dynamic_update_slice_in_dim(out, hold, src * cseg,
-                                                      axis=1)
-            if h < S - 1:
-                hold = jax.lax.ppermute(hold, "seq", ring_perm)
-        return out[:, :full.shape[1]]
+    def _segment_partial(q_g, k_h, v_h, valid_here):
+        """Normalized attention of q_g over ONE ring segment plus its
+        log-sum-exp: the flash-style partial the cross-hop merge combines.
+        Routed through the Pallas LSE kernel when the config asks for it."""
+        if cfg.use_pallas_attention:
+            kops.record_kernel_hit("ring.lse")
+            return kops.lse_attention(q_g, k_h, v_h, valid_here)
+        hd = q_g.shape[-1]
+        s = (jnp.einsum("bshd,bthd->bhst", q_g, k_h).astype(jnp.float32)
+             / math.sqrt(hd))
+        seg_mask = jnp.arange(k_h.shape[1]) < valid_here
+        s = jnp.where(seg_mask[None, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", p / jnp.maximum(l, 1e-30)[..., None],
+                         v_h.astype(jnp.float32)).astype(q_g.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, jnp.moveaxis(lse, 1, 2)          # [B,S,H]
 
     def attend_fn(q, full_k, full_v, key_mask):
+        """Flash-style ring read: instead of reassembling the whole-image
+        K/V on every member (O(n_tokens) memory) and attending once, each
+        member holds ONE token segment, attends its Ulysses head group over
+        it, and streams the per-hop (out, lse) partials through an online
+        log-sum-exp merge while segments rotate via ``ppermute`` —
+        O(segment) K/V memory, S-1 hops, numerically the dense softmax up
+        to reduction order. A fully scratch segment contributes lse ~= -inf
+        and therefore exactly zero merge weight."""
         j = jax.lax.axis_index("seq")
-        kr = _ring_assemble(full_k)
-        vr = _ring_assemble(full_v)
+        n_real = cfg.n_tokens if key_mask is not None else full_k.shape[1]
         # Ulysses: scatter query head groups over "seq" (head group j of
-        # every member lands on member j, token blocks concatenated)...
+        # every member lands on member j, token blocks concatenated)
         q_g = jax.lax.all_to_all(q, "seq", split_axis=2, concat_axis=1,
                                  tiled=True)
-        k_h = jax.lax.dynamic_slice_in_dim(kr, j * Hs, Hs, axis=2)
-        v_h = jax.lax.dynamic_slice_in_dim(vr, j * Hs, Hs, axis=2)
-        att_g = layers.attend(q_g, k_h, v_h, mask=key_mask)
-        # ...attend my heads over the full ring-assembled context, then
+        cpad = -full_k.shape[1] % S
+        pad4 = ((0, 0), (0, cpad), (0, 0), (0, 0))
+        cseg = (full_k.shape[1] + cpad) // S
+        hold_k = jax.lax.dynamic_slice_in_dim(jnp.pad(full_k, pad4),
+                                              j * cseg, cseg, axis=1)
+        hold_v = jax.lax.dynamic_slice_in_dim(jnp.pad(full_v, pad4),
+                                              j * cseg, cseg, axis=1)
+        num = den = run_m = None
+        for h in range(S):
+            src = (j - h) % S                 # segment id this hop holds
+            valid_here = jnp.clip(n_real - src * cseg, 0, cseg)
+            k_h = jax.lax.dynamic_slice_in_dim(hold_k, j * Hs, Hs, axis=2)
+            v_h = jax.lax.dynamic_slice_in_dim(hold_v, j * Hs, Hs, axis=2)
+            out_s, lse_s = _segment_partial(q_g, k_h, v_h, valid_here)
+            out_s = out_s.astype(jnp.float32)
+            if num is None:
+                num, den, run_m = out_s, jnp.ones_like(lse_s), lse_s
+            else:
+                m_new = jnp.maximum(run_m, lse_s)
+                corr = jnp.exp(run_m - m_new)
+                w = jnp.exp(lse_s - m_new)
+                num = num * corr[..., None] + out_s * w[..., None]
+                den = den * corr + w
+                run_m = m_new
+            if h < S - 1:
+                hold_k = jax.lax.ppermute(hold_k, "seq", ring_perm)
+                hold_v = jax.lax.ppermute(hold_v, "seq", ring_perm)
+        att_g = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
         # regather: head group j returns from member j
         return jax.lax.all_to_all(att_g, "seq", split_axis=1, concat_axis=2,
                                   tiled=True)

@@ -1,0 +1,59 @@
+"""Fused classifier-free-guidance epilogue (DESIGN.md §12/§15).
+
+The guided steps end with two elementwise passes over the branch pair:
+``cfg_combine``  = eps_u + w * (eps_c - eps_u)   (the denoiser output)
+``cfg_delta``    = eps_c - eps_u                 (the interleaved cache)
+Unfused, eps_c/eps_u stream from HBM twice (once per formula). This kernel
+computes both in ONE pass — each branch tensor is read once, both outputs
+written once — and is numerically identical to the sampler helpers (same
+fp32 op order, combined cast back to the eps dtype, delta kept fp32).
+
+``w`` arrives as a (1, 1) array broadcast to every grid cell rather than a
+compile-time constant so the serving engine's traced per-run scales reuse
+one compiled kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+
+
+def _cfg_kernel(w_ref, ec_ref, eu_ref, o_ref, d_ref):
+    w = w_ref[0, 0]
+    ec = ec_ref[...].astype(jnp.float32)
+    eu = eu_ref[...].astype(jnp.float32)
+    d = ec - eu
+    d_ref[...] = d
+    o_ref[...] = (eu + w * d).astype(o_ref.dtype)
+
+
+def cfg_epilogue_2d(eps_c, eps_u, scale, *, bm: int = 256,
+                    interpret: bool = True):
+    """eps_c/eps_u: [M, 128] tiles (M a multiple of 8); scale: scalar.
+    Returns (combined [M,128] eps dtype, delta [M,128] fp32)."""
+    M, lane = eps_c.shape
+    assert lane == LANE and M % SUBLANE == 0, (M, lane)
+    bm = min(bm, M)
+    while M % bm:
+        bm //= 2
+    w = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _cfg_kernel,
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bm, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((bm, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((bm, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((M, LANE), eps_c.dtype),
+                   jax.ShapeDtypeStruct((M, LANE), jnp.float32)],
+        interpret=interpret,
+    )(w, eps_c, eps_u)

@@ -1,10 +1,14 @@
 """Jit'd public wrappers around the Pallas kernels: layout transforms
 ([B,S,H,hd] <-> [B,H,S,hd]), GQA head broadcast, shape padding to tile
-multiples, interpret-mode selection (interpret=True off-TPU per the brief).
+multiples, interpret-mode selection (interpret=True off-TPU per the brief,
+overridable via STADI_PALLAS_INTERPRET), and the kernel-path hit/miss
+counters every executor reports through (DESIGN.md §15).
 """
 from __future__ import annotations
 
+import collections
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +19,70 @@ from repro.kernels import stale_kv_attention as ska
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Pallas interpret-mode selection: real lowering on TPU, interpreter
+    elsewhere. ``STADI_PALLAS_INTERPRET=1`` forces the interpreter even on
+    TPU (CI determinism); ``=0`` demands real lowering and FAILS LOUDLY on
+    a host with no TPU rather than silently timing the interpreter."""
+    env = os.environ.get("STADI_PALLAS_INTERPRET", "").strip().lower()
+    on_tpu = jax.default_backend() == "tpu"
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        if not on_tpu:
+            raise RuntimeError(
+                "STADI_PALLAS_INTERPRET=0 demands compiled Pallas kernels, "
+                f"but jax.default_backend() == {jax.default_backend()!r} "
+                "(no TPU). Interpret-mode timings are NOT a TPU proxy — "
+                "unset the variable to run the interpreter explicitly.")
+        return False
+    if env:
+        raise ValueError(
+            f"STADI_PALLAS_INTERPRET={env!r} is not a recognized value "
+            "(use 1/true/yes, 0/false/no, or unset for auto)")
+    return not on_tpu
+
+
+# ----------------------------------------------------------------------
+# kernel-path visibility: trace-time hit/miss counters (DESIGN.md §15)
+# ----------------------------------------------------------------------
+#
+# Counted when the kernel call (or its refusal) is TRACED, not executed:
+# jit caching means a program traced once and run R times counts once, so
+# the numbers answer "does this executor's compiled program contain the
+# kernel?" — which is what the parity tests must assert (a silent fallback
+# would still produce correct images). Misses are only recorded when
+# use_pallas_attention asked for the kernel and the layout refused it.
+
+_kernel_hits: collections.Counter = collections.Counter()
+_kernel_misses: collections.Counter = collections.Counter()
+
+
+def record_kernel_hit(kind: str) -> None:
+    _kernel_hits[kind] += 1
+
+
+def record_kernel_miss(reason: str) -> None:
+    _kernel_misses[reason] += 1
+
+
+def kernel_stats_snapshot() -> dict:
+    """Copy of the process-wide counters: {"hits": {...}, "misses": {...}}."""
+    return {"hits": dict(_kernel_hits), "misses": dict(_kernel_misses)}
+
+
+def kernel_stats_delta(before: dict, after: dict) -> dict:
+    """after - before, dropping zero entries (per-run attribution)."""
+    out = {}
+    for key in ("hits", "misses"):
+        d = {k: after[key].get(k, 0) - before[key].get(k, 0)
+             for k in after[key]}
+        out[key] = {k: v for k, v in d.items() if v}
+    return out
+
+
+def reset_kernel_stats() -> None:
+    _kernel_hits.clear()
+    _kernel_misses.clear()
 
 
 def _pad_to(x, mult: int, axis: int):
@@ -134,3 +201,97 @@ def ssm_scan(x, dt, b_t, c_t, a, d_skip, *, chunk: int = 0, dblk: int = 0):
     y = ss.ssm_scan_chunked(x, dt, b_t, c_t, a2, dsk, chunk=chunk, dblk=dblk,
                             interpret=_interpret())
     return y[:, :S, :Di]
+
+
+@functools.partial(jax.jit, static_argnames=("n_tokens", "bq", "bk"))
+def stale_kv_attention_padded(q, k_fresh, v_fresh, k_stale, v_stale,
+                              tok_start, valid_tokens, *, n_tokens: int,
+                              bq: int = 8, bk: int = 8):
+    """Padded-layout DistriFusion hot op (the shard_map form).
+
+    q/k_fresh/v_fresh: [B,Nl_max,H,hd] local slab padded to the max patch;
+    k_stale/v_stale: [B,Npad,H,hd] whole-image stale buffer (scratch-padded);
+    tok_start/valid_tokens: TRACED per-device layout scalars (multiples of
+    the tile contract, see kernels/stale_kv_attention.py); n_tokens: static
+    real-context length (key mask). Returns [B,Nl_max,H,hd]."""
+    out = ska.stale_kv_attention_padded_bhsd(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k_fresh, 2, 1),
+        jnp.moveaxis(v_fresh, 2, 1), jnp.moveaxis(k_stale, 2, 1),
+        jnp.moveaxis(v_stale, 2, 1), tok_start, valid_tokens,
+        n_tokens=n_tokens, bq=bq, bk=bk, interpret=_interpret())
+    return jnp.moveaxis(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("n_tokens", "bq", "bk"))
+def stale_kv_attention_guided(q, k_fresh, v_fresh, k_stale, v_stale,
+                              tok_start, valid_tokens, uncond_fresh, *,
+                              n_tokens: int, bq: int = 8, bk: int = 8):
+    """Branch-stacked guided stale-KV attention: operands carry a leading
+    guidance-branch axis of 2 ([2,B,Nl_max,H,hd] fresh / [2,B,Npad,H,hd]
+    stale); ``uncond_fresh`` (traced 0/1) gates the unconditional branch's
+    freshness blend in-kernel (0 = interleaved reuse: attend pure-stale).
+    Returns [2,B,Nl_max,H,hd]."""
+    out = ska.stale_kv_attention_guided_bhsd(
+        jnp.moveaxis(q, 3, 2), jnp.moveaxis(k_fresh, 3, 2),
+        jnp.moveaxis(v_fresh, 3, 2), jnp.moveaxis(k_stale, 3, 2),
+        jnp.moveaxis(v_stale, 3, 2), tok_start, valid_tokens, uncond_fresh,
+        n_tokens=n_tokens, bq=bq, bk=bk, interpret=_interpret())
+    return jnp.moveaxis(out, 2, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def lse_attention(q, k, v, valid_len, *, bq: int = 0, bk: int = 0):
+    """Per-hop ring attention partial: attend q over ONE K/V segment whose
+    first ``valid_len`` (traced) keys are real, returning the normalized
+    partial output AND its log-sum-exp for the cross-hop merge
+    (DESIGN.md §15). q: [B,S,H,hd]; k/v: [B,T,H,hd]; valid_len <= T.
+    Returns (out [B,S,H,hd], lse [B,S,H] fp32)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    qb = jnp.moveaxis(q, 2, 1)
+    kb = jnp.moveaxis(k, 2, 1)
+    vb = jnp.moveaxis(v, 2, 1)
+    bq = bq or _tile(S, 128, 8)
+    bk = bk or _tile(T, 128, 8)
+    qb, _ = _pad_to(qb, bq, 2)
+    # padded key rows sit at positions >= T >= valid_len, so the kernel's
+    # validity mask already excludes them
+    kb, _ = _pad_to(kb, bk, 2)
+    vb, _ = _pad_to(vb, bk, 2)
+    out, lse = ska.lse_attention_bhsd(qb, kb, vb, valid_len, bq=bq, bk=bk,
+                                      interpret=_interpret())
+    return (jnp.moveaxis(out, 1, 2)[:, :S],
+            jnp.moveaxis(lse, 1, 2)[:, :S])
+
+
+def _cfg_epilogue_ref(eps_c, eps_u, scale):
+    """The unfused formulas (bitwise ``sampler.cfg_combine``/``cfg_delta``),
+    kept here so the kernels package never imports the sampler."""
+    ec = eps_c.astype(jnp.float32)
+    eu = eps_u.astype(jnp.float32)
+    d = ec - eu
+    return (eu + scale * d).astype(eps_c.dtype), d
+
+
+@functools.partial(jax.jit, static_argnames=("with_delta",))
+def cfg_epilogue(eps_c, eps_u, scale, *, with_delta: bool = True):
+    """Fused CFG epilogue: ``(cfg_combine, cfg_delta)`` in ONE elementwise
+    HBM pass over the branch pair (repro.kernels.cfg_epilogue). Numerically
+    identical to the sampler helpers; per-lane ``scale`` arrays fall back
+    to the unfused formulas (recorded as a kernel miss). Any eps shape."""
+    from repro.kernels import cfg_epilogue as cfe
+    if jnp.ndim(scale):                  # per-lane serving scales
+        record_kernel_miss("cfg-per-lane-scale")
+        comb, d = _cfg_epilogue_ref(eps_c, eps_u, scale)
+        return (comb, d) if with_delta else comb
+    record_kernel_hit("cfg_epilogue")
+    shape, n = eps_c.shape, eps_c.size
+    tile = cfe.SUBLANE * cfe.LANE
+    pad = (-n) % tile
+    flat_c = jnp.pad(eps_c.reshape(-1), (0, pad)).reshape(-1, cfe.LANE)
+    flat_u = jnp.pad(eps_u.reshape(-1), (0, pad)).reshape(-1, cfe.LANE)
+    comb, d = cfe.cfg_epilogue_2d(flat_c, flat_u, scale,
+                                  interpret=_interpret())
+    comb = comb.reshape(-1)[:n].reshape(shape)
+    d = d.reshape(-1)[:n].reshape(shape)
+    return (comb, d) if with_delta else comb

@@ -88,6 +88,12 @@ def main():
                     help="full refresh every E boundaries (stale/predictive)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check-vs-emulation", action="store_true")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route attention + CFG epilogue through the Pallas "
+                         "kernels (DESIGN.md §15; interpret mode off-TPU)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print the trace-time kernel path hit/miss "
+                         "counters after the run")
     args = ap.parse_args()
 
     import jax
@@ -131,6 +137,7 @@ def main():
         guidance=args.guidance, cfg_scale=args.cfg_scale,
         uncond_refresh=args.uncond_refresh,
         seq_shards=args.seq_shards,
+        use_pallas_attention=args.use_pallas,
         **knobs)
     pipe = StadiPipeline(cfg, params, sched, config)
     plan = pipe.plan()
@@ -152,6 +159,10 @@ def main():
     print(f"{backend} run ({len(jax.devices())} devices): "
           f"{time.time()-t0:.2f}s image {img.shape} "
           f"finite={np.all(np.isfinite(img))}")
+    if args.verbose:
+        # trace-time counters: which kernel bodies the compiled program
+        # contains, and why any layout refused the kernel (DESIGN.md §15)
+        print(f"kernel_stats={json.dumps(res.kernel_stats, sort_keys=True)}")
     if (backend in ("spmd", "spmd_guidance", "spmd_seq")
             and args.check_vs_emulation):
         emu = StadiPipeline(cfg, params, sched,

@@ -127,20 +127,63 @@ def _stale_kernel_attend(q, k_fresh, v_fresh, k_stale, v_stale,
     return jnp.moveaxis(out, 1, 2)
 
 
+def _stale_kernel_attend_padded(q, k_fresh, v_fresh, k_stale, v_stale,
+                                tok_start, valid_tokens, n_tokens: int,
+                                blk: int):
+    """Padded-layout kernel dispatch (the shard_map form): traced
+    tok_start/valid_tokens ride as scalar-prefetch arguments and the
+    scratch tail of the stale buffer is masked in-kernel — the fused form
+    of the mask-blend + dynamic_update_slice + masked-attend SPMD branch
+    below."""
+    from repro.kernels import ops as kops
+    from repro.kernels import stale_kv_attention as ska
+    to = lambda a: jnp.moveaxis(a.astype(q.dtype), 2, 1)
+    out = ska.stale_kv_attention_padded_bhsd(
+        to(q), to(k_fresh), to(v_fresh), to(k_stale), to(v_stale),
+        tok_start, valid_tokens, n_tokens=n_tokens, bq=blk, bk=blk,
+        interpret=kops._interpret())
+    return jnp.moveaxis(out, 1, 2)
+
+
 def _pallas_block(cfg, tok_start, Nl: int, N: int,
-                  valid_tokens, enable) -> int:
-    """Kernel tile size for the stale-KV attention, or 0 when the layout
-    needs the reference path: traced offsets (SPMD per-device starts),
-    scratch padding (valid_tokens) and stage masking (enable) are not
-    kernel-compatible, and tok_start/Nl/N must share a power-of-two tile
-    >= 8 (token counts are multiples of tokens_per_side, so any practical
-    grid qualifies)."""
-    if not (cfg.use_pallas_attention and valid_tokens is None
-            and enable is None and isinstance(tok_start, int)):
-        return 0
-    g = math.gcd(math.gcd(Nl, N), tok_start) if tok_start else math.gcd(Nl, N)
-    blk = min(g & (-g), 128)             # largest power-of-two divisor
-    return blk if blk >= 8 else 0
+                  valid_tokens, enable):
+    """Select the stale-KV attention body for this layout: ("off", 0) =
+    reference path, else (mode, tile) with mode "static" (compile-time
+    tok_start, full blend — the emulated/pipefuse interpreters) or
+    "padded" (traced tok_start / valid_tokens scratch padding via
+    scalar-prefetch — the shard_map executors). ``enable`` stage masking
+    needs no kernel support: the disabled-block identity is applied by
+    ``block_stack``'s outer ``jnp.where`` AFTER attention, so both kernel
+    bodies run under it unchanged.
+
+    Static layouts need tok_start/Nl/N to share a power-of-two tile >= 8;
+    padded layouts tile by the largest power-of-two divisor of
+    tokens_per_side (token starts/counts are row multiples of it, which
+    keeps the traced offsets block-aligned). Every decision is recorded in
+    the kernel-path counters (repro.kernels.ops) AT TRACE TIME — misses
+    only when the kernel was requested."""
+    if not cfg.use_pallas_attention:
+        return ("off", 0)
+    from repro.kernels import ops as kops
+    if valid_tokens is None and isinstance(tok_start, int):
+        g = (math.gcd(math.gcd(Nl, N), tok_start) if tok_start
+             else math.gcd(Nl, N))
+        blk = min(g & (-g), 128)         # largest power-of-two divisor
+        if blk >= 8:
+            kops.record_kernel_hit("stale_kv.static")
+            return ("static", blk)
+        kops.record_kernel_miss("tile-too-small")
+        return ("off", 0)
+    wp = cfg.tokens_per_side
+    blk = min(wp & (-wp), 128)
+    if blk < 8:
+        kops.record_kernel_miss("tile-too-small")
+        return ("off", 0)
+    if Nl % blk or N % blk:
+        kops.record_kernel_miss("padding-misaligned")
+        return ("off", 0)
+    kops.record_kernel_hit("stale_kv.padded")
+    return ("padded", blk)
 
 
 def _modulate(x, shift, scale):
@@ -223,9 +266,16 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
     B, Nl, D = h.shape[0], h.shape[1], cfg.d_model
     H = cfg.n_heads
     hd = D // H
-    pallas_blk = (_pallas_block(cfg, tok_start, Nl, buffers[0].shape[2],
-                                valid_tokens, enable)
-                  if buffers is not None and attend_fn is None else 0)
+    pallas_mode, pallas_blk = (
+        _pallas_block(cfg, tok_start, Nl, buffers[0].shape[2],
+                      valid_tokens, enable)
+        if buffers is not None and attend_fn is None else ("off", 0))
+    # Padded kernel contract: real tokens = cfg.n_tokens when the buffers
+    # carry the SPMD scratch tail, else the whole buffer; a local slab with
+    # no valid_tokens is entirely fresh.
+    if pallas_mode == "padded":
+        n_real = cfg.n_tokens if valid_tokens is not None else buffers[0].shape[2]
+        valid_arg = valid_tokens if valid_tokens is not None else Nl
 
     def block(x, scanned):
         if enable is not None:
@@ -241,10 +291,17 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
         q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
         if buffers is None:
             att = layers.attend(q, k, v)                 # local-only (exact if full)
-        elif pallas_blk:
+        elif pallas_mode == "static":
             # fused freshness-select flash kernel: no HBM buffer rewrite
             att = _stale_kernel_attend(q, k, v, bk, bv, tok_start,
                                        pallas_blk)
+        elif pallas_mode == "padded":
+            # shard_map form of the same fusion: traced tok_start and the
+            # valid_tokens scratch mask ride into the kernel as
+            # scalar-prefetch operands, so the blend + dynamic_update_slice
+            # + masked attend below collapses into one flash loop.
+            att = _stale_kernel_attend_padded(q, k, v, bk, bv, tok_start,
+                                              valid_arg, n_real, pallas_blk)
         else:
             # SPMD path: buffers are scratch-padded to N + Nl tokens so the
             # read-modify-write below never clamps; the padded tail of the

@@ -152,6 +152,18 @@ def _vmap_patch_step(params, cfg, xs_loc, ts, conds, bks, bvs, row_start):
 # engine's pp._jit_guided_*_step, lane-vmapped on top — so a guided lane
 # stays bitwise identical to a single-request guided ``generate``. scales
 # is per-lane data: one compiled program serves every cfg_scale in flight.
+# With Pallas on, the combine is the same fused epilogue generate uses
+# (DESIGN.md §15) — applied inside the lane vmap so scale stays scalar and
+# the kernel path is taken; XLA fuses the batched program differently from
+# the unbatched one, so the engine≡generate guarantee is bitwise for
+# reference numerics and ≈1e-6 relative under forced kernels.
+
+
+def _lane_cfg_combine(cfg, eps2, scale):
+    if cfg.use_pallas_attention:
+        from repro.kernels import ops as kops
+        return kops.cfg_epilogue(eps2[0], eps2[1], scale, with_delta=False)
+    return sampler_lib.cfg_combine(eps2[0], eps2[1], scale)
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _vmap_guided_full_step(params, cfg, xs, ts, conds, scales):
@@ -162,7 +174,7 @@ def _vmap_guided_full_step(params, cfg, xs, ts, conds, scales):
             return dit.forward_patch(params, cfg, x, t, c, 0, buffers=None,
                                      return_kv=True)
         eps2, kv2 = jax.vmap(branch)(dit.guidance_conds(cond))
-        return sampler_lib.cfg_combine(eps2[0], eps2[1], scale), kv2
+        return _lane_cfg_combine(cfg, eps2, scale), kv2
     return jax.vmap(one)(xs, ts, conds, scales)
 
 
@@ -176,7 +188,7 @@ def _vmap_guided_patch_step(params, cfg, xs_loc, ts, conds, bk2s, bv2s,
             return dit.forward_patch(params, cfg, x_loc, t, c, row_start,
                                      buffers=(bk, bv), return_kv=True)
         eps2, kv2 = jax.vmap(branch)(dit.guidance_conds(cond), bk2, bv2)
-        return sampler_lib.cfg_combine(eps2[0], eps2[1], scale), kv2
+        return _lane_cfg_combine(cfg, eps2, scale), kv2
     return jax.vmap(one)(xs_loc, ts, conds, bk2s, bv2s, scales)
 
 
@@ -575,6 +587,11 @@ class DiffusionServingEngine:
             self.profiler = hetero.OnlineProfiler(
                 list(config.speeds), alpha=config.profiler_alpha)
             self._baseline = list(config.speeds)
+        # kernel-path visibility (DESIGN.md §15): the engine's steppers
+        # trace their own programs (not pipeline.generate), so attribute
+        # every hit/miss traced after construction to this engine
+        from repro.kernels import ops as kops
+        self._kernel_stats_base = kops.kernel_stats_snapshot()
         self.queue: List[DiffusionRequest] = []
         self.active: Dict[int, DiffusionRequest] = {}   # slot -> request
         self.completed: List[DiffusionRequest] = []
@@ -1165,6 +1182,7 @@ class DiffusionServingEngine:
 
     def stats(self) -> Dict:
         """Aggregate + per-request serving statistics (modeled + wall)."""
+        from repro.kernels import ops as kops
         done = sorted(self.completed, key=lambda r: r.uid)
         lats = [r.modeled_latency_s for r in done]
         wall = sum(r.wall_s for r in self.rounds)
@@ -1179,6 +1197,11 @@ class DiffusionServingEngine:
             "preemptions": self.preemptions,
             "planner_calls": self.pipeline.planner_calls,
             "plan_cache": cache.stats() if cache is not None else None,
+            # trace-time Pallas kernel path counters (DESIGN.md §15):
+            # answers "did the programs compiled since this engine was
+            # built contain the kernels?"
+            "kernels": kops.kernel_stats_delta(
+                self._kernel_stats_base, kops.kernel_stats_snapshot()),
             "modeled_makespan_s": self.modeled_clock_s,
             "wall_s": wall,
             "throughput_modeled_rps": (len(done) / self.modeled_clock_s

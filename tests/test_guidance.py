@@ -31,6 +31,17 @@ from repro.models.diffusion import dit
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# The engine≡generate guarantee is bitwise for the reference numerics
+# (DESIGN.md §15): the STADI_USE_PALLAS CI leg forces interpret-mode
+# kernels process-wide, and XLA fuses the lane-batched engine program
+# differently from the unbatched generate program (~1 ULP drift).
+# Kernel-on executor parity is asserted with tolerances in
+# tests/test_kernel_executors.py.
+bitwise_vs_reference = pytest.mark.skipif(
+    os.environ.get("STADI_USE_PALLAS", "").strip() not in ("", "0"),
+    reason="engine bitwise invariant is defined for reference numerics; "
+           "STADI_USE_PALLAS forces kernels process-wide")
+
 
 @pytest.fixture(scope="module")
 def setup():
@@ -389,6 +400,7 @@ def test_guided_generate_needs_cond(setup):
 # serving: mixed CFG / non-CFG lanes, per-request bitwise parity
 # ----------------------------------------------------------------------
 
+@bitwise_vs_reference
 @pytest.mark.parametrize("exchange", ["sync", "stale_async", "predictive"])
 def test_serving_mixed_cfg_bitwise_vs_generate(setup, exchange):
     """The acceptance contract: a mixed batch of CFG and non-CFG requests
@@ -416,6 +428,7 @@ def test_serving_mixed_cfg_bitwise_vs_generate(setup, exchange):
                                       np.asarray(ref))
 
 
+@bitwise_vs_reference
 def test_serving_guided_bootstrap_no_warmup(setup):
     from repro.serving.diffusion_engine import DiffusionServingEngine
     cfg, params, sched, *_ = setup
@@ -461,6 +474,7 @@ def test_serving_default_scale_and_guards(setup):
                                slots=2)
 
 
+@bitwise_vs_reference
 @pytest.mark.parametrize("exchange", ["sync", "stale_async", "predictive"])
 def test_serving_split_guidance_bitwise_vs_generate(setup, exchange):
     """Tentpole acceptance (DESIGN.md §14): split-guidance serving lane
@@ -529,6 +543,7 @@ def test_serving_guidance_aware_replanning_improves_throughput(setup):
     assert t_live >= 1.15 * t_frozen, (t_frozen, t_live)
 
 
+@bitwise_vs_reference
 def test_generate_many_guided_matches_generate(setup):
     cfg, params, sched, *_ = setup
     config = _config([1.0, 0.5], m_base=8, m_warmup=2, cfg_scale=2.0)
@@ -575,15 +590,27 @@ def test_pallas_attention_guided_parity(setup):
 
 
 def test_pallas_block_gating():
-    """Traced offsets / SPMD padding / non-tileable layouts fall back."""
+    """Static layouts get the compile-time kernel; traced offsets and SPMD
+    scratch padding route to the padded scalar-prefetch kernel; layouts no
+    tile fits fall back — with the decision recorded in the counters."""
+    from repro.kernels import ops as kops
     cfg = get_config("tiny-dit").reduced().replace(use_pallas_attention=True)
-    assert dit._pallas_block(cfg, 0, 40, 64, None, None) == 8
-    assert dit._pallas_block(cfg, 24, 40, 64, None, None) == 8
-    assert dit._pallas_block(cfg, jnp.int32(0), 40, 64, None, None) == 0
-    assert dit._pallas_block(cfg, 0, 40, 64, jnp.int32(40), None) == 0
-    assert dit._pallas_block(cfg, 4, 40, 64, None, None) == 0  # gcd 4 < 8
+    before = kops.kernel_stats_snapshot()
+    assert dit._pallas_block(cfg, 0, 40, 64, None, None) == ("static", 8)
+    assert dit._pallas_block(cfg, 24, 40, 64, None, None) == ("static", 8)
+    # traced offsets / valid_tokens now hit the padded kernel (wp=8 tiles)
+    assert dit._pallas_block(cfg, jnp.int32(0), 40, 64, None, None) == ("padded", 8)
+    assert dit._pallas_block(cfg, 0, 40, 64, jnp.int32(40), None) == ("padded", 8)
+    assert dit._pallas_block(cfg, 4, 40, 64, None, None) == ("off", 0)  # gcd 4 < 8
+    # padded layouts must tile by tokens_per_side
+    assert dit._pallas_block(cfg, jnp.int32(0), 44, 64, None, None) == ("off", 0)
     off = cfg.replace(use_pallas_attention=False)
-    assert dit._pallas_block(off, 0, 40, 64, None, None) == 0
+    assert dit._pallas_block(off, 0, 40, 64, None, None) == ("off", 0)
+    delta = kops.kernel_stats_delta(before, kops.kernel_stats_snapshot())
+    assert delta["hits"]["stale_kv.static"] == 2
+    assert delta["hits"]["stale_kv.padded"] == 2
+    assert delta["misses"]["tile-too-small"] == 1
+    assert delta["misses"]["padding-misaligned"] == 1
 
 
 # ----------------------------------------------------------------------

@@ -137,3 +137,262 @@ def test_ssm_scan_matches_mamba_module():
     y_mod, _ = mamba.ssm_scan_ref(x, b_t, c_t, dt, a, d_skip, h0)
     np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_mod),
                                rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# padded-layout stale-KV attention (the shard_map form, DESIGN.md §15)
+# ----------------------------------------------------------------------
+
+def _padded_oracle(q, kf, vf, kst, vst, tok_start, valid, n_tokens):
+    """Mask-blend + dynamic_update_slice + masked dense attend — the
+    reference SPMD branch of dit.block_stack, in [B,S,H,hd] layout."""
+    Nl = q.shape[1]
+    mask = (jnp.arange(Nl) < valid)[None, :, None, None]
+    cur_k = jax.lax.dynamic_slice_in_dim(kst, tok_start, Nl, axis=1)
+    cur_v = jax.lax.dynamic_slice_in_dim(vst, tok_start, Nl, axis=1)
+    ku = jnp.where(mask, kf, cur_k)
+    vu = jnp.where(mask, vf, cur_v)
+    full_k = jax.lax.dynamic_update_slice_in_dim(kst, ku, tok_start, axis=1)
+    full_v = jax.lax.dynamic_update_slice_in_dim(vst, vu, tok_start, axis=1)
+    key_mask = (jnp.arange(kst.shape[1]) < n_tokens)[None, None, None, :]
+    return layers.attend(q, full_k, full_v, mask=key_mask)
+
+
+def _padded_case(key, B, Nl, Npad, H, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    return (_rand(ks[0], (B, Nl, H, hd), dtype),
+            _rand(ks[1], (B, Nl, H, hd), dtype),
+            _rand(ks[2], (B, Nl, H, hd), dtype),
+            _rand(ks[3], (B, Npad, H, hd), dtype),
+            _rand(ks[4], (B, Npad, H, hd), dtype))
+
+
+@pytest.mark.parametrize("tok_start,valid", [
+    (0, 64), (64, 64), (192, 64),    # whole-slab fresh at several offsets
+    (64, 40), (128, 8), (192, 33),   # uneven valid tails (incl. non-tile)
+    (0, 0),                          # fully-stale slab (valid prefix empty)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stale_kv_padded_sweep(tok_start, valid, dtype):
+    B, H, hd, N, Nl = 1, 2, 32, 256, 64
+    q, kf, vf, kst, vst = _padded_case(10, B, Nl, N + Nl, H, hd, dtype)
+    out = ops.stale_kv_attention_padded(q, kf, vf, kst, vst,
+                                        tok_start, valid, n_tokens=N)
+    want = _padded_oracle(q, kf, vf, kst, vst, tok_start, valid, N)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_stale_kv_padded_traced_offsets_one_trace():
+    """tok_start/valid_tokens are scalar-prefetch operands: one jitted
+    program serves every device's layout (the shard_map contract)."""
+    B, H, hd, N, Nl = 1, 2, 32, 128, 32
+    q, kf, vf, kst, vst = _padded_case(11, B, Nl, N + Nl, H, hd, jnp.float32)
+    traces = []
+
+    @jax.jit
+    def f(ts, va):
+        traces.append(None)
+        return ops.stale_kv_attention_padded(q, kf, vf, kst, vst, ts, va,
+                                             n_tokens=N)
+
+    for ts, va in [(0, 32), (32, 32), (96, 16), (64, 7)]:
+        out = f(jnp.int32(ts), jnp.int32(va))
+        want = _padded_oracle(q, kf, vf, kst, vst, ts, va, N)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+    assert len(traces) == 1         # traced scalars never retrigger tracing
+
+
+def test_stale_kv_padded_scratch_keys_masked():
+    """Scratch keys (>= n_tokens) never contribute: poisoning the padded
+    tail of the stale buffer with huge values must not move the output."""
+    B, H, hd, N, Nl = 1, 2, 32, 128, 32
+    q, kf, vf, kst, vst = _padded_case(12, B, Nl, N + Nl, H, hd, jnp.float32)
+    base = ops.stale_kv_attention_padded(q, kf, vf, kst, vst, 32, 32,
+                                         n_tokens=N)
+    kst2 = kst.at[:, N:].set(1e4)
+    vst2 = vst.at[:, N:].set(1e4)
+    poisoned = ops.stale_kv_attention_padded(q, kf, vf, kst2, vst2, 32, 32,
+                                             n_tokens=N)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(poisoned))
+
+
+# ----------------------------------------------------------------------
+# guided (branch-stacked) stale-KV attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("uncond_fresh", [1, 0])
+@pytest.mark.parametrize("tok_start,valid", [(0, 32), (64, 32), (96, 9)])
+def test_stale_kv_guided_sweep(uncond_fresh, tok_start, valid):
+    B, H, hd, N, Nl = 1, 2, 32, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(13), 5)
+    q = _rand(ks[0], (2, B, Nl, H, hd), jnp.float32)
+    kf = _rand(ks[1], (2, B, Nl, H, hd), jnp.float32)
+    vf = _rand(ks[2], (2, B, Nl, H, hd), jnp.float32)
+    kst = _rand(ks[3], (2, B, N + Nl, H, hd), jnp.float32)
+    vst = _rand(ks[4], (2, B, N + Nl, H, hd), jnp.float32)
+    out = ops.stale_kv_attention_guided(q, kf, vf, kst, vst, tok_start,
+                                        valid, uncond_fresh, n_tokens=N)
+    want_c = _padded_oracle(q[0], kf[0], vf[0], kst[0], vst[0],
+                            tok_start, valid, N)
+    # the interleaved body: uncond_fresh=0 masks the uncond branch's fresh
+    # slab in-kernel, so branch 1 attends pure-stale
+    want_u = _padded_oracle(q[1], kf[1], vf[1], kst[1], vst[1], tok_start,
+                            valid if uncond_fresh else 0, N)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jnp.stack([want_c, want_u])),
+        rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# LSE ring partial (flash-style per-hop accumulation, DESIGN.md §15)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_segs,T_seg,valid_last", [
+    (2, 128, 128), (2, 128, 96), (3, 64, 17), (4, 32, 32),
+])
+def test_lse_attention_streamed_merge(n_segs, T_seg, valid_last):
+    """Per-segment (out, lse) partials merged with the online-softmax
+    update == one dense attend over the concatenated valid keys."""
+    B, S, H, hd = 1, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(14), 1 + 2 * n_segs)
+    q = _rand(ks[0], (B, S, H, hd), jnp.float32)
+    segs = [(_rand(ks[1 + 2 * i], (B, T_seg, H, hd), jnp.float32),
+             _rand(ks[2 + 2 * i], (B, T_seg, H, hd), jnp.float32))
+            for i in range(n_segs)]
+    valids = [T_seg] * (n_segs - 1) + [valid_last]
+    num = den = run_m = None
+    for (k, v), valid in zip(segs, valids):
+        o, lse = ops.lse_attention(q, k, v, valid)
+        o = o.astype(jnp.float32)
+        if num is None:
+            num, den, run_m = o, jnp.ones_like(lse), lse
+        else:
+            m_new = jnp.maximum(run_m, lse)
+            corr, w = jnp.exp(run_m - m_new), jnp.exp(lse - m_new)
+            num = num * corr[..., None] + o * w[..., None]
+            den = den * corr + w
+            run_m = m_new
+    merged = num / jnp.maximum(den, 1e-30)[..., None]
+    kcat = jnp.concatenate([k[:, :va] for (k, _), va in zip(segs, valids)], 1)
+    vcat = jnp.concatenate([v[:, :va] for (_, v), va in zip(segs, valids)], 1)
+    want = layers.attend(q, kcat, vcat)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_lse_attention_empty_segment_zero_weight():
+    """A fully-masked segment (valid_len=0) returns lse ~= -inf, giving it
+    exactly zero weight in the streamed merge — the property the ring
+    executor's scratch hops rely on."""
+    B, S, H, hd, T = 1, 32, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(15), 5)
+    q = _rand(ks[0], (B, S, H, hd), jnp.float32)
+    k1, v1 = _rand(ks[1], (B, T, H, hd), jnp.float32), \
+        _rand(ks[2], (B, T, H, hd), jnp.float32)
+    k0, v0 = _rand(ks[3], (B, T, H, hd), jnp.float32), \
+        _rand(ks[4], (B, T, H, hd), jnp.float32)
+    o1, l1 = ops.lse_attention(q, k1, v1, T)
+    o0, l0 = ops.lse_attention(q, k0, v0, 0)
+    assert float(jnp.max(l0)) < -1e29
+    m = jnp.maximum(l1, l0)
+    w1, w0 = jnp.exp(l1 - m), jnp.exp(l0 - m)
+    merged = ((o1.astype(jnp.float32) * w1[..., None]
+               + o0.astype(jnp.float32) * w0[..., None])
+              / (w1 + w0)[..., None])
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(o1),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# fused CFG epilogue
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 16, 16, 3), (2, 33, 7), (5,),
+                                   (1, 128, 128, 3)])
+@pytest.mark.parametrize("scale", [0.0, 1.0, 7.5])
+def test_cfg_epilogue_matches_sampler(shape, scale):
+    from repro.core import sampler as sampler_lib
+    ks = jax.random.split(jax.random.PRNGKey(16), 2)
+    ec = _rand(ks[0], shape, jnp.float32)
+    eu = _rand(ks[1], shape, jnp.float32)
+    comb, delta = ops.cfg_epilogue(ec, eu, scale)
+    # combine agrees to FMA-contraction rounding (the jitted kernel may
+    # fuse w*d+eu); delta is a single subtract, so it stays bitwise
+    np.testing.assert_allclose(
+        np.asarray(comb), np.asarray(sampler_lib.cfg_combine(ec, eu, scale)),
+        rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(delta), np.asarray(sampler_lib.cfg_delta(ec, eu)))
+
+
+def test_cfg_epilogue_traced_scale_and_counters():
+    """Traced scalar scales stay on the kernel (one compiled program per
+    shape); per-lane scale ARRAYS fall back and record a miss."""
+    ks = jax.random.split(jax.random.PRNGKey(17), 2)
+    ec = _rand(ks[0], (2, 8, 8, 3), jnp.float32)
+    eu = _rand(ks[1], (2, 8, 8, 3), jnp.float32)
+    before = ops.kernel_stats_snapshot()
+    f = jax.jit(lambda s: ops.cfg_epilogue(ec, eu, s, with_delta=False))
+    for s in (1.5, 4.0):
+        from repro.core import sampler as sampler_lib
+        np.testing.assert_allclose(
+            np.asarray(f(s)),
+            np.asarray(sampler_lib.cfg_combine(ec, eu, s)),
+            rtol=1e-5, atol=1e-6)
+    delta = ops.kernel_stats_delta(before, ops.kernel_stats_snapshot())
+    assert delta["hits"].get("cfg_epilogue", 0) >= 1
+    # per-lane array scale: unfused fallback, recorded as a miss
+    before = ops.kernel_stats_snapshot()
+    lane = jnp.array([1.0, 3.0])[:, None, None, None]
+    comb = ops.cfg_epilogue(ec, eu, lane, with_delta=False)
+    from repro.core import sampler as sampler_lib
+    np.testing.assert_allclose(
+        np.asarray(comb), np.asarray(sampler_lib.cfg_combine(ec, eu, lane)),
+        rtol=1e-5, atol=1e-6)
+    delta = ops.kernel_stats_delta(before, ops.kernel_stats_snapshot())
+    assert delta["misses"].get("cfg-per-lane-scale", 0) == 1
+
+
+# ----------------------------------------------------------------------
+# STADI_PALLAS_INTERPRET override
+# ----------------------------------------------------------------------
+
+def test_interpret_env_override(monkeypatch):
+    monkeypatch.setenv("STADI_PALLAS_INTERPRET", "1")
+    assert ops._interpret() is True
+    monkeypatch.setenv("STADI_PALLAS_INTERPRET", "0")
+    if jax.default_backend() == "tpu":      # pragma: no cover - CPU CI
+        assert ops._interpret() is False
+    else:
+        with pytest.raises(RuntimeError, match="NOT a TPU proxy"):
+            ops._interpret()
+    monkeypatch.setenv("STADI_PALLAS_INTERPRET", "bogus")
+    with pytest.raises(ValueError, match="STADI_PALLAS_INTERPRET"):
+        ops._interpret()
+
+
+# ----------------------------------------------------------------------
+# hypothesis shape sweeps (skipped when hypothesis is not installed)
+# ----------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 7).map(lambda r: r * 32),   # tok_start, tile-mult
+           st.integers(0, 64))                        # valid, any tail
+    def test_stale_kv_padded_hypothesis(tok_start, valid):
+        B, H, hd, N, Nl = 1, 2, 32, 256, 64
+        q, kf, vf, kst, vst = _padded_case(18, B, Nl, N + Nl, H, hd,
+                                           jnp.float32)
+        out = ops.stale_kv_attention_padded(q, kf, vf, kst, vst,
+                                            tok_start, valid, n_tokens=N)
+        want = _padded_oracle(q, kf, vf, kst, vst, tok_start, valid, N)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)

@@ -33,6 +33,14 @@ from repro.models.diffusion import dit
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# See tests/test_guidance.py: engine≡generate is bitwise for reference
+# numerics; the forced-kernel CI leg compiles lane-batched vs unbatched
+# kernel programs whose XLA fusion differs by ~1 ULP.
+bitwise_vs_reference = pytest.mark.skipif(
+    os.environ.get("STADI_USE_PALLAS", "").strip() not in ("", "0"),
+    reason="engine bitwise invariant is defined for reference numerics; "
+           "STADI_USE_PALLAS forces kernels process-wide")
+
 
 @pytest.fixture(scope="module")
 def setup():
@@ -436,6 +444,7 @@ def test_simulate_prices_ring_hops(setup):
 # serving: seq-sharded lanes batch by ring identity, bitwise unchanged
 # ----------------------------------------------------------------------
 
+@bitwise_vs_reference
 def test_serving_seq_sharded_lanes_bitwise(setup):
     from repro.serving import DiffusionServingEngine
     cfg, params, sched, x_T, cond = setup
