@@ -8,12 +8,12 @@ engine (`patch_parallel.run_schedule`), the SPMD backend
 (`spmd.run_spmd` / `spmd.make_interval_step`) and the latency simulator
 (`simulate.build_trace`) — and the three copies could (and did) drift.
 Now :func:`lower` is the single source of schedule structure. The FULL
-five-axis event grammar (steps x patches x stages x guidance x sequence —
-this block is the one authoritative statement of it; the per-event
-docstrings below only add detail):
+six-axis event grammar (steps x patches x stages x guidance x sequence
+x frames — this block is the one authoritative statement of it; the
+per-event docstrings below only add detail):
 
     stream   := Warmup*  adaptive*
-    adaptive := StageShift?  GuidanceExchange?  SeqShard?
+    adaptive := StageShift?  GuidanceExchange?  SeqShard?  FrameShard?
                 ComputeInterval  Exchange  Replan?
 
     Warmup(m)             one synchronous full-image fine step (all axes
@@ -33,6 +33,14 @@ docstrings below only add detail):
                           carrying the Ulysses head partition and the ring
                           segment sizing every attention in the interval
                           scatters over (hops = shards - 1 per attention)
+    FrameShard(m)         FRAME axis (DESIGN.md §16): emitted before every
+                          adaptive interval of a multi-frame plan, carrying
+                          the per-group-member frame counts. Within the
+                          interval every frame f > 0 attends over its own
+                          published context CONCATENATED with frame f-1's
+                          published K/V (a 2N-token cross-frame stale
+                          context); frame 0 attends own-frame only, so its
+                          trajectory is bitwise the image path
     ComputeInterval(m0,R) STEPS x PATCHES axes: R fine steps of stale-KV
                           patch compute (per-worker substeps = R / ratio)
     Exchange(m, kind)     the interval boundary; ``kind`` comes from the
@@ -92,6 +100,11 @@ class IntervalEvent:
     # interval (= seq shards - 1; 0 = unsharded) — the simulator prices the
     # per-hop staged K/V segments against the link model here
     seq_hops: int = 0
+    # frame provenance (DESIGN.md §16): latent frames evaluated per substep
+    # in this interval (1 = image). The simulator multiplies per-substep
+    # fixed cost by the frames each member row owns and widens the stale
+    # attention context to 2N rows for every frame past the first.
+    frames: int = 1
 
 
 @dataclasses.dataclass
@@ -118,6 +131,12 @@ class ExecutionTrace:
     # ``seq.n_shards`` devices each — the ring cost model maps them back
     # through the speed-sorted grouping convention.
     seq: Optional[object] = None
+    # frame provenance (DESIGN.md §16): the FramePlan (frame count + frames
+    # per group-member row) the schedule executed under (None = image).
+    # With more than one group, trace "workers" are logical device GROUPS
+    # of ``frames.n_groups`` members each — the frame cost model maps them
+    # back through the column-dealt grouping convention.
+    frames: Optional[object] = None
 
 
 # ----------------------------------------------------------------------
@@ -216,8 +235,30 @@ class SeqShard:
         return len(self.segments) - 1
 
 
+@dataclasses.dataclass(frozen=True)
+class FrameShard:
+    """Multi-frame staging (DESIGN.md §16): emitted before each adaptive
+    interval when lowering a multi-frame plan. ``frames`` is the number of
+    latent frames each group-member row evaluates this interval (the
+    speed-proportional frame partition); within the interval every frame
+    ``f > 0`` attends over its own-frame published context concatenated
+    with frame ``f-1``'s published K/V — a 2N-token cross-frame stale
+    context that ages under exactly the same full/skip/predict boundary
+    policy as the within-frame halo, which is how stale_async / predictive
+    / ring compose with the frame axis for free. Frame 0 has no previous
+    frame: its context is the plain N-token image context and its
+    trajectory is bitwise the image run."""
+    fine_step: int                       # first fine step of the interval
+    frames: Tuple[int, ...]              # latent frames per group-member row
+    index: int                           # 0-based adaptive interval counter
+
+    @property
+    def num_frames(self) -> int:
+        return sum(self.frames)
+
+
 Event = object   # Warmup | StageShift | ComputeInterval | Exchange | Replan
-                 # | GuidanceExchange | SeqShard
+                 # | GuidanceExchange | SeqShard | FrameShard
 
 
 def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
@@ -232,10 +273,10 @@ def active_workers(plan: TemporalPlan, patches: Sequence[int]) -> List[int]:
 def lower(plan: TemporalPlan, patches: Sequence[int],
           policy: Optional["comm_lib.BoundaryExchange"] = None,
           stages: Optional[Sequence[int]] = None,
-          guidance=None, seq_shards=None) -> Iterator[Event]:
+          guidance=None, seq_shards=None, frames=None) -> Iterator[Event]:
     """Lower (plan, patches, exchange policy[, stage split[, guidance
-    [, seq shards]]]) into events — see the module docstring for the one
-    authoritative statement of the five-axis event grammar.
+    [, seq shards[, frames]]]]) into events — see the module docstring for
+    the one authoritative statement of the six-axis event grammar.
 
     A coroutine-style generator: iterate it normally, or reply to an
     :class:`Exchange` event with ``gen.send((new_plan, new_patches))`` to
@@ -263,6 +304,15 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
     hops every attention pays. A single-shard plan emits nothing — the
     stream (and therefore every executor's numerics) is identical to the
     unsharded lowering by construction.
+
+    ``frames`` (a :class:`~repro.core.frames.FramePlan`, DESIGN.md §16)
+    adds the frame dimension: plans with more than one latent frame emit a
+    :class:`FrameShard` before every adaptive interval carrying the
+    speed-proportional frame partition, so the emulated reference, the
+    SPMD frames body and the frame cost model agree on which rows own
+    which frames and on the 2N-token cross-frame context every frame past
+    the first attends over. A single-frame plan emits nothing — the stream
+    degenerates to the image lowering by construction.
     """
     policy = policy or comm_lib.get_exchange("sync")
     patches = list(patches)
@@ -271,6 +321,7 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
     pipelined = len(stages) > 1
     guided_exchange = guidance is not None and guidance.mode != "fused"
     seq_sharded = seq_shards is not None and len(seq_shards.segments) > 1
+    framed = frames is not None and frames.num_frames > 1
     # fine steps count in ABSOLUTE coordinates of the original plan; a
     # replanned TemporalPlan covers the remaining steps (its m_base is the
     # remaining count) and only contributes ratios/activity from then on
@@ -294,6 +345,8 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
         if seq_sharded:
             yield SeqShard(m0, tuple(seq_shards.heads),
                            tuple(seq_shards.segments), interval_idx)
+        if framed:
+            yield FrameShard(m0, tuple(frames.groups), interval_idx)
         interval_idx += 1
         R = plan.lcm
         workers = active_workers(plan, patches)
@@ -321,22 +374,25 @@ def lower(plan: TemporalPlan, patches: Sequence[int],
 # ----------------------------------------------------------------------
 
 def record(interval: ComputeInterval, kind: str, fill: bool = False,
-           uncond_fresh: bool = True, seq_hops: int = 0) -> IntervalEvent:
+           uncond_fresh: bool = True, seq_hops: int = 0,
+           frames: int = 1) -> IntervalEvent:
     """The trace record for one adaptive interval + its boundary kind."""
     return IntervalEvent(interval.fine_step, list(interval.substeps),
                          list(interval.patches), exchange=kind, fill=fill,
-                         uncond_fresh=uncond_fresh, seq_hops=seq_hops)
+                         uncond_fresh=uncond_fresh, seq_hops=seq_hops,
+                         frames=frames)
 
 
-def warmup_record(ev: Warmup) -> IntervalEvent:
+def warmup_record(ev: Warmup, frames: int = 1) -> IntervalEvent:
     return IntervalEvent(ev.fine_step, list(ev.substeps), list(ev.patches),
-                         synchronous=True)
+                         synchronous=True, frames=frames)
 
 
 def replay(plan: TemporalPlan, patches: Sequence[int],
            policy: Optional["comm_lib.BoundaryExchange"] = None,
            stages: Optional[Sequence[int]] = None,
-           guidance=None, seq_shards=None) -> List[IntervalEvent]:
+           guidance=None, seq_shards=None,
+           frames=None) -> List[IntervalEvent]:
     """Trace records of the whole schedule without executing any numerics —
     the latency-only path (`simulate.build_trace`) and the numerics paths
     (`patch_parallel.run_schedule`, `pipefuse.run_pipefuse`) all derive
@@ -347,10 +403,11 @@ def replay(plan: TemporalPlan, patches: Sequence[int],
     fill = False
     fresh = True
     hops = 0
+    n_frames = frames.num_frames if frames is not None else 1
     for ev in lower(plan, patches, policy, stages, guidance=guidance,
-                    seq_shards=seq_shards):
+                    seq_shards=seq_shards, frames=frames):
         if isinstance(ev, Warmup):
-            out.append(warmup_record(ev))
+            out.append(warmup_record(ev, frames=n_frames))
         elif isinstance(ev, StageShift):
             fill = True
         elif isinstance(ev, GuidanceExchange):
@@ -361,7 +418,8 @@ def replay(plan: TemporalPlan, patches: Sequence[int],
             pending = ev
         elif isinstance(ev, Exchange):
             out.append(record(pending, ev.kind, fill=fill,
-                              uncond_fresh=fresh, seq_hops=hops))
+                              uncond_fresh=fresh, seq_hops=hops,
+                              frames=n_frames))
             fill = False
             fresh = True
     return out
@@ -370,8 +428,10 @@ def replay(plan: TemporalPlan, patches: Sequence[int],
 def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
                patches: Sequence[int], cfg, batch: int,
                stages: Optional[Sequence[int]] = None,
-               guidance=None, seq=None) -> ExecutionTrace:
-    """Byte-size provenance shared by every trace producer."""
+               guidance=None, seq=None, frames=None) -> ExecutionTrace:
+    """Byte-size provenance shared by every trace producer. Byte sizes are
+    PER FRAME — the frame cost model multiplies by the frame counts the
+    trace's ``frames`` plan assigns to each member row."""
     H = cfg.latent_size
     lat_bytes = int(batch * H * H * cfg.channels * 4)
     kv_bytes = [int(2 * cfg.n_layers * batch * pr * cfg.tokens_per_side
@@ -380,4 +440,5 @@ def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
     return ExecutionTrace(records, plan, list(patches), cfg.n_tokens,
                           lat_bytes, kv_bytes,
                           stages=list(stages) if stages else None,
-                          act_row_bytes=act_row, guidance=guidance, seq=seq)
+                          act_row_bytes=act_row, guidance=guidance, seq=seq,
+                          frames=frames)

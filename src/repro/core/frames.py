@@ -1,0 +1,393 @@
+"""Video / multi-frame diffusion as the sixth schedule dimension (DESIGN.md
+§16): a frame axis on the latent with cross-frame stale-K/V attention,
+composed with the STADI IR.
+
+A video latent is ``[B, F, H, W, C]`` — F frames denoised jointly. Each
+frame keeps its own DistriFusion published-K/V state; temporal coherence
+comes from the CROSS-FRAME stale context: every frame ``f > 0`` attends
+over its own-frame published context concatenated with frame ``f-1``'s
+published K/V (a 2N-token ``(frames, tokens)`` layout fed straight into
+``dit.block_stack`` — the block math and the padded stale-KV Pallas kernel
+are oblivious, the fresh overwrite lands in the first N tokens). The
+previous-frame half ages under exactly the same full/skip/predict boundary
+policy as the within-frame halo, so stale_async / predictive / ring
+compose with the frame axis for free.
+
+Two placements, one numerics:
+
+  * frame-SEQUENTIAL (``n_groups == 1``): every patch worker evaluates all
+    F frames of its rows each substep — F x the fixed per-eval cost and
+    F x the attention context reads per device.
+  * frame-PARALLEL (``n_groups > 1``): the device list is dealt into
+    ``n_groups`` member ROWS of ``n // n_groups`` patch-worker columns
+    (:func:`frame_group_layout`); row ``g`` owns a contiguous,
+    speed-proportional chunk of frames (:func:`frame_partition` — the
+    frame analogue of the depth allocator) and pays only its own chunk's
+    fixed cost + attention wall. The price: the previous-frame K/V of each
+    chunk's first frame crosses a row boundary at every full exchange, and
+    patches are split over fewer columns.
+
+Frame evals within a fine step follow SNAPSHOT semantics — every frame's
+substep reads the published buffers of the LAST boundary; publishes land
+at the next one. Numerics are therefore placement invariant (independent
+of ``n_groups``, like the seq dimension's shard-count invariance) and
+frame 0's trajectory — which never sees a previous frame — is bitwise the
+image path. :func:`run_frames` is the emulated reference realizing this;
+the mesh realization lives in :func:`repro.core.spmd.run_spmd_frames`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buffers as buf_lib
+from repro.core import comm as comm_lib
+from repro.core import events as ir
+from repro.core import hetero
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core.schedule import patch_bounds
+from repro.models.diffusion import dit
+
+
+@dataclasses.dataclass(frozen=True)
+class FramePlan:
+    """The frame-axis allocation every consumer shares (DESIGN.md §16).
+
+    num_frames: latent frames F (1 = image; the whole axis degenerates)
+    groups:     frames per group-member row, sum == F. ``(F,)`` is the
+                frame-sequential placement; ``len(groups) > 1`` deals the
+                cluster into member rows x patch-worker columns. Row ``g``
+                owns the contiguous frame chunk ``bounds[g]``, so exactly
+                one previous-frame context crosses each row boundary.
+    """
+    num_frames: int
+    groups: Tuple[int, ...]
+
+    def __post_init__(self):
+        if self.num_frames < 1:
+            raise ValueError(f"need at least one frame, got {self.num_frames}")
+        if not self.groups:
+            raise ValueError("frame plan needs at least one group")
+        if any(g < 1 for g in self.groups):
+            raise ValueError(f"every frame group needs >= 1 frame, got "
+                             f"{list(self.groups)}")
+        if sum(self.groups) != self.num_frames:
+            raise ValueError(f"frame groups {list(self.groups)} sum to "
+                             f"{sum(self.groups)}, plan has "
+                             f"{self.num_frames} frames")
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def framed(self) -> bool:
+        """True when the frame axis is non-degenerate (events are emitted)."""
+        return self.num_frames > 1
+
+    @property
+    def bounds(self) -> List[Tuple[int, int]]:
+        """Contiguous [lo, hi) frame ids per group-member row."""
+        lo = 0
+        out = []
+        for g in self.groups:
+            out.append((lo, lo + g))
+            lo += g
+        return out
+
+
+def frame_partition(num_frames: int, n_groups: int,
+                    speeds: Optional[Sequence[float]] = None) -> List[int]:
+    """Frames per group-member row, speed-proportional with every row
+    keeping at least one frame — the frame analogue of the depth allocator
+    (:func:`repro.core.hetero.stage_partition`, same largest-remainder
+    rounding). ``speeds=None`` partitions uniformly."""
+    if n_groups < 1:
+        raise ValueError(f"need at least one frame group, got {n_groups}")
+    if n_groups > num_frames:
+        raise ValueError(f"frame_groups={n_groups} cannot split "
+                         f"{num_frames} frames (>= 1 frame per group)")
+    sp = list(speeds)[:n_groups] if speeds else [1.0] * n_groups
+    if len(sp) < n_groups:
+        sp = sp + [sp[-1]] * (n_groups - len(sp))
+    return hetero.stage_partition(num_frames, sp)
+
+
+def make_frame_plan(num_frames: int, n_groups: int = 1,
+                    speeds: Optional[Sequence[float]] = None) -> FramePlan:
+    """The FramePlan for ``n_groups`` member rows; ``speeds`` are per-ROW
+    aggregate speeds (see :func:`frame_group_layout`), None = uniform."""
+    return FramePlan(num_frames,
+                     tuple(frame_partition(num_frames, n_groups, speeds)))
+
+
+def frame_group_layout(speeds: Sequence[float], n_groups: int
+                       ) -> Tuple[List[List[float]], List[float]]:
+    """Device placement convention of a frame-parallel plan — the ONE
+    grouping the planner, the frame cost model and the ``spmd_frames``
+    mesh share.
+
+    Unlike the seq grouping (column-dealt so every shard ROW mixes speeds),
+    the speed-sorted device list is dealt ROW-wise into ``n_groups``
+    contiguous blocks of ``n // n_groups`` patch-worker columns: member
+    row ``g`` is the g-th fastest block, so each row has near-uniform
+    member speeds and ONE global frame partition fits every column.
+    Leftover devices (n % n_groups) idle, like temporally excluded
+    workers. Returns (rows, row_speeds): ``rows[g]`` = member speeds of
+    row g (column order, fastest first), ``row_speeds[g]`` = aggregate
+    speed of row g.
+    """
+    n = len(speeds)
+    if n_groups < 1:
+        raise ValueError(f"need at least one frame group, got {n_groups}")
+    n_cols = n // n_groups
+    if n_cols < 1:
+        raise ValueError(
+            f"frame_groups={n_groups} needs at least {n_groups} devices, "
+            f"the cluster has {n}")
+    order = sorted(speeds, reverse=True)
+    rows = [[order[g * n_cols + w] for w in range(n_cols)]
+            for g in range(n_groups)]
+    return rows, [sum(r) for r in rows]
+
+
+def validate_frames(frames: FramePlan, x_T) -> None:
+    """Fail fast when a video latent does not match the frame plan."""
+    if x_T.ndim != 5:
+        raise ValueError(
+            f"multi-frame generation needs a [B, F, H, W, C] latent, got "
+            f"shape {tuple(x_T.shape)}")
+    if x_T.shape[1] != frames.num_frames:
+        raise ValueError(
+            f"latent carries {x_T.shape[1]} frames, the frame plan expects "
+            f"{frames.num_frames}")
+
+
+# ----------------------------------------------------------------------
+# jitted step bodies (module-level: shared compile cache across runs)
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _jit_frame_full_step(params, cfg, x, t, cond, frame):
+    """Frame f > 0 bootstrap step: own-frame full attention (no cross
+    context exists yet), frame-index conditioned."""
+    return dit.forward_patch(params, cfg, x, t, cond, 0, buffers=None,
+                             return_kv=True, frame=frame)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _jit_frame_full_ctx_step(params, cfg, x, t, cond, frame, bk, bv):
+    """Frame f > 0 warmup step against the 2N-token (own ⊕ previous frame)
+    published context: the own-frame half is entirely overwritten fresh
+    inside ``forward_patch`` (row_start 0, full rows), so this is full
+    self-attention + stale previous-frame context."""
+    return dit.forward_patch(params, cfg, x, t, cond, 0, buffers=(bk, bv),
+                             return_kv=True, frame=frame)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "row_start"))
+def _jit_frame_patch_step(params, cfg, x_loc, t, cond, frame, row_start,
+                          bk, bv):
+    """Frame f > 0 adaptive substep: stale-KV patch step over the 2N-token
+    cross-frame context, frame-index conditioned. ``frame`` is TRACED, so
+    one compile per (cfg, row_start) covers every frame."""
+    return dit.forward_patch(params, cfg, x_loc, t, cond, row_start,
+                             buffers=(bk, bv), return_kv=True, frame=frame)
+
+
+def _ctx(own: buf_lib.Published, prev: buf_lib.Published) -> Tuple:
+    """The 2N-token cross-frame context: own-frame published K/V ⊕ previous
+    frame's published K/V along the token axis."""
+    return (jnp.concatenate([own.k, prev.k], axis=2),
+            jnp.concatenate([own.v, prev.v], axis=2))
+
+
+# ----------------------------------------------------------------------
+# emulated reference executor
+# ----------------------------------------------------------------------
+
+def run_frames(params, cfg, sched, x_T, cond, plan, patches,
+               interval_hook=None, exchange: str = "sync",
+               exchange_refresh: int = 2,
+               frames: Optional[FramePlan] = None) -> pp.RunResult:
+    """Emulated multi-frame reference (DESIGN.md §16).
+
+    Interprets the same IR stream as ``run_schedule`` — including the
+    :class:`~repro.core.events.FrameShard` events a multi-frame plan
+    lowers to — holding one DistriFusion published-K/V state PER FRAME.
+    Every substep of frame f > 0 attends over ``concat(pub[f], pub[f-1])``
+    (snapshot semantics: all frames of a fine step read the buffers of the
+    last boundary; publishes land at the next one), so the numerics are
+    placement invariant — independent of ``frames.groups`` — exactly like
+    the emulated seq reference is shard-count invariant.
+
+    ``frames=None`` or a single-frame plan delegates to
+    :func:`repro.core.patch_parallel.run_schedule` — bitwise the image
+    path (same jitted steps; a leading frame axis of 1 is squeezed in and
+    restored on the way out). Frame 0 of a multi-frame run takes that same
+    code path per substep and is bitwise the image trajectory.
+    """
+    if frames is not None and frames.num_frames > 1:
+        validate_frames(frames, x_T)
+    else:
+        x = x_T[:, 0] if x_T.ndim == 5 else x_T
+        res = pp.run_schedule(params, cfg, sched, x, cond, plan, patches,
+                              interval_hook=interval_hook, exchange=exchange,
+                              exchange_refresh=exchange_refresh)
+        if x_T.ndim == 5:
+            res = pp.RunResult(res.image[:, None], res.trace)
+        res.trace.frames = frames
+        return res
+
+    F = frames.num_frames
+    p = cfg.patch_size
+    M_base = plan.m_base
+    plan0, patches0 = plan, list(patches)
+    ts = sampler_lib.ddim_timesteps(sched.T, M_base)
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
+
+    B = x_T.shape[0]
+    xs = [x_T[:, f] for f in range(F)]       # per-frame [B,H,W,C] latents
+    fids = [jnp.float32(f) for f in range(F)]
+    records: List[ir.IntervalEvent] = []
+
+    published: List[Optional[buf_lib.Published]] = [None] * F
+    prev_published: List[Optional[buf_lib.Published]] = [None] * F
+    read_pub: List[Optional[buf_lib.Published]] = [None] * F
+    pending = [dict() for _ in range(F)]
+    new_slabs = [dict() for _ in range(F)]
+    interval: Optional[ir.ComputeInterval] = None
+
+    def _sync_step(m):
+        """One synchronous fine step of every frame under snapshot
+        semantics: all frames read the previous step's published K/V,
+        then every frame's fresh K/V publishes at once."""
+        kv_new = []
+        for f in range(F):
+            if f == 0:
+                # bitwise the image warmup step
+                eps, kvs = pp._jit_full_step(params, cfg, xs[0], ts[m], cond)
+            elif published[f] is None:
+                eps, kvs = _jit_frame_full_step(params, cfg, xs[f], ts[m],
+                                                cond, fids[f])
+            else:
+                bk, bv = _ctx(published[f], published[f - 1])
+                eps, kvs = _jit_frame_full_ctx_step(
+                    params, cfg, xs[f], ts[m], cond, fids[f], bk, bv)
+            xs[f] = sampler_lib.ddim_step(sched, xs[f], eps, ts[m], ts[m + 1])
+            kv_new.append(kvs)
+        for f in range(F):
+            published[f] = buf_lib.Published(kv_new[f][0], kv_new[f][1], m)
+            read_pub[f] = published[f]
+
+    gen = ir.lower(plan, patches, policy, frames=frames)
+    send = None
+    while True:
+        try:
+            ev = gen.send(send)
+        except StopIteration:
+            break
+        send = None
+
+        if isinstance(ev, ir.Warmup):
+            _sync_step(ev.fine_step)
+            records.append(ir.warmup_record(ev, frames=F))
+
+        elif isinstance(ev, ir.FrameShard):
+            pass                     # placement only; numerics are invariant
+
+        elif isinstance(ev, ir.ComputeInterval):
+            if published[0] is None:     # M_w == 0: bootstrap buffers once
+                for f in range(F):
+                    step = (pp._jit_full_step(params, cfg, xs[0], ts[0], cond)
+                            if f == 0 else
+                            _jit_frame_full_step(params, cfg, xs[f], ts[0],
+                                                 cond, fids[f]))
+                    published[f] = buf_lib.Published(step[1][0], step[1][1], -1)
+                    read_pub[f] = published[f]
+            interval = ev
+            bounds_tok = patch_bounds(ev.patches)
+            bounds_lat = [(a * p, b * p) for a, b in bounds_tok]
+            pending = [dict() for _ in range(F)]
+            new_slabs = [dict() for _ in range(F)]
+            for f in range(F):
+                ctx = _ctx(read_pub[f], read_pub[f - 1]) if f else None
+                for i in ev.workers:
+                    r = ev.ratios[i]
+                    x_loc = pp._slab(xs[f], bounds_lat[i])
+                    tok_lo = bounds_tok[i][0] * cfg.tokens_per_side
+                    for s in range(ev.substeps[i]):
+                        t_from = ts[ev.fine_step + s * r]
+                        t_to = ts[ev.fine_step + (s + 1) * r]
+                        if f == 0:   # bitwise the image substep
+                            eps, kvs = pp._jit_patch_step(
+                                params, cfg, x_loc, t_from, cond,
+                                bounds_tok[i][0], read_pub[0].k,
+                                read_pub[0].v)
+                        else:
+                            eps, kvs = _jit_frame_patch_step(
+                                params, cfg, x_loc, t_from, cond, fids[f],
+                                bounds_tok[i][0], ctx[0], ctx[1])
+                        x_loc = sampler_lib.ddim_step(sched, x_loc, eps,
+                                                      t_from, t_to)
+                        if s == 0:
+                            buf_lib.publish_local(pending[f], i, kvs[0],
+                                                  kvs[1], tok_lo)
+                    new_slabs[f][i] = x_loc
+
+        elif isinstance(ev, ir.Exchange):
+            bounds_lat = [(a * p, b * p) for a, b in
+                          patch_bounds(ev.patches)]
+            for f in range(F):
+                for i in interval.workers:
+                    lat = bounds_lat[i]
+                    xs[f] = xs[f].at[:, lat[0]:lat[1]].set(new_slabs[f][i])
+                if ev.kind == "full":
+                    prev_published[f] = published[f]
+                    published[f] = buf_lib.merge(published[f], pending[f],
+                                                 ev.fine_step, axis=2)
+                    read_pub[f] = published[f]
+                elif ev.kind == "skip":
+                    read_pub[f] = published[f]
+                elif ev.kind == "predict":
+                    read_pub[f] = buf_lib.extrapolate(prev_published[f],
+                                                      published[f],
+                                                      ev.fine_step)
+            rec = ir.record(interval, ev.kind, frames=F)
+            records.append(rec)
+            if interval_hook is not None and ev.fine_step < M_base:
+                upd = interval_hook(ev.fine_step, rec)
+                if upd is not None:
+                    send = upd
+
+    trace = ir.make_trace(records, plan0, patches0, cfg, int(B),
+                          frames=frames)
+    return pp.RunResult(jnp.stack(xs, axis=1), trace)
+
+
+def max_frame_staleness(records) -> int:
+    """Worst-case age, in adaptive intervals, of the cross-frame (previous
+    frame) K/V any substep attended over: the snapshot semantics make even
+    a just-merged context one interval old by the time the next interval
+    reads it, and every degraded ("skip"/"predict") boundary carries it
+    one interval further — so the bound is ``refresh_every`` under the
+    stale_async cadence (tested; the within-frame halo obeys the same
+    bound, DESIGN.md §16). Warmup steps republish every fine step and
+    contribute 0; single-frame records contribute 0."""
+    age = 0
+    worst = 0
+    for ev in records:
+        if ev.synchronous:
+            age = 0
+            continue
+        age += 1
+        if ev.frames > 1:
+            worst = max(worst, age)
+        if ev.exchange == "full":
+            age = 0
+    return worst

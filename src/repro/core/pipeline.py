@@ -109,6 +109,14 @@ class StadiConfig:
     # it in from the model config (leave None).
     seq_shards: int = 1
     n_heads: Optional[int] = None
+    # video / multi-frame diffusion (DESIGN.md §16): number of latent
+    # frames denoised jointly (1 = image — every path is bitwise the
+    # pre-frame pipeline). frame_groups picks the placement: 1 =
+    # frame-sequential (every worker runs all frames), > 1 = frame-
+    # parallel member rows (requires planner='stadi_video'), 0 = let the
+    # stadi_video planner search.
+    num_frames: int = 1
+    frame_groups: int = 0
     # run the Pallas stale-KV attention kernel (repro.kernels) inside the
     # DiT blocks instead of the reference buffer-rewrite attend — the
     # fused freshness-select hot path (interpret mode off-TPU)
@@ -192,11 +200,11 @@ EXECUTOR_KWARGS = ("params", "model_cfg", "sched", "x_T", "cond", "plan",
 
 #: every feature token a plan can demand from a backend
 PLAN_FEATURES = ("stages", "guidance.fused", "guidance.split",
-                 "guidance.interleaved", "seq", "seq.uneven")
+                 "guidance.interleaved", "seq", "seq.uneven", "frames")
 
 #: valid ``requires=`` tokens: a concrete feature, or a bare axis prefix
 #: ("guidance", "seq") satisfied by any mode of that axis
-_REQUIRE_PREFIXES = ("guidance", "seq", "stages")
+_REQUIRE_PREFIXES = ("guidance", "seq", "stages", "frames")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -350,6 +358,25 @@ def _resolve_seq(plan, model_cfg, config):
                                 S)
 
 
+def _resolve_frames(plan, config):
+    """The FramePlan an executor should run: the plan's own (from the
+    stadi_video planner) or, for plain planners with ``num_frames > 1``,
+    the frame-sequential placement (the --num-frames wiring: every patch
+    worker evaluates all frames). None = single-frame image path."""
+    if plan.frames is not None and plan.frames.num_frames > 1:
+        return plan.frames
+    F = config.num_frames
+    if F <= 1:
+        return None
+    from repro.core import frames as frames_lib
+    if config.frame_groups > 1:
+        raise ValueError(
+            f"frame_groups={config.frame_groups} places frame chunks on "
+            "device member rows — plan it with planner='stadi_video' "
+            f"(planner {config.planner!r} allocates per-device workers)")
+    return frames_lib.FramePlan(F, (F,))
+
+
 def _resolve_guidance(plan, config):
     """The GuidancePlan an executor should run: the plan's own (from the
     stadi_guidance planner) or, for plain planners with ``cfg_scale`` set,
@@ -404,8 +431,8 @@ def plan_guidance(plan, config):
 
 def required_features(plan, config) -> Tuple[List[str], Optional[object]]:
     """Feature tokens a (plan, config) pair demands of a backend, in the
-    deterministic check order (stages, guidance, seq), plus the resolved
-    GuidancePlan (None = unguided)."""
+    deterministic check order (stages, guidance, seq, frames), plus the
+    resolved GuidancePlan (None = unguided)."""
     feats: List[str] = []
     if plan.stages is not None and len(plan.stages) > 1:
         feats.append("stages")
@@ -419,6 +446,10 @@ def required_features(plan, config) -> Tuple[List[str], Optional[object]]:
         if (plan.seq is not None and len(plan.seq.segments) > 1
                 and not plan.seq.even_heads()):
             feats.append("seq.uneven")
+    framed = ((plan.frames is not None and plan.frames.num_frames > 1)
+              or config.num_frames > 1)
+    if framed:
+        feats.append("frames")
     return feats, gplan
 
 
@@ -455,6 +486,11 @@ _BACKEND_REQUIRES_ERRORS: Dict[Tuple[str, str], str] = {
         "seq-sharded plan: set seq_shards > 1, or planner='stadi_seq' "
         "with seq_shards=0 (auto); an attention-unsharded plan runs on "
         "the plain 'spmd' backend",
+    ("spmd_frames", "frames"):
+        "backend 'spmd_frames' runs the frame mesh and needs a "
+        "multi-frame plan: set num_frames > 1 (optionally "
+        "planner='stadi_video' for the frame-parallel placement); a "
+        "single-frame plan runs on the plain 'spmd' backend",
 }
 
 
@@ -480,6 +516,10 @@ def _reject_message(backend: str, feature: str, plan, gplan) -> str:
                 f"backend ({list(backends_supporting('seq'))}), not "
                 f"{backend!r}; pin seq_shards=1 to force attention-"
                 "unsharded execution")
+    if feature == "frames":
+        return (f"a multi-frame plan (num_frames > 1) needs a frame "
+                f"backend ({list(backends_supporting('frames'))}), not "
+                f"{backend!r}; pin num_frames=1 for the image path")
     return (f"{backend!r} does not support the planned {feature!r} "
             f"(supported by {list(backends_supporting(feature))})")
 
@@ -512,9 +552,21 @@ def check_backend_can_run(plan, config) -> None:
 
 @register_executor("emulated", supports={"guidance.fused", "guidance.split",
                                          "guidance.interleaved", "seq",
-                                         "seq.uneven"})
+                                         "seq.uneven", "frames"})
 def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
                       interval_hook=None):
+    fplan = plan.frames
+    if fplan is not None and fplan.num_frames > 1:
+        # the multi-frame interpreter (DESIGN.md §16); frames x guidance /
+        # seq compositions are rejected at pipeline construction
+        from repro.core import frames as frames_lib
+        res = frames_lib.run_frames(params, model_cfg, sched, x_T, cond,
+                                    plan.temporal, plan.patches,
+                                    interval_hook=interval_hook,
+                                    exchange=config.exchange,
+                                    exchange_refresh=config.exchange_refresh,
+                                    frames=fplan)
+        return res.image, res.trace
     res = pp.run_schedule(params, model_cfg, sched, x_T, cond,
                           plan.temporal, plan.patches,
                           interval_hook=interval_hook,
@@ -573,7 +625,8 @@ def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
                             exchange_refresh=config.exchange_refresh,
                             stages=plan.stages,
                             guidance=plan.guidance,
-                            seq=plan.seq)
+                            seq=plan.seq,
+                            frames=plan.frames)
     return None, trace
 
 
@@ -604,6 +657,33 @@ def spmd_seq_executor(params, model_cfg, sched, x_T, cond, plan, config,
                             exchange=config.exchange,
                             exchange_refresh=config.exchange_refresh,
                             seq=splan)
+    return img, trace
+
+
+@register_executor("spmd_frames", supports={"frames"}, requires={"frames"})
+def spmd_frames_executor(params, model_cfg, sched, x_T, cond, plan, config,
+                         interval_hook=None):
+    """Multi-frame SPMD over a ("frame", "dev") shard_map mesh (DESIGN.md
+    §16): axis "frame" carries the group-member rows of the frame
+    partition, axis "dev" the patch-worker columns of each row; needs
+    n_groups * n_workers devices."""
+    from repro.core import spmd
+    fplan = plan.frames
+    if fplan is None or fplan.num_frames <= 1:
+        raise ValueError(
+            "backend 'spmd_frames' runs the frame mesh and needs a "
+            "multi-frame plan: set num_frames > 1 (optionally "
+            "planner='stadi_video' for the frame-parallel placement); a "
+            "single-frame plan runs on the plain 'spmd' backend")
+    img = spmd.run_spmd_frames(params, model_cfg, sched, x_T, cond,
+                               plan.temporal, plan.patches, fplan,
+                               exchange=config.exchange,
+                               exchange_refresh=config.exchange_refresh)
+    trace = sim.build_trace(plan.temporal, plan.patches, model_cfg,
+                            batch=int(x_T.shape[0]),
+                            exchange=config.exchange,
+                            exchange_refresh=config.exchange_refresh,
+                            frames=fplan)
     return img, trace
 
 
@@ -653,6 +733,9 @@ SEQ_BACKENDS = backends_supporting("seq")
 #: backends that can execute a guided (classifier-free guidance) plan; the
 #: mapping is mode-dependent — see check_backend_can_run
 GUIDED_BACKENDS = backends_supporting("guidance")
+
+#: backends that can execute a multi-frame (video) plan (DESIGN.md §16)
+FRAME_BACKENDS = backends_supporting("frames")
 
 
 def _env_use_pallas() -> bool:
@@ -731,6 +814,50 @@ class StadiPipeline:
                 raise ValueError("online rebalancing is not supported with "
                                  "sequence sharding (the device grouping "
                                  "is static)")
+        if config.num_frames < 1:
+            raise ValueError(f"num_frames must be >= 1, got "
+                             f"{config.num_frames}")
+        if config.frame_groups < 0:
+            raise ValueError(f"frame_groups must be >= 0 (0 = auto), got "
+                             f"{config.frame_groups}")
+        if config.num_frames > 1:
+            if config.backend not in FRAME_BACKENDS:
+                raise ValueError(
+                    f"num_frames={config.num_frames} needs a frame backend "
+                    f"({sorted(FRAME_BACKENDS)}), not {config.backend!r} — "
+                    "multi-frame diffusion (DESIGN.md §16)")
+            if config.frame_groups > config.num_frames:
+                raise ValueError(
+                    f"frame_groups={config.frame_groups} cannot split "
+                    f"{config.num_frames} frames (>= 1 frame per group)")
+            if config.frame_groups > config.n_devices:
+                raise ValueError(
+                    f"frame_groups={config.frame_groups} is infeasible: "
+                    "every group-member row needs at least one device and "
+                    f"the cluster has {config.n_devices}")
+            if guided:
+                raise ValueError(
+                    "classifier-free guidance is not composed with the "
+                    "frame axis yet (branch pairing and frame grouping "
+                    "compete for the same devices) — run num_frames=1 or "
+                    "cfg_scale=0")
+            if config.seq_shards != 1:
+                raise ValueError(
+                    "sequence sharding is not composed with the frame axis "
+                    "yet (ring groups and frame rows compete for the same "
+                    "devices) — pin seq_shards=1 with num_frames > 1")
+            if config.num_stages != 1:
+                raise ValueError(
+                    "the displaced patch pipeline is not composed with the "
+                    "frame axis yet — pin num_stages=1 with num_frames > 1")
+            if config.rebalance_every:
+                raise ValueError("online rebalancing is not supported with "
+                                 "the frame axis (the frame grouping is "
+                                 "static)")
+        elif config.frame_groups > 1:
+            raise ValueError(f"frame_groups={config.frame_groups} needs "
+                             "num_frames > 1 (there is only one frame to "
+                             "place)")
         # persistent plan cache (DESIGN.md §14)
         self.plan_cache = None
         self.last_plan_key: Optional[str] = None
@@ -797,15 +924,19 @@ class StadiPipeline:
             "latent_bytes": knobs.latent_bytes,
             "kv_row_bytes": knobs.kv_row_bytes,
             "seq_shards": knobs.seq_shards, "n_heads": knobs.n_heads,
+            # frame axis (DESIGN.md §16): a cached image plan must never be
+            # served to a video workload (and vice versa)
+            "num_frames": knobs.num_frames,
+            "frame_groups": knobs.frame_groups,
             "cost_model": (None if cm is None else dataclasses.asdict(cm)),
         }
 
     def plan(self, speeds: Optional[Sequence[float]] = None, *,
              use_cache: bool = True) -> ExecutionPlan:
         """Run the configured planner (no execution) and return a fully-
-        populated five-axis ExecutionPlan: ``stages`` / ``guidance`` /
-        ``seq`` are resolved from the planner output or the config knobs in
-        this one pass. With a plan cache configured, the persistent cache
+        populated six-axis ExecutionPlan: ``stages`` / ``guidance`` /
+        ``seq`` / ``frames`` are resolved from the planner output or the
+        config knobs in this one pass. With a plan cache configured, the persistent cache
         is consulted before any planner search (``use_cache=False`` forces
         a live search without touching the cache)."""
         speeds = list(speeds) if speeds is not None else self.config.speeds
@@ -825,7 +956,9 @@ class StadiPipeline:
             stages=_resolve_stages(raw, self.model_cfg, knobs),
             guidance=_resolve_guidance(raw, knobs),
             seq=(raw.seq if raw.seq is not None
-                 else _resolve_seq(raw, self.model_cfg, knobs)))
+                 else _resolve_seq(raw, self.model_cfg, knobs)),
+            frames=(raw.frames if raw.frames is not None
+                    else _resolve_frames(raw, knobs)))
         if key is not None:
             self.plan_cache.put(key, plan)
             self.last_plan_key = key

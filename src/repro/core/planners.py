@@ -48,6 +48,14 @@ class ExecutionPlan:
         that are device GROUPS of ``seq.n_shards`` members each (the
         column-dealt placement of :func:`repro.core.seqpar.
         seq_group_speeds`); ``speeds`` stays the raw cluster.
+    frames:   frame axis (DESIGN.md §16): a
+        :class:`repro.core.frames.FramePlan`. None / single-frame = the
+        image path. With ``len(groups) > 1`` the plan is frame-parallel:
+        ``temporal``/``patches`` describe patch-worker COLUMNS shared by
+        every member row of the row-dealt placement of
+        :func:`repro.core.frames.frame_group_layout` (row ``g`` owns the
+        frame chunk ``frames.bounds[g]``); ``speeds`` stays the raw
+        cluster.
     """
     temporal: TemporalPlan
     patches: List[int]
@@ -57,6 +65,7 @@ class ExecutionPlan:
     stages: Optional[List[int]] = None
     guidance: Optional[object] = None
     seq: Optional[object] = None
+    frames: Optional[object] = None
 
     @property
     def active(self) -> List[int]:
@@ -455,6 +464,126 @@ def stadi_seq_planner(speeds, knobs, p_total) -> ExecutionPlan:
         raise ValueError(
             f"seq_shards={forced} is infeasible: need 1 <= S <= "
             f"min(n_devices={n}, n_heads={n_heads}, p_total={p_total})")
+    return min(candidates, key=lambda c: c.modeled_interval_cost)
+
+
+def _frame_plan_cost(plan: ExecutionPlan, rows, p_total: int, cm,
+                     kv_row: float, latent_bytes: float,
+                     refresh: int) -> float:
+    """Modeled seconds of one adaptive interval under the frame cost model
+    of :func:`repro.core.simulate._simulate_frames`, averaged over the
+    stale_async refresh cadence (1 full boundary + E-1 degraded per E).
+    ``rows`` is the member-speed layout of a frame-parallel candidate
+    (``frame_group_layout`` rows, column-aligned with ``plan.patches``);
+    None for the frame-sequential candidate, whose workers are single
+    devices each stepping every frame. Frame f > 0 attends over the
+    2x (own ⊕ previous frame) published context, so the attention term
+    charges ``p_total * (2 * frames_in_row - [row owns frame 0])`` context
+    rows per substep — the wall frame-parallel placements divide. A full
+    boundary additionally wires every frame's K/V + latent gather, and a
+    multi-row placement pays the (G-1) cross-row previous-frame K/V
+    handoffs. With no byte provenance (kv_row == 0, standalone planner
+    calls) the score degenerates to the compute makespan."""
+    from repro.core.comm import uneven_all_gather_rows
+    fplan = plan.frames
+    G = fplan.n_groups
+    t = plan.temporal
+    R = t.lcm
+    row_bytes = latent_bytes / max(p_total, 1)
+    # context rows a member row reads per fine step: 2N per owned frame,
+    # minus the previous-frame half frame 0 does not have (it sits in the
+    # first row by construction — bounds are contiguous from frame 0)
+    ctx = [p_total * (2 * fplan.groups[g] - (1 if g == 0 else 0))
+           for g in range(G)]
+    compute = async_b = 0.0
+    for i in plan.active:
+        sub = R // t.ratios[i]
+        rows_i = plan.patches[i]
+        members = ([(rows[g][i], g) for g in range(G)] if rows is not None
+                   else [(plan.speeds[i], 0)])
+        wt = max(fplan.groups[g] * (cm.t_fixed + cm.t_row * rows_i)
+                 / max(v, 1e-9) + cm.attn_time(ctx[g], 1.0, v)
+                 for v, g in members)
+        compute = max(compute, sub * wt)
+        async_b = max(async_b, max(kv_row * rows_i * fplan.groups[g]
+                                   for _, g in members))
+    gather_rows = uneven_all_gather_rows(
+        [plan.patches[i] for i in plan.active])
+    gather_t = gather_rows * row_bytes * fplan.num_frames / cm.link_bw
+    handoff_t = (G - 1) * kv_row * p_total / cm.link_bw
+    full = max(compute, async_b / cm.link_bw) \
+        + gather_t + handoff_t + cm.link_latency
+    degraded = compute
+    E = max(refresh, 1)
+    return (full + (E - 1) * degraded) / E
+
+
+@register_planner("stadi_video")
+def stadi_video_planner(speeds, knobs, p_total) -> ExecutionPlan:
+    """Joint (steps, patches, frame placement) search (DESIGN.md §16).
+
+    Candidates: the frame-SEQUENTIAL placement — the plain STADI patch
+    plan over all devices, every worker stepping all ``num_frames`` frames
+    per fine step (``FramePlan(F, (F,))``) — and, for each group count G,
+    a frame-PARALLEL placement: the speed-sorted cluster dealt row-wise
+    into G member rows (:func:`repro.core.frames.frame_group_layout`),
+    frames split speed-proportionally over the rows
+    (:func:`repro.core.frames.frame_partition`), and the STADI allocator
+    run over the per-column effective speeds ``min_g rows[g][w] /
+    frames[g]`` so one global patch split fits every row. All candidates
+    are scored by :func:`_frame_plan_cost` and the cheapest wins — frame
+    parallelism divides both the per-device fixed-overhead wall (F step
+    launches vs F/G) and the 2N cross-frame context-read wall, at the
+    price of coarser patch splits and the cross-row K/V handoff.
+
+    ``knobs.frame_groups > 0`` pins G (1 = force frame-sequential); 0 =
+    auto. ``knobs.num_frames > 1`` is required — single-frame image plans
+    come from the plain planners.
+    """
+    from repro.core import frames as frames_lib
+    from repro.core.simulate import CostModel
+    n = len(speeds)
+    F = getattr(knobs, "num_frames", 1)
+    if F < 2:
+        raise ValueError("the stadi_video planner plans MULTI-frame "
+                         "generation: set num_frames > 1 (single-frame "
+                         "image plans come from planner='stadi')")
+    forced = getattr(knobs, "frame_groups", 0) or 0
+    cm = getattr(knobs, "cost_model", None) or CostModel(t_fixed=1e-3,
+                                                         t_row=1e-3)
+    kv_row = getattr(knobs, "kv_row_bytes", 0)
+    latent_bytes = getattr(knobs, "latent_bytes", 0)
+    refresh = getattr(knobs, "exchange_refresh", 2)
+    candidates = []
+    if forced in (0, 1):
+        base = stadi_planner(speeds, knobs, p_total)
+        cand = dataclasses.replace(base, planner="stadi_video",
+                                   frames=frames_lib.FramePlan(F, (F,)))
+        candidates.append(dataclasses.replace(
+            cand, modeled_interval_cost=_frame_plan_cost(
+                cand, None, p_total, cm, kv_row, latent_bytes, refresh)))
+    if forced == 1:                  # pinned frame-sequential: no search
+        return candidates[0]
+    g_options = [forced] if forced > 1 else range(2, min(n, F) + 1)
+    for G in g_options:
+        if G < 2 or G > min(n, F):
+            continue
+        rows, row_speeds = frames_lib.frame_group_layout(speeds, G)
+        groups = frames_lib.frame_partition(F, G, row_speeds)
+        fplan = frames_lib.FramePlan(F, tuple(groups))
+        n_cols = len(rows[0])
+        col_speeds = [min(rows[g][w] / groups[g] for g in range(G))
+                      for w in range(n_cols)]
+        base = stadi_planner(col_speeds, knobs, p_total)
+        cand = dataclasses.replace(base, planner="stadi_video",
+                                   speeds=list(speeds), frames=fplan)
+        candidates.append(dataclasses.replace(
+            cand, modeled_interval_cost=_frame_plan_cost(
+                cand, rows, p_total, cm, kv_row, latent_bytes, refresh)))
+    if not candidates:
+        raise ValueError(
+            f"frame_groups={forced} is infeasible: need 1 <= G <= "
+            f"min(n_devices={n}, num_frames={F})")
     return min(candidates, key=lambda c: c.modeled_interval_cost)
 
 

@@ -41,7 +41,7 @@ from repro.core.events import ExecutionTrace, IntervalEvent  # noqa: F401
 def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
                 exchange: str = "sync", exchange_refresh: int = 2,
                 stages: Optional[Sequence[int]] = None,
-                guidance=None, seq=None) -> ExecutionTrace:
+                guidance=None, seq=None, frames=None) -> ExecutionTrace:
     """Schedule trace without running numerics (latency-only replay).
 
     Replays :func:`repro.core.events.lower` for (plan, patches, policy) —
@@ -53,13 +53,15 @@ def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
     ``guidance`` a CFG trace (DESIGN.md §12) with uncond-refresh
     provenance; ``seq`` (a :class:`repro.core.seqpar.SeqPlan`, DESIGN.md
     §13) a sequence-sharded trace whose records carry per-interval ring
-    hops.
+    hops; ``frames`` (a :class:`repro.core.frames.FramePlan`, DESIGN.md
+    §16) a multi-frame trace whose byte sizes are per frame.
     """
     policy = comm_lib.get_exchange(exchange, exchange_refresh)
     records = ir.replay(plan, patches, policy, stages=stages,
-                        guidance=guidance, seq_shards=seq)
+                        guidance=guidance, seq_shards=seq, frames=frames)
     return ir.make_trace(records, plan, list(patches), cfg, batch,
-                         stages=stages, guidance=guidance, seq=seq)
+                         stages=stages, guidance=guidance, seq=seq,
+                         frames=frames)
 
 
 @dataclasses.dataclass
@@ -364,6 +366,87 @@ def _simulate_seq(trace: ExecutionTrace, speeds: Sequence[float],
     return total
 
 
+# ----------------------------------------------------------------------
+# frame-axis costing (DESIGN.md §16)
+# ----------------------------------------------------------------------
+#
+# In a multi-frame run trace "workers" are patch-worker COLUMNS shared by
+# every member row of the row-dealt frame placement (frames.
+# frame_group_layout); member (g, w) steps its row's frame chunk over the
+# column's token rows each fine step. Frame f > 0 attends over the 2N
+# (own ⊕ previous frame) published context, so the t_ctx term charges
+# ~2x context rows per owned frame — the wall frame parallelism divides
+# along with the per-frame fixed overhead. Trace byte sizes are PER
+# FRAME; a "full" boundary wires every frame's K/V + latent slabs, and a
+# multi-row placement adds the (G-1) cross-row previous-frame K/V
+# handoffs. The frame-sequential placement (one group) is the same model
+# with every device owning all F frames.
+
+def _simulate_frames(trace: ExecutionTrace, speeds: Sequence[float],
+                     cm: CostModel) -> float:
+    """Makespan of a multi-frame trace: per-member frame-chunk compute
+    with the cross-frame context attention term + per-frame boundary
+    wire. Guidance / seq / stages do not compose with the frame axis yet
+    (the pipeline rejects those configs loudly)."""
+    from repro.core import frames as frames_lib
+
+    fplan = trace.frames
+    F = fplan.num_frames
+    G = fplan.n_groups
+    if G > 1:
+        rows_layout, _ = frames_lib.frame_group_layout(speeds, G)
+        n_cols = len(rows_layout[0])
+    else:
+        rows_layout, n_cols = None, len(speeds)
+    kv_row = _kv_bytes_per_row(trace)
+    total = 0.0
+    for ev in trace.events:
+        parts: List[int] = []
+        total_rows = max(sum(ev.patches), 1)
+        row_bytes = trace.latent_bytes / total_rows
+        # context rows a member row reads per fine step: 2N per owned
+        # frame, minus the previous-frame half frame 0 does not have
+        ctx = [total_rows * (2 * fplan.groups[g] - (1 if g == 0 else 0))
+               for g in range(G)]
+        compute = async_b = 0.0
+        for i, (sub, rows) in enumerate(zip(ev.substeps, ev.patches)):
+            if sub == 0 or rows == 0:
+                continue
+            parts.append(i)
+            members = ([(rows_layout[g][min(i, n_cols - 1)], g)
+                        for g in range(G)] if rows_layout is not None
+                       else [(speeds[i], 0)])
+            wt = max(fplan.groups[g] * (cm.t_fixed + cm.t_row * rows)
+                     / max(v, 1e-9) + cm.attn_time(ctx[g], 1.0, v)
+                     for v, g in members)
+            compute = max(compute, sub * wt)
+            async_b = max(async_b, max(kv_row * rows * fplan.groups[g]
+                                       for _, g in members))
+        if not parts:
+            continue
+        gather_rows = comm_lib.uneven_all_gather_rows(
+            [ev.patches[i] for i in parts])
+        handoff = (G - 1) * kv_row * total_rows / cm.link_bw
+        if ev.synchronous:
+            # warmup: per-step per-frame activation sync + latent slabs
+            comm_bytes = gather_rows * row_bytes * F
+            if len(parts) > 1:
+                comm_bytes += F * sum(kv_row * ev.patches[i] for i in parts)
+                total += compute + comm_bytes / cm.link_bw \
+                    + handoff + cm.link_latency
+            else:
+                total += compute + handoff
+            continue
+        kind = ev.exchange
+        if kind != "full" or len(parts) <= 1:
+            # stale/predictive boundary: pure compute, nothing moves
+            total += compute
+            continue
+        comm = gather_rows * row_bytes * F / cm.link_bw + cm.link_latency
+        total += max(compute, async_b / cm.link_bw) + comm + handoff
+    return total
+
+
 def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
                    cm: CostModel) -> float:
     """End-to-end makespan (s) of a schedule on devices with given speeds."""
@@ -373,6 +456,8 @@ def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
         return _simulate_seq(trace, speeds, cm)
     if trace.guidance is not None:
         return _simulate_guided(trace, speeds, cm)
+    if trace.frames is not None and trace.frames.num_frames > 1:
+        return _simulate_frames(trace, speeds, cm)
     total = 0.0
     kv_row = _kv_bytes_per_row(trace)
     for ev in trace.events:

@@ -35,7 +35,7 @@ from repro.core.schedule import TemporalPlan
 def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
                   R, my_slab, cond, pub_k, pub_v, my_start, my_tok,
                   my_ratio, m0, guidance_scale=None, eps_combine=None,
-                  attend_fn=None):
+                  attend_fn=None, frame=None, ctx_tokens=None):
     """R fine steps on this device's padded slab with activity masking: a
     device with interval ratio r only applies every r-th DDIM update (a
     no-op substep costs what it costs — the paper's per-GPU step skipping in
@@ -52,6 +52,10 @@ def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
     ``attend_fn`` (DESIGN.md §13) replaces the buffered attention read in
     ``dit.block_stack`` — the "spmd_seq" path passes the Ulysses
     all-to-all + ring-ppermute read over the sequence mesh axis.
+
+    ``frame`` / ``ctx_tokens`` (DESIGN.md §16): the "spmd_frames" path
+    passes the latent frame index (summed into the conditioning) and the
+    real-token count of its 2N cross-frame concatenated buffers.
     """
     import jax
     import jax.numpy as jnp
@@ -81,7 +85,7 @@ def _run_substeps(params, cfg: DiTConfig, sched: NoiseSchedule, ts, m_base,
             eps, kvs = dit.forward_patch(
                 params, cfg, my_slab, t_from, cond, my_start,
                 buffers=(pub_k, pub_v), return_kv=True, valid_tokens=my_tok,
-                attend_fn=attend_fn)
+                attend_fn=attend_fn, frame=frame, ctx_tokens=ctx_tokens)
         if eps_combine is not None:           # split CFG: eps crosses groups
             eps = eps_combine(eps)
         stepped = sampler_lib.ddim_step(sched, my_slab, eps, t_from, t_to)
@@ -722,6 +726,226 @@ def run_spmd_seq(params, cfg: DiTConfig, sched: NoiseSchedule, x_T, cond,
                     else:
                         read_k, read_v = pub_k, pub_v
         return x_full
+
+    from repro.core.comm import shard_map_compat
+    fn = shard_map_compat(body, mesh, (P(), P(), P()), P())
+    return jax.jit(fn)(params, x_T, cond)
+
+
+def run_spmd_frames(params, cfg: DiTConfig, sched: NoiseSchedule, x_T,
+                    cond, plan: TemporalPlan, patches: Sequence[int],
+                    frames, exchange: str = "sync",
+                    exchange_refresh: int = 2):
+    """Multi-frame SPMD (DESIGN.md §16): shard_map over a
+    ``("frame", "dev")`` mesh — axis "dev" holds the ``len(patches)``
+    patch-worker COLUMNS every member row shares, axis "frame" the
+    ``frames.n_groups`` member rows, row ``g`` owning the contiguous
+    frame chunk ``frames.bounds[g]``.
+
+    Each column runs the IDENTICAL statically-unrolled schedule body as
+    :func:`run_spmd` — including the IR's :class:`~repro.core.events.
+    FrameShard` events, which carry no numerics — once per frame, under
+    the snapshot semantics of :func:`repro.core.frames.run_frames`:
+    every substep of frame f > 0 attends over the 2N-token
+    (own ⊕ previous frame) published context of the LAST boundary, with
+    the fresh own-slab overwrite landing in the first N tokens
+    (``ctx_tokens`` keeps the scratch mask honest about the doubled
+    context). Ownership is enforced, not just asserted: a frame's
+    carried state is zero-masked off its member row, so the one
+    previous-frame K/V that crosses each row boundary (the chunks are
+    contiguous) must arrive through a masked ``psum`` over "frame" —
+    miswired mesh axes fail the parity test instead of silently
+    replicating. SPMD lockstep means every row traces every frame's
+    step (a non-owned step costs what it costs, like the no-op substeps
+    of the activity masks); the wall-clock benefit of frame parallelism
+    is modeled by the simulator — this backend proves the mesh
+    mechanics and the numerics. Needs ``n_groups * len(patches)``
+    devices. Returns the final video [B,F,H,W,C].
+
+    ``frames=None`` or a single-frame plan delegates to
+    :func:`run_spmd` (a leading frame axis of 1 is squeezed in and
+    restored on the way out) — bitwise the image path.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import sampler as sampler_lib
+    from repro.models.diffusion import dit
+
+    if frames is None or frames.num_frames == 1:
+        img = x_T[:, 0] if x_T.ndim == 5 else x_T
+        out = run_spmd(params, cfg, sched, img, cond, plan, patches,
+                       exchange=exchange, exchange_refresh=exchange_refresh)
+        return out[:, None] if x_T.ndim == 5 else out
+
+    from repro.core import frames as frames_lib
+    frames_lib.validate_frames(frames, x_T)
+    F = frames.num_frames
+    G = frames.n_groups
+    row_of: list = []
+    for g, (lo, hi) in enumerate(frames.bounds):
+        row_of += [g] * (hi - lo)
+    policy = comm_lib.get_exchange(exchange, exchange_refresh)
+    evs = list(ir.lower(plan, patches, policy, frames=frames))
+
+    devices = jax.devices()
+    W = len(patches)
+    if G * W > len(devices):
+        raise ValueError(
+            f"frame_groups={G} over {W} patch workers needs {G * W} "
+            f"devices, have {len(devices)} (set STADI_HOST_DEVICES)")
+    mesh = Mesh(np.asarray(devices[:G * W]).reshape(G, W), ("frame", "dev"))
+
+    lay = _static_layout(cfg, patches)
+    ratios = [r if r else 1 for r in plan.ratios]
+    ratios_arr = jnp.asarray(ratios, jnp.int32)
+    ts = sampler_lib.ddim_timesteps(sched.T, plan.m_base)
+    N = cfg.n_tokens
+    buf_pad = [(0, 0), (0, 0), (0, lay["Nl_max"]), (0, 0), (0, 0)]
+
+    def _reslice(x_full, my_start):
+        x_pad = jnp.pad(x_full, ((0, 0), (0, lay["Pmax"] * lay["p"]),
+                                 (0, 0), (0, 0)))
+        return jax.lax.dynamic_slice_in_dim(x_pad, my_start * lay["p"],
+                                            lay["Pmax"] * lay["p"], axis=1)
+
+    def body(params, x_stack, cond):
+        fidx = jax.lax.axis_index("frame")
+        idx = jax.lax.axis_index("dev")
+        my_start = lay["starts_arr"][idx]
+        my_ratio = ratios_arr[idx]
+        my_tok = lay["rows_arr"][idx] * lay["wp"]
+        fids = [jnp.float32(f) for f in range(F)]
+
+        def mask_own(f, val):
+            """Frame f's state is valid ONLY on its member row; other rows
+            carry zeros, so cross-row reads MUST use ``from_row``."""
+            return jnp.where(fidx == row_of[f], val, jnp.zeros_like(val))
+
+        def from_row(g, val):
+            """Broadcast row g's value over "frame": a psum of the masked
+            lanes — only row g contributes."""
+            return jax.lax.psum(
+                jnp.where(fidx == g, val, jnp.zeros_like(val)), "frame")
+
+        def prev_kv(state, f):
+            """Frame f-1's (k, v) as seen by frame f's owner row — crosses
+            the mesh row boundary when f-1 lives on the previous row
+            (exactly one handoff per boundary: chunks are contiguous)."""
+            k, v = state[f - 1]
+            if row_of[f] != row_of[f - 1]:
+                k = from_row(row_of[f - 1], k)
+                v = from_row(row_of[f - 1], v)
+            return k, v
+
+        def _full_forward(f, x, t):
+            return dit.forward_patch(
+                params, cfg, x, t, cond, 0, buffers=None, return_kv=True,
+                frame=(None if f == 0 else fids[f]))
+
+        xs = [mask_own(f, x_stack[:, f]) for f in range(F)]
+        pubs = [None] * F         # last fully-exchanged K/V per frame
+        prevs = [None] * F        # the exchange before that (predictive)
+        reads = [None] * F        # what the substeps attend to
+        slabs = [None] * F
+        freshs = [None] * F
+        m_prev, m_last = None, None
+
+        for ev in evs:
+            if isinstance(ev, ir.Warmup):
+                # one synchronous fine step of EVERY frame under snapshot
+                # semantics: all frames read the previous step's published
+                # K/V, then every frame's fresh K/V publishes at once
+                kv_new = []
+                for f in range(F):
+                    if f == 0 or pubs[f] is None:
+                        eps, kvs = _full_forward(f, xs[f], ts[ev.fine_step])
+                    else:
+                        qk, qv = prev_kv(pubs, f)
+                        eps, kvs = dit.forward_patch(
+                            params, cfg, xs[f], ts[ev.fine_step], cond, 0,
+                            buffers=(jnp.concatenate([pubs[f][0], qk], axis=2),
+                                     jnp.concatenate([pubs[f][1], qv], axis=2)),
+                            return_kv=True, frame=fids[f])
+                    xs[f] = mask_own(f, sampler_lib.ddim_step(
+                        sched, xs[f], eps, ts[ev.fine_step],
+                        ts[ev.fine_step + 1]))
+                    kv_new.append(kvs)
+                for f in range(F):
+                    pubs[f] = (mask_own(f, kv_new[f][0]),
+                               mask_own(f, kv_new[f][1]))
+                m_last = ev.fine_step
+
+            elif isinstance(ev, ir.FrameShard):
+                pass                 # placement only; numerics are invariant
+
+            elif isinstance(ev, ir.ComputeInterval):
+                if slabs[0] is None:  # entering the adaptive phase
+                    if pubs[0] is None:          # M_w == 0: bootstrap once
+                        for f in range(F):
+                            _, kvs = _full_forward(f, xs[f], ts[0])
+                            pubs[f] = (mask_own(f, kvs[0]),
+                                       mask_own(f, kvs[1]))
+                        m_last = -1
+                    for f in range(F):
+                        pubs[f] = (jnp.pad(pubs[f][0], buf_pad),
+                                   jnp.pad(pubs[f][1], buf_pad))
+                        reads[f] = pubs[f]
+                        slabs[f] = _reslice(xs[f], my_start)
+                for f in range(F):
+                    if f == 0:       # the image path, bitwise run_spmd
+                        slabs[0], fk, fv = _run_substeps(
+                            params, cfg, sched, ts, plan.m_base, ev.length,
+                            slabs[0], cond, reads[0][0], reads[0][1],
+                            my_start, my_tok, my_ratio, ev.fine_step)
+                    else:
+                        qk, qv = prev_kv(reads, f)
+                        bk = jnp.pad(jnp.concatenate(
+                            [reads[f][0][:, :, :N], qk[:, :, :N]], axis=2),
+                            buf_pad)
+                        bv = jnp.pad(jnp.concatenate(
+                            [reads[f][1][:, :, :N], qv[:, :, :N]], axis=2),
+                            buf_pad)
+                        slabs[f], fk, fv = _run_substeps(
+                            params, cfg, sched, ts, plan.m_base, ev.length,
+                            slabs[f], cond, bk, bv, my_start, my_tok,
+                            my_ratio, ev.fine_step, frame=fids[f],
+                            ctx_tokens=2 * N)
+                    slabs[f] = mask_own(f, slabs[f])
+                    freshs[f] = (fk, fv)
+
+            elif isinstance(ev, ir.Exchange):
+                for f in range(F):
+                    if ev.kind == "full":
+                        prevs[f] = pubs[f]
+                        x_full, pk, pv = _gather_and_merge(
+                            cfg, patches, lay["row_starts"], slabs[f],
+                            freshs[f][0], freshs[f][1],
+                            pubs[f][0], pubs[f][1])
+                        pubs[f] = (mask_own(f, pk), mask_own(f, pv))
+                        reads[f] = pubs[f]
+                        xs[f] = mask_own(f, x_full)
+                        slabs[f] = mask_own(f, _reslice(x_full, my_start))
+                    elif ev.kind == "skip":
+                        reads[f] = pubs[f]      # stay stale
+                    elif ev.kind == "predict":
+                        fac = (buf_lib.extrapolation_factor(
+                            m_prev, m_last, ev.fine_step)
+                            if m_prev is not None else 0.0)
+                        if fac:
+                            reads[f] = (
+                                buf_lib.extrapolate_arrays(
+                                    pubs[f][0], prevs[f][0], fac),
+                                buf_lib.extrapolate_arrays(
+                                    pubs[f][1], prevs[f][1], fac))
+                        else:       # fewer than two exchanges: stale reuse
+                            reads[f] = pubs[f]
+                if ev.kind == "full":
+                    m_prev, m_last = m_last, ev.fine_step
+        # every frame's final latent returns from its member row
+        return jnp.stack([from_row(row_of[f], xs[f]) for f in range(F)],
+                         axis=1)
 
     from repro.core.comm import shard_map_compat
     fn = shard_map_compat(body, mesh, (P(), P(), P()), P())

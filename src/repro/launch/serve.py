@@ -55,7 +55,8 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                     slo_s: float = None, seed: int = 0,
                     exchange: str = "sync", exchange_refresh: int = 2,
                     num_stages: int = 1, cfg_scale: float = 0.0,
-                    seq_shards: int = 1, plan_cache_dir: str = None):
+                    seq_shards: int = 1, num_frames: int = 1,
+                    frame_groups: int = 0, plan_cache_dir: str = None):
     """Continuous batching on a heterogeneous cluster: requests enter a FIFO
     queue, the :class:`DiffusionServingEngine` admits them into ``slots``
     concurrent lanes and drains the queue with batched denoise rounds.
@@ -78,16 +79,19 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                                           exchange_refresh=exchange_refresh,
                                           num_stages=num_stages,
                                           seq_shards=seq_shards,
+                                          num_frames=num_frames,
+                                          frame_groups=frame_groups,
                                           plan_cache_dir=plan_cache_dir)
     pipe = StadiPipeline(cfg, params, sched, config)
     engine = DiffusionServingEngine(pipe, slots=slots)
     rng = np.random.default_rng(seed)
     t0 = time.time()
     n_guided = 0
+    shape = (1, cfg.latent_size, cfg.latent_size, cfg.channels)
+    if num_frames > 1:                     # video lanes: one clip per request
+        shape = shape[:1] + (num_frames,) + shape[1:]
     for uid in range(n_requests):
-        x_T = jax.random.normal(jax.random.PRNGKey(seed + 1 + uid),
-                                (1, cfg.latent_size, cfg.latent_size,
-                                 cfg.channels))
+        x_T = jax.random.normal(jax.random.PRNGKey(seed + 1 + uid), shape)
         scale = cfg_scale if (cfg_scale > 0 and uid % 2 == 0) else None
         n_guided += scale is not None
         engine.submit(x_T, int(rng.integers(0, cfg.n_classes)), slo_s=slo_s,
@@ -105,7 +109,7 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
           f"modeled{note}) planner={planner} backend={backend} "
           f"slots={slots} rounds={stats['rounds']} "
           f"patches={engine.plan.patches} stages={engine.stages} "
-          f"seq={engine.seq}")
+          f"seq={engine.seq} frames={engine.frames}")
     if stats["plan_cache"] is not None:
         c = stats["plan_cache"]
         print(f"  plan cache: {c['hits']} hits / {c['misses']} misses "
@@ -170,6 +174,15 @@ def main():
                          "DESIGN.md §13): Ulysses/ring shards per patch "
                          "worker; lanes batch by ring-hop identity (1 = "
                          "attention-unsharded, 0 = let stadi_seq search)")
+    ap.add_argument("--num-frames", type=int, default=1,
+                    help="video serving lanes (diffusion only, DESIGN.md "
+                         "§16): latent frames per request (1 = image; > 1 "
+                         "serves one clip per request, run-to-completion "
+                         "in its admission round)")
+    ap.add_argument("--frame-groups", type=int, default=0,
+                    help="frame placement (diffusion only): 1 = frame-"
+                         "sequential, > 1 = frame-parallel member rows "
+                         "(needs --planner stadi_video), 0 = auto search")
     args = ap.parse_args()
     if args.diffusion:
         if args.arch == ap.get_default("arch"):
@@ -189,6 +202,8 @@ def main():
                         num_stages=args.num_stages,
                         cfg_scale=args.cfg_scale,
                         seq_shards=args.seq_shards,
+                        num_frames=args.num_frames,
+                        frame_groups=args.frame_groups,
                         plan_cache_dir=args.plan_cache)
     else:
         serve(args.arch, n_requests=args.requests, slots=args.slots,

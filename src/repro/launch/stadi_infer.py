@@ -44,10 +44,11 @@ def main():
     ap.add_argument("--planner", default="stadi",
                     choices=["uniform", "spatial", "temporal", "stadi",
                              "makespan", "stadi_pipefuse", "stadi_guidance",
-                             "stadi_seq"])
+                             "stadi_seq", "stadi_video"])
     ap.add_argument("--backend", default="emulated",
                     choices=["emulated", "spmd", "simulate", "pipefuse",
-                             "spmd_pipefuse", "spmd_guidance", "spmd_seq"])
+                             "spmd_pipefuse", "spmd_guidance", "spmd_seq",
+                             "spmd_frames"])
     ap.add_argument("--spmd", action="store_true",
                     help="alias for --backend spmd")
     ap.add_argument("--num-stages", type=int, default=1,
@@ -76,6 +77,16 @@ def main():
                          "Ulysses/ring shards per patch worker (1 = "
                          "attention-unsharded, 0 = let stadi_seq search; "
                          "spmd_seq needs seq_shards * workers host devices)")
+    ap.add_argument("--num-frames", type=int, default=1,
+                    help="video / multi-frame diffusion (DESIGN.md §16): "
+                         "latent frames denoised jointly (1 = image; > 1 "
+                         "needs a frame backend — emulated / simulate / "
+                         "spmd_frames)")
+    ap.add_argument("--frame-groups", type=int, default=0,
+                    help="frame placement: 1 = frame-sequential, > 1 = "
+                         "frame-parallel member rows (needs --planner "
+                         "stadi_video; spmd_frames needs groups * workers "
+                         "host devices), 0 = let stadi_video search")
     ap.add_argument("--cond", type=int, default=0,
                     help="class id to condition on")
     ap.add_argument("--rebalance-every", type=int, default=0)
@@ -115,9 +126,10 @@ def main():
         cfg = cfg.reduced()
     params = dit.init_params(jax.random.PRNGKey(args.seed), cfg)
     sched = sampler_lib.linear_schedule(T=1000)
-    x_T = jax.random.normal(jax.random.PRNGKey(args.seed + 1),
-                            (args.batch, cfg.latent_size, cfg.latent_size,
-                             cfg.channels))
+    shape = (args.batch, cfg.latent_size, cfg.latent_size, cfg.channels)
+    if args.num_frames > 1:          # video latent: [B, F, H, W, C]
+        shape = shape[:1] + (args.num_frames,) + shape[1:]
+    x_T = jax.random.normal(jax.random.PRNGKey(args.seed + 1), shape)
     cond = jnp.full((args.batch,), args.cond % cfg.n_classes, jnp.int32)
 
     knobs = {}
@@ -137,6 +149,7 @@ def main():
         guidance=args.guidance, cfg_scale=args.cfg_scale,
         uncond_refresh=args.uncond_refresh,
         seq_shards=args.seq_shards,
+        num_frames=args.num_frames, frame_groups=args.frame_groups,
         use_pallas_attention=args.use_pallas,
         **knobs)
     pipe = StadiPipeline(cfg, params, sched, config)
@@ -145,7 +158,8 @@ def main():
           f"ratios={plan.temporal.ratios} patches={plan.patches} "
           f"stages={plan.stages} "
           f"guidance={plan.guidance} "
-          f"seq={plan.seq}")
+          f"seq={plan.seq} "
+          f"frames={plan.frames}")
 
     t0 = time.time()
     res = pipe.generate(x_T, cond)
@@ -163,7 +177,7 @@ def main():
         # trace-time counters: which kernel bodies the compiled program
         # contains, and why any layout refused the kernel (DESIGN.md §15)
         print(f"kernel_stats={json.dumps(res.kernel_stats, sort_keys=True)}")
-    if (backend in ("spmd", "spmd_guidance", "spmd_seq")
+    if (backend in ("spmd", "spmd_guidance", "spmd_seq", "spmd_frames")
             and args.check_vs_emulation):
         emu = StadiPipeline(cfg, params, sched,
                             dataclasses.replace(config, backend="emulated"))

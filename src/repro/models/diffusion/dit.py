@@ -197,9 +197,19 @@ def _ln(x, eps=1e-6):
     return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
 
 
-def _cond_vector(params, cfg, t, cond, B):
+def _cond_vector(params, cfg, t, cond, B, frame=None):
     t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (B,))
     temb = layers.sinusoidal_embedding(t, 256)
+    if frame is not None:
+        # multi-frame conditioning (DESIGN.md §16): a sinusoidal frame-index
+        # embedding is summed into the timestep features BEFORE the shared
+        # MLP, so frames of one video are distinguishable without new
+        # params. ``frame`` may be traced (one compile covers every frame).
+        # Frame 0 — the anchor frame — passes None and is conditioned
+        # exactly like an image, keeping its trajectory bitwise the image
+        # path.
+        fr = jnp.broadcast_to(jnp.asarray(frame, jnp.float32), (B,))
+        temb = temb + layers.sinusoidal_embedding(fr, 256)
     temb = jax.nn.silu(temb.astype(params["t_w1"].dtype) @ params["t_w1"]) @ params["t_w2"]
     if cond is None:
         cemb = 0.0
@@ -218,7 +228,8 @@ def _cond_vector(params, cfg, t, cond, B):
 # forward
 # ----------------------------------------------------------------------
 
-def embed_patch(params, cfg: DiTConfig, x_rows, t, cond, row_start):
+def embed_patch(params, cfg: DiTConfig, x_rows, t, cond, row_start,
+                frame=None):
     """Pre-block embedding of a row-patch: patchify + patch embed + 2D pos
     embed + conditioning vector. Returns (h [B,Nl,D], c [B,D])."""
     B = x_rows.shape[0]
@@ -233,14 +244,14 @@ def embed_patch(params, cfg: DiTConfig, x_rows, t, cond, row_start):
                                jnp.zeros((Nl, D))], axis=0)
     pe = jax.lax.dynamic_slice_in_dim(pe_full, row_start * wp, Nl, axis=0)
     h = tok @ params["patch_embed"] + params["patch_bias"] + pe.astype(tok.dtype)
-    c = _cond_vector(params, cfg, t, cond, B)            # [B, D]
+    c = _cond_vector(params, cfg, t, cond, B, frame=frame)   # [B, D]
     return h, c
 
 
 def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
                 buffers: Optional[Tuple] = None, return_kv: bool = True,
                 valid_tokens: Optional[jnp.ndarray] = None, enable=None,
-                attend_fn=None):
+                attend_fn=None, ctx_tokens: Optional[int] = None):
     """Run a contiguous stack of DiT blocks over hidden states ``h``.
 
     The ONE place the block math lives: ``forward_patch`` runs the whole
@@ -261,6 +272,11 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
              sequence-parallel executor (DESIGN.md §13) uses to route the
              read through Ulysses all-to-all + ring hops without touching
              the block math. None preserves the dense read bitwise.
+    ctx_tokens: scratch-padded layouts only (``valid_tokens`` set) — number
+             of REAL context tokens in the buffers before the scratch tail.
+             None = ``cfg.n_tokens`` (the pre-frames behavior); the
+             multi-frame SPMD path (DESIGN.md §16) passes ``2 * n_tokens``
+             for its (own frame ⊕ previous frame) concatenated context.
     Returns (h', kvs) with kvs [n_blocks, B, Nl, H, hd] pairs (or None).
     """
     B, Nl, D = h.shape[0], h.shape[1], cfg.d_model
@@ -274,7 +290,8 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
     # carry the SPMD scratch tail, else the whole buffer; a local slab with
     # no valid_tokens is entirely fresh.
     if pallas_mode == "padded":
-        n_real = cfg.n_tokens if valid_tokens is not None else buffers[0].shape[2]
+        n_real = ((ctx_tokens or cfg.n_tokens)
+                  if valid_tokens is not None else buffers[0].shape[2])
         valid_arg = valid_tokens if valid_tokens is not None else Nl
 
     def block(x, scanned):
@@ -315,7 +332,8 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
                 cur_v = jax.lax.dynamic_slice_in_dim(bv, tok_start, Nl, axis=1)
                 ku = jnp.where(mask, k.astype(bk.dtype), cur_k)
                 vu = jnp.where(mask, v.astype(bv.dtype), cur_v)
-                key_mask = (jnp.arange(bk.shape[1]) < cfg.n_tokens)[None, None, None, :]
+                key_mask = (jnp.arange(bk.shape[1])
+                            < (ctx_tokens or cfg.n_tokens))[None, None, None, :]
             full_k = jax.lax.dynamic_update_slice_in_dim(bk, ku.astype(bk.dtype), tok_start, axis=1)
             full_v = jax.lax.dynamic_update_slice_in_dim(bv, vu.astype(bv.dtype), tok_start, axis=1)
             if attend_fn is not None:
@@ -348,34 +366,42 @@ def final_head(params, cfg: DiTConfig, h, c, rows_tok: int):
 def forward_patch(params, cfg: DiTConfig, x_rows, t, cond,
                   row_start: int, buffers: Optional[Tuple] = None,
                   return_kv: bool = True, valid_tokens: Optional[jnp.ndarray] = None,
-                  attend_fn=None):
+                  attend_fn=None, frame=None, ctx_tokens=None):
     """Denoise a row-patch with stale remote K/V.
 
     x_rows: [B, rows_local, W, C] latent slab (full width).
     buffers: None (local-only attention: exact when patch == full image)
              or (buf_k, buf_v) each [L, B, N_total, H, hd] — stale K/V for the
              WHOLE image; the local region is overwritten with fresh values
-             before attending (DistriFusion semantics).
+             before attending (DistriFusion semantics). N_total may exceed
+             the image token count: the multi-frame path (DESIGN.md §16)
+             passes a 2N-token (own frame ⊕ previous frame) concatenation
+             and the block math is oblivious — the fresh overwrite lands in
+             the first N tokens and attention reads the whole context.
     row_start: first token-row of this patch (for positional embeddings);
                may be a traced int (SPMD path with per-device offsets).
     valid_tokens: SPMD path — number of REAL local tokens (rest is padding to
                the max patch size); padded tokens never pollute the buffer.
+    frame: None (image; bitwise-unchanged path) or the latent frame index —
+               may be traced — summed into the conditioning vector.
 
     Returns (eps_rows [B, rows_local, W, C], (fresh_k, fresh_v) [L,B,Nl,H,hd]).
     """
     rows_tok = x_rows.shape[1] // cfg.patch_size         # token rows in patch
-    h, c = embed_patch(params, cfg, x_rows, t, cond, row_start)
+    h, c = embed_patch(params, cfg, x_rows, t, cond, row_start, frame=frame)
     tok_start = row_start * cfg.tokens_per_side
     h, kvs = block_stack(params["blocks"], cfg, h, c, tok_start,
                          buffers=buffers, return_kv=return_kv,
-                         valid_tokens=valid_tokens, attend_fn=attend_fn)
+                         valid_tokens=valid_tokens, attend_fn=attend_fn,
+                         ctx_tokens=ctx_tokens)
     eps = final_head(params, cfg, h, c, rows_tok)
     return eps, kvs
 
 
-def forward(params, cfg: DiTConfig, x, t, cond=None):
+def forward(params, cfg: DiTConfig, x, t, cond=None, frame=None):
     """Full-image denoiser: [B,H,W,C] -> eps [B,H,W,C] (the Origin path)."""
-    eps, _ = forward_patch(params, cfg, x, t, cond, 0, buffers=None, return_kv=False)
+    eps, _ = forward_patch(params, cfg, x, t, cond, 0, buffers=None,
+                           return_kv=False, frame=frame)
     return eps
 
 

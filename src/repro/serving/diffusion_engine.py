@@ -556,6 +556,22 @@ class DiffusionServingEngine:
                                                 self.seq.n_shards)
             self._seq_groups = groups
             self._seq_seg_pad = max(self.seq.seg_fracs)
+        # frame axis (DESIGN.md §16): video lanes. Cross-frame stale-K/V
+        # state lives per CLIP (frame f attends the previous frame's
+        # published buffers), not per slot, so a video request runs its
+        # whole multi-frame schedule in the round it is admitted — a
+        # run-to-completion lane cohort. Rounds still admit FIFO into
+        # slots and accrue the frame-priced schedule makespan per clip,
+        # so queueing delay, SLO verdicts and throughput stats stay
+        # meaningful.
+        self.frames = self.plan.frames
+        if self.frames is not None and self.frames.num_frames < 2:
+            self.frames = None
+        if self.frames is not None and rebalance_every:
+            raise ValueError(
+                "the frame grouping is static — engine replanning would "
+                "re-deal the frame-group rows; serve video plans with "
+                "rebalance_every=0")
         self.policy = comm_lib.get_exchange(config.exchange,
                                             config.exchange_refresh)
         # online replanning (DESIGN.md §7.1 composed with §12/§14): the
@@ -615,6 +631,27 @@ class DiffusionServingEngine:
         pipeline, config = self.pipeline, self.pipeline.config
         cfg = pipeline.model_cfg
         self.plan = plan
+        if self.frames is not None:
+            # video lanes (DESIGN.md §16): no batched lane stepper — each
+            # clip's schedule runs whole through the configured frame
+            # executor in _frames_round. The per-clip modeled cost comes
+            # from the SAME frame-priced trace the simulate backend
+            # replays, so serving accounting cannot diverge from
+            # simulate_trace's.
+            self._guide_pairs = None
+            self.stepper = None
+            self._interval_info = {}
+            self._track_prev = False
+            trace = sim.build_trace(plan.temporal, plan.patches, cfg,
+                                    batch=1, exchange=config.exchange,
+                                    exchange_refresh=config.exchange_refresh,
+                                    frames=self.frames)
+            self._latent_bytes = trace.latent_bytes
+            self._kv_bytes = trace.kv_bytes_per_worker
+            self._act_row_bytes = trace.act_row_bytes
+            self._clip_cost_s = sim.simulate_trace(
+                trace, self.measured_speeds, self.cm)
+            return
         gplan = plan.guidance
         # split-guidance lane cohorts: logical worker i is the device pair
         # (cond_devices[i], uncond_devices[i]) — used for pair-placed round
@@ -706,7 +743,23 @@ class DiffusionServingEngine:
         guidance state is per lane.
         """
         x_T = jnp.asarray(x_T)
-        if x_T.ndim == 3:
+        if self.frames is not None:
+            # video lane request: one clip = [F,H,W,C] or [1,F,H,W,C]
+            if x_T.ndim == 4:
+                x_T = x_T[None]
+            if x_T.ndim != 5 or x_T.shape[0] != 1:
+                raise ValueError(
+                    "one request = one clip; video lanes take [F,H,W,C] "
+                    f"or [1,F,H,W,C], got shape {tuple(x_T.shape)}")
+            if x_T.shape[1] != self.frames.num_frames:
+                raise ValueError(
+                    f"request carries {x_T.shape[1]} frames, the plan "
+                    f"serves {self.frames.num_frames}")
+            if cfg_scale is not None and cfg_scale > 0:
+                raise ValueError(
+                    "classifier-free guidance is not composed with the "
+                    "frame axis — submit video requests with cfg_scale=0")
+        elif x_T.ndim == 3:
             x_T = x_T[None]
         if x_T.shape[0] != 1:
             raise ValueError("one request = one image; got batch "
@@ -836,6 +889,8 @@ class DiffusionServingEngine:
         """One round: admit -> warmup group -> adaptive group(s) -> retire."""
         report = RoundReport(index=len(self.rounds))
         wall0 = time.perf_counter()
+        if self.frames is not None:
+            return self._frames_round(report, wall0)
         if self._pending_plan is not None:
             self._try_install_pending()
         self._admit(report)
@@ -962,6 +1017,49 @@ class DiffusionServingEngine:
         for slot in done_slots:
             req = self.active.pop(slot)
             req.image = self._x[slot]
+            req.done = True
+            req.finish_round = report.index
+            req.modeled_latency_s = self.modeled_clock_s - req.submit_clock_s
+            req.wall_latency_s = time.perf_counter() - req._submit_wall
+            finished.append(req)
+        self.completed.extend(finished)
+        report.wall_s = time.perf_counter() - wall0
+        self.rounds.append(report)
+        return finished
+
+    def _frames_round(self, report: RoundReport,
+                      wall0: float) -> List[DiffusionRequest]:
+        """One video round (DESIGN.md §16): admit FIFO into free slots,
+        then run every admitted clip's full multi-frame schedule
+        back-to-back on the cluster through the configured frame executor.
+        Each clip accrues the frame-priced schedule makespan (the same
+        number ``simulate_trace`` gives the planner), sequentially — the
+        cluster serves one clip at a time, so later clips in the round
+        see the earlier clips' service time as queueing delay."""
+        from repro.core.pipeline import get_executor
+        config = self.pipeline.config
+        M_base = self.plan.temporal.m_base
+        while self.queue and len(self.active) < self.slots:
+            req = self.queue.pop(0)
+            slot = next(s for s in range(self.slots) if s not in self.active)
+            req.fine_step = 0
+            req.admit_round = report.index
+            self.active[slot] = req
+            report.admitted.append((req.uid, slot))
+        executor = get_executor(config.backend)
+        finished: List[DiffusionRequest] = []
+        for slot in sorted(self.active):
+            req = self.active.pop(slot)
+            image, _ = executor(
+                params=self.pipeline.params,
+                model_cfg=self.pipeline.model_cfg,
+                sched=self.pipeline.sched, x_T=req.x_T, cond=req.cond,
+                plan=self.plan, config=config, interval_hook=None)
+            image = jax.block_until_ready(image)
+            report.modeled_s += self._clip_cost_s
+            self.modeled_clock_s += self._clip_cost_s
+            req.image = image
+            req.fine_step = M_base
             req.done = True
             req.finish_round = report.index
             req.modeled_latency_s = self.modeled_clock_s - req.submit_clock_s

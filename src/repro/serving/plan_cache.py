@@ -34,19 +34,21 @@ import tempfile
 import warnings
 from typing import Dict, Optional, Sequence
 
+from repro.core.frames import FramePlan
 from repro.core.guidance import GuidancePlan
 from repro.core.planners import ExecutionPlan
 from repro.core.schedule import TemporalPlan
 from repro.core.seqpar import SeqPlan
 
 #: bump when the serialized plan layout changes — old entries miss cleanly
-CACHE_VERSION = 1
+#: (2: the frame axis, DESIGN.md §16)
+CACHE_VERSION = 2
 
 DEFAULT_CACHE_DIR = os.path.join("results", "plan_cache")
 
 
 def plan_to_dict(plan: ExecutionPlan) -> Dict:
-    """JSON-ready dict for a fully-populated five-axis ExecutionPlan."""
+    """JSON-ready dict for a fully-populated six-axis ExecutionPlan."""
     t = plan.temporal
     d = {
         "version": CACHE_VERSION,
@@ -60,6 +62,7 @@ def plan_to_dict(plan: ExecutionPlan) -> Dict:
         "stages": None if plan.stages is None else list(plan.stages),
         "guidance": None,
         "seq": None,
+        "frames": None,
     }
     if plan.guidance is not None:
         g = plan.guidance
@@ -74,6 +77,9 @@ def plan_to_dict(plan: ExecutionPlan) -> Dict:
     if plan.seq is not None:
         d["seq"] = {"heads": list(plan.seq.heads),
                     "segments": list(plan.seq.segments)}
+    if plan.frames is not None:
+        d["frames"] = {"num_frames": plan.frames.num_frames,
+                       "groups": list(plan.frames.groups)}
     return d
 
 
@@ -103,6 +109,11 @@ def plan_from_dict(d: Dict) -> ExecutionPlan:
     if d["seq"] is not None:
         seq = SeqPlan(heads=tuple(int(h) for h in d["seq"]["heads"]),
                       segments=tuple(int(s) for s in d["seq"]["segments"]))
+    frames = None
+    if d["frames"] is not None:
+        frames = FramePlan(num_frames=int(d["frames"]["num_frames"]),
+                           groups=tuple(int(g) for g in
+                                        d["frames"]["groups"]))
     mic = d["modeled_interval_cost"]
     return ExecutionPlan(temporal=temporal,
                          patches=[int(p) for p in d["patches"]],
@@ -112,7 +123,7 @@ def plan_from_dict(d: Dict) -> ExecutionPlan:
                                                 else float(mic)),
                          stages=(None if d["stages"] is None
                                  else [int(s) for s in d["stages"]]),
-                         guidance=guidance, seq=seq)
+                         guidance=guidance, seq=seq, frames=frames)
 
 
 @dataclasses.dataclass

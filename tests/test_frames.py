@@ -1,0 +1,465 @@
+"""Video / multi-frame diffusion as the sixth schedule dimension
+(DESIGN.md §16): frame partitioner properties, FrameShard IR cadence and
+the cross-frame staleness bound, placement-invariant emulated numerics
+with frame 0 / ``num_frames=1`` bitwise the image path, the stadi_video
+joint planner + frame cost model, the spmd_frames mesh executor, and
+video serving lanes."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import comm as comm_lib
+from repro.core import events as ir
+from repro.core import frames as frames_lib
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core.frames import FramePlan
+from repro.core.pipeline import (FRAME_BACKENDS, StadiConfig, StadiPipeline,
+                                 check_backend_can_run, get_executor)
+from repro.core.planners import get_planner
+from repro.core.schedule import TemporalPlan
+from repro.core.simulate import CostModel
+from repro.models.diffusion import dit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-dit").reduced()      # 4 heads, 8 token rows
+    params = dit.nondegenerate_params(dit.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+    sched = sampler_lib.linear_schedule(T=100)
+    F = 3
+    x_T = jax.random.normal(jax.random.PRNGKey(1),
+                            (1, F, cfg.latent_size, cfg.latent_size,
+                             cfg.channels))
+    cond = jnp.array([1])
+    return cfg, params, sched, x_T, cond
+
+
+# ----------------------------------------------------------------------
+# frame partitioner + group layout (satellite: property coverage)
+# ----------------------------------------------------------------------
+
+def _check_frame_partition(num_frames, n_groups, speeds):
+    groups = frames_lib.frame_partition(num_frames, n_groups, speeds)
+    assert len(groups) == n_groups
+    assert sum(groups) == num_frames                   # covers, disjoint
+    assert all(g >= 1 for g in groups)                 # >= 1 frame per row
+    sp = (list(speeds)[:n_groups] if speeds else [1.0] * n_groups)
+    if len(sp) < n_groups:
+        sp = sp + [sp[-1]] * (n_groups - len(sp))
+    for i, vi in enumerate(sp):                        # speed-proportional
+        for j, vj in enumerate(sp):
+            if vi > vj:
+                assert groups[i] >= groups[j], (groups, sp)
+    # the FramePlan built from it validates and its bounds tile [0, F)
+    plan = frames_lib.make_frame_plan(num_frames, n_groups, speeds)
+    bounds = plan.bounds
+    assert bounds[0][0] == 0 and bounds[-1][1] == num_frames
+    assert all(b[1] == c[0] for b, c in zip(bounds, bounds[1:]))
+
+
+def test_frame_partition_basics():
+    assert frames_lib.frame_partition(4, 1) == [4]
+    assert frames_lib.frame_partition(4, 2) == [2, 2]
+    assert frames_lib.frame_partition(4, 2, [1.0, 0.5]) == [3, 1]
+    assert frames_lib.frame_partition(3, 3, [10.0, 0.01, 0.01]) == [1, 1, 1]
+    with pytest.raises(ValueError, match="1 frame per group"):
+        frames_lib.frame_partition(2, 3)
+    with pytest.raises(ValueError, match="at least one frame group"):
+        frames_lib.frame_partition(4, 0)
+
+
+def test_frame_partition_properties_deterministic():
+    for num_frames, n_groups, speeds in [
+        (4, 1, None), (4, 2, None), (8, 4, [1.0, 0.8, 0.6, 0.5]),
+        (16, 3, [2.0, 1.0, 0.5]), (8, 8, None), (5, 2, [9.0, 1.0]),
+    ]:
+        _check_frame_partition(num_frames, n_groups, speeds)
+
+
+def test_frame_plan_validation():
+    with pytest.raises(ValueError, match="at least one frame"):
+        FramePlan(0, (1,))
+    with pytest.raises(ValueError, match="at least one group"):
+        FramePlan(4, ())
+    with pytest.raises(ValueError, match=">= 1 frame"):
+        FramePlan(4, (4, 0))
+    with pytest.raises(ValueError, match="sum to"):
+        FramePlan(4, (2, 1))
+    assert not FramePlan(1, (1,)).framed
+    assert FramePlan(2, (2,)).framed
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(num_frames=st.integers(1, 64), n_groups=st.integers(1, 8),
+           speeds=st.one_of(st.none(),
+                            st.lists(st.floats(0.05, 4.0), min_size=1,
+                                     max_size=8)))
+    def test_frame_partition_properties(num_frames, n_groups, speeds):
+        n_groups = min(n_groups, num_frames)
+        _check_frame_partition(num_frames, n_groups, speeds)
+
+
+def test_frame_group_layout_row_dealt():
+    """Devices are dealt ROW-wise (contiguous speed-sorted blocks), so the
+    fast member row gets the biggest frame chunk and one global patch
+    column split fits every row."""
+    rows, row_speeds = frames_lib.frame_group_layout([1.0, 0.5, 0.8, 0.6],
+                                                     2)
+    assert rows == [[1.0, 0.8], [0.6, 0.5]]
+    assert row_speeds == [1.8, 1.1]
+    # leftover devices idle (5 devices, 2 groups -> 2x2, slowest idles)
+    rows5, _ = frames_lib.frame_group_layout([1.0, 0.9, 0.8, 0.7, 0.1], 2)
+    assert len(rows5) == 2 and all(len(r) == 2 for r in rows5)
+    assert 0.1 not in [v for r in rows5 for v in r]
+    with pytest.raises(ValueError, match="at least 3 devices"):
+        frames_lib.frame_group_layout([1.0, 0.5], 3)
+
+
+# ----------------------------------------------------------------------
+# IR: FrameShard cadence + cross-frame staleness bound
+# ----------------------------------------------------------------------
+
+def test_frameshard_emitted_per_adaptive_interval():
+    plan = TemporalPlan([16, 16], [1, 1], [False, False], 16, 4)
+    policy = comm_lib.get_exchange("stale_async", 2)
+    fplan = FramePlan(4, (3, 1))
+    evs = list(ir.lower(plan, [4, 4], policy, frames=fplan))
+    shards = [e for e in evs if isinstance(e, ir.FrameShard)]
+    intervals = [e for e in evs if isinstance(e, ir.ComputeInterval)]
+    assert len(shards) == len(intervals)               # one per interval
+    assert all(s.frames == (3, 1) for s in shards)
+    assert all(s.num_frames == 4 for s in shards)
+    assert [s.fine_step for s in shards] == [c.fine_step for c in intervals]
+    assert [s.index for s in shards] == list(range(len(shards)))
+    # no FrameShard without a multi-frame plan
+    assert not any(isinstance(e, ir.FrameShard)
+                   for e in ir.lower(plan, [4, 4], policy))
+    assert not any(isinstance(e, ir.FrameShard)
+                   for e in ir.lower(plan, [4, 4], policy,
+                                     frames=FramePlan(1, (1,))))
+
+
+def test_replay_records_frame_count():
+    plan = TemporalPlan([16, 16], [1, 2], [False, False], 16, 4)
+    policy = comm_lib.get_exchange("stale_async", 3)
+    recs = ir.replay(plan, [4, 4], policy, frames=FramePlan(3, (2, 1)))
+    assert all(r.frames == 3 for r in recs)
+    plain = ir.replay(plan, [4, 4], policy)
+    assert all(r.frames == 1 for r in plain)
+
+
+def test_max_frame_staleness_bounded_by_refresh(setup):
+    """The previous-frame half of the 2N context ages under the boundary
+    policy exactly like the within-frame halo: worst age <= refresh_every
+    under stale_async (snapshot semantics make even a fresh merge one
+    interval old at the next read)."""
+    cfg, params, sched, x_T, cond = setup
+    for E in (2, 3):
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.4], m_base=8, m_warmup=2, num_frames=3,
+            exchange="stale_async", exchange_refresh=E)
+        res = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+        worst = frames_lib.max_frame_staleness(res.trace.events)
+        assert 0 < worst <= E, (E, worst)
+    # synthetic: single-frame records never contribute
+    recs = ir.replay(TemporalPlan([16, 16], [1, 1], [False, False], 16, 4),
+                     [4, 4], comm_lib.get_exchange("stale_async", 4))
+    assert frames_lib.max_frame_staleness(recs) == 0
+
+
+# ----------------------------------------------------------------------
+# emulated reference: degeneration + frame-0 + placement invariance
+# ----------------------------------------------------------------------
+
+def test_num_frames_one_is_bitwise_image_path(setup):
+    """num_frames=1 is the pre-frame image pipeline, bit for bit."""
+    cfg, params, sched, x_T, cond = setup
+    base = StadiConfig.from_occupancies([0.0, 0.4], m_base=8, m_warmup=2,
+                                        exchange="stale_async")
+    x1 = x_T[:, 0]
+    ref = StadiPipeline(cfg, params, sched, base).generate(x1, cond)
+    one = StadiPipeline(cfg, params, sched, dataclasses.replace(
+        base, num_frames=1)).generate(x1, cond)
+    np.testing.assert_array_equal(np.asarray(one.image),
+                                  np.asarray(ref.image))
+    assert one.trace.frames is None or not one.trace.frames.framed
+
+
+def test_frame_zero_is_bitwise_image_trajectory(setup):
+    """Frame 0 never sees a previous frame: its denoising trajectory is
+    the image run, bit for bit, regardless of how many frames follow."""
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8, 8], [1, 2], [False, False], 8, 2)
+    img = pp.run_schedule(params, cfg, sched, x_T[:, 0], cond, plan, [4, 4],
+                          exchange="stale_async").image
+    vid = frames_lib.run_frames(params, cfg, sched, x_T, cond, plan, [4, 4],
+                                exchange="stale_async",
+                                frames=FramePlan(3, (3,))).image
+    np.testing.assert_array_equal(np.asarray(vid[:, 0]), np.asarray(img))
+
+
+def test_trajectory_is_placement_invariant(setup):
+    """The frame grouping repartitions WHERE frames run, never WHAT is
+    computed: with the (temporal, patches) plan held fixed, every grouping
+    produces identical latents (like seq shard-count invariance)."""
+    cfg, params, sched, x_T, cond = setup
+    plan = TemporalPlan([8, 8], [1, 1], [False, False], 8, 2)
+    imgs = {}
+    for groups in [(3,), (2, 1), (1, 1, 1)]:
+        res = frames_lib.run_frames(params, cfg, sched, x_T, cond, plan,
+                                    [4, 4], exchange="stale_async",
+                                    frames=FramePlan(3, groups))
+        imgs[groups] = np.asarray(res.image)
+        assert res.trace.frames.groups == groups
+    np.testing.assert_array_equal(imgs[(3,)], imgs[(2, 1)])
+    np.testing.assert_array_equal(imgs[(3,)], imgs[(1, 1, 1)])
+
+
+# ----------------------------------------------------------------------
+# fail-fast paths (satellite: registry + composition gates)
+# ----------------------------------------------------------------------
+
+def test_registry_errors_name_frame_entries():
+    with pytest.raises(KeyError, match="spmd_frames"):
+        get_executor("no-such-backend")
+    with pytest.raises(KeyError, match="stadi_video"):
+        get_planner("no-such-planner")
+
+
+def test_pipeline_rejects_bad_frame_configs(setup):
+    cfg, params, sched, _, _ = setup
+    base = StadiConfig.from_occupancies([0.0, 0.4], m_base=8, m_warmup=2,
+                                        num_frames=3)
+    StadiPipeline(cfg, params, sched, base)                # fine
+    for bad, match in [
+        (dict(num_frames=0), "num_frames"),
+        (dict(frame_groups=-1), "frame_groups"),
+        (dict(backend="spmd"), "frame backend"),
+        (dict(backend="pipefuse"), "frame backend"),
+        (dict(frame_groups=4), "cannot split"),            # > num_frames
+        (dict(num_frames=8, frame_groups=3,
+              planner="stadi_video"), "infeasible"),       # > n_devices
+        (dict(cfg_scale=2.0), "classifier-free guidance"),
+        (dict(seq_shards=2), "sequence sharding"),
+        (dict(num_stages=2), "displaced patch pipeline"),
+        (dict(rebalance_every=2), "rebalancing"),
+        (dict(num_frames=1, frame_groups=2), "needs num_frames > 1"),
+    ]:
+        with pytest.raises(ValueError, match=match):
+            StadiPipeline(cfg, params, sched,
+                          dataclasses.replace(base, **bad))
+    # frame-parallel placement needs the joint planner
+    with pytest.raises(ValueError, match="stadi_video"):
+        StadiPipeline(cfg, params, sched,
+                      dataclasses.replace(base, frame_groups=2)).plan()
+
+
+def test_check_backend_can_run_rejects_frame_mismatch(setup):
+    cfg, params, sched, _, _ = setup
+    config = StadiConfig.from_occupancies([0.0, 0.4], m_base=8, m_warmup=2)
+    plan = StadiPipeline(cfg, params, sched, config).plan()
+    # a multi-frame run needs a frame backend
+    with pytest.raises(ValueError, match="frame backend"):
+        check_backend_can_run(plan, dataclasses.replace(
+            config, num_frames=3, backend="spmd"))
+    for backend in FRAME_BACKENDS:
+        if backend == "spmd_frames":
+            continue
+        check_backend_can_run(plan, dataclasses.replace(
+            config, num_frames=3, backend=backend))        # fine
+    # spmd_frames without a multi-frame plan is a config error, not a
+    # silent fall-through to plain spmd
+    with pytest.raises(ValueError, match="multi-frame plan"):
+        check_backend_can_run(plan, dataclasses.replace(
+            config, backend="spmd_frames"))
+
+
+# ----------------------------------------------------------------------
+# stadi_video joint planner + frame cost model
+# ----------------------------------------------------------------------
+
+def _knobs(**kw):
+    defaults = dict(occupancies=[0.0, 0.0, 0.5, 0.5], m_base=16, m_warmup=4,
+                    planner="stadi_video", num_frames=4, frame_groups=0,
+                    kv_row_bytes=4096, latent_bytes=16384,
+                    exchange_refresh=2)
+    occ = defaults.pop("occupancies")
+    defaults.update(kw)
+    return StadiConfig.from_occupancies(occ, **defaults)
+
+
+def test_stadi_video_prefers_sequential_when_compute_bound():
+    """With no attention term (t_ctx=0) frame rows buy nothing and cost a
+    cross-row K/V handoff + coarser patch columns: the planner returns the
+    frame-sequential placement."""
+    knobs = _knobs(cost_model=CostModel(t_fixed=1e-3, t_row=5e-4, t_ctx=0.0,
+                                        link_bw=1e6, link_latency=1e-3))
+    plan = get_planner("stadi_video")(knobs.speeds, knobs, 8)
+    assert plan.planner == "stadi_video"
+    assert plan.frames.n_groups == 1
+    assert plan.frames.groups == (4,)
+
+
+def test_stadi_video_splits_when_attention_bound():
+    """When the per-substep wall is the cross-frame context read (t_ctx
+    dominates, every frame past the first reads 2N rows), dealing frames
+    onto member rows divides it — a frame-parallel candidate wins despite
+    the handoff traffic, with a speed-proportional chunk per row."""
+    knobs = _knobs(cost_model=CostModel(t_fixed=1e-5, t_row=1e-5, t_ctx=5e-3,
+                                        link_bw=1e9, link_latency=1e-7))
+    plan = get_planner("stadi_video")(knobs.speeds, knobs, 8)
+    fplan = plan.frames
+    assert fplan is not None and fplan.n_groups > 1
+    assert sum(fplan.groups) == 4
+    assert list(fplan.groups) == sorted(fplan.groups, reverse=True)
+    # grouped columns: patches has one slab per patch-worker COLUMN
+    assert len(plan.patches) <= len(knobs.speeds) // fplan.n_groups
+    assert plan.speeds == knobs.speeds        # raw cluster, not columns
+
+
+def test_stadi_video_pinning_and_infeasible():
+    knobs = _knobs(frame_groups=2,
+                   cost_model=CostModel(t_fixed=1e-3, t_row=5e-4))
+    plan = get_planner("stadi_video")(knobs.speeds, knobs, 8)
+    assert plan.frames.n_groups == 2                       # pinned
+    one = get_planner("stadi_video")(knobs.speeds, _knobs(frame_groups=1), 8)
+    assert one.frames.groups == (4,)                       # pinned seq
+    with pytest.raises(ValueError, match="infeasible"):
+        get_planner("stadi_video")(knobs.speeds, _knobs(frame_groups=8), 8)
+    with pytest.raises(ValueError, match="num_frames > 1"):
+        get_planner("stadi_video")(knobs.speeds, _knobs(num_frames=1), 8)
+
+
+def test_simulate_prices_frames(setup):
+    """The simulate backend replays FrameShard rows: multi-frame costs
+    more than single-frame, and at t_ctx-dominated profiles the
+    frame-parallel plan models faster than the frame-sequential one."""
+    cfg, params, sched, x_T, cond = setup
+    bound = CostModel(t_fixed=1e-5, t_row=1e-5, t_ctx=2e-3)
+    base = StadiConfig.from_occupancies(
+        [0.0, 0.0, 0.5, 0.5], m_base=8, m_warmup=2, backend="simulate",
+        exchange="stale_async", cost_model=bound)
+    x4 = jnp.concatenate([x_T, x_T[:, :1]], axis=1)
+    lat = {}
+    for name, extra in [
+        ("image", dict()),
+        ("fseq", dict(num_frames=4)),
+        ("fpar", dict(num_frames=4, planner="stadi_video")),
+    ]:
+        config = dataclasses.replace(base, **extra)
+        res = StadiPipeline(cfg, params, sched, config).generate(
+            x_T[:, 0] if name == "image" else x4, cond)
+        assert res.image is None and res.latency_s > 0
+        lat[name] = res.latency_s
+    assert lat["fseq"] > lat["image"], lat
+    assert lat["fpar"] < lat["fseq"], lat
+
+
+# ----------------------------------------------------------------------
+# serving: video lanes (run-to-completion cohorts, frame-priced rounds)
+# ----------------------------------------------------------------------
+
+def test_serving_video_lanes_bitwise(setup):
+    from repro.serving import DiffusionServingEngine
+    cfg, params, sched, x_T, cond = setup
+    config = StadiConfig.from_occupancies(
+        [0.0, 0.2, 0.4, 0.5], m_base=8, m_warmup=2, num_frames=3,
+        planner="stadi_video", exchange="stale_async", exchange_refresh=2)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=2)
+    assert engine.frames is not None and engine.frames.num_frames == 3
+    reqs = [engine.submit(x_T, 1), engine.submit(x_T + 1.0, 2),
+            engine.submit(x_T - 1.0, 3)]
+    done = engine.run_to_completion()
+    assert len(done) == 3 and len(engine.rounds) == 2      # 2 slots, 3 clips
+    ref = pipe.generate(x_T, cond)
+    np.testing.assert_array_equal(np.asarray(reqs[0].image),
+                                  np.asarray(ref.image))
+    # clips accrue the frame-priced schedule makespan sequentially
+    lats = [r.modeled_latency_s for r in done]
+    assert lats[0] < lats[1] < lats[2]
+    stats = engine.stats()
+    assert stats["n_completed"] == 3
+    assert stats["modeled_makespan_s"] == pytest.approx(lats[2])
+
+
+def test_serving_video_lane_rejections(setup):
+    from repro.serving import DiffusionServingEngine
+    cfg, params, sched, x_T, cond = setup
+    config = StadiConfig.from_occupancies(
+        [0.0, 0.4], m_base=8, m_warmup=2, num_frames=3)
+    pipe = StadiPipeline(cfg, params, sched, config)
+    with pytest.raises(ValueError, match="rebalance_every=0"):
+        DiffusionServingEngine(pipe, slots=2, rebalance_every=2)
+    engine = DiffusionServingEngine(pipe, slots=2)
+    with pytest.raises(ValueError, match="carries 2 frames"):
+        engine.submit(x_T[:, :2], 1)
+    with pytest.raises(ValueError, match="one clip"):
+        engine.submit(jnp.concatenate([x_T, x_T]), 1)
+    with pytest.raises(ValueError, match="cfg_scale=0"):
+        engine.submit(x_T, 1, cfg_scale=2.0)
+
+
+# ----------------------------------------------------------------------
+# spmd_frames mesh executor (subprocess, real host devices)
+# ----------------------------------------------------------------------
+
+def test_spmd_frames_matches_emulated():
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core import sampler as sampler_lib
+        from repro.core.pipeline import StadiConfig, StadiPipeline
+        from repro.models.diffusion import dit
+
+        cfg = get_config('tiny-dit').reduced()
+        params = dit.nondegenerate_params(
+            dit.init_params(jax.random.PRNGKey(0), cfg))
+        sched = sampler_lib.linear_schedule(T=1000)
+        x_T = jax.random.normal(jax.random.PRNGKey(1),
+                                (1, 3, cfg.latent_size, cfg.latent_size,
+                                 cfg.channels))
+        cond = jnp.zeros((1,), jnp.int32)
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.0, 0.5, 0.5], m_base=8, m_warmup=2,
+            backend='spmd_frames', planner='stadi_video', num_frames=3,
+            frame_groups=2, exchange='stale_async', exchange_refresh=2)
+        spmd = StadiPipeline(cfg, params, sched, config).generate(x_T, cond)
+        emu = StadiPipeline(cfg, params, sched, dataclasses.replace(
+            config, backend='emulated')).generate(x_T, cond)
+        a, b = np.asarray(spmd.image), np.asarray(emu.image)
+        err = float(np.linalg.norm(a - b) / np.linalg.norm(b))
+        assert err < 1e-5, err
+        assert spmd.trace.frames is not None
+        assert spmd.trace.frames.groups == (2, 1)
+        print('SPMD_FRAMES_OK', err)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=520, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "SPMD_FRAMES_OK" in r.stdout

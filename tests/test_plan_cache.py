@@ -211,6 +211,30 @@ def test_engine_stats_surface_cache_counters(setup, tmp_path):
     assert pipe2.plan_cache.hits == 1
 
 
+def test_frame_axis_is_a_key_component(setup, tmp_path):
+    """The frame axis (DESIGN.md §16) is part of the workload key: a video
+    workload must never reuse an image plan, identical video workloads hit,
+    and a frame-placement knob change misses — with the FramePlan surviving
+    the disk round trip."""
+    image = _pipe(setup, tmp_path)
+    image.plan()
+    assert image.planner_calls == 1
+    video = _pipe(setup, tmp_path, num_frames=4, planner="stadi_video")
+    planned = video.plan()
+    assert video.planner_calls == 1          # image entry did not match
+    assert planned.frames is not None and planned.frames.num_frames == 4
+    again = _pipe(setup, tmp_path, num_frames=4, planner="stadi_video")
+    cached = again.plan()
+    assert again.planner_calls == 0          # identical video workload hits
+    assert cached == planned
+    assert cached.frames == planned.frames   # FramePlan round-trips
+    pinned = _pipe(setup, tmp_path, num_frames=4, planner="stadi_video",
+                   frame_groups=2)
+    pinned.plan()
+    assert pinned.planner_calls == 1         # placement knob is in the key
+    assert pinned.plan().frames.n_groups == 2
+
+
 def test_plan_cache_standalone_invalidate_counts_real_removals(tmp_path):
     cache = PlanCache(cache_dir=str(tmp_path))
     assert cache.invalidate("deadbeef") is False
