@@ -148,6 +148,76 @@ def _run_point(pipe, cfg, rate: float, n: int, base_lat: float, seed: int,
     }
 
 
+def _clip_cost_s(cfg, params, sched, cm, m_base: int, m_warmup: int,
+                 num_frames: int, seed: int = 5) -> float:
+    """The frame-priced makespan of one run-to-completion video clip on
+    this cluster — measured by actually serving a clip through a video
+    engine built over the same occupancies and cost model."""
+    config = StadiConfig.from_occupancies(
+        OCC, m_base=m_base, m_warmup=m_warmup, cost_model=cm,
+        planner="stadi_video", num_frames=num_frames)
+    engine = DiffusionServingEngine(
+        StadiPipeline(cfg, params, sched, config), slots=1)
+    x = jax.random.normal(jax.random.PRNGKey(seed),
+                          (1, num_frames, cfg.latent_size, cfg.latent_size,
+                           cfg.channels))
+    engine.submit(x, 1)
+    done = engine.run_to_completion()
+    return float(done[0].modeled_latency_s)
+
+
+def _frame_preemption_point(pipe, cfg, base_lat: float, clip_cost: float,
+                            use_preempt: bool, seed: int = 23) -> Dict:
+    """The ROADMAP scenario: video lanes are run-to-completion, so a
+    gold-tier image burst arriving behind a long clip has most of its SLO
+    budget eaten before the image engine sees it — the only lever left is
+    evicting mid-flight bronze lanes (``engine.preempt``). Bronze backlog
+    fills every slot plus a full second generation; the clip blackout is
+    charged to the modeled clock (the cluster serves the clip, image lanes
+    stall); gold SLOs are measured from submission, clip included."""
+    rng = np.random.default_rng(seed)
+    engine = DiffusionServingEngine(pipe, slots=SLOTS)
+    gold_slo = clip_cost + 3.0 * base_lat
+
+    def _img(k: int):
+        return jax.random.normal(
+            jax.random.PRNGKey(seed * 211 + k),
+            (1, cfg.latent_size, cfg.latent_size, cfg.channels))
+
+    for k in range(3 * SLOTS):             # bronze: best-effort image work
+        engine.submit(_img(k), int(rng.integers(0, cfg.n_classes)))
+    engine.step()                          # bronze lanes are mid-flight
+    gold_uids = set()
+    for k in range(4):                     # the gold burst lands *behind*
+        req = engine.submit(_img(100 + k),  # the clip's blackout window
+                            int(rng.integers(0, cfg.n_classes)),
+                            slo_s=gold_slo, cfg_scale=3.0)
+        gold_uids.add(req.uid)
+    engine.modeled_clock_s += clip_cost    # run-to-completion clip: the
+    while engine.queue or engine.active:   # cluster is gone for clip_cost
+        if use_preempt:
+            gold_queued = sum(r.uid in gold_uids for r in engine.queue)
+            bronze = sorted((r for r in engine.active.values()
+                             if r.uid not in gold_uids),
+                            key=lambda r: r.fine_step)   # least sunk work
+            while (gold_queued > engine.slots - len(engine.active)
+                   and bronze):
+                engine.preempt(bronze.pop(0).uid)
+            engine.queue.sort(key=lambda r: r.uid not in gold_uids)
+        engine.step()
+    gold = [r for r in engine.completed if r.uid in gold_uids]
+    met = [bool(r.slo_met) for r in gold]
+    return {
+        "use_preempt": use_preempt,
+        "gold_slo_s": gold_slo,
+        "gold_completed": len(gold),
+        "gold_slo_frac": sum(met) / len(met),
+        "gold_latency_p50_s": float(np.percentile(
+            [r.modeled_latency_s for r in gold], 50)),
+        "preemptions": engine.stats()["preemptions"],
+    }
+
+
 def _sweep_plans(cfg, params, sched, config) -> Dict:
     """Plan every sweep configuration through the shared cache directory and
     return {planner_calls, cache stats} — sweep 2 of the bench is this call
@@ -191,6 +261,23 @@ def run(emit: bool = True) -> Dict:
                        seed=41, trace="bursty")
     sweep1 = {"planner_calls": pipe.planner_calls, **pipe.plan_cache.stats()}
 
+    # -- frame-aware preemption (DESIGN.md §16/§17 serving composition) ----
+    num_frames = 3
+    clip_cost = _clip_cost_s(cfg, params, sched, cm, m_base, m_warmup,
+                             num_frames)
+    frame_pre = {
+        "num_frames": num_frames,
+        "clip_cost_s": clip_cost,
+        "no_preempt": _frame_preemption_point(pipe, cfg, base_lat,
+                                              clip_cost, False),
+        "preempt": _frame_preemption_point(pipe, cfg, base_lat,
+                                           clip_cost, True),
+    }
+    # the clip blackout alone must not sink gold (preemption saves them
+    # all); without preemption the bronze backlog must sink them all
+    assert frame_pre["preempt"]["gold_slo_frac"] == 1.0, frame_pre
+    assert frame_pre["no_preempt"]["gold_slo_frac"] == 0.0, frame_pre
+
     # -- second identical-workload sweep: pure plan-cache hits -------------
     config2 = StadiConfig.from_occupancies(
         OCC, m_base=m_base, m_warmup=m_warmup, cost_model=cm,
@@ -209,10 +296,16 @@ def run(emit: bool = True) -> Dict:
                     for n, w, s, m, p in CLASSES],
         "curve": curve,
         "bursty": burst,
+        "frame_preemption": frame_pre,
         "plan_cache": {"sweep1": sweep1, "sweep2": sweep2},
     }
     common.write_json("load.json", payload)
     if emit:
+        common.emit("load/frame_preempt/gold_slo",
+                    frame_pre["preempt"]["gold_slo_frac"],
+                    f"no_preempt={frame_pre['no_preempt']['gold_slo_frac']:.2f} "
+                    f"clip={clip_cost * 1e3:.0f}ms "
+                    f"pre={frame_pre['preempt']['preemptions']}")
         for row in curve:
             common.emit(f"load/x{row['offered_rps'] / capacity:.2f}",
                         row["latency_p95_s"] * 1e6,
@@ -232,6 +325,12 @@ def main():
           f"{sat['rejected']} rejected, {sat['preemptions']} preempted; "
           f"second sweep plan-cache hit-rate "
           f"{out['plan_cache']['sweep2']['hit_rate']:.0%}")
+    fp = out["frame_preemption"]
+    print(f"# frame-aware preemption: gold burst behind a "
+          f"{fp['clip_cost_s'] * 1e3:.0f}ms run-to-completion clip -> gold "
+          f"SLO hit rate {fp['no_preempt']['gold_slo_frac']:.0%} without / "
+          f"{fp['preempt']['gold_slo_frac']:.0%} with engine.preempt "
+          f"({fp['preempt']['preemptions']} bronze lanes evicted)")
 
 
 if __name__ == "__main__":

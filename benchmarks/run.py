@@ -27,6 +27,7 @@ REGISTRY = [
     ("guidance", "benchmarks.bench_guidance", "CFG guidance placement, DESIGN §12"),
     ("seqpar", "benchmarks.bench_seqpar", "sequence-parallel attention, DESIGN §13"),
     ("video", "benchmarks.bench_video", "multi-frame diffusion, DESIGN §16"),
+    ("textcond", "benchmarks.bench_textcond", "prompt conditioning, DESIGN §17"),
     ("roofline", "benchmarks.bench_roofline", "deliverable g"),
     ("serving", "benchmarks.bench_serving", "continuous batching, DESIGN §9"),
     ("load", "benchmarks.bench_load", "load generator + plan cache, DESIGN §14"),

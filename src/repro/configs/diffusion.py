@@ -20,6 +20,15 @@ class DiTConfig:
     mlp_ratio: float = 4.0
     cond_dim: int = 64               # class/prompt conditioning embedding dim
     n_classes: int = 16              # synthetic conditioning vocabulary
+    # prompt conditioning (DESIGN.md §17): cond_seq_len > 0 declares the
+    # workload prompt-conditioned — the frozen text encoder
+    # (repro.models.text_encoder) emits [B, L <= cond_seq_len, cond_dim]
+    # prompt tokens (plus a trailing validity-mask channel) and cross_attn
+    # interleaves a prompt cross-attention read into every DiT block.
+    # Defaults (0 / False) keep the class-conditional path BITWISE: no new
+    # params are drawn and no new ops are traced.
+    cond_seq_len: int = 0
+    cross_attn: bool = False
     # numerics
     param_dtype: str = "float32"
     dtype: str = "float32"
@@ -47,6 +56,11 @@ class DiTConfig:
 
     def reduced(self) -> "DiTConfig":
         return self.replace(n_layers=2, d_model=128, n_heads=4, latent_size=16)
+
+    def text_conditioned(self, cond_seq_len: int = 32) -> "DiTConfig":
+        """Prompt-conditioned variant (DESIGN.md §17): enables the per-block
+        prompt cross-attention and declares the max prompt-token bucket."""
+        return self.replace(cond_seq_len=cond_seq_len, cross_attn=True)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -137,6 +137,12 @@ class ExecutionTrace:
     # of ``frames.n_groups`` members each — the frame cost model maps them
     # back through the column-dealt grouping convention.
     frames: Optional[object] = None
+    # prompt provenance (DESIGN.md §17): prompt tokens cross-attended per
+    # denoiser evaluation (0 = class-conditional). Every query row reads
+    # the whole prompt sequence each block, so the cost model charges
+    # CostModel.t_xattn * rows * cond_tokens per eval — on BOTH guidance
+    # branches (the null branch runs the same dense math over zero tokens).
+    cond_tokens: int = 0
 
 
 # ----------------------------------------------------------------------
@@ -428,17 +434,24 @@ def replay(plan: TemporalPlan, patches: Sequence[int],
 def make_trace(records: List[IntervalEvent], plan: TemporalPlan,
                patches: Sequence[int], cfg, batch: int,
                stages: Optional[Sequence[int]] = None,
-               guidance=None, seq=None, frames=None) -> ExecutionTrace:
+               guidance=None, seq=None, frames=None,
+               cond_tokens: Optional[int] = None) -> ExecutionTrace:
     """Byte-size provenance shared by every trace producer. Byte sizes are
     PER FRAME — the frame cost model multiplies by the frame counts the
-    trace's ``frames`` plan assigns to each member row."""
+    trace's ``frames`` plan assigns to each member row. ``cond_tokens``
+    (DESIGN.md §17) defaults to the model's declared prompt bucket
+    (``cond_seq_len`` when ``cross_attn``); serving passes the lane's
+    ACTUAL bucket so shorter prompts are priced shorter."""
     H = cfg.latent_size
     lat_bytes = int(batch * H * H * cfg.channels * 4)
     kv_bytes = [int(2 * cfg.n_layers * batch * pr * cfg.tokens_per_side
                     * cfg.d_model * 2) for pr in patches]
     act_row = int(batch * cfg.tokens_per_side * cfg.d_model * 4)
+    if cond_tokens is None:
+        cond_tokens = (cfg.cond_seq_len
+                       if getattr(cfg, "cross_attn", False) else 0)
     return ExecutionTrace(records, plan, list(patches), cfg.n_tokens,
                           lat_bytes, kv_bytes,
                           stages=list(stages) if stages else None,
                           act_row_bytes=act_row, guidance=guidance, seq=seq,
-                          frames=frames)
+                          frames=frames, cond_tokens=int(cond_tokens))

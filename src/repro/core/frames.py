@@ -200,11 +200,60 @@ def _jit_frame_patch_step(params, cfg, x_loc, t, cond, frame, row_start,
                              buffers=(bk, bv), return_kv=True, frame=frame)
 
 
-def _ctx(own: buf_lib.Published, prev: buf_lib.Published) -> Tuple:
+def _ctx(own: buf_lib.Published, prev: buf_lib.Published,
+         tok_axis: int = 2) -> Tuple:
     """The 2N-token cross-frame context: own-frame published K/V ⊕ previous
-    frame's published K/V along the token axis."""
-    return (jnp.concatenate([own.k, prev.k], axis=2),
-            jnp.concatenate([own.v, prev.v], axis=2))
+    frame's published K/V along the token axis (axis 3 when the buffers
+    carry the leading CFG branch axis — guided video, DESIGN.md §17)."""
+    return (jnp.concatenate([own.k, prev.k], axis=tok_axis),
+            jnp.concatenate([own.v, prev.v], axis=tok_axis))
+
+
+# ----------------------------------------------------------------------
+# guided (fused CFG) frame steps — DESIGN.md §17
+# ----------------------------------------------------------------------
+#
+# Fused classifier-free guidance is the ONE mode that composes with the
+# frame axis: both branches are branch-vmapped inside every member's eval
+# (buffers branch-stacked [2, L, B, N(, 2N), H, hd]) and the combine is
+# worker-local, so the IR emits no GuidanceExchange events and the
+# boundary grammar is untouched. Frame 0 runs patch_parallel's guided
+# steps — bitwise the guided image trajectory.
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _jit_guided_frame_full_step(params, cfg, x, t, cond, frame, scale):
+    """Guided frame f > 0 bootstrap step (own-frame full attention)."""
+    def one(c):
+        return dit.forward_patch(params, cfg, x, t, c, 0, buffers=None,
+                                 return_kv=True, frame=frame)
+    eps2, kvs2 = jax.vmap(one)(dit.guidance_conds(cond))
+    return pp._cfg_tail(cfg, eps2, scale) + (kvs2,)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _jit_guided_frame_full_ctx_step(params, cfg, x, t, cond, frame, bk2,
+                                    bv2, scale):
+    """Guided frame f > 0 warmup step against the branch-stacked 2N-token
+    (own ⊕ previous frame) published context."""
+    def one(c, bk, bv):
+        return dit.forward_patch(params, cfg, x, t, c, 0, buffers=(bk, bv),
+                                 return_kv=True, frame=frame)
+    eps2, kvs2 = jax.vmap(one)(dit.guidance_conds(cond), bk2, bv2)
+    return pp._cfg_tail(cfg, eps2, scale) + (kvs2,)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "row_start"))
+def _jit_guided_frame_patch_step(params, cfg, x_loc, t, cond, frame,
+                                 row_start, bk2, bv2, scale):
+    """Guided frame f > 0 adaptive substep over the branch-stacked 2N-token
+    cross-frame context. ``frame`` is TRACED — one compile per
+    (cfg, row_start) covers every frame."""
+    def one(c, bk, bv):
+        return dit.forward_patch(params, cfg, x_loc, t, c, row_start,
+                                 buffers=(bk, bv), return_kv=True,
+                                 frame=frame)
+    eps2, kvs2 = jax.vmap(one)(dit.guidance_conds(cond), bk2, bv2)
+    return pp._cfg_tail(cfg, eps2, scale) + (kvs2,)
 
 
 # ----------------------------------------------------------------------
@@ -214,7 +263,8 @@ def _ctx(own: buf_lib.Published, prev: buf_lib.Published) -> Tuple:
 def run_frames(params, cfg, sched, x_T, cond, plan, patches,
                interval_hook=None, exchange: str = "sync",
                exchange_refresh: int = 2,
-               frames: Optional[FramePlan] = None) -> pp.RunResult:
+               frames: Optional[FramePlan] = None,
+               guidance=None) -> pp.RunResult:
     """Emulated multi-frame reference (DESIGN.md §16).
 
     Interprets the same IR stream as ``run_schedule`` — including the
@@ -231,14 +281,35 @@ def run_frames(params, cfg, sched, x_T, cond, plan, patches,
     path (same jitted steps; a leading frame axis of 1 is squeezed in and
     restored on the way out). Frame 0 of a multi-frame run takes that same
     code path per substep and is bitwise the image trajectory.
+
+    ``guidance`` (DESIGN.md §17): an optional FUSED
+    :class:`~repro.core.guidance.GuidancePlan` — every frame eval becomes
+    a branch-vmapped CFG eval against branch-stacked per-frame published
+    buffers, with the combine worker-local (no GuidanceExchange events).
+    Split/interleaved guidance does not compose with the frame axis and
+    raises loudly; frame 0 runs patch_parallel's guided steps and stays
+    bitwise the guided image trajectory.
     """
+    guided = guidance is not None
+    if guided:
+        if guidance.mode != "fused":
+            raise ValueError(
+                f"guidance mode {guidance.mode!r} is not composed with the "
+                "frame axis: guided video runs FUSED classifier-free "
+                "guidance only (branch-vmapped per member — DESIGN.md §17)")
+        if cond is None:
+            raise ValueError("guided generation needs a condition")
+        if interval_hook is not None:
+            raise ValueError("online rebalancing is not supported with "
+                             "guidance (the branch pairing is static)")
     if frames is not None and frames.num_frames > 1:
         validate_frames(frames, x_T)
     else:
         x = x_T[:, 0] if x_T.ndim == 5 else x_T
         res = pp.run_schedule(params, cfg, sched, x, cond, plan, patches,
                               interval_hook=interval_hook, exchange=exchange,
-                              exchange_refresh=exchange_refresh)
+                              exchange_refresh=exchange_refresh,
+                              guidance=guidance)
         if x_T.ndim == 5:
             res = pp.RunResult(res.image[:, None], res.trace)
         res.trace.frames = frames
@@ -250,6 +321,7 @@ def run_frames(params, cfg, sched, x_T, cond, plan, patches,
     plan0, patches0 = plan, list(patches)
     ts = sampler_lib.ddim_timesteps(sched.T, M_base)
     policy = comm_lib.get_exchange(exchange, exchange_refresh)
+    tok_axis = 3 if guided else 2    # buffers gain a leading branch axis
 
     B = x_T.shape[0]
     xs = [x_T[:, f] for f in range(F)]       # per-frame [B,H,W,C] latents
@@ -263,29 +335,48 @@ def run_frames(params, cfg, sched, x_T, cond, plan, patches,
     new_slabs = [dict() for _ in range(F)]
     interval: Optional[ir.ComputeInterval] = None
 
+    def _frame_full(f, m):
+        """One full-image eval of frame f at fine step m: the guided/
+        unguided and frame-0/frame-f>0 dispatch shared by warmup and the
+        M_w == 0 bootstrap. Returns (eps, kvs)."""
+        if f == 0:
+            # bitwise the (guided) image warmup step
+            if guided:
+                eps, _, kvs = pp._jit_guided_full_step(
+                    params, cfg, xs[0], ts[m], cond, guidance.scale)
+                return eps, kvs
+            return pp._jit_full_step(params, cfg, xs[0], ts[m], cond)
+        if published[f] is None:
+            if guided:
+                eps, _, kvs = _jit_guided_frame_full_step(
+                    params, cfg, xs[f], ts[m], cond, fids[f],
+                    guidance.scale)
+                return eps, kvs
+            return _jit_frame_full_step(params, cfg, xs[f], ts[m], cond,
+                                        fids[f])
+        bk, bv = _ctx(published[f], published[f - 1], tok_axis)
+        if guided:
+            eps, _, kvs = _jit_guided_frame_full_ctx_step(
+                params, cfg, xs[f], ts[m], cond, fids[f], bk, bv,
+                guidance.scale)
+            return eps, kvs
+        return _jit_frame_full_ctx_step(params, cfg, xs[f], ts[m], cond,
+                                        fids[f], bk, bv)
+
     def _sync_step(m):
         """One synchronous fine step of every frame under snapshot
         semantics: all frames read the previous step's published K/V,
         then every frame's fresh K/V publishes at once."""
         kv_new = []
         for f in range(F):
-            if f == 0:
-                # bitwise the image warmup step
-                eps, kvs = pp._jit_full_step(params, cfg, xs[0], ts[m], cond)
-            elif published[f] is None:
-                eps, kvs = _jit_frame_full_step(params, cfg, xs[f], ts[m],
-                                                cond, fids[f])
-            else:
-                bk, bv = _ctx(published[f], published[f - 1])
-                eps, kvs = _jit_frame_full_ctx_step(
-                    params, cfg, xs[f], ts[m], cond, fids[f], bk, bv)
+            eps, kvs = _frame_full(f, m)
             xs[f] = sampler_lib.ddim_step(sched, xs[f], eps, ts[m], ts[m + 1])
             kv_new.append(kvs)
         for f in range(F):
             published[f] = buf_lib.Published(kv_new[f][0], kv_new[f][1], m)
             read_pub[f] = published[f]
 
-    gen = ir.lower(plan, patches, policy, frames=frames)
+    gen = ir.lower(plan, patches, policy, guidance=guidance, frames=frames)
     send = None
     while True:
         try:
@@ -304,11 +395,8 @@ def run_frames(params, cfg, sched, x_T, cond, plan, patches,
         elif isinstance(ev, ir.ComputeInterval):
             if published[0] is None:     # M_w == 0: bootstrap buffers once
                 for f in range(F):
-                    step = (pp._jit_full_step(params, cfg, xs[0], ts[0], cond)
-                            if f == 0 else
-                            _jit_frame_full_step(params, cfg, xs[f], ts[0],
-                                                 cond, fids[f]))
-                    published[f] = buf_lib.Published(step[1][0], step[1][1], -1)
+                    _, kvs = _frame_full(f, 0)
+                    published[f] = buf_lib.Published(kvs[0], kvs[1], -1)
                     read_pub[f] = published[f]
             interval = ev
             bounds_tok = patch_bounds(ev.patches)
@@ -316,7 +404,8 @@ def run_frames(params, cfg, sched, x_T, cond, plan, patches,
             pending = [dict() for _ in range(F)]
             new_slabs = [dict() for _ in range(F)]
             for f in range(F):
-                ctx = _ctx(read_pub[f], read_pub[f - 1]) if f else None
+                ctx = (_ctx(read_pub[f], read_pub[f - 1], tok_axis)
+                       if f else None)
                 for i in ev.workers:
                     r = ev.ratios[i]
                     x_loc = pp._slab(xs[f], bounds_lat[i])
@@ -324,11 +413,22 @@ def run_frames(params, cfg, sched, x_T, cond, plan, patches,
                     for s in range(ev.substeps[i]):
                         t_from = ts[ev.fine_step + s * r]
                         t_to = ts[ev.fine_step + (s + 1) * r]
-                        if f == 0:   # bitwise the image substep
+                        if f == 0 and guided:
+                            # bitwise the guided image substep
+                            eps, _, kvs = pp._jit_guided_patch_step(
+                                params, cfg, x_loc, t_from, cond,
+                                bounds_tok[i][0], read_pub[0].k,
+                                read_pub[0].v, guidance.scale)
+                        elif f == 0:     # bitwise the image substep
                             eps, kvs = pp._jit_patch_step(
                                 params, cfg, x_loc, t_from, cond,
                                 bounds_tok[i][0], read_pub[0].k,
                                 read_pub[0].v)
+                        elif guided:
+                            eps, _, kvs = _jit_guided_frame_patch_step(
+                                params, cfg, x_loc, t_from, cond, fids[f],
+                                bounds_tok[i][0], ctx[0], ctx[1],
+                                guidance.scale)
                         else:
                             eps, kvs = _jit_frame_patch_step(
                                 params, cfg, x_loc, t_from, cond, fids[f],
@@ -350,7 +450,7 @@ def run_frames(params, cfg, sched, x_T, cond, plan, patches,
                 if ev.kind == "full":
                     prev_published[f] = published[f]
                     published[f] = buf_lib.merge(published[f], pending[f],
-                                                 ev.fine_step, axis=2)
+                                                 ev.fine_step, axis=tok_axis)
                     read_pub[f] = published[f]
                 elif ev.kind == "skip":
                     read_pub[f] = published[f]
@@ -366,7 +466,7 @@ def run_frames(params, cfg, sched, x_T, cond, plan, patches,
                     send = upd
 
     trace = ir.make_trace(records, plan0, patches0, cfg, int(B),
-                          frames=frames)
+                          guidance=guidance, frames=frames)
     return pp.RunResult(jnp.stack(xs, axis=1), trace)
 
 

@@ -117,6 +117,12 @@ class StadiConfig:
     # stadi_video planner search.
     num_frames: int = 1
     frame_groups: int = 0
+    # prompt conditioning (DESIGN.md §17): length bucket of the prompt-token
+    # sequence the planner prices (CostModel.t_xattn per token read). 0 =
+    # derive from the model config (cond_seq_len when cross_attn, else
+    # unconditioned/class-conditioned — no cross-attention cost). Setting it
+    # explicitly pins the serving bucket a cached plan is keyed under.
+    cond_bucket: int = 0
     # run the Pallas stale-KV attention kernel (repro.kernels) inside the
     # DiT blocks instead of the reference buffer-rewrite attend — the
     # fused freshness-select hot path (interpret mode off-TPU)
@@ -557,15 +563,17 @@ def emulated_executor(params, model_cfg, sched, x_T, cond, plan, config,
                       interval_hook=None):
     fplan = plan.frames
     if fplan is not None and fplan.num_frames > 1:
-        # the multi-frame interpreter (DESIGN.md §16); frames x guidance /
-        # seq compositions are rejected at pipeline construction
+        # the multi-frame interpreter (DESIGN.md §16); fused CFG composes
+        # with the frame axis (§17) — split/interleaved guidance and seq
+        # sharding are rejected at pipeline construction
         from repro.core import frames as frames_lib
         res = frames_lib.run_frames(params, model_cfg, sched, x_T, cond,
                                     plan.temporal, plan.patches,
                                     interval_hook=interval_hook,
                                     exchange=config.exchange,
                                     exchange_refresh=config.exchange_refresh,
-                                    frames=fplan)
+                                    frames=fplan,
+                                    guidance=plan.guidance)
         return res.image, res.trace
     res = pp.run_schedule(params, model_cfg, sched, x_T, cond,
                           plan.temporal, plan.patches,
@@ -626,7 +634,8 @@ def simulate_executor(params, model_cfg, sched, x_T, cond, plan, config,
                             stages=plan.stages,
                             guidance=plan.guidance,
                             seq=plan.seq,
-                            frames=plan.frames)
+                            frames=plan.frames,
+                            cond_tokens=(config.cond_bucket or None))
     return None, trace
 
 
@@ -835,12 +844,13 @@ class StadiPipeline:
                     f"frame_groups={config.frame_groups} is infeasible: "
                     "every group-member row needs at least one device and "
                     f"the cluster has {config.n_devices}")
-            if guided:
+            if guided and config.guidance in ("split", "interleaved"):
                 raise ValueError(
-                    "classifier-free guidance is not composed with the "
-                    "frame axis yet (branch pairing and frame grouping "
-                    "compete for the same devices) — run num_frames=1 or "
-                    "cfg_scale=0")
+                    f"guidance={config.guidance!r} is not composed with "
+                    "the frame axis: guided video runs FUSED classifier-"
+                    "free guidance only (branch pairing and frame grouping "
+                    "compete for the same devices) — use guidance='fused' "
+                    "or guidance='none' with cfg_scale > 0")
             if config.seq_shards != 1:
                 raise ValueError(
                     "sequence sharding is not composed with the frame axis "
@@ -858,6 +868,20 @@ class StadiPipeline:
             raise ValueError(f"frame_groups={config.frame_groups} needs "
                              "num_frames > 1 (there is only one frame to "
                              "place)")
+        # prompt conditioning (DESIGN.md §17)
+        if config.cond_bucket < 0:
+            raise ValueError(f"cond_bucket must be >= 0 (0 = derive from "
+                             f"the model config), got {config.cond_bucket}")
+        if config.cond_bucket > 0 and not model_cfg.cross_attn:
+            raise ValueError(
+                f"cond_bucket={config.cond_bucket} prices prompt-token "
+                "cross-attention but the model has cross_attn=False — "
+                "use DiTConfig.text_conditioned()")
+        if config.cond_bucket > model_cfg.cond_seq_len:
+            raise ValueError(
+                f"cond_bucket={config.cond_bucket} exceeds the model's "
+                f"cond_seq_len={model_cfg.cond_seq_len} (the encoder "
+                "never emits a longer prompt bucket)")
         # persistent plan cache (DESIGN.md §14)
         self.plan_cache = None
         self.last_plan_key: Optional[str] = None
@@ -897,6 +921,11 @@ class StadiPipeline:
                 latent_bytes=int(cfg.latent_size ** 2 * cfg.channels * 4),
                 kv_row_bytes=int(2 * cfg.n_layers * cfg.tokens_per_side
                                  * cfg.d_model * 2))
+        if knobs.cond_bucket == 0 and self.model_cfg.cross_attn:
+            # prompt planning prices the full cond_seq_len unless a
+            # serving bucket pins a shorter one (DESIGN.md §17)
+            knobs = dataclasses.replace(
+                knobs, cond_bucket=self.model_cfg.cond_seq_len)
         return knobs
 
     def _model_key(self) -> str:
@@ -928,6 +957,12 @@ class StadiPipeline:
             # served to a video workload (and vice versa)
             "num_frames": knobs.num_frames,
             "frame_groups": knobs.frame_groups,
+            # prompt axis (DESIGN.md §17): a plan priced for one prompt
+            # bucket must never be served to another (t_xattn scales with
+            # the token count), nor a class-conditional plan to a prompt
+            # workload
+            "cond_bucket": knobs.cond_bucket,
+            "cross_attn": bool(self.model_cfg.cross_attn),
             "cost_model": (None if cm is None else dataclasses.asdict(cm)),
         }
 

@@ -255,7 +255,8 @@ def stadi_pipefuse_planner(speeds, knobs, p_total) -> ExecutionPlan:
 
 
 def _guided_plan_cost(plan: ExecutionPlan, speeds, p_total: int, cm,
-                      kv_row: float, latent_bytes: float) -> float:
+                      kv_row: float, latent_bytes: float,
+                      cond_tokens: int = 0) -> float:
     """Modeled seconds of one adaptive interval ending in a full boundary,
     under the guided cost model of :func:`repro.core.simulate.
     _simulate_guided` (fabric contention: fused serializes both branches'
@@ -268,6 +269,8 @@ def _guided_plan_cost(plan: ExecutionPlan, speeds, p_total: int, cm,
     t = plan.temporal
     R = t.lcm
     row_bytes = latent_bytes / max(p_total, 1)
+    # prompt-token read (DESIGN.md §17): per-row like t_row, per branch
+    t_row_eff = cm.t_row + getattr(cm, "t_xattn", 0.0) * cond_tokens
 
     def interval_cost(fresh: bool) -> float:
         compute, eps_bytes, kv_bytes, hops = 0.0, 0.0, 0.0, 0
@@ -275,12 +278,12 @@ def _guided_plan_cost(plan: ExecutionPlan, speeds, p_total: int, cm,
             sub = R // t.ratios[i]
             rows = plan.patches[i]
             if g.mode == "fused":
-                step_t = cm.t_fixed + cm.t_row * rows * 2.0
+                step_t = cm.t_fixed + t_row_eff * rows * 2.0
                 tt = sub * step_t / max(speeds[i], 1e-9)
             else:
                 vc = speeds[g.cond_devices[i]]
                 vu = speeds[g.uncond_devices[i]]
-                step_t = cm.t_fixed + cm.t_row * rows
+                step_t = cm.t_fixed + t_row_eff * rows
                 if fresh or not g.worker_reuses(i):
                     tt = sub * step_t / max(min(vc, vu), 1e-9)
                 else:                    # reuse: uncond idles, cond runs
@@ -336,6 +339,7 @@ def stadi_guidance_planner(speeds, knobs, p_total) -> ExecutionPlan:
                                                          t_row=1e-3)
     kv_row = getattr(knobs, "kv_row_bytes", 0)
     latent_bytes = getattr(knobs, "latent_bytes", 0)
+    cond_tokens = getattr(knobs, "cond_bucket", 0) or 0
     modes = [mode] if mode != "none" else ["fused", "split"]
     candidates = []
     for m in modes:
@@ -353,7 +357,7 @@ def stadi_guidance_planner(speeds, knobs, p_total) -> ExecutionPlan:
         cand = dataclasses.replace(base, planner="stadi_guidance",
                                    speeds=list(speeds), guidance=gp)
         cost = _guided_plan_cost(cand, speeds, p_total, cm, kv_row,
-                                 latent_bytes)
+                                 latent_bytes, cond_tokens=cond_tokens)
         candidates.append(dataclasses.replace(cand,
                                               modeled_interval_cost=cost))
     return min(candidates, key=lambda c: c.modeled_interval_cost)
@@ -361,7 +365,7 @@ def stadi_guidance_planner(speeds, knobs, p_total) -> ExecutionPlan:
 
 def _seq_plan_cost(plan: ExecutionPlan, groups, p_total: int, cm,
                    kv_row: float, latent_bytes: float,
-                   refresh: int) -> float:
+                   refresh: int, cond_tokens: int = 0) -> float:
     """Modeled seconds of one adaptive interval under the ring-contention
     cost model of :func:`repro.core.simulate._simulate_seq`, averaged over
     the "ring" policy's refresh cadence (1 full boundary + E-1 degraded
@@ -386,7 +390,9 @@ def _seq_plan_cost(plan: ExecutionPlan, groups, p_total: int, cm,
         sub = R // t.ratios[i]
         rows = plan.patches[i]
         members = groups[i] if groups is not None else [plan.speeds[i]]
-        wt = max((cm.t_fixed + cm.t_row * rows * segf[j]) / max(v, 1e-9)
+        wt = max((cm.t_fixed
+                  + (cm.t_row + getattr(cm, "t_xattn", 0.0) * cond_tokens)
+                  * rows * segf[j]) / max(v, 1e-9)
                  + cm.attn_time(p_total, headf[j], v)
                  for j, v in enumerate(members))
         compute = max(compute, sub * wt)
@@ -433,13 +439,15 @@ def stadi_seq_planner(speeds, knobs, p_total) -> ExecutionPlan:
     kv_row = getattr(knobs, "kv_row_bytes", 0)
     latent_bytes = getattr(knobs, "latent_bytes", 0)
     refresh = getattr(knobs, "exchange_refresh", 2)
+    cond_tokens = getattr(knobs, "cond_bucket", 0) or 0
     candidates = []
     if forced in (0, 1):
         base = stadi_planner(speeds, knobs, p_total)
         cand = dataclasses.replace(base, planner="stadi_seq")
         candidates.append(dataclasses.replace(
             cand, modeled_interval_cost=_seq_plan_cost(
-                cand, None, p_total, cm, kv_row, latent_bytes, refresh)))
+                cand, None, p_total, cm, kv_row, latent_bytes, refresh,
+                cond_tokens=cond_tokens)))
     if n_heads is None and forced > 1:
         raise ValueError("stadi_seq needs knobs.n_heads (the attention "
                          "head count) to scatter heads; StadiPipeline "
@@ -459,7 +467,8 @@ def stadi_seq_planner(speeds, knobs, p_total) -> ExecutionPlan:
                                    speeds=list(speeds), seq=seq)
         candidates.append(dataclasses.replace(
             cand, modeled_interval_cost=_seq_plan_cost(
-                cand, groups, p_total, cm, kv_row, latent_bytes, refresh)))
+                cand, groups, p_total, cm, kv_row, latent_bytes, refresh,
+                cond_tokens=cond_tokens)))
     if not candidates:
         raise ValueError(
             f"seq_shards={forced} is infeasible: need 1 <= S <= "
@@ -469,7 +478,7 @@ def stadi_seq_planner(speeds, knobs, p_total) -> ExecutionPlan:
 
 def _frame_plan_cost(plan: ExecutionPlan, rows, p_total: int, cm,
                      kv_row: float, latent_bytes: float,
-                     refresh: int) -> float:
+                     refresh: int, cond_tokens: int = 0) -> float:
     """Modeled seconds of one adaptive interval under the frame cost model
     of :func:`repro.core.simulate._simulate_frames`, averaged over the
     stale_async refresh cadence (1 full boundary + E-1 degraded per E).
@@ -490,10 +499,16 @@ def _frame_plan_cost(plan: ExecutionPlan, rows, p_total: int, cm,
     t = plan.temporal
     R = t.lcm
     row_bytes = latent_bytes / max(p_total, 1)
+    # fused-CFG x frames (DESIGN.md §17): every member evaluates both
+    # branches branch-vmapped — row work, context reads, and published K/V
+    # double; the fixed overhead is shared (simulate._simulate_frames)
+    mult = 2 if plan.guidance is not None else 1
+    t_row_eff = cm.t_row + getattr(cm, "t_xattn", 0.0) * cond_tokens
+    kv_row = kv_row * mult
     # context rows a member row reads per fine step: 2N per owned frame,
     # minus the previous-frame half frame 0 does not have (it sits in the
     # first row by construction — bounds are contiguous from frame 0)
-    ctx = [p_total * (2 * fplan.groups[g] - (1 if g == 0 else 0))
+    ctx = [mult * p_total * (2 * fplan.groups[g] - (1 if g == 0 else 0))
            for g in range(G)]
     compute = async_b = 0.0
     for i in plan.active:
@@ -501,7 +516,7 @@ def _frame_plan_cost(plan: ExecutionPlan, rows, p_total: int, cm,
         rows_i = plan.patches[i]
         members = ([(rows[g][i], g) for g in range(G)] if rows is not None
                    else [(plan.speeds[i], 0)])
-        wt = max(fplan.groups[g] * (cm.t_fixed + cm.t_row * rows_i)
+        wt = max(fplan.groups[g] * (cm.t_fixed + t_row_eff * rows_i * mult)
                  / max(v, 1e-9) + cm.attn_time(ctx[g], 1.0, v)
                  for v, g in members)
         compute = max(compute, sub * wt)
@@ -538,7 +553,11 @@ def stadi_video_planner(speeds, knobs, p_total) -> ExecutionPlan:
 
     ``knobs.frame_groups > 0`` pins G (1 = force frame-sequential); 0 =
     auto. ``knobs.num_frames > 1`` is required — single-frame image plans
-    come from the plain planners.
+    come from the plain planners. ``knobs.cfg_scale > 0`` plans GUIDED
+    video (DESIGN.md §17): every candidate carries a FUSED GuidancePlan —
+    the only mode that composes with the frame axis — and is scored with
+    the branch-doubled frame cost model; a forced split/interleaved
+    ``knobs.guidance`` raises loudly.
     """
     from repro.core import frames as frames_lib
     from repro.core.simulate import CostModel
@@ -554,14 +573,28 @@ def stadi_video_planner(speeds, knobs, p_total) -> ExecutionPlan:
     kv_row = getattr(knobs, "kv_row_bytes", 0)
     latent_bytes = getattr(knobs, "latent_bytes", 0)
     refresh = getattr(knobs, "exchange_refresh", 2)
+    cond_tokens = getattr(knobs, "cond_bucket", 0) or 0
+    scale = getattr(knobs, "cfg_scale", 0.0)
+    gp = None
+    if scale > 0.0:
+        from repro.core import guidance as guide_lib
+        gmode = getattr(knobs, "guidance", "none")
+        if gmode not in ("none", "fused"):
+            raise ValueError(
+                f"guidance={gmode!r} is not composed with the frame axis: "
+                "guided video runs FUSED classifier-free guidance only "
+                "(branch-vmapped per member — DESIGN.md §17)")
+        gp = guide_lib.GuidancePlan("fused", scale)
     candidates = []
     if forced in (0, 1):
         base = stadi_planner(speeds, knobs, p_total)
         cand = dataclasses.replace(base, planner="stadi_video",
-                                   frames=frames_lib.FramePlan(F, (F,)))
+                                   frames=frames_lib.FramePlan(F, (F,)),
+                                   guidance=gp)
         candidates.append(dataclasses.replace(
             cand, modeled_interval_cost=_frame_plan_cost(
-                cand, None, p_total, cm, kv_row, latent_bytes, refresh)))
+                cand, None, p_total, cm, kv_row, latent_bytes, refresh,
+                cond_tokens=cond_tokens)))
     if forced == 1:                  # pinned frame-sequential: no search
         return candidates[0]
     g_options = [forced] if forced > 1 else range(2, min(n, F) + 1)
@@ -576,10 +609,12 @@ def stadi_video_planner(speeds, knobs, p_total) -> ExecutionPlan:
                       for w in range(n_cols)]
         base = stadi_planner(col_speeds, knobs, p_total)
         cand = dataclasses.replace(base, planner="stadi_video",
-                                   speeds=list(speeds), frames=fplan)
+                                   speeds=list(speeds), frames=fplan,
+                                   guidance=gp)
         candidates.append(dataclasses.replace(
             cand, modeled_interval_cost=_frame_plan_cost(
-                cand, rows, p_total, cm, kv_row, latent_bytes, refresh)))
+                cand, rows, p_total, cm, kv_row, latent_bytes, refresh,
+                cond_tokens=cond_tokens)))
     if not candidates:
         raise ValueError(
             f"frame_groups={forced} is infeasible: need 1 <= G <= "

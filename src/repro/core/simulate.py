@@ -41,7 +41,8 @@ from repro.core.events import ExecutionTrace, IntervalEvent  # noqa: F401
 def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
                 exchange: str = "sync", exchange_refresh: int = 2,
                 stages: Optional[Sequence[int]] = None,
-                guidance=None, seq=None, frames=None) -> ExecutionTrace:
+                guidance=None, seq=None, frames=None,
+                cond_tokens: Optional[int] = None) -> ExecutionTrace:
     """Schedule trace without running numerics (latency-only replay).
 
     Replays :func:`repro.core.events.lower` for (plan, patches, policy) —
@@ -61,7 +62,7 @@ def build_trace(plan, patches: Sequence[int], cfg, batch: int = 1,
                         guidance=guidance, seq_shards=seq, frames=frames)
     return ir.make_trace(records, plan, list(patches), cfg, batch,
                          stages=stages, guidance=guidance, seq=seq,
-                         frames=frames)
+                         frames=frames, cond_tokens=cond_tokens)
 
 
 @dataclasses.dataclass
@@ -78,6 +79,13 @@ class CostModel:
     # fraction — the Ulysses motivation. 0.0 (default) reproduces the
     # pre-seq model exactly.
     t_ctx: float = 0.0
+    # per query-row x prompt-token cross-attention read cost (s) at v=1
+    # (DESIGN.md §17): a prompt-conditioned eval reads the whole prompt
+    # sequence's K/V from every query row in every block, so the term
+    # scales with rows x cond_tokens and is paid by BOTH guidance branches
+    # (the null branch runs the identical dense math over zero tokens).
+    # 0.0 (default) reproduces the class-conditional model exactly.
+    t_xattn: float = 0.0
 
     def step_time(self, rows: int, v: float) -> float:
         return (self.t_fixed + self.t_row * rows) / max(v, 1e-9)
@@ -86,6 +94,10 @@ class CostModel:
         """Per-step attention context-read time: proportional to context
         rows x resident head fraction, independent of query rows."""
         return self.t_ctx * ctx_rows * heads_frac / max(v, 1e-9)
+
+    def xattn_time(self, rows: int, cond_tokens: int, v: float) -> float:
+        """Per-eval prompt cross-attention read time (DESIGN.md §17)."""
+        return self.t_xattn * rows * cond_tokens / max(v, 1e-9)
 
 
 def fit_cost_model(rows: Sequence[int], times: Sequence[float], **kw) -> CostModel:
@@ -195,6 +207,12 @@ def pipefuse_interval_seconds(stages: Sequence[int], chain: Sequence[float],
 def _simulate_staged(trace: ExecutionTrace, speeds: Sequence[float],
                      cm: CostModel) -> float:
     stages = trace.stages
+    if trace.cond_tokens:
+        # prompt cross-attention (DESIGN.md §17) is per-row work spread
+        # over the block depth exactly like t_row, so fold it in before
+        # the shared pipefuse helpers price the stage stream
+        cm = dataclasses.replace(
+            cm, t_row=cm.t_row + cm.t_xattn * trace.cond_tokens)
     chain = chain_speeds(speeds, len(stages))
     total = 0.0
     rows_total = max(sum(trace.patches), 1)
@@ -256,6 +274,9 @@ def _simulate_guided(trace: ExecutionTrace, speeds: Sequence[float],
     kv_row = _kv_bytes_per_row(trace)
     rows_total = max(sum(trace.patches), 1)
     row_bytes = trace.latent_bytes / rows_total
+    # prompt-token read (DESIGN.md §17): per-row like t_row, paid by each
+    # branch a device evaluates (2x fused, 1x per split/interleaved device)
+    t_row_eff = cm.t_row + cm.t_xattn * trace.cond_tokens
     total = 0.0
     for ev in trace.events:
         parts = [i for i, (sub, rows) in
@@ -266,7 +287,7 @@ def _simulate_guided(trace: ExecutionTrace, speeds: Sequence[float],
         fresh = ev.uncond_fresh
         compute = 0.0
         for i in parts:
-            step_t = cm.t_fixed + cm.t_row * ev.patches[i] \
+            step_t = cm.t_fixed + t_row_eff * ev.patches[i] \
                 * (2.0 if g.mode == "fused" else 1.0)
             if g.mode == "fused":
                 t = ev.substeps[i] * step_t / max(speeds[i], 1e-9)
@@ -343,7 +364,9 @@ def _simulate_seq(trace: ExecutionTrace, speeds: Sequence[float],
                 continue
             parts.append(i)
             g = groups[i] if i < len(groups) else groups[-1]
-            wt = max((cm.t_fixed + cm.t_row * rows * segf[j])
+            wt = max((cm.t_fixed
+                      + (cm.t_row + cm.t_xattn * trace.cond_tokens)
+                      * rows * segf[j])
                      / max(v, 1e-9) + cm.attn_time(total_rows, headf[j], v)
                      for j, v in enumerate(g))
             compute = max(compute, sub * wt)
@@ -386,19 +409,26 @@ def _simulate_frames(trace: ExecutionTrace, speeds: Sequence[float],
                      cm: CostModel) -> float:
     """Makespan of a multi-frame trace: per-member frame-chunk compute
     with the cross-frame context attention term + per-frame boundary
-    wire. Guidance / seq / stages do not compose with the frame axis yet
+    wire. Fused classifier-free guidance composes (DESIGN.md §17): every
+    member evaluates both branches branch-vmapped, so row work, context
+    reads, and published K/V double while the fixed overhead is shared —
+    exactly the _simulate_guided fused convention. Split/interleaved
+    guidance, seq, and stages still do not compose with the frame axis
     (the pipeline rejects those configs loudly)."""
     from repro.core import frames as frames_lib
 
     fplan = trace.frames
     F = fplan.num_frames
     G = fplan.n_groups
+    # fused-CFG branch factor (trace.guidance is fused-mode or None here)
+    mult = 2 if trace.guidance is not None else 1
+    t_row_eff = cm.t_row + cm.t_xattn * trace.cond_tokens
     if G > 1:
         rows_layout, _ = frames_lib.frame_group_layout(speeds, G)
         n_cols = len(rows_layout[0])
     else:
         rows_layout, n_cols = None, len(speeds)
-    kv_row = _kv_bytes_per_row(trace)
+    kv_row = _kv_bytes_per_row(trace) * mult
     total = 0.0
     for ev in trace.events:
         parts: List[int] = []
@@ -406,7 +436,8 @@ def _simulate_frames(trace: ExecutionTrace, speeds: Sequence[float],
         row_bytes = trace.latent_bytes / total_rows
         # context rows a member row reads per fine step: 2N per owned
         # frame, minus the previous-frame half frame 0 does not have
-        ctx = [total_rows * (2 * fplan.groups[g] - (1 if g == 0 else 0))
+        ctx = [mult * total_rows
+               * (2 * fplan.groups[g] - (1 if g == 0 else 0))
                for g in range(G)]
         compute = async_b = 0.0
         for i, (sub, rows) in enumerate(zip(ev.substeps, ev.patches)):
@@ -416,7 +447,8 @@ def _simulate_frames(trace: ExecutionTrace, speeds: Sequence[float],
             members = ([(rows_layout[g][min(i, n_cols - 1)], g)
                         for g in range(G)] if rows_layout is not None
                        else [(speeds[i], 0)])
-            wt = max(fplan.groups[g] * (cm.t_fixed + cm.t_row * rows)
+            wt = max(fplan.groups[g]
+                     * (cm.t_fixed + t_row_eff * rows * mult)
                      / max(v, 1e-9) + cm.attn_time(ctx[g], 1.0, v)
                      for v, g in members)
             compute = max(compute, sub * wt)
@@ -454,10 +486,13 @@ def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
         return _simulate_staged(trace, speeds, cm)
     if trace.seq is not None and len(trace.seq.segments) > 1:
         return _simulate_seq(trace, speeds, cm)
-    if trace.guidance is not None:
-        return _simulate_guided(trace, speeds, cm)
+    # frames dispatch BEFORE guidance: a guided multi-frame trace (fused
+    # CFG x frames, DESIGN.md §17) is a frame trace whose members evaluate
+    # both branches — _simulate_frames owns the branch factor
     if trace.frames is not None and trace.frames.num_frames > 1:
         return _simulate_frames(trace, speeds, cm)
+    if trace.guidance is not None:
+        return _simulate_guided(trace, speeds, cm)
     total = 0.0
     kv_row = _kv_bytes_per_row(trace)
     for ev in trace.events:
@@ -471,7 +506,8 @@ def simulate_trace(trace: ExecutionTrace, speeds: Sequence[float],
             # every patch worker reads the FULL context's K/V with all
             # heads (heads_frac 1.0) — the attention wall seq sharding cuts
             step_t = cm.step_time(rows, speeds[i]) \
-                + cm.attn_time(total_rows, 1.0, speeds[i])
+                + cm.attn_time(total_rows, 1.0, speeds[i]) \
+                + cm.xattn_time(rows, trace.cond_tokens, speeds[i])
             compute = max(compute, sub * step_t)
         row_bytes = trace.latent_bytes / total_rows
         # uneven all-gather of x: per-worker padded slab wire bytes — a lone

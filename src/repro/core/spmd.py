@@ -973,7 +973,6 @@ def run_spmd_guidance(params, cfg: DiTConfig, sched: NoiseSchedule, x_T,
     from jax.sharding import Mesh, PartitionSpec as P
 
     from repro.core import sampler as sampler_lib
-    from repro.core.guidance import NULL_COND
     from repro.models.diffusion import dit
 
     if guidance is None or guidance.mode not in ("split", "interleaved"):
@@ -1014,9 +1013,9 @@ def run_spmd_guidance(params, cfg: DiTConfig, sched: NoiseSchedule, x_T,
         my_start = lay["starts_arr"][idx]
         my_ratio = ratios_arr[idx]
         my_tok = my_rows * lay["wp"]
-        # my branch: slice 0 evaluates the class ids, slice 1 the null
-        my_cond = jnp.where(guide == 0, cond,
-                            jnp.full_like(cond, NULL_COND))
+        # my branch: slice 0 evaluates the conditioning (class ids or
+        # prompt tokens), slice 1 the null (NULL_COND / zero tokens, §17)
+        my_cond = jnp.where(guide == 0, cond, dit.null_like(cond))
         coeff = jnp.where(guide == 0, scale, 1.0 - scale)
 
         def eps_combine(eps):

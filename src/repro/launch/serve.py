@@ -56,7 +56,9 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
                     exchange: str = "sync", exchange_refresh: int = 2,
                     num_stages: int = 1, cfg_scale: float = 0.0,
                     seq_shards: int = 1, num_frames: int = 1,
-                    frame_groups: int = 0, plan_cache_dir: str = None):
+                    frame_groups: int = 0, plan_cache_dir: str = None,
+                    prompt: str = None, cond_tokens: int = None,
+                    cond_seq_len: int = 32):
     """Continuous batching on a heterogeneous cluster: requests enter a FIFO
     queue, the :class:`DiffusionServingEngine` admits them into ``slots``
     concurrent lanes and drains the queue with batched denoise rounds.
@@ -71,6 +73,9 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+    text_mode = prompt is not None or cond_tokens is not None
+    if text_mode:                          # prompt lanes (DESIGN.md §17)
+        cfg = cfg.text_conditioned(cond_seq_len=cond_seq_len)
     params = dit.init_params(jax.random.PRNGKey(seed), cfg)
     sched = sampler_lib.linear_schedule(T=1000)
     config = StadiConfig.from_occupancies(list(occupancies), m_base=m_base,
@@ -94,8 +99,23 @@ def serve_diffusion(arch: str = "tiny-dit", *, occupancies=(0.0, 0.6),
         x_T = jax.random.normal(jax.random.PRNGKey(seed + 1 + uid), shape)
         scale = cfg_scale if (cfg_scale > 0 and uid % 2 == 0) else None
         n_guided += scale is not None
-        engine.submit(x_T, int(rng.integers(0, cfg.n_classes)), slo_s=slo_s,
-                      cfg_scale=scale)
+        if prompt is not None:
+            from repro.models import text_encoder
+            cond = text_encoder.encode([f"{prompt} #{uid}"], cfg)[0]
+        elif cond_tokens is not None:
+            # vary the token count per request so the engine's
+            # length-bucketed lane groups actually get exercised
+            import jax.numpy as jnp
+            from repro.models import text_encoder
+            n_tok = 1 + (uid % cond_tokens)
+            L = text_encoder.bucket_length(n_tok, cfg.cond_seq_len)
+            feats = jax.random.normal(jax.random.PRNGKey(seed + 7 + uid),
+                                      (L, cfg.cond_dim))
+            mask = (jnp.arange(L) < n_tok).astype(jnp.float32)[:, None]
+            cond = jnp.concatenate([feats * mask, mask], axis=-1)
+        else:
+            cond = int(rng.integers(0, cfg.n_classes))
+        engine.submit(x_T, cond, slo_s=slo_s, cfg_scale=scale)
     done = engine.run_to_completion()
     dt = time.time() - t0
     for req in done:
@@ -183,6 +203,21 @@ def main():
                     help="frame placement (diffusion only): 1 = frame-"
                          "sequential, > 1 = frame-parallel member rows "
                          "(needs --planner stadi_video), 0 = auto search")
+    cond_group = ap.add_mutually_exclusive_group()
+    cond_group.add_argument("--prompt", default=None,
+                            help="text prompt (diffusion only, DESIGN.md "
+                                 "§17): the model is built text-conditioned "
+                                 "and every request carries encoded prompt "
+                                 "tokens (suffixed per uid for variety)")
+    cond_group.add_argument("--cond-tokens", type=int, default=None,
+                            metavar="L",
+                            help="prompt lanes with up to L random-normal "
+                                 "conditioning tokens per request (lengths "
+                                 "vary per uid to exercise the engine's "
+                                 "length-bucketed lane groups)")
+    ap.add_argument("--cond-seq-len", type=int, default=32,
+                    help="text-conditioned models: max prompt bucket "
+                         "(DiTConfig.cond_seq_len)")
     args = ap.parse_args()
     if args.diffusion:
         if args.arch == ap.get_default("arch"):
@@ -204,8 +239,13 @@ def main():
                         seq_shards=args.seq_shards,
                         num_frames=args.num_frames,
                         frame_groups=args.frame_groups,
-                        plan_cache_dir=args.plan_cache)
+                        plan_cache_dir=args.plan_cache,
+                        prompt=args.prompt, cond_tokens=args.cond_tokens,
+                        cond_seq_len=args.cond_seq_len)
     else:
+        if args.prompt is not None or args.cond_tokens is not None:
+            ap.error("--prompt/--cond-tokens are diffusion-only "
+                     "(use --diffusion)")
         serve(args.arch, n_requests=args.requests, slots=args.slots,
               prompt_len=args.prompt_len, max_new=args.max_new)
 

@@ -87,8 +87,25 @@ def main():
                          "frame-parallel member rows (needs --planner "
                          "stadi_video; spmd_frames needs groups * workers "
                          "host devices), 0 = let stadi_video search")
-    ap.add_argument("--cond", type=int, default=0,
-                    help="class id to condition on")
+    cond_group = ap.add_mutually_exclusive_group()
+    cond_group.add_argument("--cond", type=int, default=None,
+                            help="class id to condition on (default 0; "
+                                 "mutually exclusive with --prompt / "
+                                 "--cond-tokens)")
+    cond_group.add_argument("--prompt", default=None,
+                            help="text prompt (DESIGN.md §17): encodes "
+                                 "through the frozen text encoder and runs "
+                                 "the cross-attention path (the model is "
+                                 "built text-conditioned)")
+    cond_group.add_argument("--cond-tokens", type=int, default=None,
+                            metavar="L",
+                            help="run the prompt path with L random-normal "
+                                 "conditioning tokens instead of an encoded "
+                                 "prompt (planner/perf runs that don't care "
+                                 "about the text)")
+    ap.add_argument("--cond-seq-len", type=int, default=32,
+                    help="text-conditioned models: the max prompt bucket "
+                         "(DiTConfig.cond_seq_len)")
     ap.add_argument("--rebalance-every", type=int, default=0)
     ap.add_argument("--exchange", default="sync",
                     choices=["sync", "stale_async", "predictive", "ring"],
@@ -124,13 +141,32 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    text_mode = args.prompt is not None or args.cond_tokens is not None
+    if text_mode:
+        cfg = cfg.text_conditioned(cond_seq_len=args.cond_seq_len)
     params = dit.init_params(jax.random.PRNGKey(args.seed), cfg)
     sched = sampler_lib.linear_schedule(T=1000)
     shape = (args.batch, cfg.latent_size, cfg.latent_size, cfg.channels)
     if args.num_frames > 1:          # video latent: [B, F, H, W, C]
         shape = shape[:1] + (args.num_frames,) + shape[1:]
     x_T = jax.random.normal(jax.random.PRNGKey(args.seed + 1), shape)
-    cond = jnp.full((args.batch,), args.cond % cfg.n_classes, jnp.int32)
+    if args.prompt is not None:
+        from repro.models import text_encoder
+        tok = text_encoder.encode([args.prompt], cfg)
+        cond = jnp.broadcast_to(tok, (args.batch,) + tok.shape[1:])
+        print(f"prompt bucket={tok.shape[1]} (of {cfg.cond_seq_len})")
+    elif args.cond_tokens is not None:
+        from repro.models import text_encoder
+        L = text_encoder.bucket_length(args.cond_tokens, cfg.cond_seq_len)
+        feats = jax.random.normal(jax.random.PRNGKey(args.seed + 2),
+                                  (args.batch, L, cfg.cond_dim))
+        mask = (jnp.arange(L) < args.cond_tokens).astype(jnp.float32)
+        mask = jnp.broadcast_to(mask[None, :, None], (args.batch, L, 1))
+        cond = jnp.concatenate([feats * mask, mask], axis=-1)
+        print(f"cond tokens={args.cond_tokens} bucket={L}")
+    else:
+        cond = jnp.full((args.batch,), (args.cond or 0) % cfg.n_classes,
+                        jnp.int32)
 
     knobs = {}
     if backend == "simulate":

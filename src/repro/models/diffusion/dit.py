@@ -68,8 +68,11 @@ def init_params(key, cfg: DiTConfig):
     ks = jax.random.split(key, 8)
 
     def init_block(k):
+        # km was never consumed pre-§17, so drawing the cross-attention
+        # params from it leaves every existing draw bitwise untouched —
+        # the cond_seq_len=0 degeneracy guarantee starts here
         kq, ko, k1, k2, km = jax.random.split(k, 5)
-        return {
+        blk = {
             "qkv": layers.dense_init(kq, (D, 3 * D), dt),
             "wo": layers.dense_init(ko, (D, D), dt, scale=1.0 / math.sqrt(2 * L * D)),
             "w1": layers.dense_init(k1, (D, F), dt),
@@ -77,9 +80,19 @@ def init_params(key, cfg: DiTConfig):
             "mod_w": jnp.zeros((D, 6 * D), dt),          # adaLN-zero init
             "mod_b": jnp.zeros((6 * D,), dt),
         }
+        if cfg.cross_attn:
+            # prompt cross-attention (DESIGN.md §17): queries from the
+            # hidden states, K/V projected from the cond_dim prompt tokens;
+            # the out-projection follows the adaLN-zero idiom (exact zero —
+            # an untrained model ignores the prompt entirely)
+            kx1, kx2 = jax.random.split(km, 2)
+            blk["xq"] = layers.dense_init(kx1, (D, D), dt)
+            blk["xkv"] = layers.dense_init(kx2, (cfg.cond_dim, 2 * D), dt)
+            blk["xo"] = jnp.zeros((D, D), dt)
+        return blk
 
     blocks = jax.vmap(init_block)(jax.random.split(ks[0], L))
-    return {
+    out = {
         "patch_embed": layers.dense_init(ks[1], (cfg.token_dim, D), dt),
         "patch_bias": jnp.zeros((D,), dt),
         "t_w1": layers.dense_init(ks[2], (256, D), dt),
@@ -90,6 +103,11 @@ def init_params(key, cfg: DiTConfig):
         "final_mod_b": jnp.zeros((2 * D,), dt),
         "final_proj": jnp.zeros((D, cfg.token_dim), dt),  # zero-init output
     }
+    if cfg.cross_attn:
+        # mean-pooled prompt tokens feed the adaLN conditioning vector
+        # (ks[5] was never consumed pre-§17 — see init_block)
+        out["ctx_pool"] = layers.dense_init(ks[5], (cfg.cond_dim, D), dt)
+    return out
 
 
 def nondegenerate_params(params, seed: int = 7):
@@ -108,6 +126,13 @@ def nondegenerate_params(params, seed: int = 7):
         ks[2], params["final_mod_w"].shape)
     params["final_proj"] = 0.05 * jax.random.normal(
         ks[3], params["final_proj"].shape)
+    if "xo" in blk:
+        # prompt cross-attention out-projection is adaLN-zero too; give it
+        # a deterministic value so prompts genuinely steer the trajectory.
+        # Drawn from a distinct key stream so class-conditional params stay
+        # bitwise what they were pre-§17.
+        kx = jax.random.PRNGKey(seed + 101)
+        blk["xo"] = 0.05 * jax.random.normal(kx, blk["xo"].shape)
     return params
 
 
@@ -213,6 +238,22 @@ def _cond_vector(params, cfg, t, cond, B, frame=None):
     temb = jax.nn.silu(temb.astype(params["t_w1"].dtype) @ params["t_w1"]) @ params["t_w2"]
     if cond is None:
         cemb = 0.0
+    elif getattr(cond, "ndim", 0) >= 2:
+        # prompt tokens (DESIGN.md §17): cond [B, L, cond_dim + 1], last
+        # channel the validity mask. The masked mean of the real tokens
+        # feeds the adaLN conditioning vector through ctx_pool; the CFG
+        # null branch (all-zero tokens AND mask) pools to exactly 0.0 —
+        # the token-space image of the NULL_COND zero embedding below.
+        toks, w = cond[..., :-1], cond[..., -1:]
+        pooled = jnp.sum(toks * w, axis=1) \
+            / jnp.maximum(jnp.sum(w, axis=1), 1.0)
+        # broadcast-multiply-reduce instead of ``pooled @ ctx_pool``: a
+        # [1, Dc] x [Dc, D] matmul lowers to a gemv standalone but a gemm
+        # under the serving engine's lane vmap, and the two accumulate in
+        # different orders — this form is batch-shape-invariant, keeping
+        # prompt lanes bitwise identical to single-request generate
+        pooled = pooled.astype(params["ctx_pool"].dtype)
+        cemb = jnp.sum(pooled[..., :, None] * params["ctx_pool"], axis=-2)
     else:
         # class ids >= 0 gather their embedding; the reserved NULL_COND (-1)
         # id selects the zero (unconditional) embedding — the traced-data
@@ -251,7 +292,8 @@ def embed_patch(params, cfg: DiTConfig, x_rows, t, cond, row_start,
 def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
                 buffers: Optional[Tuple] = None, return_kv: bool = True,
                 valid_tokens: Optional[jnp.ndarray] = None, enable=None,
-                attend_fn=None, ctx_tokens: Optional[int] = None):
+                attend_fn=None, ctx_tokens: Optional[int] = None,
+                prompt_ctx: Optional[Tuple] = None):
     """Run a contiguous stack of DiT blocks over hidden states ``h``.
 
     The ONE place the block math lives: ``forward_patch`` runs the whole
@@ -277,6 +319,11 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
              None = ``cfg.n_tokens`` (the pre-frames behavior); the
              multi-frame SPMD path (DESIGN.md §16) passes ``2 * n_tokens``
              for its (own frame ⊕ previous frame) concatenated context.
+    prompt_ctx: prompt conditioning (DESIGN.md §17) — (tokens [B,Lc,Dc],
+             key_mask [B,1,1,Lc] bool) cross-attended by every block
+             between self-attention and the MLP. None (the
+             cond_seq_len=0 degeneracy) traces ZERO extra ops, keeping
+             the class-conditional path bitwise.
     Returns (h', kvs) with kvs [n_blocks, B, Nl, H, hd] pairs (or None).
     """
     B, Nl, D = h.shape[0], h.shape[1], cfg.d_model
@@ -286,6 +333,12 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
         _pallas_block(cfg, tok_start, Nl, buffers[0].shape[2],
                       valid_tokens, enable)
         if buffers is not None and attend_fn is None else ("off", 0))
+    if prompt_ctx is not None and cfg.use_pallas_attention:
+        # the prompt read runs the reference attend: no Pallas cross-attn
+        # body yet (self-attention above still takes the kernel) — recorded
+        # at trace time so kernel_stats surfaces the gap honestly
+        from repro.kernels import ops as kops
+        kops.record_kernel_miss("cross-attn-unsupported")
     # Padded kernel contract: real tokens = cfg.n_tokens when the buffers
     # carry the SPMD scratch tail, else the whole buffer; a local slab with
     # no valid_tokens is entirely fresh.
@@ -341,6 +394,17 @@ def block_stack(blocks, cfg: DiTConfig, h, c, tok_start,
             else:
                 att = layers.attend(q, full_k, full_v, mask=key_mask)
         x2 = x + g1[:, None] * (att.reshape(B, Nl, D) @ bp["wo"])
+        if prompt_ctx is not None:
+            # prompt cross-attention (DESIGN.md §17): every latent token
+            # reads the prompt sequence. The CFG null branch (all-zero
+            # tokens) projects to zero V, so its read contributes exactly
+            # 0.0 — NULL_COND semantics in token space.
+            ck, cmask = prompt_ctx
+            xq = (_ln(x2) @ bp["xq"]).reshape(B, Nl, H, hd)
+            xkv = (ck.astype(x.dtype) @ bp["xkv"]).reshape(
+                B, ck.shape[1], 2, H, hd)
+            xatt = layers.attend(xq, xkv[:, :, 0], xkv[:, :, 1], mask=cmask)
+            x2 = x2 + xatt.reshape(B, Nl, D) @ bp["xo"]
         xn = _modulate(_ln(x2), sh2, sc2)
         hmid = jax.nn.gelu(xn @ bp["w1"]) @ bp["w2"]
         x2 = x2 + g2[:, None] * hmid
@@ -390,10 +454,23 @@ def forward_patch(params, cfg: DiTConfig, x_rows, t, cond,
     rows_tok = x_rows.shape[1] // cfg.patch_size         # token rows in patch
     h, c = embed_patch(params, cfg, x_rows, t, cond, row_start, frame=frame)
     tok_start = row_start * cfg.tokens_per_side
+    prompt_ctx = None
+    if getattr(cond, "ndim", 0) >= 3:
+        # prompt-token cond [B, L, cond_dim + 1] (DESIGN.md §17): split off
+        # the trailing validity-mask channel into the cross-attention key
+        # mask. cond.ndim is static under jit, so the class-conditional
+        # trace (int cond) carries zero extra ops.
+        if not cfg.cross_attn:
+            raise ValueError(
+                "prompt-token cond needs DiTConfig.cross_attn=True "
+                "(see DiTConfig.text_conditioned())")
+        ck = cond[..., :-1]
+        cmask = (cond[..., -1] > 0.5)[:, None, None, :]
+        prompt_ctx = (ck, cmask)
     h, kvs = block_stack(params["blocks"], cfg, h, c, tok_start,
                          buffers=buffers, return_kv=return_kv,
                          valid_tokens=valid_tokens, attend_fn=attend_fn,
-                         ctx_tokens=ctx_tokens)
+                         ctx_tokens=ctx_tokens, prompt_ctx=prompt_ctx)
     eps = final_head(params, cfg, h, c, rows_tok)
     return eps, kvs
 
@@ -405,11 +482,26 @@ def forward(params, cfg: DiTConfig, x, t, cond=None, frame=None):
     return eps
 
 
-def guidance_conds(cond) -> jnp.ndarray:
-    """[2, B] branch-stacked class ids: row 0 = conditional, row 1 = the
-    reserved NULL_COND unconditional branch."""
+def null_like(cond) -> jnp.ndarray:
+    """The unconditional branch for a cond of either kind: all-zero prompt
+    tokens (empty sequence — mask channel included) for token conds
+    [B, L, Dc+1], the reserved NULL_COND id for class conds [B]."""
     from repro.core.guidance import NULL_COND
-    cond = jnp.asarray(cond, jnp.int32)
+    cond = jnp.asarray(cond)
+    if cond.ndim >= 2:
+        return jnp.zeros_like(cond)
+    return jnp.full_like(cond.astype(jnp.int32), NULL_COND)
+
+
+def guidance_conds(cond) -> jnp.ndarray:
+    """Branch-stacked conds: row 0 = conditional, row 1 = the unconditional
+    branch. [2, B] class ids for class conds; [2, B, L, Dc+1] for prompt
+    tokens (row 1 the all-zero empty sequence — see text_encoder.null_cond)."""
+    from repro.core.guidance import NULL_COND
+    cond = jnp.asarray(cond)
+    if cond.ndim >= 2:
+        return jnp.stack([cond, jnp.zeros_like(cond)])
+    cond = cond.astype(jnp.int32)
     return jnp.stack([cond, jnp.full_like(cond, NULL_COND)])
 
 

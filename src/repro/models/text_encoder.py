@@ -1,0 +1,201 @@
+"""Frozen text-encoder stub: deterministic prompt tokens for the DiT
+(DESIGN.md §17).
+
+A real T2I/T2V deployment runs a CLIP/T5 tower whose output — a
+``[B, L, D]`` sequence of prompt tokens — is what the denoiser
+cross-attends. This module is that tower's *scheduling stand-in*: a
+hash-token embedding + sinusoidal positions + a tiny frozen transformer,
+all derived deterministically from one seed, so every executor / process /
+test sees bitwise-identical prompt tokens for the same prompt string. The
+encoder is FROZEN by construction (params are a pure function of the seed;
+nothing is ever trained), which is also how production prompt towers are
+served.
+
+Conventions the rest of the stack relies on:
+
+- ``encode`` returns ``[B, L, cond_dim + 1]``: the last channel is a
+  validity mask (1.0 = real token, 0.0 = bucket padding). Padded
+  positions are zeroed in EVERY channel, so one prompt encoded into one
+  bucket is bitwise-identical regardless of what shares the batch — the
+  serving engine's per-request-bitwise-vs-generate guarantee depends on
+  it.
+- The classifier-free-guidance null branch is the EMPTY sequence:
+  ``null_cond`` is all-zeros (mask 0 everywhere). Zero tokens project to
+  zero K/V, so cross-attention contributes exactly 0.0 and the pooled
+  conditioning vector is exactly 0.0 — the token-space image of the
+  reserved ``NULL_COND`` class id (dit._cond_vector's zero embedding).
+- Variable-length prompts are padded to power-of-two BUCKETS
+  (:func:`bucket_length`): each bucket is its own jit specialization and
+  its own serving lane group / plan-cache key component.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import math
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.diffusion import DiTConfig
+from repro.models import layers
+
+#: hash-token vocabulary (open-vocab prompts fold onto it deterministically)
+VOCAB = 1024
+#: frozen-tower depth / width multipliers (tiny on purpose: the encoder is
+#: a latency- and numerics-faithful stand-in, not a quality model)
+N_LAYERS = 2
+N_HEADS = 4
+#: smallest prompt bucket (lengths below it still pad to it)
+MIN_BUCKET = 4
+#: the one seed every process derives the frozen tower from
+DEFAULT_SEED = 1234
+
+
+def tokenize(prompt: str, max_len: int) -> List[int]:
+    """Deterministic open-vocabulary tokenization: whitespace words, each
+    hashed (sha256) onto the fixed VOCAB. Truncates to ``max_len``.
+    Stable across processes and Python hash randomization."""
+    words = prompt.strip().lower().split()
+    ids = []
+    for w in words[:max_len]:
+        h = hashlib.sha256(w.encode("utf-8")).digest()
+        ids.append(int.from_bytes(h[:4], "big") % VOCAB)
+    return ids
+
+
+def bucket_length(n_tokens: int, cond_seq_len: int) -> int:
+    """Smallest power-of-two bucket >= n_tokens (floor MIN_BUCKET, cap
+    cond_seq_len). The bucket is the serving batching axis: lanes sharing
+    a bucket share one jitted dispatch shape."""
+    if cond_seq_len < 1:
+        raise ValueError("bucket_length needs cond_seq_len >= 1 "
+                         f"(got {cond_seq_len}) — is cross_attn configured?")
+    n = max(int(n_tokens), 1)
+    b = MIN_BUCKET
+    while b < n:
+        b *= 2
+    return min(b, cond_seq_len)
+
+
+@functools.lru_cache(maxsize=8)
+def frozen_params(cond_dim: int, seed: int = DEFAULT_SEED):
+    """The frozen tower's params — a pure function of (cond_dim, seed).
+
+    Embedding table + N_LAYERS pre-LN bidirectional transformer blocks at
+    width cond_dim. Cached so repeated encodes share one pytree (and one
+    jit cache)."""
+    D = cond_dim
+    F = 4 * D
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 1 + N_LAYERS)
+    dt = jnp.float32
+
+    def init_block(k):
+        kq, ko, k1, k2 = jax.random.split(k, 4)
+        return {
+            "qkv": layers.dense_init(kq, (D, 3 * D), dt),
+            "wo": layers.dense_init(ko, (D, D), dt,
+                                    scale=1.0 / math.sqrt(2 * N_LAYERS * D)),
+            "w1": layers.dense_init(k1, (D, F), dt),
+            "w2": layers.dense_init(k2, (F, D), dt,
+                                    scale=1.0 / math.sqrt(2 * N_LAYERS * F)),
+        }
+
+    blocks = jax.vmap(init_block)(jax.random.split(ks[0], N_LAYERS))
+    return {
+        "embed": layers.embed_init(ks[1], (VOCAB, D), dt),
+        "blocks": blocks,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cond_dim",))
+def _encode_ids(params, ids, mask, cond_dim: int):
+    """[B, L] hash-token ids + [B, L] validity mask -> [B, L, cond_dim]
+    prompt tokens (padded positions zeroed)."""
+    B, L = ids.shape
+    D = cond_dim
+    H = N_HEADS
+    hd = D // H
+    pos = jnp.arange(L, dtype=jnp.float32)
+    h = params["embed"][jnp.clip(ids, 0)] \
+        + layers.sinusoidal_embedding(pos, D)[None]
+    key_mask = (mask > 0.5)[:, None, None, :]            # [B,1,1,L]
+
+    def block(x, bp):
+        xn = layers.rms_norm(x, jnp.zeros((D,)))
+        qkv = (xn @ bp["qkv"]).reshape(B, L, 3, H, hd)
+        att = layers.attend(qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2],
+                            mask=key_mask)
+        x = x + att.reshape(B, L, D) @ bp["wo"]
+        xn = layers.rms_norm(x, jnp.zeros((D,)))
+        x = x + jax.nn.gelu(xn @ bp["w1"]) @ bp["w2"]
+        return x, None
+
+    h, _ = jax.lax.scan(block, h, params["blocks"])
+    # zero out padding so a prompt's tokens are independent of bucket junk
+    return h * mask[..., None]
+
+
+def encode(prompts: Union[str, Sequence[str]], cfg: DiTConfig, *,
+           length: Optional[int] = None,
+           seed: int = DEFAULT_SEED) -> jnp.ndarray:
+    """Encode prompt string(s) into ``[B, L, cond_dim + 1]`` cond tokens.
+
+    ``length`` pins the padded bucket (defaults to the per-batch
+    :func:`bucket_length`); the final channel is the validity mask. The
+    returned array is the ``cond`` every executor consumes opaquely —
+    ``cond.ndim == 3`` is the static (shape-level) signal that a workload
+    is prompt- rather than class-conditioned.
+    """
+    if not cfg.cross_attn or cfg.cond_seq_len < 1:
+        raise ValueError(
+            "prompt conditioning needs a text-conditioned model config "
+            "(DiTConfig.cross_attn=True, cond_seq_len >= 1) — see "
+            "DiTConfig.text_conditioned()")
+    if isinstance(prompts, str):
+        prompts = [prompts]
+    tok = [tokenize(p, cfg.cond_seq_len) for p in prompts]
+    L = length or bucket_length(max((len(t) for t in tok), default=1),
+                                cfg.cond_seq_len)
+    if L > cfg.cond_seq_len:
+        raise ValueError(f"bucket {L} exceeds cond_seq_len "
+                         f"{cfg.cond_seq_len}")
+    B = len(tok)
+    ids = jnp.asarray([t[:L] + [0] * (L - len(t)) for t in tok], jnp.int32)
+    mask = jnp.asarray([[1.0] * min(len(t), L) + [0.0] * (L - min(len(t), L))
+                        for t in tok], jnp.float32)
+    h = _encode_ids(frozen_params(cfg.cond_dim, seed), ids, mask,
+                    cfg.cond_dim)
+    return jnp.concatenate([h, mask[..., None]], axis=-1)
+
+
+def null_cond(batch: int, length: int, cfg: DiTConfig) -> jnp.ndarray:
+    """The CFG null branch: an EMPTY prompt sequence — all channels
+    (including the validity mask) exactly zero. Cross-attending it
+    contributes exactly 0.0 (zero tokens project to zero K/V), preserving
+    NULL_COND semantics in token space."""
+    return jnp.zeros((batch, length, cfg.cond_dim + 1), jnp.float32)
+
+
+def cond_tokens_from_ids(ids: Sequence[int], cfg: DiTConfig, *,
+                         length: Optional[int] = None,
+                         seed: int = DEFAULT_SEED) -> jnp.ndarray:
+    """Encode raw hash-token ids (the ``--cond-tokens`` CLI path) into one
+    ``[1, L, cond_dim + 1]`` cond array."""
+    ids = [int(i) % VOCAB for i in ids]
+    if not ids:
+        raise ValueError("--cond-tokens needs at least one token id")
+    L = length or bucket_length(len(ids), cfg.cond_seq_len)
+    if not cfg.cross_attn or cfg.cond_seq_len < 1:
+        raise ValueError(
+            "prompt conditioning needs a text-conditioned model config "
+            "(DiTConfig.cross_attn=True, cond_seq_len >= 1)")
+    ids = ids[:L]
+    idv = jnp.asarray([ids + [0] * (L - len(ids))], jnp.int32)
+    mask = jnp.asarray([[1.0] * len(ids) + [0.0] * (L - len(ids))],
+                       jnp.float32)
+    h = _encode_ids(frozen_params(cfg.cond_dim, seed), idv, mask,
+                    cfg.cond_dim)
+    return jnp.concatenate([h, mask[..., None]], axis=-1)

@@ -70,7 +70,9 @@ class DiffusionRequest:
     """
     uid: int
     x_T: jnp.ndarray                     # [1, H, W, C]
-    cond: jnp.ndarray                    # [1] int32
+    # class conditioning: [1] int32; prompt conditioning (DESIGN.md §17):
+    # [1, L, cond_dim+1] float32 tokens+mask, L the request's length bucket
+    cond: jnp.ndarray
     slo_s: Optional[float] = None        # modeled-latency SLO target
     # classifier-free guidance (DESIGN.md §12): None = unguided request;
     # > 0 = this request denoises with eps_u + cfg_scale*(eps_c - eps_u)
@@ -520,6 +522,12 @@ class DiffusionServingEngine:
         self._pub_k = jnp.zeros(kshape, kdt)
         self._pub_v = jnp.zeros(kshape, kdt)
         self._cond = jnp.zeros((slots, 1), jnp.int32)
+        # prompt conditioning (DESIGN.md §17): with a text-conditioned
+        # model every request carries a [1, L, cond_dim+1] token tensor.
+        # L varies per request (the encoder's power-of-two length bucket),
+        # so prompt conds live on the requests — _conds() stacks a lane
+        # group's, and the group key pins one bucket per dispatch.
+        self._prompt_mode = bool(cfg.cross_attn)
         # guided lanes: branch-stacked published K/V [slots,2,L,1,N,H,hd]
         # + per-lane cfg_scale; allocated on the first guided submission so
         # CFG-free serving carries no extra state
@@ -645,7 +653,9 @@ class DiffusionServingEngine:
             trace = sim.build_trace(plan.temporal, plan.patches, cfg,
                                     batch=1, exchange=config.exchange,
                                     exchange_refresh=config.exchange_refresh,
-                                    frames=self.frames)
+                                    frames=self.frames,
+                                    guidance=plan.guidance,
+                                    cond_tokens=(config.cond_bucket or None))
             self._latent_bytes = trace.latent_bytes
             self._kv_bytes = trace.kv_bytes_per_worker
             self._act_row_bytes = trace.act_row_bytes
@@ -741,6 +751,12 @@ class DiffusionServingEngine:
         guidance, DESIGN.md §12); None inherits the pipeline config's
         cfg_scale (0 = unguided). CFG and non-CFG requests mix freely —
         guidance state is per lane.
+
+        With a text-conditioned model (DESIGN.md §17) ``cond`` is a
+        prompt-token tensor ``[L, cond_dim+1]`` or ``[1, L, cond_dim+1]``
+        from :func:`repro.models.text_encoder.encode`; lane groups are
+        keyed by the length bucket L, so one batched dispatch never mixes
+        buckets.
         """
         x_T = jnp.asarray(x_T)
         if self.frames is not None:
@@ -756,15 +772,55 @@ class DiffusionServingEngine:
                     f"request carries {x_T.shape[1]} frames, the plan "
                     f"serves {self.frames.num_frames}")
             if cfg_scale is not None and cfg_scale > 0:
-                raise ValueError(
-                    "classifier-free guidance is not composed with the "
-                    "frame axis — submit video requests with cfg_scale=0")
+                # guided video (DESIGN.md §17): the clip runs its WHOLE
+                # schedule through the frame executor under the PLAN's
+                # fused guidance — a per-request scale cannot override it
+                gplan = self.plan.guidance
+                if gplan is None:
+                    raise ValueError(
+                        "guided video lanes run the plan's fused CFG: "
+                        "plan with cfg_scale > 0 (e.g. "
+                        "planner='stadi_video') instead of a per-request "
+                        "scale")
+                if float(cfg_scale) != float(gplan.scale):
+                    raise ValueError(
+                        "video lanes run whole-clip schedules through the "
+                        f"planned executor: per-request cfg_scale="
+                        f"{cfg_scale} cannot override the plan's fused "
+                        f"scale {gplan.scale}")
         elif x_T.ndim == 3:
             x_T = x_T[None]
         if x_T.shape[0] != 1:
             raise ValueError("one request = one image; got batch "
                              f"{x_T.shape[0]} (submit per image)")
-        cond = jnp.asarray(cond, jnp.int32).reshape((1,))
+        if self._prompt_mode:
+            cond = jnp.asarray(cond, jnp.float32)
+            if cond.ndim == 2:
+                cond = cond[None]
+            if cond.ndim != 3 or cond.shape[0] != 1:
+                raise ValueError(
+                    "a text-conditioned model takes prompt tokens "
+                    "[L, cond_dim+1] or [1, L, cond_dim+1] (see "
+                    "repro.models.text_encoder.encode), got shape "
+                    f"{tuple(jnp.shape(cond))}")
+            mcfg = self.pipeline.model_cfg
+            if cond.shape[-1] != mcfg.cond_dim + 1:
+                raise ValueError(
+                    f"prompt tokens carry cond_dim+1={mcfg.cond_dim + 1} "
+                    f"channels (features + validity mask), got "
+                    f"{cond.shape[-1]}")
+            if not 1 <= cond.shape[1] <= mcfg.cond_seq_len:
+                raise ValueError(
+                    f"prompt bucket {cond.shape[1]} is outside "
+                    f"[1, cond_seq_len={mcfg.cond_seq_len}]")
+        else:
+            if getattr(np.asarray(cond), "ndim", 0) >= 2:
+                raise ValueError(
+                    "prompt-token cond needs a text-conditioned model "
+                    "(DiTConfig.cross_attn=True, e.g. "
+                    "cfg.text_conditioned()); this engine serves class-"
+                    "conditional requests")
+            cond = jnp.asarray(cond, jnp.int32).reshape((1,))
         if uid is None:
             uid, self._next_uid = self._next_uid, self._next_uid + 1
         else:
@@ -773,7 +829,7 @@ class DiffusionServingEngine:
             cfg_scale = self.default_scale
         req = DiffusionRequest(uid=uid, x_T=x_T, cond=cond, slo_s=slo_s,
                                cfg_scale=cfg_scale)
-        if req.guided:
+        if req.guided and self.frames is None:
             if not self.stepper.supports_guidance:
                 raise ValueError(
                     f"backend {self.pipeline.config.backend!r} has no "
@@ -797,7 +853,8 @@ class DiffusionServingEngine:
             req = self.queue.pop(0)
             slot = next(s for s in range(self.slots) if s not in self.active)
             self._x = self._x.at[slot].set(req.x_T)
-            self._cond = self._cond.at[slot].set(req.cond)
+            if not self._prompt_mode:    # prompt conds live on the request
+                self._cond = self._cond.at[slot].set(req.cond)
             self._scales[slot] = req.cfg_scale if req.guided else 0.0
             req.fine_step = 0
             req.admit_round = report.index
@@ -902,31 +959,32 @@ class DiffusionServingEngine:
                        if r.fine_step >= M_w)
         report.warmup_lanes, report.adaptive_lanes = warm, adapt
 
-        for guided, lanes in self._by_guided(warm):
+        for guided, bucket, lanes in self._by_guided(warm):
             idx = self._pad(lanes)
             fine = np.asarray([self.active[s].fine_step for s in idx])
             if guided:
                 xs, k2s, v2s = self.stepper.warmup_step_guided(
                     self._x[idx], self._ts[fine], self._ts[fine + 1],
-                    self._cond[idx], jnp.asarray(self._scales[idx]))
+                    self._conds(idx), jnp.asarray(self._scales[idx]))
                 self._x = self._x.at[idx].set(xs)
                 self._gk = self._gk.at[idx].set(k2s)
                 self._gv = self._gv.at[idx].set(v2s)
             else:
                 xs, ks, vs = self.stepper.warmup_step(
                     self._x[idx], self._ts[fine], self._ts[fine + 1],
-                    self._cond[idx])
+                    self._conds(idx))
                 self._scatter(idx, xs, ks, vs)
             for s in lanes:
                 self.active[s].fine_step += 1
-            _, cost = self._phase_cost(len(lanes), warm=True, guided=guided)
+            _, cost = self._phase_cost(len(lanes), warm=True, guided=guided,
+                                       cond_tokens=bucket)
             report.modeled_s += cost
 
         if adapt:
             placement = None
             wants_ctx = getattr(self.stepper, "wants_ctx", False)
             for group, (read_factor, trail_kind, fill, seq_hops,
-                        guided) in self._groups(adapt):
+                        guided, bucket) in self._groups(adapt):
                 idx = self._pad(group)
                 fine = np.asarray([self.active[s].fine_step for s in idx])
                 merge = trail_kind == "full"
@@ -938,7 +996,7 @@ class DiffusionServingEngine:
                         bv = buf_lib.extrapolate_arrays(
                             bv, self._prev_gv[idx], read_factor)
                     xs, ks, vs = self.stepper.interval_guided(
-                        self._x[idx], fine, self._cond[idx],
+                        self._x[idx], fine, self._conds(idx),
                         jnp.asarray(self._scales[idx]), bk, bv, merge=merge)
                     self._x = self._x.at[idx].set(xs)
                     if merge:
@@ -953,7 +1011,7 @@ class DiffusionServingEngine:
                         self.active[s].fine_step += R
                     placement, cost = self._phase_cost(
                         len(group), warm=False, kind=trail_kind, fill=fill,
-                        guided=True, seq_hops=seq_hops)
+                        guided=True, seq_hops=seq_hops, cond_tokens=bucket)
                     report.modeled_s += cost
                     report.exchange_kinds.append(trail_kind)
                     continue
@@ -972,14 +1030,14 @@ class DiffusionServingEngine:
                         self._ctx_v = self._ctx_v.at[idx].set(
                             self._pub_v[idx])
                     xs, ks, vs, ck, cv = self.stepper.interval_ctx(
-                        self._x[idx], fine, self._cond[idx], bk, bv,
+                        self._x[idx], fine, self._conds(idx), bk, bv,
                         self._ctx_k[idx], self._ctx_v[idx],
                         merge=merge)
                     self._ctx_k = self._ctx_k.at[idx].set(ck)
                     self._ctx_v = self._ctx_v.at[idx].set(cv)
                 else:
                     xs, ks, vs = self.stepper.interval(
-                        self._x[idx], fine, self._cond[idx], bk, bv,
+                        self._x[idx], fine, self._conds(idx), bk, bv,
                         merge=merge)
                 self._x = self._x.at[idx].set(xs)
                 if merge:
@@ -996,7 +1054,8 @@ class DiffusionServingEngine:
                 placement, cost = self._phase_cost(len(group), warm=False,
                                                    kind=trail_kind,
                                                    fill=fill,
-                                                   seq_hops=seq_hops)
+                                                   seq_hops=seq_hops,
+                                                   cond_tokens=bucket)
                 report.modeled_s += cost
                 report.exchange_kinds.append(trail_kind)
             report.placement = placement
@@ -1090,49 +1149,73 @@ class DiffusionServingEngine:
         return np.asarray(list(lanes)
                           + [lanes[0]] * (self.slots - len(lanes)))
 
+    def _conds(self, idx: np.ndarray) -> jnp.ndarray:
+        """Lane-stacked conditioning for a padded lane group: the
+        slot-major int buffer for class lanes; in prompt mode (§17) a
+        stack of the requests' token tensors [G, 1, L, cond_dim+1] — the
+        lane-group key pins one length bucket L per dispatch, so the
+        stack is rectangular by construction."""
+        if not self._prompt_mode:
+            return self._cond[idx]
+        return jnp.stack([self.active[s].cond for s in idx])
+
     def _scatter(self, idx: np.ndarray, xs, ks, vs) -> None:
         self._x = self._x.at[idx].set(xs)
         self._pub_k = self._pub_k.at[idx].set(ks)
         self._pub_v = self._pub_v.at[idx].set(vs)
 
+    def _lane_bucket(self, slot: int) -> int:
+        """The lane's prompt length bucket (0 for class-conditional
+        lanes): prompt-token tensors of different buckets cannot share a
+        stacked dispatch, so the bucket joins every lane-group key (§17)."""
+        return (self.active[slot].cond.shape[1] if self._prompt_mode
+                else 0)
+
     def _by_guided(self, lanes: List[int]
-                   ) -> List[Tuple[bool, List[int]]]:
-        """Split a lane list into (guided?, lanes) batches, plain first —
-        CFG and non-CFG lanes run different dispatch shapes."""
-        plain = [s for s in lanes if not self.active[s].guided]
-        guided = [s for s in lanes if self.active[s].guided]
-        return [(g, ls) for g, ls in ((False, plain), (True, guided)) if ls]
+                   ) -> List[Tuple[bool, int, List[int]]]:
+        """Split a lane list into (guided?, bucket, lanes) batches, plain
+        first — CFG and non-CFG lanes run different dispatch shapes, and
+        prompt lanes of different length buckets different cond shapes."""
+        keyed: Dict[Tuple[bool, int], List[int]] = {}
+        for s in lanes:
+            keyed.setdefault((self.active[s].guided,
+                              self._lane_bucket(s)), []).append(s)
+        return [(g, b, keyed[(g, b)]) for g, b in sorted(keyed)]
 
     def _groups(self, lanes: List[int]
                 ) -> List[Tuple[List[int],
-                                Tuple[float, str, bool, int, bool]]]:
+                                Tuple[float, str, bool, int, bool, int]]]:
         """Batchable lane groups + their (read_factor, trail_kind, fill,
-        seq_hops, guided) info. The vmapped stepper batches every lane whose
-        boundary behavior, seq-shard ring identity AND guidance state match
-        (under "sync" with no CFG lanes and no seq sharding that is ONE
-        group, as before); the cohort-only (spmd) stepper groups by
-        fine-step position, which pins the exchange info automatically (it
-        never serves guided lanes)."""
+        seq_hops, guided, bucket) info. The vmapped stepper batches every
+        lane whose boundary behavior, seq-shard ring identity, guidance
+        state AND prompt length bucket match (under "sync" with no CFG
+        lanes, no seq sharding and one bucket that is ONE group, as
+        before); the cohort-only (spmd) stepper groups by fine-step
+        position and bucket, which pins the exchange info automatically
+        (it never serves guided lanes)."""
         if not self.stepper.cohort_only:
-            keyed: Dict[Tuple[float, str, bool, int, bool], List[int]] = {}
+            keyed: Dict[Tuple[float, str, bool, int, bool, int],
+                        List[int]] = {}
             for s in lanes:
                 keyed.setdefault(self._lane_info(s), []).append(s)
             return [(keyed[k], k) for k in sorted(keyed)]
-        cohorts: Dict[int, List[int]] = {}
+        cohorts: Dict[Tuple[int, int], List[int]] = {}
         for s in lanes:
-            cohorts.setdefault(self.active[s].fine_step, []).append(s)
-        return [(cohorts[f], self._lane_info(cohorts[f][0]))
-                for f in sorted(cohorts)]
+            key = (self.active[s].fine_step, self._lane_bucket(s))
+            cohorts.setdefault(key, []).append(s)
+        return [(cohorts[k], self._lane_info(cohorts[k][0]))
+                for k in sorted(cohorts)]
 
-    def _lane_info(self, slot: int) -> Tuple[float, str, bool, int, bool]:
+    def _lane_info(self, slot: int
+                   ) -> Tuple[float, str, bool, int, bool, int]:
         info = self._interval_info[self.active[slot].fine_step]
-        return info + (self.active[slot].guided,)
+        return info + (self.active[slot].guided, self._lane_bucket(slot))
 
     # ---------------- modeled cost & placement ----------------
 
     def _phase_cost(self, group: int, warm: bool, kind: str = "full",
                     fill: bool = False, guided: bool = False,
-                    seq_hops: int = 0
+                    seq_hops: int = 0, cond_tokens: int = 0
                     ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
         """Placement + modeled seconds for one batched phase of a round.
 
@@ -1148,21 +1231,25 @@ class DiffusionServingEngine:
         each patch worker on a GROUP of ``seq.n_shards`` devices (placement
         entries map workers to groups, speed = group aggregate) and overlap
         ``seq_hops`` ring K/V hops per substep with compute, exactly as in
-        ``simulate._simulate_seq``.
+        ``simulate._simulate_seq``. Prompt lanes (DESIGN.md §17) add the
+        cross-attention read ``t_xattn * cond_tokens`` per row per branch,
+        exactly as ``simulate_trace`` prices it.
         """
         if self.stages is not None and len(self.stages) > 1:
-            return self._staged_phase_cost(group, warm, kind, fill)
+            return self._staged_phase_cost(group, warm, kind, fill,
+                                           cond_tokens)
         if guided and self._guide_pairs is not None:
-            return self._split_phase_cost(group, warm, kind)
+            return self._split_phase_cost(group, warm, kind, cond_tokens)
         plan, cm = self.plan, self.cm
         temporal = plan.temporal
         branch = 2 if guided else 1
+        t_row_eff = cm.t_row + cm.t_xattn * cond_tokens
         workers = [i for i in temporal.active if plan.patches[i] > 0]
         loads = {}
         for i in workers:
             sub = 1 if warm else temporal.lcm // temporal.ratios[i]
             loads[i] = sub * (cm.t_fixed
-                              + cm.t_row * plan.patches[i] * group * branch)
+                              + t_row_eff * plan.patches[i] * group * branch)
         by_load = sorted(workers, key=lambda i: (-loads[i], i))
         speeds = self.measured_speeds
         if self._seq_groups is not None:
@@ -1201,7 +1288,8 @@ class DiffusionServingEngine:
         comm = comm_bytes / cm.link_bw + cm.link_latency
         return placement, max(compute, async_t, ring_t) + comm
 
-    def _split_phase_cost(self, group: int, warm: bool, kind: str = "full"
+    def _split_phase_cost(self, group: int, warm: bool, kind: str = "full",
+                          cond_tokens: int = 0
                           ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
         """Split-guidance cohort placement + modeled seconds (DESIGN.md
         §12/§14): logical worker i runs BOTH branches concurrently on its
@@ -1226,7 +1314,8 @@ class DiffusionServingEngine:
             rows = plan.patches[i]
             pair_v = min(speeds[g.cond_devices[i]],
                          speeds[g.uncond_devices[i]])
-            step_t = cm.t_fixed + cm.t_row * rows * group
+            step_t = cm.t_fixed + (cm.t_row + cm.t_xattn * cond_tokens) \
+                * rows * group
             compute = max(compute, sub * step_t / max(pair_v, 1e-9))
             eps_bytes += 2 * sub * rows * row_bytes * group
             hops = max(hops, sub)
@@ -1249,7 +1338,7 @@ class DiffusionServingEngine:
         return placement, max(compute, async_t) + comm + eps_t
 
     def _staged_phase_cost(self, group: int, warm: bool, kind: str,
-                           fill: bool
+                           fill: bool, cond_tokens: int = 0
                            ) -> Tuple[Tuple[Tuple[int, int], ...], float]:
         """Stage-chain placement + modeled seconds (DESIGN.md §11): stage d
         (chain order, heaviest block share first by construction) runs on
@@ -1259,6 +1348,11 @@ class DiffusionServingEngine:
         ring handoff on draining boundaries. K/V never crosses stages.
         Placement entries are (stage, device)."""
         plan, cm = self.plan, self.cm
+        if cond_tokens:
+            # fold the cross-attn read into the row rate, exactly as
+            # simulate._simulate_staged does (DESIGN.md §17)
+            cm = dataclasses.replace(
+                cm, t_row=cm.t_row + cm.t_xattn * cond_tokens)
         temporal = plan.temporal
         S = len(self.stages)
         speeds = self.measured_speeds

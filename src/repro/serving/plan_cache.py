@@ -41,8 +41,10 @@ from repro.core.schedule import TemporalPlan
 from repro.core.seqpar import SeqPlan
 
 #: bump when the serialized plan layout changes — old entries miss cleanly
-#: (2: the frame axis, DESIGN.md §16)
-CACHE_VERSION = 2
+#: (2: the frame axis, DESIGN.md §16; 3: the prompt bucket in the workload
+#: key + prompt-priced plans, DESIGN.md §17 — a v2 entry was priced with
+#: t_xattn unthreaded and must invalidate loudly, not deserialize)
+CACHE_VERSION = 3
 
 DEFAULT_CACHE_DIR = os.path.join("results", "plan_cache")
 

@@ -258,7 +258,10 @@ def test_pipeline_rejects_bad_frame_configs(setup):
         (dict(frame_groups=4), "cannot split"),            # > num_frames
         (dict(num_frames=8, frame_groups=3,
               planner="stadi_video"), "infeasible"),       # > n_devices
-        (dict(cfg_scale=2.0), "classifier-free guidance"),
+        # §17 lifted the CFG x frames gate for FUSED placement only —
+        # split/interleaved branch meshes still collide with member rows
+        (dict(cfg_scale=2.0, guidance="split"), "fused"),
+        (dict(cfg_scale=2.0, guidance="interleaved"), "fused"),
         (dict(seq_shards=2), "sequence sharding"),
         (dict(num_stages=2), "displaced patch pipeline"),
         (dict(rebalance_every=2), "rebalancing"),
@@ -271,6 +274,10 @@ def test_pipeline_rejects_bad_frame_configs(setup):
     with pytest.raises(ValueError, match="stadi_video"):
         StadiPipeline(cfg, params, sched,
                       dataclasses.replace(base, frame_groups=2)).plan()
+    # fused CFG on frames is allowed now (guided video, DESIGN.md §17)
+    StadiPipeline(cfg, params, sched,
+                  dataclasses.replace(base, cfg_scale=2.0,
+                                      guidance="fused"))   # fine
 
 
 def test_check_backend_can_run_rejects_frame_mismatch(setup):
@@ -415,7 +422,9 @@ def test_serving_video_lane_rejections(setup):
         engine.submit(x_T[:, :2], 1)
     with pytest.raises(ValueError, match="one clip"):
         engine.submit(jnp.concatenate([x_T, x_T]), 1)
-    with pytest.raises(ValueError, match="cfg_scale=0"):
+    # §17: guided video runs the PLAN's fused CFG — a per-request scale on
+    # an unguided video plan is rejected toward planning guided instead
+    with pytest.raises(ValueError, match="fused CFG"):
         engine.submit(x_T, 1, cfg_scale=2.0)
 
 

@@ -5,6 +5,7 @@ search entirely (planner_calls counter) while any key-component change —
 cluster speeds, model config, workload shape — misses."""
 import dataclasses
 import glob
+import json
 import os
 
 import jax
@@ -15,7 +16,7 @@ from repro.core import sampler as sampler_lib
 from repro.core.pipeline import StadiConfig, StadiPipeline
 from repro.core.simulate import CostModel
 from repro.models.diffusion import dit
-from repro.serving.plan_cache import PlanCache
+from repro.serving.plan_cache import CACHE_VERSION, PlanCache
 
 
 @pytest.fixture(scope="module")
@@ -233,6 +234,80 @@ def test_frame_axis_is_a_key_component(setup, tmp_path):
     pinned.plan()
     assert pinned.planner_calls == 1         # placement knob is in the key
     assert pinned.plan().frames.n_groups == 2
+
+
+def test_cache_version_bump_invalidates_old_entries_loudly(setup, tmp_path):
+    """Migration across a CACHE_VERSION bump (v2 -> v3, DESIGN.md §17): an
+    entry persisted by the previous release — valid layout, old version
+    tag — must invalidate loudly (warning + corrupt counter + removal) and
+    be re-planned live, never deserialize. A v2 plan was priced with
+    t_xattn unthreaded, so silently reusing it would be wrong."""
+    pipe = _pipe(setup, tmp_path)
+    live = pipe.plan()
+    path = pipe.plan_cache._path(pipe.last_plan_key)
+    with open(path) as f:
+        entry = json.load(f)
+    entry["version"] = CACHE_VERSION - 1     # a pre-bump release's entry
+    with open(path, "w") as f:
+        json.dump(entry, f)
+    fresh = _pipe(setup, tmp_path)
+    with pytest.warns(RuntimeWarning, match="version"):
+        recovered = fresh.plan()
+    assert recovered == live                 # live planning took over
+    assert fresh.planner_calls == 1
+    assert fresh.plan_cache.corrupt == 1
+    # the stale entry was dropped and re-persisted at the current version
+    with open(path) as f:
+        assert json.load(f)["version"] == CACHE_VERSION
+    migrated = _pipe(setup, tmp_path)
+    migrated.plan()
+    assert migrated.planner_calls == 0
+
+
+def test_prompt_bucket_is_a_key_component(setup, tmp_path):
+    """The prompt bucket (DESIGN.md §17) is part of the workload key: the
+    derived bucket (cond_seq_len) and an explicit equal cond_bucket share
+    one entry, a shorter serving bucket prices differently and gets its
+    own, and identical prompt workloads hit."""
+    cfg, params, sched = setup
+    tcfg = cfg.text_conditioned(cond_seq_len=16)
+    derived = _pipe(setup, tmp_path, cfg=tcfg)
+    derived.plan()
+    assert derived.planner_calls == 1
+    explicit = _pipe(setup, tmp_path, cfg=tcfg, cond_bucket=16)
+    explicit.plan()
+    assert explicit.planner_calls == 0       # same bucket -> same key
+    short = _pipe(setup, tmp_path, cfg=tcfg, cond_bucket=8)
+    short.plan()
+    assert short.planner_calls == 1          # bucket change -> own entry
+    again = _pipe(setup, tmp_path, cfg=tcfg, cond_bucket=8)
+    again.plan()
+    assert again.planner_calls == 0
+    assert again.plan_cache.hits == 1
+
+
+def test_cache_roundtrips_guided_video_prompt_plan(setup, tmp_path):
+    """Seven knobs feed one key — steps, patches, stages, guidance, seq,
+    frames, prompt bucket. The fullest co-resident plan (guided video on a
+    text-conditioned model) survives the disk round trip bit-exactly."""
+    cfg, params, sched = setup
+    tcfg = cfg.text_conditioned(cond_seq_len=16)
+    config = _config([1.0, 1.0, 0.5, 0.5], m_base=8, m_warmup=2,
+                     planner="stadi_video", num_frames=4,
+                     guidance="fused", cfg_scale=3.0, backend="simulate",
+                     cost_model=CostModel(t_fixed=1e-3, t_row=1e-4,
+                                          t_xattn=1e-6),
+                     plan_cache_dir=str(tmp_path))
+    pipe = StadiPipeline(tcfg, params, sched, config)
+    planned = pipe.plan()
+    assert planned.guidance is not None and planned.guidance.mode == "fused"
+    assert planned.frames is not None
+    fresh = StadiPipeline(tcfg, params, sched, config)
+    cached = fresh.plan()
+    assert fresh.planner_calls == 0
+    assert cached == planned
+    assert cached.guidance == planned.guidance
+    assert cached.frames == planned.frames
 
 
 def test_plan_cache_standalone_invalidate_counts_real_removals(tmp_path):

@@ -1,0 +1,429 @@
+"""Prompt conditioning as a first-class workload (DESIGN.md §17): the
+frozen text encoder, the cond_seq_len=0 bitwise degeneracy on emulated AND
+spmd executors, prompt serving parity across every exchange policy, the
+lifted CFG x frames gate (guided text-to-video), t_xattn pricing, the
+recorded cross-attention kernel gap, and the engine's prompt validation."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import patch_parallel as pp
+from repro.core import sampler as sampler_lib
+from repro.core.guidance import NULL_COND, GuidancePlan
+from repro.core.pipeline import StadiConfig, StadiPipeline
+from repro.models import text_encoder
+from repro.models.diffusion import dit
+from repro.serving import DiffusionServingEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny-dit").reduced()
+    tcfg = cfg.text_conditioned(cond_seq_len=8)
+    params = dit.nondegenerate_params(dit.init_params(jax.random.PRNGKey(0),
+                                                      cfg))
+    tparams = dit.nondegenerate_params(
+        dit.init_params(jax.random.PRNGKey(0), tcfg))
+    sched = sampler_lib.linear_schedule(T=100)
+    return cfg, tcfg, params, tparams, sched
+
+
+def _x(cfg, seed=1, frames=0):
+    shape = (1, cfg.latent_size, cfg.latent_size, cfg.channels)
+    if frames:
+        shape = shape[:1] + (frames,) + shape[1:]
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+# ----------------------------------------------------------------------
+# the frozen text encoder
+# ----------------------------------------------------------------------
+
+def test_encoder_deterministic_and_shaped(setup):
+    _, tcfg, *_ = setup
+    a = text_encoder.encode(["a red fox", "fox"], tcfg)
+    b = text_encoder.encode(["a red fox", "fox"], tcfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (2, 4, tcfg.cond_dim + 1)     # 3 tokens -> bucket 4
+    # trailing channel is the validity mask
+    np.testing.assert_array_equal(np.asarray(a[0, :, -1]), [1, 1, 1, 0])
+    np.testing.assert_array_equal(np.asarray(a[1, :, -1]), [1, 0, 0, 0])
+    # masked positions carry no features
+    assert float(np.abs(np.asarray(a[1, 1:, :-1])).sum()) == 0.0
+    # a different frozen seed is a different encoder
+    c = text_encoder.encode(["a red fox", "fox"], tcfg, seed=5)
+    assert not np.array_equal(np.asarray(a[..., :-1]),
+                              np.asarray(c[..., :-1]))
+    # real-token embeddings are bucket-independent (key-masked attention)
+    wide = text_encoder.encode(["a red fox"], tcfg, length=8)
+    np.testing.assert_allclose(np.asarray(wide[0, :3, :-1]),
+                               np.asarray(a[0, :3, :-1]), atol=1e-5)
+
+
+def test_bucket_length_grid():
+    assert [text_encoder.bucket_length(n, 32) for n in (1, 4, 5, 8, 9, 40)] \
+        == [4, 4, 8, 8, 16, 32]
+    with pytest.raises(ValueError, match="cond_seq_len"):
+        text_encoder.bucket_length(3, 0)
+
+
+def test_encode_requires_text_config(setup):
+    cfg, *_ = setup
+    with pytest.raises(ValueError, match="text_conditioned"):
+        text_encoder.encode(["fox"], cfg)
+
+
+def test_null_semantics(setup):
+    _, tcfg, *_ = setup
+    tok = text_encoder.encode(["a red fox"], tcfg)
+    null = text_encoder.null_cond(1, tok.shape[1], tcfg)
+    assert float(np.abs(np.asarray(null)).sum()) == 0.0
+    # dit.null_like is polymorphic: zero tokens for prompts, the reserved
+    # NULL_COND id for class conds
+    np.testing.assert_array_equal(np.asarray(dit.null_like(tok)),
+                                  np.asarray(null))
+    assert int(dit.null_like(jnp.asarray([3]))[0]) == NULL_COND
+    # guidance_conds stacks [cond, null] for either kind
+    g = dit.guidance_conds(tok)
+    assert g.shape == (2,) + tok.shape
+    np.testing.assert_array_equal(np.asarray(g[1]), np.asarray(null))
+
+
+# ----------------------------------------------------------------------
+# cond_seq_len=0 degeneracy: bitwise the class-conditional path
+# ----------------------------------------------------------------------
+
+def test_text_config_draws_class_params_bitwise(setup):
+    """Cross-attention params come from previously-unconsumed key streams,
+    so every pre-§17 param is drawn bit-identically."""
+    cfg, tcfg, *_ = setup
+    base = dit.init_params(jax.random.PRNGKey(0), cfg)
+    text = dit.init_params(jax.random.PRNGKey(0), tcfg)
+    for extra in ("xq", "xkv", "xo"):
+        assert extra in text["blocks"] and extra not in base["blocks"]
+    assert "ctx_pool" in text and "ctx_pool" not in base
+    for k, v in base.items():
+        if k == "blocks":
+            for bk, bv in base["blocks"].items():
+                np.testing.assert_array_equal(np.asarray(bv),
+                                              np.asarray(text["blocks"][bk]))
+        else:
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(text[k]))
+
+
+def test_class_cond_forward_bitwise_under_text_config(setup):
+    """A text-conditioned model fed CLASS ids runs the class path bitwise
+    — cross-attention only traces when the cond is a token tensor."""
+    cfg, tcfg, params, tparams, sched = setup
+    x = _x(cfg)
+    t = jnp.asarray([10])
+    cond = jnp.asarray([3])
+    a = dit.forward(params, cfg, x, t, cond)
+    b = dit.forward(tparams, tcfg, x, t, cond)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("backend", ["emulated"])
+def test_class_cond_pipeline_bitwise_under_text_config(setup, backend):
+    cfg, tcfg, params, tparams, sched = setup
+    x = _x(cfg)
+    cond = jnp.asarray([3])
+    config = StadiConfig.from_occupancies([0.0, 0.5], m_base=8, m_warmup=2,
+                                          backend=backend)
+    a = StadiPipeline(cfg, params, sched, config).generate(x, cond).image
+    b = StadiPipeline(tcfg, tparams, sched, config).generate(x, cond).image
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spmd_degeneracy_and_prompt_parity():
+    """Subprocess with 4 host devices: (a) class conds under the text
+    config stay BITWISE the class-conditional spmd path; (b) prompt conds
+    flow opaquely through shard_map and match the emulated reference."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core import sampler as sampler_lib
+        from repro.core.pipeline import StadiConfig, StadiPipeline
+        from repro.models import text_encoder
+        from repro.models.diffusion import dit
+
+        cfg = get_config('tiny-dit').reduced()
+        tcfg = cfg.text_conditioned(cond_seq_len=8)
+        params = dit.nondegenerate_params(
+            dit.init_params(jax.random.PRNGKey(0), cfg))
+        tparams = dit.nondegenerate_params(
+            dit.init_params(jax.random.PRNGKey(0), tcfg))
+        sched = sampler_lib.linear_schedule(T=100)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, cfg.latent_size, cfg.latent_size,
+                               cfg.channels))
+        cond = jnp.asarray([3])
+        for backend, kw in [
+                ('spmd', {}),
+                ('spmd_guidance', dict(planner='stadi_guidance',
+                                       guidance='split', cfg_scale=2.5))]:
+            config = StadiConfig.from_occupancies(
+                [0.0, 0.5], m_base=8, m_warmup=2, backend=backend, **kw)
+            a = StadiPipeline(cfg, params, sched, config).generate(
+                x, cond).image
+            b = StadiPipeline(tcfg, tparams, sched, config).generate(
+                x, cond).image
+            assert np.array_equal(np.asarray(a), np.asarray(b)), backend
+        tok = text_encoder.encode(['a red fox'], tcfg)
+        config = StadiConfig.from_occupancies([0.0, 0.5], m_base=8,
+                                              m_warmup=2, backend='spmd')
+        spmd = StadiPipeline(tcfg, tparams, sched, config).generate(
+            x, tok).image
+        emu = StadiPipeline(tcfg, tparams, sched, dataclasses.replace(
+            config, backend='emulated')).generate(x, tok).image
+        a, b = np.asarray(spmd), np.asarray(emu)
+        err = float(np.linalg.norm(a - b) / np.linalg.norm(b))
+        assert err < 1e-5, err
+        print('SPMD_TEXTCOND_OK', err)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=520, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "SPMD_TEXTCOND_OK" in r.stdout
+
+
+# ----------------------------------------------------------------------
+# prompt generation + CFG null branch
+# ----------------------------------------------------------------------
+
+def test_prompt_steers_trajectory(setup):
+    _, tcfg, _, tparams, sched = setup
+    config = StadiConfig.from_occupancies([0.0, 0.5], m_base=8, m_warmup=2)
+    pipe = StadiPipeline(tcfg, tparams, sched, config)
+    x = _x(tcfg)
+    a = pipe.generate(x, text_encoder.encode(["a red fox"], tcfg)).image
+    b = pipe.generate(x, text_encoder.encode(["blue whale song"],
+                                             tcfg)).image
+    assert np.isfinite(np.asarray(a)).all()
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_guided_prompt_null_matches_explicit_null(setup):
+    """The fused CFG null branch over zero tokens IS the explicit
+    null_cond forward — NULL_COND semantics carried into token space."""
+    _, tcfg, _, tparams, _ = setup
+    x = _x(tcfg)
+    t = jnp.asarray([10])
+    tok = text_encoder.encode(["a red fox"], tcfg)
+    eps_null = dit.forward(tparams, tcfg, x, t, dit.null_like(tok))
+    eps_explicit = dit.forward(tparams, tcfg, x, t,
+                               text_encoder.null_cond(1, tok.shape[1], tcfg))
+    np.testing.assert_array_equal(np.asarray(eps_null),
+                                  np.asarray(eps_explicit))
+    scale = 3.0
+    fused = dit.forward_cfg(tparams, tcfg, x, t, tok, scale)
+    eps_c = dit.forward(tparams, tcfg, x, t, tok)
+    np.testing.assert_allclose(
+        np.asarray(fused),
+        np.asarray(eps_null + scale * (eps_c - eps_null)), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# prompt serving: length-bucketed lanes, bitwise vs generate
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("exchange", ["sync", "stale_async", "predictive"])
+def test_prompt_serving_bitwise_vs_generate(setup, exchange):
+    """Mixed-length prompt lanes (buckets 4 and 8) plus a guided lane
+    drain bitwise-identically to single-request generate under every
+    boundary-exchange policy."""
+    _, tcfg, _, tparams, sched = setup
+    config = StadiConfig.from_occupancies([0.0, 0.5], m_base=8, m_warmup=2,
+                                          exchange=exchange)
+    pipe = StadiPipeline(tcfg, tparams, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=3)
+    prompts = ["fox", "a red fox in the deep winter snow",
+               "blue whale", "one two three four five six seven"]
+    subs = []
+    for uid, p in enumerate(prompts):
+        x = _x(tcfg, seed=40 + uid)
+        tok = text_encoder.encode([p], tcfg)
+        scale = 2.5 if uid == 2 else None
+        subs.append((engine.submit(x, tok, cfg_scale=scale), x, tok, scale))
+    engine.run_to_completion()
+    buckets = {tok.shape[1] for _, _, tok, _ in subs}
+    assert buckets == {4, 8}                  # both buckets really served
+    for req, x, tok, scale in subs:
+        ref_cfg = dataclasses.replace(config, cfg_scale=scale or 0.0)
+        ref = StadiPipeline(tcfg, tparams, sched, ref_cfg).generate(
+            x, tok).image
+        np.testing.assert_array_equal(np.asarray(req.image),
+                                      np.asarray(ref))
+
+
+def test_engine_prompt_validation(setup):
+    cfg, tcfg, params, tparams, sched = setup
+    config = StadiConfig.from_occupancies([0.0, 0.5], m_base=8, m_warmup=2)
+    class_engine = DiffusionServingEngine(
+        StadiPipeline(cfg, params, sched, config), slots=2)
+    tok = text_encoder.encode(["fox"], tcfg)
+    with pytest.raises(ValueError, match="text-conditioned"):
+        class_engine.submit(_x(cfg), tok)
+    text_engine = DiffusionServingEngine(
+        StadiPipeline(tcfg, tparams, sched, config), slots=2)
+    with pytest.raises(ValueError, match="prompt tokens"):
+        text_engine.submit(_x(tcfg), 3)       # class id on a prompt engine
+    with pytest.raises(ValueError, match="cond_dim"):
+        text_engine.submit(_x(tcfg), jnp.zeros((1, 4, tcfg.cond_dim)))
+    with pytest.raises(ValueError, match="cond_seq_len"):
+        text_engine.submit(_x(tcfg),
+                           jnp.zeros((1, 16, tcfg.cond_dim + 1)))
+
+
+# ----------------------------------------------------------------------
+# CFG x frames: the lifted gate (guided text-to-video)
+# ----------------------------------------------------------------------
+
+def test_guided_video_plans_and_runs(setup):
+    """stadi_video + cfg_scale composes guidance with the frame axis: the
+    plan carries BOTH, the emulated executor runs the guided clip, and
+    frame 0 is bitwise the guided image path under the same schedule."""
+    from repro.core import frames as frames_lib
+    _, tcfg, _, tparams, sched = setup
+    config = StadiConfig.from_occupancies(
+        [0.0, 0.0, 0.5, 0.5], m_base=8, m_warmup=2, planner="stadi_video",
+        num_frames=2, guidance="fused", cfg_scale=3.0)
+    pipe = StadiPipeline(tcfg, tparams, sched, config)
+    plan = pipe.plan()
+    assert plan.guidance is not None and plan.guidance.mode == "fused"
+    assert plan.frames is not None and plan.frames.num_frames == 2
+    tok = text_encoder.encode(["a red fox"], tcfg)
+    x = _x(tcfg, frames=2)
+    clip = pipe.generate(x, tok).image
+    assert np.asarray(clip).shape[1] == 2
+    assert np.isfinite(np.asarray(clip)).all()
+    # frame 0 attends no previous frame: bitwise the guided IMAGE path
+    gp = GuidancePlan("fused", 3.0)
+    seq_clip = frames_lib.run_frames(
+        tparams, tcfg, sched, x, tok, plan.temporal, plan.patches,
+        frames=frames_lib.FramePlan(2, (2,)), guidance=gp).image
+    img = pp.run_schedule(tparams, tcfg, sched, x[:, 0], tok,
+                          plan.temporal, plan.patches, guidance=gp).image
+    np.testing.assert_array_equal(np.asarray(seq_clip)[:, 0],
+                                  np.asarray(img))
+
+
+def test_split_guidance_still_gated_on_frames(setup):
+    """Only FUSED CFG composes with the frame axis — split/interleaved
+    placement still raises loudly everywhere."""
+    _, tcfg, _, tparams, sched = setup
+    config = StadiConfig.from_occupancies(
+        [0.0, 0.0, 0.5, 0.5], m_base=8, m_warmup=2, planner="stadi_video",
+        num_frames=2, guidance="split", cfg_scale=3.0)
+    with pytest.raises(ValueError, match="fused"):
+        StadiPipeline(tcfg, tparams, sched, config).plan()
+
+
+def test_guided_video_serving_scale_contract(setup):
+    """Video lanes run the PLAN's fused CFG: per-request scales must match
+    the plan (or the plan must be guided at all)."""
+    _, tcfg, _, tparams, sched = setup
+    guided_cfg = StadiConfig.from_occupancies(
+        [0.0, 0.0, 0.5, 0.5], m_base=8, m_warmup=2, planner="stadi_video",
+        num_frames=2, guidance="fused", cfg_scale=3.0)
+    engine = DiffusionServingEngine(
+        StadiPipeline(tcfg, tparams, sched, guided_cfg), slots=2)
+    x = _x(tcfg, frames=2)
+    tok = text_encoder.encode(["fox"], tcfg)
+    with pytest.raises(ValueError, match="cannot override"):
+        engine.submit(x, tok, cfg_scale=5.0)
+    req = engine.submit(x, tok, cfg_scale=3.0)   # matching scale is fine
+    assert req.guided
+    plain_cfg = dataclasses.replace(guided_cfg, cfg_scale=0.0,
+                                    guidance="none")
+    plain = DiffusionServingEngine(
+        StadiPipeline(tcfg, tparams, sched, plain_cfg), slots=2)
+    with pytest.raises(ValueError, match="fused CFG"):
+        plain.submit(x, tok, cfg_scale=3.0)
+
+
+def test_guided_video_serving_matches_generate(setup):
+    """A guided clip served through the engine is bitwise the guided
+    pipeline clip (the whole-schedule frame executor runs both)."""
+    _, tcfg, _, tparams, sched = setup
+    config = StadiConfig.from_occupancies(
+        [0.0, 0.0, 0.5, 0.5], m_base=8, m_warmup=2, planner="stadi_video",
+        num_frames=2, guidance="fused", cfg_scale=3.0)
+    pipe = StadiPipeline(tcfg, tparams, sched, config)
+    engine = DiffusionServingEngine(pipe, slots=2)
+    x = _x(tcfg, frames=2)
+    tok = text_encoder.encode(["a red fox"], tcfg)
+    req = engine.submit(x, tok, cfg_scale=3.0)
+    engine.run_to_completion()
+    ref = pipe.generate(x, tok).image
+    np.testing.assert_array_equal(np.asarray(req.image), np.asarray(ref))
+
+
+# ----------------------------------------------------------------------
+# pricing + kernel visibility
+# ----------------------------------------------------------------------
+
+def test_t_xattn_prices_prompt_tokens(setup):
+    """The simulate backend charges t_xattn * cond_tokens per row: a
+    text-conditioned workload models strictly slower than the identical
+    class workload, monotonically in the bucket."""
+    from repro.core.simulate import CostModel
+    cfg, *_ = setup
+    cm = CostModel(t_fixed=1e-3, t_row=1e-4, t_xattn=1e-5)
+    lats = {}
+    for bucket in (0, 8, 32):
+        mcfg = (cfg if bucket == 0 else
+                cfg.text_conditioned(cond_seq_len=bucket))
+        config = StadiConfig.from_occupancies(
+            [0.0, 0.5], m_base=8, m_warmup=2, backend="simulate",
+            cost_model=cm)
+        lats[bucket] = StadiPipeline(mcfg, None, None,
+                                     config).generate().latency_s
+    assert lats[0] < lats[8] < lats[32]
+    # with t_xattn unset the class model's pricing is untouched
+    cm0 = CostModel(t_fixed=1e-3, t_row=1e-4)
+    config = StadiConfig.from_occupancies([0.0, 0.5], m_base=8, m_warmup=2,
+                                          backend="simulate", cost_model=cm0)
+    base = StadiPipeline(cfg, None, None, config).generate().latency_s
+    text = StadiPipeline(cfg.text_conditioned(cond_seq_len=8), None, None,
+                         config).generate().latency_s
+    assert text == base
+
+
+def test_cross_attn_kernel_miss_recorded(setup):
+    """use_pallas_attention on a text-conditioned model records the
+    cross-attention kernel gap instead of silently falling back."""
+    _, tcfg, _, tparams, sched = setup
+    config = StadiConfig.from_occupancies([0.0, 0.5], m_base=8, m_warmup=2,
+                                          use_pallas_attention=True)
+    res = StadiPipeline(tcfg, tparams, sched, config).generate(
+        _x(tcfg), text_encoder.encode(["fox"], tcfg))
+    assert np.isfinite(np.asarray(res.image)).all()
+    assert res.kernel_stats["misses"].get("cross-attn-unsupported", 0) > 0
+
+
+def test_pipeline_cond_bucket_validation(setup):
+    cfg, tcfg, params, tparams, sched = setup
+    with pytest.raises(ValueError, match="text_conditioned"):
+        StadiPipeline(cfg, params, sched, StadiConfig.from_occupancies(
+            [0.0, 0.5], m_base=8, m_warmup=2, cond_bucket=8))
+    with pytest.raises(ValueError, match="cond_seq_len"):
+        StadiPipeline(tcfg, tparams, sched, StadiConfig.from_occupancies(
+            [0.0, 0.5], m_base=8, m_warmup=2, cond_bucket=16))
